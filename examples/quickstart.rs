@@ -1,0 +1,66 @@
+//! Quickstart: generate one sample with SRDS and compare against the
+//! sequential baseline — the 60-second tour of the public API.
+//!
+//! ```bash
+//! make artifacts            # once; builds the AOT HLO artifacts
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Uses the PJRT backend when artifacts are present, otherwise falls
+//! back to the pure-rust native model (identical semantics).
+
+use srds::coordinator::{prior_sample, sequential, Conditioning, SrdsConfig};
+use srds::data::make_gmm;
+use srds::model::GmmEps;
+use srds::runtime::{PjrtBackend, PjrtRuntime};
+use srds::solvers::{NativeBackend, Solver, StepBackend};
+use std::sync::Arc;
+
+fn main() -> srds::Result<()> {
+    let n = 256; // denoising steps
+    let seed = 7;
+
+    // 1. Pick a backend: AOT-compiled PJRT artifacts, or native rust.
+    let rt = PjrtRuntime::open_default().ok();
+    let backend: Box<dyn StepBackend> = match &rt {
+        Some(rt) => {
+            println!("backend: PJRT ({})", rt.platform());
+            Box::new(PjrtBackend::new(rt, "gmm_church", Solver::Ddim)?)
+        }
+        None => {
+            println!("backend: native (run `make artifacts` for the PJRT path)");
+            Box::new(NativeBackend::new(Arc::new(GmmEps::new(make_gmm("church"))), Solver::Ddim))
+        }
+    };
+
+    // 2. Draw the prior and run SRDS (Algorithm 1).
+    let x0 = prior_sample(backend.dim(), seed);
+    let cfg = SrdsConfig::new(n).with_tol(2.5e-3).with_seed(seed);
+    let t = std::time::Instant::now();
+    let res = srds::coordinator::srds(backend.as_ref(), &x0, &cfg);
+    let srds_ms = t.elapsed().as_secs_f64() * 1e3;
+
+    // 3. Sequential baseline from the same prior.
+    let t = std::time::Instant::now();
+    let (seq, seq_stats) = sequential(backend.as_ref(), &x0, n, &Conditioning::none(), seed);
+    let seq_ms = t.elapsed().as_secs_f64() * 1e3;
+
+    let diff = cfg.norm.dist(&res.sample, &seq);
+    println!("\nN = {n} steps, block = ⌈√N⌉ = {}", cfg.partition().block());
+    println!(
+        "SRDS:       {} iterations, eff serial evals {} (pipelined {}), total {}, {srds_ms:.1} ms",
+        res.stats.iters,
+        res.stats.eff_serial_evals,
+        res.stats.eff_serial_evals_pipelined,
+        res.stats.total_evals
+    );
+    println!("sequential: {} evals, {seq_ms:.1} ms", seq_stats.total_evals);
+    println!(
+        "latency speedup (eff serial evals): {:.1}x   |sample − sequential|₁ = {diff:.2e}",
+        n as f64 / res.stats.eff_serial_evals_pipelined as f64
+    );
+
+    println!("\nthe generated 8×8 'image':");
+    println!("{}", srds::viz::ascii_image(&res.sample, 8, 8));
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! END-TO-END serving driver: boots the srds JSON-line server (PJRT
+//! artifacts when built, native otherwise), replays a Poisson request
+//! trace against it over TCP, and reports latency percentiles,
+//! throughput, convergence statistics, and sample quality (CondScore) —
+//! the full L3→L2→L1 stack under a realistic small-batch serving load
+//! (the paper's motivating use case, §1 / §6).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_demo
+//! ```
+//!
+//! Results for this run are recorded in EXPERIMENTS.md §End-to-end.
+
+use srds::data::make_gmm;
+use srds::exec::NativeFactory;
+use srds::json;
+use srds::metrics::cond_score;
+use srds::model::{EpsModel, GmmEps};
+use srds::runtime::PjrtFactory;
+use srds::server::{serve, ServeConfig};
+use srds::solvers::{BackendFactory, Solver};
+use srds::workload::{generate_trace, percentile, TraceConfig};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> srds::Result<()> {
+    let model = "gmm_latent_cond";
+    let workers = 4;
+    let (factory, backend_kind): (Arc<dyn BackendFactory>, &str) =
+        match PjrtFactory::new(srds::artifacts_dir(), model, Solver::Ddim) {
+            Ok(f) => (Arc::new(f), "pjrt"),
+            Err(_) => {
+                let m: Arc<dyn EpsModel> = Arc::new(GmmEps::new(make_gmm("latent_cond")));
+                (Arc::new(NativeFactory::new(m, Solver::Ddim)), "native")
+            }
+        };
+
+    // Boot the server on an ephemeral port.
+    let probe = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = probe.local_addr()?.to_string();
+    drop(probe);
+    {
+        let addr = addr.clone();
+        let model = model.to_string();
+        std::thread::spawn(move || {
+            let _ = serve(ServeConfig { addr, workers, model_name: model, factory });
+        });
+    }
+    let mut stream = None;
+    for _ in 0..100 {
+        if let Ok(s) = std::net::TcpStream::connect(&addr) {
+            stream = Some(s);
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    let stream = stream.expect("server did not come up");
+    println!("server up on {addr} (backend={backend_kind}, workers={workers})");
+
+    // Workload: Poisson arrivals of class-conditioned 25-step requests.
+    let trace_cfg = TraceConfig { rate_hz: 4.0, num_requests: 48, n_steps: 25, num_classes: 4, seed: 99 };
+    let trace = generate_trace(&trace_cfg);
+    println!(
+        "replaying {} requests, Poisson {} req/s, N = {} steps, guidance 7.5\n",
+        trace.len(),
+        trace_cfg.rate_hz,
+        trace_cfg.n_steps
+    );
+
+    // Writer: paced submission; reader: collect completions.
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let t0 = Instant::now();
+    let send_times: Arc<std::sync::Mutex<HashMap<u64, f64>>> =
+        Arc::new(std::sync::Mutex::new(HashMap::new()));
+    let st2 = send_times.clone();
+    let trace2 = trace.clone();
+    let sender = std::thread::spawn(move || {
+        for req in &trace2 {
+            let target = std::time::Duration::from_millis(req.arrival_ms);
+            if let Some(wait) = target.checked_sub(t0.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            st2.lock().unwrap().insert(req.id, t0.elapsed().as_secs_f64() * 1e3);
+            let line = format!(
+                r#"{{"id":{},"sampler":"srds","n":{},"class":{},"guidance":7.5,"seed":{},"tol":0.0025}}"#,
+                req.id,
+                req.n,
+                req.class.unwrap_or(0),
+                req.seed
+            );
+            writeln!(writer, "{line}").unwrap();
+        }
+        writer.flush().unwrap();
+        // Half-close so the server knows no more requests are coming.
+        let _ = writer.shutdown(std::net::Shutdown::Write);
+    });
+
+    let gmm = make_gmm("latent_cond");
+    let mut latencies = Vec::new();
+    let mut iters_sum = 0.0;
+    let mut eff_sum = 0.0;
+    let mut scores = Vec::new();
+    let mut done = 0usize;
+    let expect = trace.len();
+    let class_of: HashMap<u64, u32> =
+        trace.iter().map(|r| (r.id, r.class.unwrap_or(0))).collect();
+    for line in reader.lines() {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        let now_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let v = json::parse(&line)?;
+        assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true), "{line}");
+        let id = v.req("id")?.as_f64().unwrap() as u64;
+        let sent = send_times.lock().unwrap()[&id];
+        latencies.push(now_ms - sent);
+        iters_sum += v.req("iters")?.as_f64().unwrap();
+        eff_sum += v.req("eff_serial_evals")?.as_f64().unwrap();
+        let sample = v.req("sample")?.as_f32_vec().unwrap();
+        scores.push(cond_score(&sample, 1, &gmm, Some(class_of[&id])));
+        done += 1;
+        if done == expect {
+            break;
+        }
+    }
+    sender.join().unwrap();
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean_lat = latencies.iter().sum::<f64>() / latencies.len() as f64;
+    let mean_score = scores.iter().sum::<f64>() / scores.len() as f64;
+    let mut t = srds::report::Table::new(
+        "End-to-end serving (SRDS over the full rust+JAX+Pallas stack)",
+        &["metric", "value"],
+    );
+    t.row(vec!["backend".into(), backend_kind.into()]);
+    t.row(vec!["requests".into(), format!("{done}")]);
+    t.row(vec!["throughput (req/s)".into(), format!("{:.1}", done as f64 / wall_s)]);
+    t.row(vec!["mean latency (ms)".into(), format!("{mean_lat:.1}")]);
+    t.row(vec!["p50 latency (ms)".into(), format!("{:.1}", percentile(&latencies, 0.5))]);
+    t.row(vec!["p95 latency (ms)".into(), format!("{:.1}", percentile(&latencies, 0.95))]);
+    t.row(vec!["p99 latency (ms)".into(), format!("{:.1}", percentile(&latencies, 0.99))]);
+    t.row(vec!["mean SRDS iters".into(), format!("{:.2}", iters_sum / done as f64)]);
+    t.row(vec![
+        "mean eff serial evals (of 25 serial)".into(),
+        format!("{:.1}", eff_sum / done as f64),
+    ]);
+    t.row(vec!["mean CondScore (sample quality)".into(), format!("{mean_score:.3}")]);
+    t.print();
+    println!("\nall {done} requests served; python was never on the request path.");
+    Ok(())
+}

@@ -1,0 +1,210 @@
+"""AOT compile path: lower every (model, solver, batch) step to HLO text.
+
+Python runs ONCE (`make artifacts`); the rust coordinator is self-contained
+afterwards.  Interchange is HLO **text**, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Outputs under --out-dir (default ../artifacts):
+  manifest.json                 registry the rust runtime loads
+  step_<model>_<solver>_b<B>.hlo.txt
+  golden/<artifact>.json        input/output vectors for rust golden tests
+  schedule_golden.json          alpha_bar grid for the rust schedule test
+  datasets_golden.json          GMM params for the rust data test
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import schedule
+from .datasets import PIXEL_DATASETS, SPECS, make_gmm
+from .model import EVALS_PER_STEP, SOLVERS, build_model, make_step_fn
+from .rng import SplitMix64, seed_for
+
+BATCH_BUCKETS = (1, 8, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True: the rust
+    side unwraps with to_tuple1).
+
+    The default printer ELIDES large constants (`constant({...})`), which
+    silently zeroes the model weights after the text round-trip — print
+    with explicit HloPrintOptions instead.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # xla_extension 0.5.1's text parser predates newer metadata attributes
+    # (e.g. source_end_line) — strip metadata for a parseable round-trip.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def combos():
+    """Every artifact we ship (DESIGN.md §Artifact inventory)."""
+    out = []
+    for ds in PIXEL_DATASETS:
+        for b in BATCH_BUCKETS:
+            out.append((f"gmm_{ds}", "ddim", b))
+    for model in ("gmm_latent_cond", "small_denoiser"):
+        for solver in SOLVERS:
+            for b in BATCH_BUCKETS:
+                out.append((model, solver, b))
+    return out
+
+
+def input_specs(model_name: str, solver: str, batch: int, dim: int, k: int):
+    """Ordered (name, shape) input list for one artifact; the rust runtime
+    marshals literals in exactly this order."""
+    guided = model_name == "gmm_latent_cond"
+    specs = [("x", (batch, dim)), ("s_from", (batch,)), ("s_to", (batch,))]
+    if guided:
+        specs += [("mask", (batch, k)), ("w", ())]
+    if solver == "ddpm":
+        specs += [("noise", (batch, dim))]
+    return specs
+
+
+def artifact_name(model_name: str, solver: str, batch: int) -> str:
+    return f"step_{model_name}_{solver}_b{batch}"
+
+
+def lower_one(model_name: str, solver: str, batch: int, use_pallas: bool = True):
+    """Returns (jitted fn, abstract args, specs, dim, k)."""
+    model, guided, dim = build_model(model_name, use_pallas=use_pallas)
+    k = getattr(model, "k", 0)
+    step = make_step_fn(model, solver, guided, use_pallas=use_pallas)
+
+    def fn(*args):
+        return (step(*args),)
+
+    specs = input_specs(model_name, solver, batch, dim, k)
+    abstract = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    return jax.jit(fn), abstract, specs, dim, k
+
+
+def golden_inputs(name: str, specs, dim: int, k: int):
+    """Deterministic concrete inputs for golden vectors (b=1 artifacts)."""
+    rng = SplitMix64(seed_for(f"golden:{name}"))
+    vals = {}
+    for nm, shape in specs:
+        n = int(np.prod(shape)) if shape else 1
+        if nm == "x":
+            a = np.array(rng.normals(n), dtype=np.float32)
+        elif nm == "noise":
+            a = np.array(rng.normals(n), dtype=np.float32)
+        elif nm == "s_from":
+            a = np.full(n, 0.25, dtype=np.float32)
+        elif nm == "s_to":
+            a = np.full(n, 0.375, dtype=np.float32)
+        elif nm == "mask":
+            a = np.zeros((n,), dtype=np.float32)
+            # class 1 of 4 (latent_cond assigns comp_class = idx % n_classes)
+            a[1::4] = 1.0
+        elif nm == "w":
+            a = np.array([7.5], dtype=np.float32)
+        else:
+            raise AssertionError(nm)
+        vals[nm] = a.reshape(shape) if shape else a.reshape(())
+    return vals
+
+
+def emit_schedule_golden(path: str):
+    s = np.linspace(0.0, 1.0, 257, dtype=np.float64)
+    ab = np.asarray(schedule.alpha_bar(jnp.asarray(s, dtype=jnp.float32)))
+    lam = np.asarray(schedule.lam(jnp.asarray(s, dtype=jnp.float32)))
+    with open(path, "w") as f:
+        json.dump({"s": s.tolist(), "alpha_bar": ab.astype(float).tolist(),
+                   "lam": lam.astype(float).tolist()}, f)
+
+
+def emit_datasets_golden(path: str):
+    out = {}
+    for name in SPECS:
+        g = make_gmm(name)
+        out[name] = {
+            "dim": g.dim, "k": g.k, "n_classes": g.spec.n_classes,
+            "means": g.means.flatten().astype(float).tolist(),
+            "sigmas": g.sigmas.astype(float).tolist(),
+            "weights": g.weights.astype(float).tolist(),
+            "comp_class": g.comp_class.astype(int).tolist(),
+        }
+    with open(path, "w") as f:
+        json.dump(out, f)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="substring filter on artifact name")
+    ap.add_argument("--no-pallas", action="store_true", help="lower the jnp reference path instead")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    todo = combos()
+    if args.list:
+        for m, s, b in todo:
+            print(artifact_name(m, s, b))
+        return
+
+    out_dir = os.path.abspath(args.out_dir)
+    golden_dir = os.path.join(out_dir, "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+
+    manifest = {"schedule": {"beta_min": schedule.BETA_MIN, "beta_max": schedule.BETA_MAX,
+                             "sigma_floor": schedule.SIGMA_FLOOR},
+                "batch_buckets": list(BATCH_BUCKETS), "artifacts": []}
+
+    for model_name, solver, batch in todo:
+        name = artifact_name(model_name, solver, batch)
+        if args.only and args.only not in name:
+            continue
+        fn, abstract, specs, dim, k = lower_one(model_name, solver, batch,
+                                                use_pallas=not args.no_pallas)
+        lowered = fn.lower(*abstract)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name, "file": fname, "model": model_name, "solver": solver,
+            "batch": batch, "dim": dim, "k": k,
+            "guided": model_name == "gmm_latent_cond",
+            "evals_per_step": EVALS_PER_STEP[solver],
+            "inputs": [{"name": n, "shape": list(s)} for n, s in specs],
+        }
+        manifest["artifacts"].append(entry)
+        print(f"wrote {fname} ({len(text)} chars)")
+
+        if batch == 1:  # golden vectors for the rust runtime tests
+            vals = golden_inputs(name, specs, dim, k)
+            out = np.asarray(fn(*[jnp.asarray(v) for v in vals.values()])[0])
+            g = {"inputs": {n: np.asarray(v).flatten().astype(float).tolist()
+                            for n, v in vals.items()},
+                 "output": out.flatten().astype(float).tolist()}
+            with open(os.path.join(golden_dir, f"{name}.json"), "w") as f:
+                json.dump(g, f)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    emit_schedule_golden(os.path.join(out_dir, "schedule_golden.json"))
+    emit_datasets_golden(os.path.join(out_dir, "datasets_golden.json"))
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Synthetic Gaussian-mixture dataset zoo.
+
+Substitutes for the paper's pretrained-checkpoint datasets (LSUN Church /
+Bedroom, ImageNet-64, CIFAR, StableDiffusion latents) — see DESIGN.md
+§Substitutions.  Each dataset is a K-component isotropic GMM whose diffused
+score is available in closed form, so the "pretrained model" is exact and
+sample-quality metrics (FD / KID / CondScore) have analytic references.
+
+Parameters are generated from the shared splitmix64 stream (rng.py) so the
+rust side (rust/src/data/) reproduces them bit-for-bit without files.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .rng import SplitMix64, seed_for
+
+
+@dataclass(frozen=True)
+class GmmSpec:
+    """Static description of one dataset (mirrors rust data::GmmSpec)."""
+
+    name: str
+    dim: int
+    n_components: int
+    n_classes: int = 1  # >1 => conditional; components are split by class
+    mean_scale: float = 1.0
+    sigma_lo: float = 0.15
+    sigma_hi: float = 0.6
+
+
+# The zoo.  Pixel datasets stand in for Table 1's four image sets (d = 64
+# "8x8 pixels"); `latent_cond` stands in for StableDiffusion-v2 latents
+# (d = 256, 4 "prompt" classes).  `toy2d` is for visualisation examples.
+SPECS = {
+    "church": GmmSpec("church", 64, 8),
+    "bedroom": GmmSpec("bedroom", 64, 8),
+    "imagenet64": GmmSpec("imagenet64", 64, 10),
+    "cifar": GmmSpec("cifar", 64, 8, mean_scale=0.8),
+    "latent_cond": GmmSpec("latent_cond", 256, 16, n_classes=4),
+    "toy2d": GmmSpec("toy2d", 2, 6, mean_scale=1.5),
+}
+
+PIXEL_DATASETS = ("church", "bedroom", "imagenet64", "cifar")
+
+
+@dataclass
+class Gmm:
+    """Concrete mixture parameters, all float32.
+
+    means:   (K, d)
+    sigmas:  (K,)    isotropic per-component std
+    weights: (K,)    sums to 1
+    comp_class: (K,) int, class id of each component (0 if unconditional)
+    """
+
+    spec: GmmSpec
+    means: np.ndarray
+    sigmas: np.ndarray
+    weights: np.ndarray
+    comp_class: np.ndarray = field(default=None)
+
+    @property
+    def dim(self) -> int:
+        return self.spec.dim
+
+    @property
+    def k(self) -> int:
+        return self.spec.n_components
+
+    def class_mask(self, cls: int) -> np.ndarray:
+        """Component mask selecting one class (all-ones if unconditional)."""
+        if self.spec.n_classes <= 1:
+            return np.ones(self.k, dtype=np.float32)
+        return (self.comp_class == cls).astype(np.float32)
+
+    # ---- analytic reference moments (used by FD metric) ----
+    def mean(self) -> np.ndarray:
+        return (self.weights[:, None] * self.means).sum(0)
+
+    def cov(self) -> np.ndarray:
+        mu = self.mean()
+        d = self.dim
+        c = np.zeros((d, d), dtype=np.float64)
+        for k in range(self.k):
+            dm = (self.means[k] - mu).astype(np.float64)
+            c += self.weights[k] * (np.outer(dm, dm) + self.sigmas[k] ** 2 * np.eye(d))
+        return c
+
+    def sample(self, n: int, seed: int, cls: int | None = None) -> np.ndarray:
+        """Draw exact samples (reference distribution for metrics)."""
+        rng = SplitMix64(seed)
+        w = self.weights * (self.class_mask(cls) if cls is not None else 1.0)
+        w = w / w.sum()
+        cdf = np.cumsum(w)
+        out = np.empty((n, self.dim), dtype=np.float32)
+        for i in range(n):
+            u = rng.next_f64()
+            k = int(np.searchsorted(cdf, u))
+            k = min(k, self.k - 1)
+            z = np.array(rng.normals(self.dim), dtype=np.float64)
+            out[i] = self.means[k] + self.sigmas[k] * z
+        return out
+
+
+def make_gmm(name: str) -> Gmm:
+    """Deterministically generate the mixture for a dataset name.
+
+    Draw order matters: means (K*d normals), sigmas (K uniforms), weights
+    (K uniforms), all from one splitmix64 stream seeded by FNV-1a(name).
+    rust/src/data/gmm.rs replays exactly this order.
+    """
+    spec = SPECS[name]
+    rng = SplitMix64(seed_for(name))
+    k, d = spec.n_components, spec.dim
+    means = np.array(rng.normals(k * d), dtype=np.float64).reshape(k, d)
+    means = (means * spec.mean_scale / math.sqrt(d) * 4.0).astype(np.float32)
+    sigmas = np.array(
+        [spec.sigma_lo + (spec.sigma_hi - spec.sigma_lo) * rng.next_f64() for _ in range(k)],
+        dtype=np.float32,
+    )
+    raw_w = np.array([0.5 + rng.next_f64() for _ in range(k)], dtype=np.float64)
+    weights = (raw_w / raw_w.sum()).astype(np.float32)
+    comp_class = np.arange(k, dtype=np.int32) % max(spec.n_classes, 1)
+    return Gmm(spec, means, sigmas, weights, comp_class)

@@ -1,0 +1,74 @@
+"""Pallas kernel: analytic Gaussian-mixture eps-prediction.
+
+The "pretrained model" substitute (DESIGN.md §Substitutions): the diffused
+score of a K-component isotropic GMM in closed form, computed per batch
+tile.  The (rows, K) responsibility logits, the (K, d) means, and the state
+tile all stay in VMEM; softmax + weighted contraction never round-trip
+to HBM.  Oracle: kernels/ref.py:gmm_eps_ref.
+
+interpret=True: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import schedule
+
+BLOCK_ROWS = 32
+
+
+def _kernel(x_ref, s_ref, means_ref, sig2_ref, logw_ref, mask_ref, o_ref):
+    x = x_ref[...]  # (rows, d)
+    s = s_ref[...]  # (rows,)
+    means = means_ref[...]  # (K, d)
+    sig2 = sig2_ref[...]  # (K,)
+    logw = logw_ref[...]  # (K,)
+    mask = mask_ref[...]  # (rows, K)
+    d = x.shape[-1]
+
+    tau = 1.0 - s
+    ab = jnp.exp(-(schedule.BETA_MIN * tau + 0.5 * schedule.DBETA * tau * tau))
+    ab = ab[:, None]  # (rows, 1)
+    sab = jnp.sqrt(ab)
+    sig = jnp.maximum(jnp.sqrt(jnp.maximum(1.0 - ab, 0.0)), schedule.SIGMA_FLOOR)
+
+    v = ab * sig2[None, :] + (1.0 - ab)  # (rows, K)
+    diff = x[:, None, :] - sab[:, :, None] * means[None, :, :]  # (rows, K, d)
+    sq = jnp.sum(diff * diff, axis=-1)  # (rows, K)
+    logits = (logw[None, :] + jnp.log(mask + 1e-30)) - 0.5 * d * jnp.log(v) - 0.5 * sq / v
+    r = jnp.exp(logits - jnp.max(logits, axis=1, keepdims=True))
+    r = r / jnp.sum(r, axis=1, keepdims=True)
+    o_ref[...] = sig * jnp.einsum("bk,bkd->bd", r / v, diff)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def gmm_eps(x, s, means, sigmas, weights, mask, *, block_rows: int = BLOCK_ROWS):
+    """Analytic GMM eps-model (pallas).  See gmm_eps_ref for semantics."""
+    b, d = x.shape
+    k = means.shape[0]
+    rows = min(block_rows, b)
+    if b % rows != 0:
+        rows = 1
+    grid = (b // rows,)
+    sig2 = sigmas * sigmas
+    logw = jnp.log(weights)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((rows, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        interpret=True,
+    )(x, s, means, sig2, logw, mask)

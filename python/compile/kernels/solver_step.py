@@ -1,0 +1,59 @@
+"""Pallas kernel: fused solver state update (VPU-style elementwise).
+
+    out[b, :] = c1[b] * x[b, :] + c2[b] * y[b, :] + c3[b] * z[b, :]
+
+One HBM->VMEM round trip instead of five separate elementwise HLO ops.
+Every solver (DDIM / DDPM / Euler / Heun / DPM-Solver-2) expresses its
+final update through this form; see kernels/ref.py:axpbypcz_ref for the
+oracle and DESIGN.md §Hardware-Adaptation for the TPU mapping (rows are
+the BlockSpec-tiled dimension; coefficient scalars ride along in SMEM-like
+(block, 1) refs).
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO for this testbed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step.  d (the feature dim) stays whole in VMEM: for this
+# repo d <= 256 floats = 1 KiB/row, so a 64-row tile is 64 KiB x 4 operands
+# well under a ~16 MiB VMEM budget (see EXPERIMENTS.md §Perf L1).
+BLOCK_ROWS = 64
+
+
+def _kernel(c1_ref, c2_ref, c3_ref, x_ref, y_ref, z_ref, o_ref):
+    c1 = c1_ref[...][:, None]
+    c2 = c2_ref[...][:, None]
+    c3 = c3_ref[...][:, None]
+    o_ref[...] = c1 * x_ref[...] + c2 * y_ref[...] + c3 * z_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def axpbypcz(c1, c2, c3, x, y, z, *, block_rows: int = BLOCK_ROWS):
+    """Fused c1*x + c2*y + c3*z with per-row coefficients (pallas)."""
+    b, d = x.shape
+    rows = min(block_rows, b)
+    if b % rows != 0:  # keep the grid exact; callers use bucketed batches
+        rows = 1
+    grid = (b // rows,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows,), lambda i: (i,)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+            pl.BlockSpec((rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((rows, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        interpret=True,
+    )(c1, c2, c3, x, y, z)

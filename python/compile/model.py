@@ -1,0 +1,303 @@
+"""L2: the paper's compute graph in JAX, calling the L1 Pallas kernels.
+
+Two eps-models (DESIGN.md §Substitutions):
+
+* ``GmmModel`` — exact analytic score of a Gaussian-mixture dataset; the
+  stand-in for the paper's pretrained checkpoints (sample quality is
+  measurable against the known mixture).
+* ``SmallDenoiser`` — a seeded residual-MLP eps-net (~0.5M params) giving
+  realistic per-eval compute through the fused_mlp Pallas kernel.
+
+On top of each model, one *solver step* per solver family (paper §2.1 and
+App. C): DDIM, DDPM(eta), probability-flow Euler, Heun, DPM-Solver-2.
+Each step is ``(x[B,d], s_from[B], s_to[B], ...) -> x'[B,d]`` with the
+schedule coefficients computed inline from the scalar times — no host
+round-trip per step.  These are exactly the functions aot.py lowers to
+HLO text for the rust coordinator, and the functions the rust-native
+solvers in rust/src/solvers/ must match to fp tolerance.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import schedule
+from .datasets import Gmm, make_gmm
+from .kernels import fused_mlp as fused_mlp_k
+from .kernels import gmm_score as gmm_score_k
+from .kernels import solver_step as solver_step_k
+from .kernels import ref
+from .rng import SplitMix64, seed_for
+
+SOLVERS = ("ddim", "ddpm", "euler", "heun", "dpm2")
+# Model evaluations per solver step (the unit every latency table counts).
+EVALS_PER_STEP = {"ddim": 1, "ddpm": 1, "euler": 1, "heun": 2, "dpm2": 2}
+
+
+# --------------------------------------------------------------------------
+# eps-models
+# --------------------------------------------------------------------------
+
+
+class GmmModel:
+    """Analytic GMM eps-model.  eps(x, s[, mask]) -> (B, d)."""
+
+    def __init__(self, gmm: Gmm, use_pallas: bool = True):
+        self.gmm = gmm
+        self.use_pallas = use_pallas
+        self.dim = gmm.dim
+        self.k = gmm.k
+        self.means = jnp.asarray(gmm.means)
+        self.sigmas = jnp.asarray(gmm.sigmas)
+        self.weights = jnp.asarray(gmm.weights)
+
+    def eps(self, x, s, mask=None):
+        if mask is None:
+            mask = jnp.ones((x.shape[0], self.k), dtype=x.dtype)
+        if self.use_pallas:
+            return gmm_score_k.gmm_eps(x, s, self.means, self.sigmas, self.weights, mask)
+        return ref.gmm_eps_ref(x, s, self.means, self.sigmas, self.weights, mask)
+
+
+class CondGmmModel(GmmModel):
+    """Classifier-free-guided conditional GMM model.
+
+    eps(x, s, mask, w) = eps_u + w * (eps_c - eps_u)  (diffusers convention;
+    the paper's Table 2 uses guidance w = 7.5).  ``mask`` selects the class'
+    mixture components; the unconditional branch uses the full mixture.
+    """
+
+    def eps_guided(self, x, s, mask, w):
+        full = jnp.ones_like(mask)
+        e_u = self.eps(x, s, full)
+        e_c = self.eps(x, s, mask)
+        return e_u + w * (e_c - e_u)
+
+
+@dataclass
+class DenoiserWeights:
+    """Seeded residual-MLP weights (generated identically in rust)."""
+
+    w_in: np.ndarray  # (d + 2*NFREQ, H)
+    b_in: np.ndarray  # (H,)
+    blocks: list  # [(w1 (H,F), b1 (F,), w2 (F,H), b2 (H,))] * NBLOCK
+    w_out: np.ndarray  # (H, d)
+    b_out: np.ndarray  # (d,)
+
+
+NFREQ = 16  # Fourier time-feature frequencies
+HIDDEN = 256
+FF = 512
+NBLOCK = 2
+
+
+def make_denoiser_weights(dim: int, name: str = "small_denoiser") -> DenoiserWeights:
+    """Variance-scaled weights from the shared splitmix64 stream.
+
+    Draw order (mirrored in rust/src/model/denoiser.rs): w_in row-major,
+    b_in, then per block w1, b1, w2, b2, then w_out, b_out.  Scales are
+    1/sqrt(fan_in); the residual branch w2 gets an extra 0.5 so the network
+    is ~1-Lipschitz and the probability-flow ODE stays well-conditioned.
+    """
+    rng = SplitMix64(seed_for(f"{name}:{dim}"))
+    din = dim + 2 * NFREQ
+
+    def mat(r, c, scale):
+        a = np.array(rng.normals(r * c), dtype=np.float64).reshape(r, c)
+        return (a * scale).astype(np.float32)
+
+    w_in = mat(din, HIDDEN, 1.0 / math.sqrt(din))
+    b_in = np.zeros(HIDDEN, dtype=np.float32)
+    blocks = []
+    for _ in range(NBLOCK):
+        w1 = mat(HIDDEN, FF, 1.0 / math.sqrt(HIDDEN))
+        b1 = np.zeros(FF, dtype=np.float32)
+        w2 = mat(FF, HIDDEN, 0.5 / math.sqrt(FF))
+        b2 = np.zeros(HIDDEN, dtype=np.float32)
+        blocks.append((w1, b1, w2, b2))
+    w_out = mat(HIDDEN, dim, 1.0 / math.sqrt(HIDDEN))
+    b_out = np.zeros(dim, dtype=np.float32)
+    return DenoiserWeights(w_in, b_in, blocks, w_out, b_out)
+
+
+def fourier_feats(s, nfreq: int = NFREQ):
+    """[sin(2^j pi s), cos(2^j pi s)]_{j<nfreq} time embedding, (B, 2*nfreq)."""
+    freqs = (2.0 ** jnp.arange(nfreq)) * jnp.pi
+    ang = s[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class SmallDenoiser:
+    """Residual-MLP eps-net; hot spot runs through the fused_mlp kernel."""
+
+    def __init__(self, dim: int, use_pallas: bool = True, name: str = "small_denoiser"):
+        self.dim = dim
+        self.use_pallas = use_pallas
+        w = make_denoiser_weights(dim, name)
+        self.w = jax.tree_util.tree_map(jnp.asarray, (
+            w.w_in, w.b_in, [tuple(map(jnp.asarray, b)) for b in w.blocks], w.w_out, w.b_out,
+        ))
+
+    def eps(self, x, s, mask=None):
+        del mask  # unconditional
+        w_in, b_in, blocks, w_out, b_out = self.w
+        inp = jnp.concatenate([x, fourier_feats(s)], axis=-1)
+        h = ref.gelu_ref(inp @ w_in + b_in)
+        for (w1, b1, w2, b2) in blocks:
+            if self.use_pallas:
+                h = fused_mlp_k.fused_mlp(h, w1, b1, w2, b2)
+            else:
+                h = ref.fused_mlp_ref(h, w1, b1, w2, b2)
+        return h @ w_out + b_out
+
+
+# --------------------------------------------------------------------------
+# solver steps (each: one predictor-corrector-compatible deterministic map)
+# --------------------------------------------------------------------------
+
+
+def _upd(c1, c2, c3, x, y, z, use_pallas: bool):
+    if use_pallas:
+        return solver_step_k.axpbypcz(c1, c2, c3, x, y, z)
+    return ref.axpbypcz_ref(c1, c2, c3, x, y, z)
+
+
+def ddim_step(eps_fn, x, s_from, s_to, use_pallas=True):
+    """One DDIM step (eta = 0), paper's default solver.
+
+    x0_hat = (x - sigma_f * eps) / sab_f
+    x'     = sab_t * x0_hat + sigma_t * eps
+    rewritten as c1*x + c2*eps with c1 = sab_t/sab_f.
+    """
+    e = eps_fn(x, s_from)
+    sab_f, sab_t = schedule.sqrt_ab(s_from), schedule.sqrt_ab(s_to)
+    sig_f, sig_t = schedule.sigma(s_from), schedule.sigma(s_to)
+    c1 = sab_t / sab_f
+    c2 = sig_t - c1 * sig_f
+    return _upd(c1, c2, jnp.zeros_like(c1), x, e, jnp.zeros_like(x), use_pallas)
+
+
+def ddpm_step(eps_fn, x, s_from, s_to, noise, use_pallas=True, eta=1.0):
+    """One DDIM(eta) step; eta=1 is ancestral DDPM.  ``noise`` is an input
+    so the step stays a deterministic map (Parareal requires it) — the
+    coordinator pre-samples noise per (seed, interval)."""
+    e = eps_fn(x, s_from)
+    ab_f, ab_t = schedule.alpha_bar(s_from), schedule.alpha_bar(s_to)
+    sab_f, sab_t = jnp.sqrt(ab_f), jnp.sqrt(ab_t)
+    sig_f, sig_t = schedule.sigma(s_from), schedule.sigma(s_to)
+    # Song et al. (2020) eq. 16 generalized variance
+    std = eta * (sig_t / sig_f) * jnp.sqrt(jnp.maximum(1.0 - ab_f / ab_t, 0.0))
+    std = jnp.minimum(std, sig_t)
+    dir_coeff = jnp.sqrt(jnp.maximum(sig_t * sig_t - std * std, 0.0))
+    c1 = sab_t / sab_f
+    c2 = dir_coeff - c1 * sig_f
+    return _upd(c1, c2, std, x, e, noise, use_pallas)
+
+
+def _pf_slope(eps_fn, x, s, use_pallas):
+    """Probability-flow ODE slope dx/ds (s = denoising progress).
+
+    dx/dtau = -0.5 beta (x - eps/sigma);  dx/ds = -dx/dtau at tau = 1-s.
+    """
+    tau = 1.0 - s
+    b = schedule.beta(tau)
+    sig = schedule.sigma(s)
+    e = eps_fn(x, s)
+    c = (0.5 * b)[:, None]
+    return c * (x - e / sig[:, None])
+
+
+def euler_step(eps_fn, x, s_from, s_to, use_pallas=True):
+    """Explicit Euler on the probability-flow ODE."""
+    d1 = _pf_slope(eps_fn, x, s_from, use_pallas)
+    h = (s_to - s_from)
+    return _upd(jnp.ones_like(h), h, jnp.zeros_like(h), x, d1, jnp.zeros_like(x), use_pallas)
+
+
+def heun_step(eps_fn, x, s_from, s_to, use_pallas=True):
+    """Heun's 2nd-order method (Karras et al. [13]); 2 model evals."""
+    h = s_to - s_from
+    d1 = _pf_slope(eps_fn, x, s_from, use_pallas)
+    x_e = _upd(jnp.ones_like(h), h, jnp.zeros_like(h), x, d1, jnp.zeros_like(x), use_pallas)
+    d2 = _pf_slope(eps_fn, x_e, s_to, use_pallas)
+    return _upd(jnp.ones_like(h), 0.5 * h, 0.5 * h, x, d1, d2, use_pallas)
+
+
+def dpm2_step(eps_fn, x, s_from, s_to, use_pallas=True):
+    """DPM-Solver-2 (midpoint, Lu et al. [19]); 2 model evals.
+
+    Exponential-integrator update in half-log-SNR (lambda) space:
+      u   = (a_m/a_f) x - s_m (e^{h/2}-1) eps(x, s_from)
+      x'  = (a_t/a_f) x - s_t (e^{h}-1)   eps(u, s_mid)
+    """
+    lam_f, lam_t = schedule.lam(s_from), schedule.lam(s_to)
+    h = lam_t - lam_f
+    s_mid = schedule.s_of_lam(lam_f + 0.5 * h)
+    a_f, a_m, a_t = schedule.sqrt_ab(s_from), schedule.sqrt_ab(s_mid), schedule.sqrt_ab(s_to)
+    g_m, g_t = schedule.sigma(s_mid), schedule.sigma(s_to)
+    e1 = eps_fn(x, s_from)
+    c1 = a_m / a_f
+    c2 = -g_m * jnp.expm1(0.5 * h)
+    u = _upd(c1, c2, jnp.zeros_like(c1), x, e1, jnp.zeros_like(x), use_pallas)
+    e2 = eps_fn(u, s_mid)
+    c1b = a_t / a_f
+    c2b = -g_t * jnp.expm1(h)
+    return _upd(c1b, c2b, jnp.zeros_like(c1b), x, e2, jnp.zeros_like(x), use_pallas)
+
+
+def make_step_fn(model, solver: str, guided: bool, use_pallas: bool = True):
+    """Build the AOT-lowerable step callable for (model, solver).
+
+    Signatures (all f32):
+      unconditional, deterministic:  (x[B,d], s_from[B], s_to[B])
+      unconditional, ddpm:           (x, s_from, s_to, noise[B,d])
+      guided (CondGmmModel):         (x, s_from, s_to, mask[B,K], w[])
+      guided ddpm:                   (x, s_from, s_to, mask, w, noise)
+    """
+
+    def mk_eps(mask=None, w=None):
+        if guided:
+            return lambda x, s: model.eps_guided(x, s, mask, w)
+        return lambda x, s: model.eps(x, s)
+
+    if solver == "ddpm":
+        if guided:
+            def step(x, s_from, s_to, mask, w, noise):
+                return ddpm_step(mk_eps(mask, w), x, s_from, s_to, noise, use_pallas)
+        else:
+            def step(x, s_from, s_to, noise):
+                return ddpm_step(mk_eps(), x, s_from, s_to, noise, use_pallas)
+        return step
+
+    base = {"ddim": ddim_step, "euler": euler_step, "heun": heun_step, "dpm2": dpm2_step}[solver]
+    if guided:
+        def step(x, s_from, s_to, mask, w):
+            return base(mk_eps(mask, w), x, s_from, s_to, use_pallas)
+    else:
+        def step(x, s_from, s_to):
+            return base(mk_eps(), x, s_from, s_to, use_pallas)
+    return step
+
+
+def build_model(model_name: str, use_pallas: bool = True):
+    """Model registry used by aot.py and the tests.
+
+    ``gmm_<dataset>`` -> GmmModel over that dataset;
+    ``gmm_latent_cond`` -> CondGmmModel (guided);
+    ``small_denoiser`` -> SmallDenoiser (d = 256).
+    Returns (model, guided, dim).
+    """
+    if model_name == "small_denoiser":
+        return SmallDenoiser(256, use_pallas), False, 256
+    if not model_name.startswith("gmm_"):
+        raise ValueError(f"unknown model {model_name!r}")
+    ds = model_name[len("gmm_"):]
+    gmm = make_gmm(ds)
+    if gmm.spec.n_classes > 1:
+        return CondGmmModel(gmm, use_pallas), True, gmm.dim
+    return GmmModel(gmm, use_pallas), False, gmm.dim

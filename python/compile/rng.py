@@ -1,0 +1,69 @@
+"""Deterministic cross-language RNG (splitmix64).
+
+Both the python compile path and the rust coordinator generate dataset
+parameters and model weights from the *same* splitmix64 stream so the two
+sides agree bit-for-bit without shipping parameter files.  Mirrors
+``rust/src/data/rng.rs``.
+"""
+
+from __future__ import annotations
+
+import math
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """splitmix64 PRNG (Steele et al.) on arbitrary-precision ints.
+
+    Python ints are masked to 64 bits each step, which makes the stream
+    identical to the wrapping-u64 rust implementation.
+    """
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53 bits of precision."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_f32(self) -> float:
+        """Uniform in [0, 1) rounded the way rust's `as f32` would."""
+        import struct
+
+        return struct.unpack("f", struct.pack("f", self.next_f64()))[0]
+
+    def next_normal(self) -> float:
+        """Standard normal via Box-Muller (f64 math, one draw per call).
+
+        We deliberately burn two uniforms per normal (no caching of the
+        second Box-Muller output) so the call sequence is trivially
+        reproducible across languages.
+        """
+        # Guard u1 > 0 so log() is finite; splitmix64 emits 0 with
+        # probability 2^-53 per draw, loop keeps the stream aligned by
+        # construction (rust does the same).
+        while True:
+            u1 = self.next_f64()
+            u2 = self.next_f64()
+            if u1 > 0.0:
+                break
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def normals(self, n: int) -> list:
+        return [self.next_normal() for _ in range(n)]
+
+
+def seed_for(name: str) -> int:
+    """Stable 64-bit seed from a short ascii name (FNV-1a)."""
+    h = 0xCBF29CE484222325
+    for b in name.encode("ascii"):
+        h = ((h ^ b) * 0x100000001B3) & MASK64
+    return h

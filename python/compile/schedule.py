@@ -1,0 +1,69 @@
+"""Continuous VP diffusion schedule shared by every solver.
+
+Conventions (paper §2, reversed index): denoising progress ``s`` runs over
+[0, 1] with ``s = 0`` pure noise and ``s = 1`` data.  Internally the VP SDE
+uses diffusion time ``tau = 1 - s``.  Mirrors ``rust/src/schedule/`` — the
+f32 values must agree to ~1 ulp so native-rust solves match HLO solves.
+
+    beta(tau)      = BETA_MIN + tau * (BETA_MAX - BETA_MIN)
+    log alpha_bar  = -(BETA_MIN * tau + 0.5 * (BETA_MAX - BETA_MIN) * tau^2)
+
+At tau = 1 this gives alpha_bar ~= 4.3e-5, i.e. x(s=0) ~ N(0, I) for
+unit-variance data.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BETA_MIN = 0.1
+BETA_MAX = 20.0
+DBETA = BETA_MAX - BETA_MIN
+# Floor on sqrt(1 - alpha_bar); guards the score -> eps conversion at s = 1
+# where 1 - alpha_bar(tau=0) = 0 (Euler / Heun / DPM evaluate there).
+SIGMA_FLOOR = 1e-4
+
+
+def beta(tau):
+    return BETA_MIN + tau * DBETA
+
+
+def log_alpha_bar(tau):
+    return -(BETA_MIN * tau + 0.5 * DBETA * tau * tau)
+
+
+def alpha_bar(s):
+    """alpha_bar as a function of denoising progress s in [0, 1]."""
+    tau = 1.0 - s
+    return jnp.exp(log_alpha_bar(tau))
+
+
+def sqrt_ab(s):
+    return jnp.sqrt(alpha_bar(s))
+
+
+def sigma(s):
+    """sqrt(1 - alpha_bar), floored away from 0 (see SIGMA_FLOOR)."""
+    return jnp.maximum(jnp.sqrt(jnp.maximum(1.0 - alpha_bar(s), 0.0)), SIGMA_FLOOR)
+
+
+def lam(s):
+    """Half log-SNR lambda(s) = log(sqrt_ab / sigma) used by DPM-Solver."""
+    return jnp.log(sqrt_ab(s) / sigma(s))
+
+
+def s_of_lam(l):
+    """Invert lambda -> s in closed form (used by DPM-Solver-2 midpoints).
+
+    alpha_bar = sigmoid(2 lambda); then solve the quadratic
+    log alpha_bar = -(BETA_MIN tau + DBETA/2 tau^2) for tau >= 0.
+    """
+    log_ab = -jnp.logaddexp(0.0, -2.0 * l)  # log sigmoid(2l)
+    disc = BETA_MIN * BETA_MIN - 2.0 * DBETA * log_ab
+    tau = (-BETA_MIN + jnp.sqrt(disc)) / DBETA
+    return 1.0 - jnp.clip(tau, 0.0, 1.0)
+
+
+def grid(n: int):
+    """The (n+1)-point uniform denoising grid s_0 = 0 .. s_n = 1."""
+    return jnp.linspace(0.0, 1.0, n + 1)

@@ -1,0 +1,74 @@
+"""AOT path tests: manifest combos, golden-input generation, and the HLO
+text round-trip (lower → print → parse → compile → execute) for a
+representative artifact."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot
+
+
+def test_combo_inventory():
+    combos = aot.combos()
+    names = [aot.artifact_name(*c) for c in combos]
+    assert len(names) == len(set(names))
+    assert "step_gmm_church_ddim_b1" in names
+    assert "step_gmm_latent_cond_dpm2_b32" in names
+    assert "step_small_denoiser_heun_b8" in names
+    # pixel datasets ship ddim only (DESIGN.md artifact inventory)
+    assert "step_gmm_church_heun_b1" not in names
+
+
+def test_input_specs_order():
+    specs = aot.input_specs("gmm_latent_cond", "ddpm", 8, 256, 16)
+    assert [n for n, _ in specs] == ["x", "s_from", "s_to", "mask", "w", "noise"]
+    specs = aot.input_specs("gmm_church", "ddim", 1, 64, 8)
+    assert [n for n, _ in specs] == ["x", "s_from", "s_to"]
+
+
+def test_golden_inputs_deterministic():
+    specs = aot.input_specs("gmm_church", "ddim", 1, 64, 8)
+    a = aot.golden_inputs("x", specs, 64, 8)
+    b = aot.golden_inputs("x", specs, 64, 8)
+    np.testing.assert_array_equal(a["x"], b["x"])
+    assert a["x"].shape == (1, 64)
+
+
+def test_hlo_text_roundtrip_parses():
+    """Lower a small artifact to HLO text and parse it back — the exact
+    interchange the rust runtime relies on. Execution-level agreement is
+    pinned by `rust/tests/golden.rs` (PJRT vs golden vectors); here we
+    check the two print pitfalls that silently corrupt artifacts:
+    elided large constants and unparseable metadata attributes."""
+    fn, abstract, specs, dim, k = aot.lower_one("gmm_toy2d", "ddim", 1)
+    text = aot.to_hlo_text(fn.lower(*abstract))
+    assert "constant({...})" not in text, "large constants must not be elided"
+    assert "source_end_line" not in text, "metadata must be stripped"
+    mod = xc._xla.hlo_module_from_text(text)  # raises on parse failure
+    assert mod.name
+    # Proto round-trip stays stable.
+    proto = mod.as_serialized_hlo_module_proto()
+    assert len(proto) > 100
+    # Entry signature survived: all inputs + 1-tuple output present.
+    assert f"f32[1,{dim}]" in text
+    del specs, k
+
+
+def test_manifest_on_disk_if_built():
+    out = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(out):
+        pytest.skip("artifacts not built")
+    m = json.load(open(out))
+    assert m["schedule"]["beta_max"] == 20.0
+    names = {a["name"] for a in m["artifacts"]}
+    for model, solver, batch in aot.combos():
+        assert aot.artifact_name(model, solver, batch) in names
+    for a in m["artifacts"]:
+        f = os.path.join(os.path.dirname(out), a["file"])
+        assert os.path.exists(f), a["file"]

@@ -1,0 +1,59 @@
+"""Dataset zoo tests (mirrors rust/src/data/gmm.rs tests)."""
+
+import numpy as np
+import pytest
+
+from compile.datasets import PIXEL_DATASETS, SPECS, make_gmm
+
+
+def test_zoo_complete():
+    for name in SPECS:
+        g = make_gmm(name)
+        assert g.means.shape == (g.k, g.dim)
+        assert g.sigmas.shape == (g.k,)
+
+
+def test_weights_normalized_positive():
+    for name in SPECS:
+        g = make_gmm(name)
+        assert g.weights.sum() == pytest.approx(1.0, abs=1e-6)
+        assert (g.weights > 0).all()
+
+
+def test_deterministic_and_distinct():
+    a, b = make_gmm("church"), make_gmm("church")
+    np.testing.assert_array_equal(a.means, b.means)
+    assert not np.array_equal(make_gmm("church").means, make_gmm("bedroom").means)
+
+
+def test_pixel_datasets_are_64d():
+    for name in PIXEL_DATASETS:
+        assert make_gmm(name).dim == 64
+
+
+def test_class_mask_partitions():
+    g = make_gmm("latent_cond")
+    total = np.zeros(g.k)
+    for c in range(g.spec.n_classes):
+        total += g.class_mask(c)
+    np.testing.assert_array_equal(total, np.ones(g.k))
+
+
+def test_sampling_moments():
+    g = make_gmm("cifar")
+    xs = g.sample(4000, 123)
+    np.testing.assert_allclose(xs.mean(0), g.mean(), atol=0.12)
+
+
+def test_conditional_sampling_stays_in_class():
+    g = make_gmm("latent_cond")
+    xs = g.sample(64, 5, cls=2)
+    for x in xs:
+        dists = np.linalg.norm(g.means - x, axis=1)
+        assert g.comp_class[np.argmin(dists)] == 2
+
+
+def test_analytic_cov_psd():
+    g = make_gmm("bedroom")
+    w = np.linalg.eigvalsh(g.cov())
+    assert (w > 0).all()

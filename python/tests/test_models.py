@@ -1,0 +1,118 @@
+"""L2 model/solver tests: pallas == ref paths, solver semantics, guidance
+identities, batching invariance."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import schedule
+from compile.datasets import make_gmm
+from compile.model import (
+    EVALS_PER_STEP,
+    SOLVERS,
+    CondGmmModel,
+    GmmModel,
+    SmallDenoiser,
+    build_model,
+    ddim_step,
+    make_step_fn,
+)
+
+
+@pytest.fixture(scope="module")
+def church():
+    return GmmModel(make_gmm("church"))
+
+
+def randx(b, d, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal((b, d)).astype(np.float32))
+
+
+def test_pallas_and_ref_model_paths_agree(church):
+    m_ref = GmmModel(make_gmm("church"), use_pallas=False)
+    x = randx(4, 64)
+    s = jnp.full((4,), 0.3)
+    np.testing.assert_allclose(church.eps(x, s), m_ref.eps(x, s), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("solver", SOLVERS)
+def test_solver_steps_all_models(solver):
+    for model_name in ["gmm_church", "gmm_latent_cond", "small_denoiser"]:
+        model, guided, dim = build_model(model_name)
+        step = make_step_fn(model, solver, guided)
+        b = 3
+        x = randx(b, dim, seed=1)
+        s_from = jnp.asarray([0.1, 0.3, 0.6], dtype=jnp.float32)
+        s_to = s_from + 0.1
+        args = [x, s_from, s_to]
+        if guided:
+            mask = jnp.zeros((b, model.k)).at[:, 1::4].set(1.0)
+            args += [mask, jnp.asarray(7.5, dtype=jnp.float32)]
+        if solver == "ddpm":
+            args += [jnp.zeros_like(x)]
+        out = step(*args)
+        assert out.shape == (b, dim)
+        assert bool(jnp.isfinite(out).all()), f"{model_name}/{solver}"
+
+
+def test_ddim_identity_at_equal_times(church):
+    x = randx(2, 64, seed=2)
+    s = jnp.asarray([0.3, 0.5])
+    out = ddim_step(lambda xx, ss: church.eps(xx, ss), x, s, s)
+    np.testing.assert_allclose(out, x, rtol=1e-5, atol=1e-6)
+
+
+def test_guidance_identities():
+    m = CondGmmModel(make_gmm("latent_cond"))
+    x = randx(2, 256, seed=3)
+    s = jnp.full((2,), 0.4)
+    mask = jnp.zeros((2, m.k)).at[:, 0::4].set(1.0)
+    full = jnp.ones((2, m.k))
+    e_u = m.eps(x, s, full)
+    e_c = m.eps(x, s, mask)
+    np.testing.assert_allclose(m.eps_guided(x, s, mask, 0.0), e_u, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(m.eps_guided(x, s, mask, 1.0), e_c, rtol=1e-5, atol=1e-6)
+
+
+def test_batched_equals_rowwise(church):
+    x = randx(5, 64, seed=4)
+    s = jnp.asarray([0.1, 0.2, 0.5, 0.7, 0.9])
+    full = church.eps(x, s)
+    for i in range(5):
+        row = church.eps(x[i : i + 1], s[i : i + 1])
+        np.testing.assert_allclose(full[i], row[0], rtol=1e-5, atol=1e-6)
+
+
+def test_denoiser_deterministic_weights():
+    a = SmallDenoiser(64)
+    b = SmallDenoiser(64)
+    x = randx(2, 64, seed=5)
+    s = jnp.asarray([0.2, 0.8])
+    np.testing.assert_array_equal(np.asarray(a.eps(x, s)), np.asarray(b.eps(x, s)))
+
+
+def test_solvers_converge_to_same_solution():
+    """All deterministic solvers approach the same x(1) as steps increase."""
+    m = GmmModel(make_gmm("cifar"))
+    x0 = randx(1, 64, seed=6)
+    n = 200
+    grid = schedule.grid(n)
+
+    def solve(solver):
+        step = make_step_fn(m, solver, False)
+        x = x0
+        for i in range(n):
+            x = step(x, grid[i : i + 1], grid[i + 1 : i + 2])
+        return np.asarray(x)
+
+    base = solve("ddim")
+    for solver in ["euler", "heun", "dpm2"]:
+        diff = np.abs(solve(solver) - base).mean()
+        assert diff < 0.08, f"{solver}: {diff}"
+
+
+def test_evals_per_step_registry():
+    assert EVALS_PER_STEP["ddim"] == 1
+    assert EVALS_PER_STEP["heun"] == 2
+    assert EVALS_PER_STEP["dpm2"] == 2
+    assert set(EVALS_PER_STEP) == set(SOLVERS)

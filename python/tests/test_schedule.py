@@ -1,0 +1,43 @@
+"""VP schedule invariants (mirrors rust/src/schedule tests)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import schedule
+
+
+def test_endpoints():
+    assert float(schedule.alpha_bar(1.0)) == pytest.approx(1.0, abs=1e-7)
+    ab0 = float(schedule.alpha_bar(0.0))
+    assert 0.0 < ab0 < 1e-4
+
+
+def test_monotone_in_s():
+    s = jnp.linspace(0, 1, 101)
+    ab = np.asarray(schedule.alpha_bar(s))
+    assert (np.diff(ab) > 0).all()
+
+
+def test_sigma_floor_at_data():
+    assert float(schedule.sigma(jnp.asarray(1.0))) == pytest.approx(
+        schedule.SIGMA_FLOOR
+    )
+
+
+def test_lambda_inverse_roundtrip():
+    s = jnp.linspace(0.01, 0.99, 50)
+    back = np.asarray(schedule.s_of_lam(schedule.lam(s)))
+    np.testing.assert_allclose(back, np.asarray(s), atol=2e-3)
+
+
+def test_grid_shape():
+    g = schedule.grid(25)
+    assert g.shape == (26,)
+    assert float(g[0]) == 0.0
+    assert float(g[-1]) == 1.0
+
+
+def test_beta_positive():
+    for tau in np.linspace(0, 1, 11):
+        assert schedule.beta(float(tau)) > 0

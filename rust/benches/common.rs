@@ -1,0 +1,102 @@
+//! Shared helpers for the table/figure benches (included per-bench via
+//! `#[path = "common.rs"] mod common;`).
+#![allow(dead_code)]
+
+use srds::coordinator::{prior_sample, sequential, Conditioning, SrdsConfig};
+use srds::data::make_gmm;
+use srds::model::{EpsModel, GmmEps, SmallDenoiser};
+use srds::runtime::{PjrtBackend, PjrtRuntime};
+use srds::solvers::{NativeBackend, Solver, StepBackend};
+use std::sync::Arc;
+
+/// Native backend for a manifest-style model name.
+pub fn native(model: &str, solver: Solver) -> NativeBackend {
+    let m: Arc<dyn EpsModel> = if model == "small_denoiser" {
+        Arc::new(SmallDenoiser::new(256))
+    } else {
+        Arc::new(GmmEps::new(make_gmm(model.trim_start_matches("gmm_"))))
+    };
+    NativeBackend::new(m, solver)
+}
+
+/// PJRT backend when artifacts exist (leaks one runtime per call — benches
+/// are short-lived processes).
+pub fn pjrt(model: &str, solver: Solver) -> Option<Box<dyn StepBackend>> {
+    let rt = PjrtRuntime::open_default().ok()?;
+    let rt: &'static PjrtRuntime = Box::leak(Box::new(rt));
+    Some(Box::new(PjrtBackend::new(rt, model, solver).ok()?))
+}
+
+/// PJRT if available, else native (returned boxed for uniformity).
+pub fn best_backend(model: &str, solver: Solver) -> (Box<dyn StepBackend>, &'static str) {
+    match pjrt(model, solver) {
+        Some(b) => (b, "pjrt"),
+        None => (Box::new(native(model, solver)), "native"),
+    }
+}
+
+/// Generate `count` samples with the sequential baseline; returns the
+/// flat samples and mean wall ms per sample.
+pub fn sequential_samples(
+    be: &dyn StepBackend,
+    n: usize,
+    count: usize,
+    cond: &Conditioning,
+    seed0: u64,
+) -> (Vec<f32>, f64) {
+    let d = be.dim();
+    let mut out = Vec::with_capacity(count * d);
+    let t = std::time::Instant::now();
+    for s in 0..count as u64 {
+        let x0 = prior_sample(d, seed0 + s);
+        let (xs, _) = sequential(be, &x0, n, cond, seed0 + s);
+        out.extend_from_slice(&xs);
+    }
+    (out, t.elapsed().as_secs_f64() * 1e3 / count as f64)
+}
+
+/// SRDS statistics aggregated over `count` chains.
+pub struct SrdsAgg {
+    pub samples: Vec<f32>,
+    pub mean_iters: f64,
+    pub mean_eff: f64,
+    pub mean_eff_pipelined: f64,
+    pub mean_total: f64,
+    pub ms_per_sample: f64,
+}
+
+pub fn srds_samples(
+    be: &dyn StepBackend,
+    cfg_base: &SrdsConfig,
+    count: usize,
+    seed0: u64,
+) -> SrdsAgg {
+    let d = be.dim();
+    let mut samples = Vec::with_capacity(count * d);
+    let (mut it, mut eff, mut effp, mut tot) = (0.0, 0.0, 0.0, 0.0);
+    let t = std::time::Instant::now();
+    for s in 0..count as u64 {
+        let x0 = prior_sample(d, seed0 + s);
+        let cfg = cfg_base.clone().with_seed(seed0 + s);
+        let r = srds::coordinator::srds(be, &x0, &cfg);
+        samples.extend_from_slice(&r.sample);
+        it += r.stats.iters as f64;
+        eff += r.stats.eff_serial_evals as f64;
+        effp += r.stats.eff_serial_evals_pipelined as f64;
+        tot += r.stats.total_evals as f64;
+    }
+    let c = count as f64;
+    SrdsAgg {
+        samples,
+        mean_iters: it / c,
+        mean_eff: eff / c,
+        mean_eff_pipelined: effp / c,
+        mean_total: tot / c,
+        ms_per_sample: t.elapsed().as_secs_f64() * 1e3 / c,
+    }
+}
+
+/// Paper pixel-255 tolerance mapped to native units.
+pub fn tol255(t: f32) -> f32 {
+    srds::coordinator::convergence::tol_from_pixel255(t)
+}

@@ -1,0 +1,129 @@
+//! Hot-path micro benchmarks (the in-tree criterion substitute): per-op
+//! medians for every layer the coordinator touches. §Perf of
+//! EXPERIMENTS.md tracks these before/after each optimization.
+//!
+//! `cargo bench --bench hotpath`
+
+#[path = "common.rs"]
+mod common;
+
+use srds::coordinator::{prior_sample, SrdsConfig};
+use srds::data::{make_gmm, rng::SplitMix64};
+use srds::exec::simulate_srds;
+use srds::metrics::fit_moments;
+use srds::model::{EpsModel, GmmEps, SmallDenoiser};
+use srds::report::{time_median, Table};
+use srds::schedule::Partition;
+use srds::solvers::{ddim_coeffs, Solver, StepBackend, StepRequest};
+
+fn bench<F: FnMut()>(t: &mut Table, name: &str, per: usize, f: F) {
+    let d = time_median(f, 2, 9);
+    let ns = d.as_nanos() as f64 / per.max(1) as f64;
+    let unit = if ns > 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns > 1e3 {
+        format!("{:.2} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    };
+    t.row(vec![name.to_string(), unit]);
+}
+
+fn main() {
+    let mut t = Table::new("hot-path medians (per unit in name)", &["op", "median"]);
+    let mut rng = SplitMix64::new(1);
+
+    // L3 native model evals.
+    let gmm = GmmEps::new(make_gmm("latent_cond"));
+    let x32 = rng.normals_f32(32 * 256);
+    let s32: Vec<f32> = (0..32).map(|i| i as f32 / 32.0).collect();
+    let mut out = vec![0.0f32; 32 * 256];
+    bench(&mut t, "gmm eps, batch 32 row (d=256,K=16)", 32, || {
+        gmm.eps(&x32, &s32, None, &mut out);
+    });
+    let den = SmallDenoiser::new(256);
+    bench(&mut t, "denoiser eps, batch 32 row", 32, || {
+        den.eps(&x32, &s32, None, &mut out);
+    });
+
+    // Schedule + solver coefficient math.
+    bench(&mut t, "ddim_coeffs x1000", 1000, || {
+        for i in 0..1000 {
+            let s = i as f32 / 1001.0;
+            std::hint::black_box(ddim_coeffs(s, s + 1e-3));
+        }
+    });
+
+    // Corrector update.
+    let a = rng.normals_f32(256);
+    let b = rng.normals_f32(256);
+    let c = rng.normals_f32(256);
+    let mut xo = vec![0.0f32; 256];
+    bench(&mut t, "corrector update (d=256) x100", 100, || {
+        for _ in 0..100 {
+            for j in 0..256 {
+                xo[j] = a[j] + (b[j] - c[j]);
+            }
+            std::hint::black_box(&xo);
+        }
+    });
+
+    // Full native SRDS runs.
+    let be = common::native("gmm_church", Solver::Ddim);
+    let x0 = prior_sample(64, 3);
+    bench(&mut t, "SRDS N=256 church (native, full run)", 1, || {
+        let cfg = SrdsConfig::new(256).with_tol(common::tol255(0.1)).with_seed(3);
+        std::hint::black_box(srds::coordinator::srds(&be, &x0, &cfg));
+    });
+
+    // simclock scheduling throughput.
+    let part = Partition::sqrt_n(1024);
+    bench(&mut t, "simclock schedule N=1024, 5 iters", 1, || {
+        std::hint::black_box(simulate_srds(&part, 5, 1, 33, true));
+    });
+
+    // Metrics.
+    let xs = rng.normals_f32(256 * 64);
+    bench(&mut t, "fit_moments 256x64", 1, || {
+        std::hint::black_box(fit_moments(&xs, 256, 64));
+    });
+
+    // PJRT step latency per batch bucket (when artifacts exist).
+    if let Some(be) = common::pjrt("gmm_church", Solver::Ddim) {
+        for bsz in [1usize, 8, 32] {
+            let x = rng.normals_f32(bsz * 64);
+            let s_from: Vec<f32> = (0..bsz).map(|i| 0.3 + 1e-3 * i as f32).collect();
+            let s_to: Vec<f32> = s_from.iter().map(|v| v + 0.01).collect();
+            let seeds = vec![0u64; bsz];
+            bench(&mut t, &format!("pjrt ddim step b={bsz} (church)"), 1, || {
+                std::hint::black_box(be.step(&StepRequest {
+                    x: &x,
+                    s_from: &s_from,
+                    s_to: &s_to,
+                    mask: None,
+                    guidance: 0.0,
+                    seeds: &seeds,
+                }));
+            });
+        }
+        if let Some(bd) = common::pjrt("small_denoiser", Solver::Ddim) {
+            let x = rng.normals_f32(32 * 256);
+            let s_from: Vec<f32> = (0..32).map(|i| 0.3 + 1e-3 * i as f32).collect();
+            let s_to: Vec<f32> = s_from.iter().map(|v| v + 0.01).collect();
+            let seeds = vec![0u64; 32];
+            bench(&mut t, "pjrt denoiser step b=32", 1, || {
+                std::hint::black_box(bd.step(&StepRequest {
+                    x: &x,
+                    s_from: &s_from,
+                    s_to: &s_to,
+                    mask: None,
+                    guidance: 0.0,
+                    seeds: &seeds,
+                }));
+            });
+        }
+    } else {
+        t.row(vec!["pjrt steps".into(), "(artifacts not built)".into()]);
+    }
+    t.print();
+}

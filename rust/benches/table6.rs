@@ -1,0 +1,91 @@
+//! Table 6 (App. D): device-count scaling — SRDS vs ParaDiGMS at 1/2/4
+//! devices, N = 25 DDIM. Paper shape: SRDS's minimal communication lets
+//! it convert added devices into latency better than ParaDiGMS, whose
+//! per-sweep AllReduce eats the gains.
+//!
+//! Both modeled (simulated clock, deterministic) and measured (worker
+//! pool wall-clock) numbers are reported.
+//!
+//! `cargo bench --bench table6`
+
+#[path = "common.rs"]
+mod common;
+
+use srds::coordinator::{prior_sample, Conditioning, ParadigmsConfig, SrdsConfig};
+use srds::data::make_gmm;
+use srds::exec::{measured_pipelined_srds, simulate_paradigms, simulate_srds, NativeFactory, WorkerPool};
+use srds::model::{EpsModel, GmmEps};
+use srds::report::{f1, f2, Table};
+use srds::schedule::Partition;
+use srds::solvers::Solver;
+use std::sync::Arc;
+
+/// Per-sweep AllReduce/prefix-sum overhead in eval units. The paper's
+/// App. D measures ParaDiGMS turning a 20x eff-step reduction into only
+/// a 3.4x wallclock speedup — i.e. ~4 evals of per-sweep sync overhead.
+const SYNC_COST: u64 = 4;
+
+fn main() {
+    let n = 25;
+    let reps = 8u64;
+    let tol = common::tol255(0.1);
+    let be = common::native("gmm_latent_cond", Solver::Ddim);
+    let model: Arc<dyn EpsModel> = Arc::new(GmmEps::new(make_gmm("latent_cond")));
+
+    // SRDS iterations (device count doesn't change iterates).
+    let mut srds_iters = 0.0;
+    for s in 0..reps {
+        let x0 = prior_sample(256, 70_000 + s);
+        let cfg = SrdsConfig::new(n).with_tol(tol).with_seed(70_000 + s);
+        srds_iters += srds::coordinator::srds(&be, &x0, &cfg).stats.iters as f64;
+    }
+    let srds_iters = (srds_iters / reps as f64).round() as usize;
+    // A "device" sustains `bpd` rows per eval slot (the SD-scale model
+    // saturates a GPU at small batch; 2 here).
+    let bpd = 2usize;
+
+    let mut t = Table::new(
+        &format!("Table 6 — device scaling, N={n} DDIM (SRDS iters={srds_iters}, PD tol 1e-2², batch/device={bpd})"),
+        &[
+            "Devices",
+            "SRDS time (model)",
+            "SRDS wall ms",
+            "ParaDiGMS time (model)",
+            "SRDS utilization",
+        ],
+    );
+    let part = Partition::sqrt_n(n);
+    for devices in [1usize, 2, 4] {
+        let sim = simulate_srds(&part, srds_iters, 1, devices * bpd, true);
+        // PD sweeps depend on the window = device capacity.
+        let window = (devices * bpd).min(n);
+        let mut pd_sweeps = 0.0;
+        for s in 0..reps {
+            let x0 = prior_sample(256, 70_000 + s);
+            let pcfg = ParadigmsConfig::new(n).with_tol(1e-4).with_window(window).with_seed(70_000 + s);
+            pd_sweeps += srds::coordinator::paradigms(&be, &x0, &pcfg).stats.iters as f64;
+        }
+        let pd = simulate_paradigms((pd_sweeps / reps as f64).round() as usize, window, devices, bpd, 1, SYNC_COST);
+        // Measured pool wall-clock.
+        let pool =
+            WorkerPool::new(Arc::new(NativeFactory::new(model.clone(), Solver::Ddim)), devices);
+        let mut wall = 0.0;
+        for s in 0..reps {
+            let x0 = prior_sample(256, 70_000 + s);
+            let cfg = SrdsConfig::new(n).with_tol(tol).with_seed(70_000 + s);
+            let t0 = std::time::Instant::now();
+            let _ = measured_pipelined_srds(&pool, &x0, &cfg, &Conditioning::none());
+            wall += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        t.row(vec![
+            format!("{devices}"),
+            f1(sim.makespan as f64),
+            f2(wall / reps as f64),
+            f1(pd.makespan as f64),
+            format!("{:.0}%", sim.utilization * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape (Table 6): SRDS 1.62→1.08→0.82 s/sample over 1→2→4 devices;");
+    println!("ParaDiGMS 2.71→2.01→1.51 — SRDS stays strictly faster at every width.");
+}

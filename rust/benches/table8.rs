@@ -1,0 +1,52 @@
+//! Table 8 (App. F): tolerance ablation on church, N = 1024 — KID of
+//! SRDS samples vs the sequential KID as τ relaxes from 0.1 to 1.0
+//! (pixel-255 units). Paper shape: looser τ cuts iterations ~35% with no
+//! measurable KID change.
+//!
+//! `cargo bench --bench table8`
+
+#[path = "common.rs"]
+mod common;
+
+use srds::coordinator::SrdsConfig;
+use srds::data::make_gmm;
+use srds::metrics::kid_poly;
+use srds::report::{f1, f4, Table};
+use srds::solvers::Solver;
+
+fn main() {
+    let n = 1024;
+    let count = 160;
+    let gmm = make_gmm("church");
+    let be = common::native("gmm_church", Solver::Ddim);
+    let reference = gmm.sample(count, 77, None);
+
+    let (seq, _) = common::sequential_samples(&be, n, count, &Default::default(), 20_000);
+    let kid_seq = kid_poly(&seq, count, &reference, count, gmm.dim());
+
+    let mut t = Table::new(
+        "Table 8 — tolerance ablation, church N=1024, KID vs analytic reference",
+        &["Method", "SRDS Iters", "Eff. Serial Evals", "Total Evals", "KID"],
+    );
+    t.row(vec![
+        "Sequential".into(),
+        "-".into(),
+        format!("{n}"),
+        format!("{n}"),
+        f4(kid_seq),
+    ]);
+    for tau in [0.1f32, 0.5, 1.0] {
+        let cfg = SrdsConfig::new(n).with_tol(common::tol255(tau));
+        let agg = common::srds_samples(&be, &cfg, count, 20_000);
+        let kid = kid_poly(&agg.samples, count, &reference, count, gmm.dim());
+        t.row(vec![
+            format!("SRDS - {tau}"),
+            f1(agg.mean_iters),
+            f1(agg.mean_eff_pipelined),
+            f1(agg.mean_total),
+            f4(kid),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: iters drop 5.7 → 3.7 across the ablation at constant KID.");
+}

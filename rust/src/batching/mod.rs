@@ -1,0 +1,152 @@
+//! Dynamic batching: coalesce concurrently-pending step work into
+//! bucketed batch sizes (the request-level complement of SRDS's
+//! within-sample batching from §3.4).
+//!
+//! The server collects step rows from multiple in-flight samplers for up
+//! to `max_wait` and flushes when a bucket fills — classic
+//! vLLM-router-style batching adapted to diffusion steps.
+
+use std::time::{Duration, Instant};
+
+/// One row of pending step work (request-agnostic payload).
+#[derive(Debug, Clone)]
+pub struct PendingRow {
+    /// Opaque owner tag (request id, block id, …).
+    pub tag: u64,
+    pub x: Vec<f32>,
+    pub s_from: f32,
+    pub s_to: f32,
+    pub mask: Option<Vec<f32>>,
+    pub guidance: f32,
+    pub seed: u64,
+}
+
+/// Batch assembly policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Available batch sizes, descending preference (from the artifact
+    /// manifest's `batch_buckets`).
+    pub buckets: Vec<usize>,
+    /// Flush incomplete batches after this long.
+    pub max_wait: Duration,
+    /// Hard cap on queued rows before back-pressuring producers.
+    pub max_queue: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { buckets: vec![32, 8, 1], max_wait: Duration::from_millis(2), max_queue: 1024 }
+    }
+}
+
+/// Accumulates rows and decides when a batch should flush.
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: Vec<PendingRow>,
+    oldest: Option<Instant>,
+    /// Flush statistics: (batches, rows, padded_rows).
+    pub flushed_batches: u64,
+    pub flushed_rows: u64,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, queue: Vec::new(), oldest: None, flushed_batches: 0, flushed_rows: 0 }
+    }
+
+    /// Push a row; returns `false` (back-pressure) when the queue is full.
+    pub fn push(&mut self, row: PendingRow) -> bool {
+        if self.queue.len() >= self.policy.max_queue {
+            return false;
+        }
+        if self.queue.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.queue.push(row);
+        true
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn max_bucket(&self) -> usize {
+        self.policy.buckets.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Whether a flush should happen now: the largest bucket is full, or
+    /// the oldest queued row has waited past `max_wait`.
+    pub fn should_flush(&self) -> bool {
+        if self.queue.len() >= self.max_bucket() {
+            return true;
+        }
+        match self.oldest {
+            Some(t) => !self.queue.is_empty() && t.elapsed() >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Remove and return the next batch (rows in FIFO order), up to the
+    /// largest bucket; sub-bucket remainders are padded downstream by the
+    /// runtime's bucket plan.
+    pub fn take_batch(&mut self) -> Vec<PendingRow> {
+        let take = self.queue.len().min(self.max_bucket());
+        let batch: Vec<PendingRow> = self.queue.drain(..take).collect();
+        self.oldest = if self.queue.is_empty() { None } else { Some(Instant::now()) };
+        self.flushed_batches += 1;
+        self.flushed_rows += batch.len() as u64;
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(tag: u64) -> PendingRow {
+        PendingRow { tag, x: vec![0.0; 4], s_from: 0.1, s_to: 0.2, mask: None, guidance: 0.0, seed: 0 }
+    }
+
+    #[test]
+    fn fills_largest_bucket_first() {
+        let mut b = Batcher::new(BatchPolicy { buckets: vec![4, 2, 1], max_wait: Duration::from_secs(10), max_queue: 100 });
+        for i in 0..5 {
+            assert!(b.push(row(i)));
+        }
+        assert!(b.should_flush());
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn timeout_flushes_partial() {
+        let mut b = Batcher::new(BatchPolicy { buckets: vec![8], max_wait: Duration::from_millis(1), max_queue: 100 });
+        b.push(row(1));
+        assert!(!b.should_flush());
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.should_flush());
+        assert_eq!(b.take_batch().len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn backpressure_at_capacity() {
+        let mut b = Batcher::new(BatchPolicy { buckets: vec![2], max_wait: Duration::from_secs(1), max_queue: 2 });
+        assert!(b.push(row(1)));
+        assert!(b.push(row(2)));
+        assert!(!b.push(row(3)), "queue full must refuse");
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(Batcher::new(BatchPolicy::default()).policy.clone());
+        for i in 0..3 {
+            b.push(row(i));
+        }
+        std::thread::sleep(Duration::from_millis(3));
+        let batch = b.take_batch();
+        let tags: Vec<u64> = batch.iter().map(|r| r.tag).collect();
+        assert_eq!(tags, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,82 @@
+//! Convergence criteria (Alg. 1 line 13 and the baselines' per-point
+//! checks).
+
+/// Norm used to measure the change between consecutive iterates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvNorm {
+    /// Mean absolute change per dimension — the paper's pixel-ℓ1
+    /// criterion (§4.1), in native units.
+    L1Mean,
+    /// Root mean squared change per dimension (ParaDiGMS uses an ℓ2-style
+    /// per-point criterion).
+    L2Mean,
+    /// Max absolute change.
+    LInf,
+}
+
+impl ConvNorm {
+    /// Distance between two equal-length vectors under this norm.
+    pub fn dist(self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            ConvNorm::L1Mean => {
+                a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32
+            }
+            ConvNorm::L2Mean => (a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f32>()
+                / a.len() as f32)
+                .sqrt(),
+            ConvNorm::LInf => a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f32::max),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ConvNorm::L1Mean => "l1_mean",
+            ConvNorm::L2Mean => "l2_mean",
+            ConvNorm::LInf => "linf",
+        }
+    }
+}
+
+/// Map the paper's pixel-space tolerance (values in `[0, 255]`) to this
+/// repo's native data units. The GMM zoo has a data range of roughly
+/// `[-3, 3]` (≈ 6 units across), so `τ_native = τ_255 · 6 / 255`.
+pub fn tol_from_pixel255(tau_255: f32) -> f32 {
+    tau_255 * 6.0 / 255.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms_on_known_vectors() {
+        let a = [0.0f32, 0.0, 0.0, 0.0];
+        let b = [1.0f32, -1.0, 2.0, 0.0];
+        assert_eq!(ConvNorm::L1Mean.dist(&a, &b), 1.0);
+        assert!((ConvNorm::L2Mean.dist(&a, &b) - (6.0f32 / 4.0).sqrt()).abs() < 1e-6);
+        assert_eq!(ConvNorm::LInf.dist(&a, &b), 2.0);
+    }
+
+    #[test]
+    fn identical_vectors_have_zero_distance() {
+        let a = [1.5f32, -2.0, 3.0];
+        for n in [ConvNorm::L1Mean, ConvNorm::L2Mean, ConvNorm::LInf] {
+            assert_eq!(n.dist(&a, &a), 0.0);
+        }
+    }
+
+    #[test]
+    fn pixel_tolerance_mapping() {
+        let t = tol_from_pixel255(0.1);
+        assert!((t - 0.1 * 6.0 / 255.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,119 @@
+//! The sequential baseline: `N` fine steps, one after another (paper
+//! Eq. 3). This is the exact trajectory SRDS converges to (Prop. 1).
+
+use super::{Conditioning, RunStats};
+use crate::schedule::Grid;
+use crate::solvers::{StepBackend, StepRequest};
+use std::time::Instant;
+
+/// Run the `n`-step sequential solve from `x0` (the prior sample).
+/// Returns the final sample and its accounting.
+pub fn sequential(
+    backend: &dyn StepBackend,
+    x0: &[f32],
+    n: usize,
+    cond: &Conditioning,
+    seed: u64,
+) -> (Vec<f32>, RunStats) {
+    let t0 = Instant::now();
+    let grid = Grid::new(n);
+    let mask = cond.tiled_mask(1);
+    let mut x = x0.to_vec();
+    for i in 0..n {
+        let req = StepRequest {
+            x: &x,
+            s_from: &[grid.s(i)],
+            s_to: &[grid.s(i + 1)],
+            mask: mask.as_deref(),
+            guidance: cond.guidance,
+            seeds: &[seed],
+        };
+        x = backend.step(&req);
+    }
+    let epc = backend.evals_per_step() as u64;
+    let stats = RunStats {
+        iters: 0,
+        converged: true,
+        eff_serial_evals: n as u64 * epc,
+        eff_serial_evals_pipelined: n as u64 * epc,
+        total_evals: n as u64 * epc,
+        wall: t0.elapsed(),
+        per_iter: vec![],
+    };
+    (x, stats)
+}
+
+/// Sequential solve that also returns every intermediate block-boundary
+/// state (used by the Prop. 1 exactness tests and the toy example).
+pub fn sequential_trajectory(
+    backend: &dyn StepBackend,
+    x0: &[f32],
+    n: usize,
+    cond: &Conditioning,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    let grid = Grid::new(n);
+    let mask = cond.tiled_mask(1);
+    let mut out = Vec::with_capacity(n + 1);
+    out.push(x0.to_vec());
+    let mut x = x0.to_vec();
+    for i in 0..n {
+        let req = StepRequest {
+            x: &x,
+            s_from: &[grid.s(i)],
+            s_to: &[grid.s(i + 1)],
+            mask: mask.as_deref(),
+            guidance: cond.guidance,
+            seeds: &[seed],
+        };
+        x = backend.step(&req);
+        out.push(x.clone());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::make_gmm;
+    use crate::model::GmmEps;
+    use crate::solvers::{NativeBackend, Solver};
+    use std::sync::Arc;
+
+    #[test]
+    fn accounting_counts_every_step() {
+        let be = NativeBackend::new(Arc::new(GmmEps::new(make_gmm("toy2d"))), Solver::Heun);
+        let x0 = super::super::prior_sample(2, 1);
+        let (_, st) = sequential(&be, &x0, 10, &Conditioning::none(), 1);
+        assert_eq!(st.total_evals, 20); // heun = 2 evals/step
+        assert_eq!(st.eff_serial_evals, 20);
+    }
+
+    #[test]
+    fn trajectory_ends_at_sample() {
+        let be = NativeBackend::new(Arc::new(GmmEps::new(make_gmm("toy2d"))), Solver::Ddim);
+        let x0 = super::super::prior_sample(2, 7);
+        let (x, _) = sequential(&be, &x0, 16, &Conditioning::none(), 7);
+        let traj = sequential_trajectory(&be, &x0, 16, &Conditioning::none(), 7);
+        assert_eq!(traj.len(), 17);
+        assert_eq!(traj[16], x);
+        assert_eq!(traj[0], x0);
+    }
+
+    #[test]
+    fn denoised_sample_is_near_the_mixture() {
+        // After a full solve the sample should sit close to some component.
+        let gmm = make_gmm("toy2d");
+        let be = NativeBackend::new(Arc::new(GmmEps::new(gmm.clone())), Solver::Ddim);
+        let x0 = super::super::prior_sample(2, 3);
+        let (x, _) = sequential(&be, &x0, 200, &Conditioning::none(), 3);
+        let min_d = (0..gmm.k())
+            .map(|k| {
+                let m = gmm.mean_of(k);
+                x.iter().zip(m).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt()
+            })
+            .fold(f32::MAX, f32::min);
+        // within ~3 sigma of the nearest component
+        assert!(min_d < 3.0 * 0.6, "sample too far from mixture: {min_d}");
+    }
+}

@@ -1,0 +1,341 @@
+//! SRDS — Algorithm 1 of the paper.
+//!
+//! ```text
+//! x^0_0 ~ N(0, I)
+//! x^0_i = G(x^0_{i-1})                      # coarse init sweep
+//! repeat p = 1, 2, …:
+//!   y_i  = F(x^{p-1}_{i-1})   ∀i in parallel  # batched fine solves
+//!   cur_i = G(x^p_{i-1})      sequentially    # coarse sweep
+//!   x^p_i = y_i + cur_i − prev_i              # predictor-corrector
+//!   prev_i = cur_i
+//! until |x^p_M − x^{p-1}_M| < τ
+//! ```
+//!
+//! The fine solves for all blocks advance in lockstep through one
+//! *batched* step request per fine-step index — this is the paper's
+//! batched-inference benefit (§3.4): a single sample generation fills the
+//! device batch dimension with its own trajectory blocks.
+
+use super::{Conditioning, IterStat, RunStats, SrdsConfig};
+use crate::schedule::Partition;
+use crate::solvers::{StepBackend, StepRequest};
+use std::time::Instant;
+
+/// Result of one SRDS run.
+#[derive(Debug, Clone)]
+pub struct SrdsResult {
+    /// The generated sample `x^p_M`.
+    pub sample: Vec<f32>,
+    pub stats: RunStats,
+    /// Final-sample iterate after the coarse init (index 0) and after
+    /// every refinement — populated when `cfg.keep_iterates`.
+    pub iterates: Vec<Vec<f32>>,
+}
+
+/// One coarse step `G`: a single solver step across a whole block.
+fn coarse_step(
+    backend: &dyn StepBackend,
+    x: &[f32],
+    s_from: f32,
+    s_to: f32,
+    cond: &Conditioning,
+    seed: u64,
+) -> Vec<f32> {
+    let mask = cond.tiled_mask(1);
+    backend.step(&StepRequest {
+        x,
+        s_from: &[s_from],
+        s_to: &[s_to],
+        mask: mask.as_deref(),
+        guidance: cond.guidance,
+        seeds: &[seed],
+    })
+}
+
+/// All blocks' fine solves, batched in lockstep.
+///
+/// Returns the per-block results `y[i]` plus the accounting pair
+/// `(serial_fine_steps, total_fine_steps)`.
+fn fine_solves(
+    backend: &dyn StepBackend,
+    part: &Partition,
+    x_prev: &[Vec<f32>],
+    cond: &Conditioning,
+    seed: u64,
+) -> (Vec<Vec<f32>>, u64, u64) {
+    let m = part.num_blocks();
+    let d = backend.dim();
+    let grid = part.grid();
+    let max_len = (0..m).map(|j| part.block_len(j)).max().unwrap_or(0);
+
+    // states[j] starts at the previous iterate of boundary j (block j+1's
+    // initial value); rows drop out once their block is fully solved.
+    let mut states: Vec<Vec<f32>> = (0..m).map(|j| x_prev[j].clone()).collect();
+    let mut serial = 0u64;
+    let mut total = 0u64;
+    for t in 0..max_len {
+        let active: Vec<usize> = (0..m).filter(|&j| t < part.block_len(j)).collect();
+        if active.is_empty() {
+            break;
+        }
+        let rows = active.len();
+        let mut x = Vec::with_capacity(rows * d);
+        let mut s_from = Vec::with_capacity(rows);
+        let mut s_to = Vec::with_capacity(rows);
+        for &j in &active {
+            x.extend_from_slice(&states[j]);
+            let base = part.bound(j) + t;
+            s_from.push(grid.s(base));
+            s_to.push(grid.s(base + 1));
+        }
+        let mask = cond.tiled_mask(rows);
+        let seeds = vec![seed; rows];
+        let out = backend.step(&StepRequest {
+            x: &x,
+            s_from: &s_from,
+            s_to: &s_to,
+            mask: mask.as_deref(),
+            guidance: cond.guidance,
+            seeds: &seeds,
+        });
+        for (r, &j) in active.iter().enumerate() {
+            states[j].copy_from_slice(&out[r * d..(r + 1) * d]);
+        }
+        serial += 1;
+        total += rows as u64;
+    }
+    (states, serial, total)
+}
+
+/// Run SRDS from the prior sample `x0`. See module docs for the algorithm.
+pub fn srds(backend: &dyn StepBackend, x0: &[f32], cfg: &SrdsConfig) -> SrdsResult {
+    let t0 = Instant::now();
+    let part = cfg.partition();
+    let m = part.num_blocks();
+    let b = part.block();
+    let epc = backend.evals_per_step() as u64;
+    let max_iters = cfg.max_iters.unwrap_or(m).max(1);
+
+    // Coarse init sweep (Alg. 1 lines 2–4).
+    let mut x: Vec<Vec<f32>> = Vec::with_capacity(m + 1);
+    x.push(x0.to_vec());
+    let mut prev: Vec<Vec<f32>> = vec![Vec::new()];
+    for i in 1..=m {
+        let g = coarse_step(
+            backend,
+            &x[i - 1],
+            part.s_bound(i - 1),
+            part.s_bound(i),
+            &cfg.cond,
+            cfg.seed,
+        );
+        x.push(g.clone());
+        prev.push(g);
+    }
+    let mut total_evals = m as u64 * epc;
+    let mut eff_serial = m as u64 * epc;
+    let mut iterates = Vec::new();
+    if cfg.keep_iterates {
+        iterates.push(x[m].clone());
+    }
+
+    let mut per_iter = Vec::new();
+    let mut converged = false;
+    let mut iters = 0usize;
+
+    for p in 1..=max_iters {
+        let evals_before = total_evals;
+        // Parallel fine solves from the previous iterate (line 7–8).
+        let (y, fine_serial, fine_total) =
+            fine_solves(backend, &part, &x[0..m], &cfg.cond, cfg.seed);
+        total_evals += fine_total * epc;
+        eff_serial += fine_serial * epc;
+
+        // Sequential coarse sweep + predictor-corrector (lines 9–12).
+        let x_final_prev = x[m].clone();
+        for i in 1..=m {
+            let cur = coarse_step(
+                backend,
+                &x[i - 1],
+                part.s_bound(i - 1),
+                part.s_bound(i),
+                &cfg.cond,
+                cfg.seed,
+            );
+            let (yi, previ) = (&y[i - 1], &prev[i]);
+            let xi = &mut x[i];
+            // Eq. 6's parenthesization y + (G_new − G_old) is load-bearing:
+            // once the coarse solves agree bitwise the correction is an
+            // exact 0.0 and x collapses onto the fine solve (Prop. 1's
+            // bitwise-equality property).
+            for j in 0..xi.len() {
+                xi[j] = yi[j] + (cur[j] - previ[j]);
+            }
+            prev[i] = cur;
+        }
+        total_evals += m as u64 * epc;
+        eff_serial += m as u64 * epc;
+
+        iters = p;
+        let residual = cfg.norm.dist(&x[m], &x_final_prev);
+        per_iter.push(IterStat { iter: p, residual, evals: total_evals - evals_before });
+        if cfg.keep_iterates {
+            iterates.push(x[m].clone());
+        }
+        // Line 13: convergence on the final generation; Prop. 1 makes
+        // p == m exact regardless of τ.
+        if residual < cfg.tol || p >= m {
+            converged = residual < cfg.tol || p >= m;
+            break;
+        }
+    }
+
+    // Pipelined schedule accounting (Prop. 2 proof): iteration p's last
+    // fine solve finishes at (M·p + B − p) coarse-equivalent steps.
+    let eff_pipelined = if iters == 0 {
+        m as u64 * epc
+    } else {
+        ((m * iters + b).saturating_sub(iters)) as u64 * epc
+    };
+
+    let stats = RunStats {
+        iters,
+        converged,
+        eff_serial_evals: eff_serial,
+        eff_serial_evals_pipelined: eff_pipelined,
+        total_evals,
+        wall: t0.elapsed(),
+        per_iter,
+    };
+    SrdsResult { sample: x.pop().unwrap(), stats, iterates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{prior_sample, sequential, Conditioning, SrdsConfig};
+    use super::*;
+    use crate::data::make_gmm;
+    use crate::model::{AffineModel, GmmEps};
+    use crate::solvers::{NativeBackend, Solver};
+    use std::sync::Arc;
+
+    fn gmm_backend(name: &str, solver: Solver) -> NativeBackend {
+        NativeBackend::new(Arc::new(GmmEps::new(make_gmm(name))), solver)
+    }
+
+    #[test]
+    fn converges_to_sequential_solution() {
+        let be = gmm_backend("toy2d", Solver::Ddim);
+        let x0 = prior_sample(2, 11);
+        let (seq, _) = sequential(&be, &x0, 25, &Conditioning::none(), 11);
+        let cfg = SrdsConfig::new(25).with_tol(1e-7).with_seed(11);
+        let res = srds(&be, &x0, &cfg);
+        let d = cfg.norm.dist(&res.sample, &seq);
+        assert!(d < 1e-5, "srds vs sequential {d}");
+    }
+
+    #[test]
+    fn worst_case_iterations_give_exact_equality() {
+        // Prop. 1: after M iterations SRDS equals sequential bit-for-bit
+        // (identical float op sequences once the corrector telescopes).
+        let be = gmm_backend("toy2d", Solver::Ddim);
+        let x0 = prior_sample(2, 3);
+        let n = 16;
+        let (seq, _) = sequential(&be, &x0, n, &Conditioning::none(), 3);
+        let cfg = SrdsConfig::new(n).with_tol(0.0).with_max_iters(4).with_seed(3);
+        let res = srds(&be, &x0, &cfg);
+        assert_eq!(res.sample, seq, "bitwise equality after sqrt(N) iterations");
+        assert_eq!(res.stats.iters, 4);
+    }
+
+    #[test]
+    fn eval_accounting_matches_formulas() {
+        let be = gmm_backend("toy2d", Solver::Ddim);
+        let x0 = prior_sample(2, 1);
+        let cfg = SrdsConfig::new(25).with_tol(0.0).with_max_iters(1);
+        let res = srds(&be, &x0, &cfg);
+        // init M + (fine B + sweep M) = 5 + 5 + 5 = 15 (Table 3, N=25).
+        assert_eq!(res.stats.eff_serial_evals, 15);
+        // pipelined: M·p + B − p = 5 + 5 − 1 = 9 (Table 3).
+        assert_eq!(res.stats.eff_serial_evals_pipelined, 9);
+        // total = M + (N + M) = 5 + 30 = 35.
+        assert_eq!(res.stats.total_evals, 35);
+    }
+
+    #[test]
+    fn early_convergence_beats_worst_case() {
+        let be = gmm_backend("church", Solver::Ddim);
+        let x0 = prior_sample(64, 9);
+        let cfg = SrdsConfig::new(256).with_tol(2.5e-3).with_seed(9);
+        let res = srds(&be, &x0, &cfg);
+        assert!(res.stats.converged);
+        assert!(
+            res.stats.iters < 16,
+            "expected early convergence, took {} iterations",
+            res.stats.iters
+        );
+    }
+
+    #[test]
+    fn iterates_are_recorded_and_improve() {
+        let be = gmm_backend("toy2d", Solver::Ddim);
+        let x0 = prior_sample(2, 21);
+        let (seq, _) = sequential(&be, &x0, 36, &Conditioning::none(), 21);
+        let cfg = SrdsConfig::new(36).with_tol(0.0).with_max_iters(6).with_iterates().with_seed(21);
+        let res = srds(&be, &x0, &cfg);
+        assert_eq!(res.iterates.len(), 7); // init + 6 refinements
+        let err_first = cfg.norm.dist(&res.iterates[0], &seq);
+        let err_last = cfg.norm.dist(res.iterates.last().unwrap(), &seq);
+        assert!(err_last <= err_first, "{err_last} vs {err_first}");
+        assert_eq!(err_last, 0.0, "exact after M iterations");
+    }
+
+    #[test]
+    fn non_square_n_still_converges_exactly() {
+        // Paper footnote 2: N need not be a perfect square.
+        let be = gmm_backend("toy2d", Solver::Ddim);
+        let x0 = prior_sample(2, 5);
+        for n in [7usize, 27, 40] {
+            let (seq, _) = sequential(&be, &x0, n, &Conditioning::none(), 5);
+            let part = SrdsConfig::new(n).partition();
+            let cfg = SrdsConfig::new(n).with_tol(0.0).with_max_iters(part.num_blocks()).with_seed(5);
+            let res = srds(&be, &x0, &cfg);
+            assert_eq!(res.sample, seq, "n={n}");
+        }
+    }
+
+    #[test]
+    fn ddpm_solver_converges_with_deterministic_noise() {
+        let be = gmm_backend("toy2d", Solver::Ddpm);
+        let x0 = prior_sample(2, 13);
+        let (seq, _) = sequential(&be, &x0, 16, &Conditioning::none(), 13);
+        let cfg = SrdsConfig::new(16).with_tol(0.0).with_max_iters(4).with_seed(13);
+        let res = srds(&be, &x0, &cfg);
+        assert_eq!(res.sample, seq, "Parareal over the DDPM map is exact too");
+    }
+
+    #[test]
+    fn guided_sampling_runs() {
+        let gmm = make_gmm("latent_cond");
+        let mask = gmm.class_mask(2);
+        let be = NativeBackend::new(Arc::new(GmmEps::new(gmm)), Solver::Ddim);
+        let x0 = prior_sample(256, 2);
+        let cond = Conditioning::class(mask, 7.5);
+        let (seq, _) = sequential(&be, &x0, 25, &cond, 2);
+        let cfg = SrdsConfig::new(25).with_tol(1e-6).with_cond(cond).with_seed(2);
+        let res = srds(&be, &x0, &cfg);
+        let d = cfg.norm.dist(&res.sample, &seq);
+        assert!(d < 1e-4, "guided srds vs sequential {d}");
+    }
+
+    #[test]
+    fn affine_model_converges_fast() {
+        // Linear ODE: parareal converges superlinearly; expect << M iters.
+        let be = NativeBackend::new(Arc::new(AffineModel::new(8, 0.4, 0.1)), Solver::Ddim);
+        let x0 = prior_sample(8, 4);
+        let cfg = SrdsConfig::new(144).with_tol(1e-5).with_seed(4);
+        let res = srds(&be, &x0, &cfg);
+        assert!(res.stats.converged);
+        assert!(res.stats.iters <= 8, "iters = {}", res.stats.iters);
+    }
+}

@@ -1,0 +1,113 @@
+//! Per-run accounting shared by every sampler — the quantities the
+//! paper's tables report.
+
+use std::time::Duration;
+
+/// One refinement iteration's bookkeeping.
+#[derive(Debug, Clone)]
+pub struct IterStat {
+    /// Iteration index (1-based, matching Alg. 1's `p`).
+    pub iter: usize,
+    /// Convergence-norm distance of the final sample to the previous
+    /// iterate (the Alg. 1 line-13 quantity).
+    pub residual: f32,
+    /// Model evaluations spent this iteration.
+    pub evals: u64,
+}
+
+/// Aggregate accounting for one sampling run.
+///
+/// *Effective serial evals* counts all model evaluations performed
+/// simultaneously in parallel as one evaluation (paper Table 1 caption;
+/// called "Parallel Iters" in ParaDiGMS and "Steps" in ParaTAA).
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Refinement iterations executed (0 for the sequential baseline).
+    pub iters: usize,
+    /// Whether the tolerance test triggered (vs hitting the cap).
+    pub converged: bool,
+    /// Effective serial evals under the *vanilla* schedule: the coarse
+    /// init sweep, then per iteration max-block fine steps + the
+    /// sequential coarse sweep.
+    pub eff_serial_evals: u64,
+    /// Effective serial evals under the *pipelined* schedule of Fig. 4
+    /// (Prop. 2 analysis): iteration `p`'s fine solves start as soon as
+    /// their input block state exists.
+    pub eff_serial_evals_pipelined: u64,
+    /// Total model evaluations (the parallel-compute cost the paper's
+    /// Limitations section discusses).
+    pub total_evals: u64,
+    /// Wall-clock time of the run (measured executor only; zero for
+    /// pure accounting runs).
+    pub wall: Duration,
+    /// Per-iteration details.
+    pub per_iter: Vec<IterStat>,
+}
+
+impl RunStats {
+    /// Speedup in effective serial evals vs an `n`-step sequential solve
+    /// with the same solver (evals/step included in both sides).
+    pub fn eval_speedup_vs_serial(&self, n: usize, evals_per_step: usize) -> f64 {
+        (n * evals_per_step) as f64 / self.eff_serial_evals_pipelined.max(1) as f64
+    }
+}
+
+/// Streaming mean/variance (Welford) used by metrics and the benches.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 4.0).abs() < 1e-12);
+        let direct_var = xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((w.var() - direct_var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_accounting() {
+        let st = RunStats { eff_serial_evals_pipelined: 9, ..Default::default() };
+        assert!((st.eval_speedup_vs_serial(25, 1) - 25.0 / 9.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,252 @@
+//! Gaussian-mixture datasets — mirrors `python/compile/datasets.py`.
+
+use super::rng::{seed_for, SplitMix64};
+
+/// Static description of one dataset (mirrors python `GmmSpec`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GmmSpec {
+    pub name: &'static str,
+    pub dim: usize,
+    pub n_components: usize,
+    pub n_classes: usize,
+    pub mean_scale: f32,
+    pub sigma_lo: f32,
+    pub sigma_hi: f32,
+}
+
+impl GmmSpec {
+    const fn new(name: &'static str, dim: usize, k: usize) -> Self {
+        GmmSpec { name, dim, n_components: k, n_classes: 1, mean_scale: 1.0, sigma_lo: 0.15, sigma_hi: 0.6 }
+    }
+}
+
+/// The zoo — must match `datasets.SPECS` in python.
+pub const SPECS: &[GmmSpec] = &[
+    GmmSpec::new("church", 64, 8),
+    GmmSpec::new("bedroom", 64, 8),
+    GmmSpec::new("imagenet64", 64, 10),
+    GmmSpec { mean_scale: 0.8, ..GmmSpec::new("cifar", 64, 8) },
+    GmmSpec { n_classes: 4, ..GmmSpec::new("latent_cond", 256, 16) },
+    GmmSpec { mean_scale: 1.5, ..GmmSpec::new("toy2d", 2, 6) },
+];
+
+/// Pixel datasets standing in for the paper's Table 1 image sets.
+pub const PIXEL_DATASETS: [&str; 4] = ["church", "bedroom", "imagenet64", "cifar"];
+
+/// Concrete mixture parameters (all f32, row-major `means[k*dim..]`).
+#[derive(Debug, Clone)]
+pub struct Gmm {
+    pub spec: GmmSpec,
+    pub means: Vec<f32>,
+    pub sigmas: Vec<f32>,
+    pub weights: Vec<f32>,
+    pub comp_class: Vec<u32>,
+}
+
+impl Gmm {
+    pub fn dim(&self) -> usize {
+        self.spec.dim
+    }
+
+    pub fn k(&self) -> usize {
+        self.spec.n_components
+    }
+
+    pub fn mean_of(&self, k: usize) -> &[f32] {
+        &self.means[k * self.dim()..(k + 1) * self.dim()]
+    }
+
+    /// Component mask selecting one class (all-ones if unconditional).
+    pub fn class_mask(&self, cls: u32) -> Vec<f32> {
+        if self.spec.n_classes <= 1 {
+            return vec![1.0; self.k()];
+        }
+        self.comp_class.iter().map(|&c| if c == cls { 1.0 } else { 0.0 }).collect()
+    }
+
+    /// Analytic mixture mean (FD reference).
+    pub fn mean(&self) -> Vec<f32> {
+        let d = self.dim();
+        let mut mu = vec![0.0f32; d];
+        for k in 0..self.k() {
+            let m = self.mean_of(k);
+            for j in 0..d {
+                mu[j] += self.weights[k] * m[j];
+            }
+        }
+        mu
+    }
+
+    /// Analytic mixture covariance, row-major `d × d` in f64 (FD reference).
+    pub fn cov(&self) -> Vec<f64> {
+        let d = self.dim();
+        let mu = self.mean();
+        let mut c = vec![0.0f64; d * d];
+        for k in 0..self.k() {
+            let w = self.weights[k] as f64;
+            let m = self.mean_of(k);
+            let s2 = (self.sigmas[k] as f64) * (self.sigmas[k] as f64);
+            for i in 0..d {
+                let di = (m[i] - mu[i]) as f64;
+                for j in 0..d {
+                    let dj = (m[j] - mu[j]) as f64;
+                    c[i * d + j] += w * di * dj;
+                }
+                c[i * d + i] += w * s2;
+            }
+        }
+        c
+    }
+
+    /// Draw exact reference samples (flat `n × dim`), optionally from one
+    /// class. Same draw order as python `Gmm.sample`.
+    pub fn sample(&self, n: usize, seed: u64, cls: Option<u32>) -> Vec<f32> {
+        let d = self.dim();
+        let k = self.k();
+        let mut rng = SplitMix64::new(seed);
+        let mask = match cls {
+            Some(c) => self.class_mask(c),
+            None => vec![1.0; k],
+        };
+        let mut w: Vec<f64> = (0..k).map(|i| (self.weights[i] * mask[i]) as f64).collect();
+        let tot: f64 = w.iter().sum();
+        for v in w.iter_mut() {
+            *v /= tot;
+        }
+        let mut cdf = vec![0.0f64; k];
+        let mut acc = 0.0;
+        for i in 0..k {
+            acc += w[i];
+            cdf[i] = acc;
+        }
+        let mut out = vec![0.0f32; n * d];
+        for i in 0..n {
+            let u = rng.next_f64();
+            let mut comp = k - 1;
+            for (j, &c) in cdf.iter().enumerate() {
+                if u < c {
+                    comp = j;
+                    break;
+                }
+            }
+            let m = self.mean_of(comp);
+            let s = self.sigmas[comp];
+            for j in 0..d {
+                out[i * d + j] = m[j] + s * rng.next_normal() as f32;
+            }
+        }
+        out
+    }
+}
+
+/// Deterministically generate the mixture for a dataset name.
+///
+/// Draw order matters and matches `datasets.make_gmm`: means (K·d
+/// normals), sigmas (K uniforms), weights (K uniforms), one splitmix64
+/// stream seeded by FNV-1a(name).
+pub fn make_gmm(name: &str) -> Gmm {
+    let spec = *SPECS
+        .iter()
+        .find(|s| s.name == name)
+        .unwrap_or_else(|| panic!("unknown dataset {name:?}"));
+    let mut rng = SplitMix64::new(seed_for(name));
+    let (k, d) = (spec.n_components, spec.dim);
+    let scale = spec.mean_scale / (d as f32).sqrt() * 4.0;
+    // f64 intermediate like python: (normal * scale_f64) then cast f32.
+    let mut means = vec![0.0f32; k * d];
+    for m in means.iter_mut() {
+        *m = (rng.next_normal() * scale as f64) as f32;
+    }
+    let sigmas: Vec<f32> = (0..k)
+        .map(|_| (spec.sigma_lo as f64 + (spec.sigma_hi - spec.sigma_lo) as f64 * rng.next_f64()) as f32)
+        .collect();
+    let raw: Vec<f64> = (0..k).map(|_| 0.5 + rng.next_f64()).collect();
+    let tot: f64 = raw.iter().sum();
+    let weights: Vec<f32> = raw.iter().map(|&w| (w / tot) as f32).collect();
+    let comp_class: Vec<u32> = (0..k as u32).map(|i| i % spec.n_classes.max(1) as u32).collect();
+    Gmm { spec, means, sigmas, weights, comp_class }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_is_complete() {
+        for name in PIXEL_DATASETS {
+            let g = make_gmm(name);
+            assert_eq!(g.dim(), 64);
+        }
+        assert_eq!(make_gmm("latent_cond").spec.n_classes, 4);
+    }
+
+    #[test]
+    fn weights_normalized() {
+        for spec in SPECS {
+            let g = make_gmm(spec.name);
+            let s: f32 = g.weights.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "{}: {s}", spec.name);
+            assert!(g.weights.iter().all(|&w| w > 0.0));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = make_gmm("church");
+        let b = make_gmm("church");
+        assert_eq!(a.means, b.means);
+        assert_eq!(a.sigmas, b.sigmas);
+    }
+
+    #[test]
+    fn datasets_differ() {
+        assert_ne!(make_gmm("church").means, make_gmm("bedroom").means);
+    }
+
+    #[test]
+    fn class_mask_partitions_components() {
+        let g = make_gmm("latent_cond");
+        let mut covered = vec![0u32; g.k()];
+        for c in 0..4 {
+            for (i, &m) in g.class_mask(c).iter().enumerate() {
+                if m > 0.0 {
+                    covered[i] += 1;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn sample_moments_match_analytic() {
+        let g = make_gmm("cifar");
+        let n = 4000;
+        let xs = g.sample(n, 123, None);
+        let d = g.dim();
+        let mu = g.mean();
+        for j in 0..d {
+            let m: f32 = (0..n).map(|i| xs[i * d + j]).sum::<f32>() / n as f32;
+            assert!((m - mu[j]).abs() < 0.12, "dim {j}: {m} vs {}", mu[j]);
+        }
+    }
+
+    #[test]
+    fn conditional_sampling_respects_class() {
+        let g = make_gmm("latent_cond");
+        let xs = g.sample(64, 5, Some(2));
+        // Every sample should be closest (in z-score) to a class-2 component.
+        let d = g.dim();
+        for i in 0..64 {
+            let x = &xs[i * d..(i + 1) * d];
+            let mut best = (f32::MAX, 0usize);
+            for k in 0..g.k() {
+                let m = g.mean_of(k);
+                let dist: f32 = x.iter().zip(m).map(|(a, b)| (a - b) * (a - b)).sum();
+                if dist < best.0 {
+                    best = (dist, k);
+                }
+            }
+            assert_eq!(g.comp_class[best.1], 2, "sample {i}");
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Synthetic Gaussian-mixture dataset zoo — the stand-in for the paper's
+//! pretrained-checkpoint datasets (DESIGN.md §Substitutions).
+//!
+//! Parameters are generated from the shared splitmix64 stream ([`rng`])
+//! so they agree bit-for-bit with `python/compile/datasets.py` without
+//! shipping parameter files (the `datasets_golden.json` artifact
+//! cross-checks this in `rust/tests/golden.rs`).
+
+mod gmm;
+pub mod rng;
+
+pub use gmm::{make_gmm, Gmm, GmmSpec, PIXEL_DATASETS};

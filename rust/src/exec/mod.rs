@@ -1,0 +1,17 @@
+//! Execution backends realizing the samplers' parallelism:
+//!
+//! * [`simclock`] — deterministic discrete-event simulator: schedules the
+//!   SRDS dependency graph (and the baselines' sweeps) onto `D` devices
+//!   with a fixed per-eval cost. This reproduces the paper's
+//!   effective-serial-eval and device-scaling tables exactly,
+//!   independent of host hardware.
+//! * [`measured`] — a real worker pool (one OS thread per simulated
+//!   device, each owning its own thread-bound PJRT or native backend)
+//!   running the *pipelined* SRDS dataflow of Fig. 4 with true
+//!   concurrency; wall-clock numbers come from here.
+
+pub mod measured;
+pub mod simclock;
+
+pub use measured::{measured_pipelined_srds, NativeFactory, WorkerPool};
+pub use simclock::{schedule_tasks, simulate_paradigms, simulate_sequential, simulate_srds, SimReport, SimTask};

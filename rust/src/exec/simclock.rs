@@ -1,0 +1,325 @@
+//! Discrete-event simulated-clock executor.
+//!
+//! Greedy non-preemptive list scheduling of a dependency DAG onto `D`
+//! identical devices: a task becomes ready when all dependencies finish;
+//! among ready tasks the earliest-ready (FIFO tie-break) runs on the
+//! earliest-free device. Zero-duration tasks are synchronization events
+//! and occupy no device.
+//!
+//! Time is measured in *model evaluations* (the unit of every latency
+//! table in the paper); multiply by a per-eval cost to get seconds.
+
+use crate::schedule::Partition;
+use std::collections::BinaryHeap;
+
+/// One task in the DAG.
+#[derive(Debug, Clone)]
+pub struct SimTask {
+    /// Dependencies: indices of tasks that must finish first.
+    pub deps: Vec<usize>,
+    /// Duration in eval units (0 = pure synchronization event).
+    pub dur: u64,
+    /// Display label (used by the Fig. 4 gantt example).
+    pub label: String,
+}
+
+/// Scheduling outcome.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Completion time of the last task (eval units).
+    pub makespan: u64,
+    /// Busy time per device.
+    pub device_busy: Vec<u64>,
+    /// Mean device utilization over the makespan.
+    pub utilization: f64,
+    /// Peak number of simultaneously-running (non-event) tasks.
+    pub peak_concurrency: usize,
+    /// (task index, device, start, end) for every non-event task.
+    pub spans: Vec<(usize, usize, u64, u64)>,
+}
+
+/// List-schedule `tasks` onto `devices` identical devices.
+pub fn schedule_tasks(tasks: &[SimTask], devices: usize) -> SimReport {
+    assert!(devices >= 1);
+    let n = tasks.len();
+    let mut indeg = vec![0usize; n];
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, t) in tasks.iter().enumerate() {
+        indeg[i] = t.deps.len();
+        for &d in &t.deps {
+            assert!(d < i, "deps must point backwards (task {i} dep {d})");
+            out[d].push(i);
+        }
+    }
+    // ready heap: (ready_time, seq) min-heap via Reverse.
+    use std::cmp::Reverse;
+    let mut ready: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut ready_time = vec![0u64; n];
+    for i in 0..n {
+        if indeg[i] == 0 {
+            ready.push(Reverse((0, i)));
+        }
+    }
+    let mut dev_free = vec![0u64; devices];
+    let mut finish = vec![0u64; n];
+    let mut spans = Vec::new();
+    let mut device_busy = vec![0u64; devices];
+    let mut done = 0usize;
+    while let Some(Reverse((rt, i))) = ready.pop() {
+        let t = &tasks[i];
+        let (start, end, dev) = if t.dur == 0 {
+            (rt, rt, usize::MAX)
+        } else {
+            // earliest-free device
+            let dev = (0..devices).min_by_key(|&d| dev_free[d]).unwrap();
+            let start = rt.max(dev_free[dev]);
+            let end = start + t.dur;
+            dev_free[dev] = end;
+            device_busy[dev] += t.dur;
+            spans.push((i, dev, start, end));
+            (start, end, dev)
+        };
+        let _ = (start, dev);
+        finish[i] = end;
+        done += 1;
+        for &j in &out[i] {
+            indeg[j] -= 1;
+            ready_time[j] = ready_time[j].max(end);
+            if indeg[j] == 0 {
+                ready.push(Reverse((ready_time[j], j)));
+            }
+        }
+    }
+    assert_eq!(done, n, "cycle in task graph");
+    let makespan = finish.iter().copied().max().unwrap_or(0);
+    // Peak concurrency over real spans.
+    let mut events: Vec<(u64, i32)> = Vec::with_capacity(spans.len() * 2);
+    for &(_, _, s, e) in &spans {
+        events.push((s, 1));
+        events.push((e, -1));
+    }
+    events.sort();
+    let (mut cur, mut peak) = (0i32, 0i32);
+    for (_, d) in events {
+        cur += d;
+        peak = peak.max(cur);
+    }
+    let busy: u64 = device_busy.iter().sum();
+    let utilization = if makespan == 0 {
+        0.0
+    } else {
+        busy as f64 / (makespan * devices as u64) as f64
+    };
+    SimReport { makespan, device_busy, utilization, peak_concurrency: peak.max(0) as usize, spans }
+}
+
+/// Build the SRDS task DAG (pipelined or with per-iteration barriers)
+/// and schedule it onto `devices`.
+///
+/// `pipelined = false` inserts a synchronization event after each
+/// refinement (the vanilla Alg. 1 loop); `pipelined = true` keeps only
+/// the true data dependencies (Fig. 3/4).
+pub fn simulate_srds(
+    part: &Partition,
+    iters: usize,
+    epc: u64,
+    devices: usize,
+    pipelined: bool,
+) -> SimReport {
+    let m = part.num_blocks();
+    let mut tasks: Vec<SimTask> = Vec::new();
+    // ev[i] = task index whose completion means "x^p_i ready" (current p).
+    // Init sweep: coarse chain.
+    let mut ev: Vec<usize> = Vec::with_capacity(m + 1);
+    tasks.push(SimTask { deps: vec![], dur: 0, label: "x0".into() });
+    ev.push(0);
+    for i in 1..=m {
+        let t = tasks.len();
+        tasks.push(SimTask { deps: vec![ev[i - 1]], dur: epc, label: format!("G0,{i}") });
+        ev.push(t);
+    }
+    let mut prev_ev = ev.clone();
+    let mut barrier: Option<usize> = None;
+    for p in 1..=iters {
+        let mut cur_ev = vec![0usize; m + 1];
+        cur_ev[0] = prev_ev[0];
+        let mut iter_tasks = Vec::new();
+        for i in 1..=m {
+            if i < p {
+                // Prefix already exact: no recomputation (cached).
+                cur_ev[i] = prev_ev[i];
+                continue;
+            }
+            // Fine solve F(p, i): needs x^{p-1}_{i-1} (+ barrier if vanilla).
+            let mut fdeps = vec![prev_ev[i - 1]];
+            if let Some(b) = barrier {
+                fdeps.push(b);
+            }
+            let f = tasks.len();
+            tasks.push(SimTask {
+                deps: fdeps,
+                dur: part.block_len(i - 1) as u64 * epc,
+                label: format!("F{p},{i}"),
+            });
+            iter_tasks.push(f);
+            // Coarse G(p, i): needs x^p_{i-1}; skipped for i == p where
+            // the correction cancels (see coordinator::pipeline docs).
+            let mut deps = vec![f, prev_ev[i]];
+            if i > p {
+                let mut gdeps = vec![cur_ev[i - 1]];
+                if let Some(b) = barrier {
+                    gdeps.push(b);
+                }
+                let g = tasks.len();
+                tasks.push(SimTask { deps: gdeps, dur: epc, label: format!("G{p},{i}") });
+                iter_tasks.push(g);
+                deps.push(g);
+            }
+            // x^p_i ready event (corrector is free).
+            let e = tasks.len();
+            tasks.push(SimTask { deps, dur: 0, label: format!("x{p},{i}") });
+            cur_ev[i] = e;
+        }
+        if !pipelined {
+            // Barrier after the full iteration (vanilla main loop).
+            let b = tasks.len();
+            tasks.push(SimTask { deps: iter_tasks, dur: 0, label: format!("barrier{p}") });
+            barrier = Some(b);
+        }
+        prev_ev = cur_ev;
+    }
+    schedule_tasks(&tasks, devices)
+}
+
+/// Sequential baseline on the sim clock: `n` chained steps.
+pub fn simulate_sequential(n: usize, epc: u64, _devices: usize) -> SimReport {
+    let mut tasks = Vec::with_capacity(n);
+    for i in 0..n {
+        let deps = if i == 0 { vec![] } else { vec![i - 1] };
+        tasks.push(SimTask { deps, dur: epc, label: format!("S{i}") });
+    }
+    schedule_tasks(&tasks, 1)
+}
+
+/// ParaDiGMS on the sim clock: each sweep evaluates `window` points in
+/// parallel across `devices × batch_per_device` eval slots, then a
+/// (serial) prefix-sum + AllReduce-style sync charged as `sync_cost`.
+pub fn simulate_paradigms(
+    sweeps: usize,
+    window: usize,
+    devices: usize,
+    batch_per_device: usize,
+    epc: u64,
+    sync_cost: u64,
+) -> SimReport {
+    let cap = devices * batch_per_device;
+    let mut tasks = Vec::new();
+    let mut last: Option<usize> = None;
+    for s in 0..sweeps {
+        // Window evaluation: ceil(window/cap) serialized batched rounds
+        // per device-group; modeled as `rounds` chained eval tasks per
+        // device, all fanned out from the previous sync.
+        let rounds = window.div_ceil(cap).max(1);
+        let mut round_tasks = Vec::new();
+        for d in 0..devices {
+            let mut dep = last;
+            for r in 0..rounds {
+                let t = tasks.len();
+                tasks.push(SimTask {
+                    deps: dep.into_iter().collect(),
+                    dur: epc,
+                    label: format!("W{s},{d},{r}"),
+                });
+                dep = Some(t);
+            }
+            round_tasks.push(dep.unwrap());
+        }
+        // Cross-device sync (prefix sum / AllReduce).
+        let t = tasks.len();
+        tasks.push(SimTask { deps: round_tasks, dur: sync_cost, label: format!("sync{s}") });
+        last = Some(t);
+    }
+    schedule_tasks(&tasks, devices + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::pipeline_schedule;
+
+    #[test]
+    fn unbounded_devices_match_ideal_pipeline() {
+        // With ≥ 2M+1 devices the bounded scheduler reproduces the
+        // Prop. 2 recurrence finish times.
+        for (n, iters) in [(25usize, 2usize), (196, 3), (961, 1)] {
+            let part = Partition::sqrt_n(n);
+            let m = part.num_blocks();
+            let ideal = pipeline_schedule(&part, iters, 1).finish;
+            let sim = simulate_srds(&part, iters, 1, 2 * m + 2, true);
+            assert_eq!(sim.makespan, ideal, "n={n} iters={iters}");
+        }
+    }
+
+    #[test]
+    fn pipelined_beats_vanilla_on_same_devices() {
+        let part = Partition::sqrt_n(196);
+        let d = part.num_blocks() + 1;
+        let v = simulate_srds(&part, 3, 1, d, false);
+        let p = simulate_srds(&part, 3, 1, d, true);
+        assert!(
+            p.makespan < v.makespan,
+            "pipelined {} !< vanilla {}",
+            p.makespan,
+            v.makespan
+        );
+    }
+
+    #[test]
+    fn single_device_degenerates_to_total_work() {
+        let part = Partition::sqrt_n(25);
+        let r = simulate_srds(&part, 1, 1, 1, true);
+        // All work serialized: init 5 + fine 25 + coarse 4 = 34.
+        assert_eq!(r.makespan, 34);
+        assert!((r.utilization - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_devices_never_slower() {
+        let part = Partition::sqrt_n(100);
+        let mut prev = u64::MAX;
+        for d in [1usize, 2, 4, 8, 16] {
+            let r = simulate_srds(&part, 2, 1, d, true);
+            assert!(r.makespan <= prev, "devices {d}");
+            prev = r.makespan;
+        }
+    }
+
+    #[test]
+    fn sequential_sim_is_n_steps() {
+        let r = simulate_sequential(100, 2, 4);
+        assert_eq!(r.makespan, 200);
+    }
+
+    #[test]
+    fn paradigms_sim_scales_with_devices() {
+        let a = simulate_paradigms(16, 100, 1, 8, 1, 0);
+        let b = simulate_paradigms(16, 100, 4, 8, 1, 0);
+        assert!(b.makespan < a.makespan);
+        // With sync cost the gap narrows (the App. D observation).
+        let c = simulate_paradigms(16, 100, 4, 8, 1, 4);
+        assert!(c.makespan > b.makespan);
+    }
+
+    #[test]
+    fn zero_duration_events_use_no_device() {
+        let tasks = vec![
+            SimTask { deps: vec![], dur: 5, label: "a".into() },
+            SimTask { deps: vec![], dur: 5, label: "b".into() },
+            SimTask { deps: vec![0, 1], dur: 0, label: "join".into() },
+            SimTask { deps: vec![2], dur: 1, label: "c".into() },
+        ];
+        let r = schedule_tasks(&tasks, 2);
+        assert_eq!(r.makespan, 6);
+        assert_eq!(r.peak_concurrency, 2);
+    }
+}

@@ -1,0 +1,49 @@
+//! # SRDS — Self-Refining Diffusion Samplers
+//!
+//! Production-grade reproduction of *"Self-Refining Diffusion Samplers:
+//! Enabling Parallelization via Parareal Iterations"* (NeurIPS 2024) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: the SRDS Parareal sampler
+//!   ([`coordinator::srds`]), its pipelined variant
+//!   ([`coordinator::pipeline`]), the ParaDiGMS/Picard and ParaTAA
+//!   baselines, dynamic batching, a device-pool executor, a
+//!   discrete-event simulated-clock executor, and a tokio serving loop.
+//! * **L2/L1 (python/, build-time only)** — JAX solver-step graphs calling
+//!   Pallas kernels, AOT-lowered once to HLO-text artifacts that
+//!   [`runtime`] loads and executes via the PJRT C API (`xla` crate).
+//!
+//! Python never runs on the request path: after `make artifacts` the rust
+//! binary is self-contained.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured numbers.
+
+pub mod batching;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod json;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod schedule;
+pub mod server;
+pub mod solvers;
+pub mod viz;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Root of the artifacts directory (`make artifacts` output).
+///
+/// Resolution order: `$SRDS_ARTIFACTS`, then `<crate>/artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("SRDS_ARTIFACTS") {
+        return p.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

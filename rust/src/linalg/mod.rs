@@ -1,0 +1,195 @@
+//! Dense symmetric linear algebra for the metrics layer (no external
+//! deps in this offline environment): Jacobi eigendecomposition, PSD
+//! matrix square root — sized for `d ≤ 256` covariance work.
+
+/// Jacobi eigenvalue iteration for a symmetric matrix (row-major `n×n`).
+///
+/// Returns `(eigenvalues, eigenvectors)` with eigenvectors in columns of
+/// the returned row-major matrix `v` (i.e. `A = V diag(w) Vᵀ`).
+/// Cyclic-by-row sweeps; converges quadratically — ~8 sweeps at d=256.
+pub fn jacobi_eigh(a_in: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a_in.len(), n * n);
+    let mut a = a_in.to_vec();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let max_sweeps = 30;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += a[i * n + j] * a[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + frob(&a, n)) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = a[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of A.
+                for k in 0..n {
+                    let akp = a[k * n + p];
+                    let akq = a[k * n + q];
+                    a[k * n + p] = c * akp - s * akq;
+                    a[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[p * n + k];
+                    let aqk = a[q * n + k];
+                    a[p * n + k] = c * apk - s * aqk;
+                    a[q * n + k] = s * apk + c * aqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let w: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    (w, v)
+}
+
+fn frob(a: &[f64], n: usize) -> f64 {
+    a.iter().take(n * n).map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Symmetric PSD matrix square root via eigendecomposition (negative
+/// eigenvalues from numerical noise are clamped to zero).
+pub fn sqrtm_psd(a: &[f64], n: usize) -> Vec<f64> {
+    let (w, v) = jacobi_eigh(a, n);
+    let sw: Vec<f64> = w.iter().map(|&x| x.max(0.0).sqrt()).collect();
+    // V diag(sw) Vᵀ
+    let mut out = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += v[i * n + k] * sw[k] * v[j * n + k];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// `C = A · B` for row-major `n×n` matrices.
+pub fn matmul(a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut c = vec![0.0f64; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let br = &b[k * n..(k + 1) * n];
+            let cr = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                cr[j] += aik * br[j];
+            }
+        }
+    }
+    c
+}
+
+/// Trace of a row-major `n×n` matrix.
+pub fn trace(a: &[f64], n: usize) -> f64 {
+    (0..n).map(|i| a[i * n + i]).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::SplitMix64;
+
+    fn random_psd(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = SplitMix64::new(seed);
+        let b: Vec<f64> = (0..n * n).map(|_| rng.next_normal()).collect();
+        // A = B Bᵀ / n + 0.1 I (strictly PD)
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = acc / n as f64;
+            }
+            a[i * n + i] += 0.1;
+        }
+        a
+    }
+
+    #[test]
+    fn eigh_diagonal_matrix() {
+        let a = vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0];
+        let (mut w, _) = jacobi_eigh(&a, 3);
+        w.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((w[0] - 1.0).abs() < 1e-12);
+        assert!((w[1] - 2.0).abs() < 1e-12);
+        assert!((w[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        let n = 16;
+        let a = random_psd(n, 7);
+        let (w, v) = jacobi_eigh(&a, n);
+        // A ≈ V diag(w) Vᵀ
+        let mut rec = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += v[i * n + k] * w[k] * v[j * n + k];
+                }
+                rec[i * n + j] = acc;
+            }
+        }
+        for t in 0..n * n {
+            assert!((rec[t] - a[t]).abs() < 1e-8, "elem {t}");
+        }
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        let n = 12;
+        let a = random_psd(n, 3);
+        let s = sqrtm_psd(&a, n);
+        let ss = matmul(&s, &s, n);
+        for t in 0..n * n {
+            assert!((ss[t] - a[t]).abs() < 1e-8, "elem {t}: {} vs {}", ss[t], a[t]);
+        }
+    }
+
+    #[test]
+    fn trace_and_matmul() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![0.0, 1.0, 1.0, 0.0];
+        let c = matmul(&a, &b, 2);
+        assert_eq!(c, vec![2.0, 1.0, 4.0, 3.0]);
+        assert_eq!(trace(&a, 2), 5.0);
+    }
+
+    #[test]
+    fn eigenvalues_of_psd_are_nonnegative() {
+        let a = random_psd(24, 11);
+        let (w, _) = jacobi_eigh(&a, 24);
+        assert!(w.iter().all(|&x| x > -1e-10));
+    }
+}

@@ -1,0 +1,181 @@
+//! `srds` — the L3 coordinator CLI.
+//!
+//! ```text
+//! srds info                          # artifact + model inventory
+//! srds sample [--model gmm_church] [--solver ddim] [--n 1024]
+//!             [--sampler srds|sequential|paradigms|parataa]
+//!             [--backend native|pjrt] [--tol 2.5e-3] [--seed 0]
+//!             [--class C --guidance W] [--out sample.pgm]
+//! srds serve  [--addr 127.0.0.1:7878] [--workers 4] [--model …]
+//!             [--solver …] [--backend native|pjrt]
+//! ```
+//!
+//! (Argument parsing is in-tree: the offline vendored crate set has no
+//! clap.)
+
+use srds::coordinator::{prior_sample, Conditioning, SrdsConfig};
+use srds::data::make_gmm;
+use srds::exec::NativeFactory;
+use srds::model::{EpsModel, GmmEps, SmallDenoiser};
+use srds::runtime::{PjrtBackend, PjrtFactory, PjrtRuntime};
+use srds::server::{serve, ServeConfig};
+use srds::solvers::{BackendFactory, Solver, StepBackend};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn native_model(model: &str) -> Arc<dyn EpsModel> {
+    if model == "small_denoiser" {
+        Arc::new(SmallDenoiser::new(256))
+    } else {
+        Arc::new(GmmEps::new(make_gmm(model.trim_start_matches("gmm_"))))
+    }
+}
+
+fn make_backend(flags: &HashMap<String, String>) -> srds::Result<(Box<dyn StepBackend>, String)> {
+    let model = flags.get("model").cloned().unwrap_or_else(|| "gmm_church".into());
+    let solver = Solver::parse(flags.get("solver").map(|s| s.as_str()).unwrap_or("ddim"))
+        .ok_or_else(|| anyhow::anyhow!("unknown solver"))?;
+    let backend = flags.get("backend").map(|s| s.as_str()).unwrap_or("native");
+    let be: Box<dyn StepBackend> = match backend {
+        "pjrt" => {
+            let rt = Box::leak(Box::new(PjrtRuntime::open_default()?));
+            Box::new(PjrtBackend::new(rt, &model, solver)?)
+        }
+        _ => Box::new(srds::solvers::NativeBackend::new(native_model(&model), solver)),
+    };
+    Ok((be, model))
+}
+
+fn cmd_info() -> srds::Result<()> {
+    println!("SRDS — Self-Refining Diffusion Samplers (NeurIPS 2024 reproduction)");
+    println!("artifacts dir: {}", srds::artifacts_dir().display());
+    match PjrtRuntime::open_default() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("models: {:?}", rt.manifest().models());
+            println!("artifacts: {}", rt.manifest().artifacts.len());
+            println!("batch buckets: {:?}", rt.manifest().batch_buckets);
+        }
+        Err(e) => println!("(artifacts unavailable: {e:#}; run `make artifacts`)"),
+    }
+    println!("native datasets: church bedroom imagenet64 cifar latent_cond toy2d");
+    Ok(())
+}
+
+fn cmd_sample(flags: HashMap<String, String>) -> srds::Result<()> {
+    let (be, model) = make_backend(&flags)?;
+    let n: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(1024);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let tol: f32 = flags.get("tol").map(|s| s.parse()).transpose()?.unwrap_or(2.5e-3);
+    let sampler = flags.get("sampler").cloned().unwrap_or_else(|| "srds".into());
+    let cond = match flags.get("class") {
+        Some(c) if model.contains("latent_cond") => {
+            let g = make_gmm("latent_cond");
+            let w: f32 = flags.get("guidance").map(|s| s.parse()).transpose()?.unwrap_or(7.5);
+            Conditioning::class(g.class_mask(c.parse()?), w)
+        }
+        _ => Conditioning::none(),
+    };
+    let x0 = prior_sample(be.dim(), seed);
+    let t0 = std::time::Instant::now();
+    let (sample, line) = match sampler.as_str() {
+        "sequential" => {
+            let (s, st) = srds::coordinator::sequential(be.as_ref(), &x0, n, &cond, seed);
+            (s, format!("sequential: {} evals", st.total_evals))
+        }
+        "paradigms" => {
+            let mut cfg = srds::coordinator::ParadigmsConfig::new(n).with_tol(tol).with_seed(seed);
+            cfg.cond = cond.clone();
+            let r = srds::coordinator::paradigms(be.as_ref(), &x0, &cfg);
+            (r.sample, format!("paradigms: {} sweeps, {} total evals", r.stats.iters, r.stats.total_evals))
+        }
+        "parataa" => {
+            let mut cfg = srds::coordinator::ParataaConfig::new(n).with_tol(tol).with_seed(seed);
+            cfg.cond = cond.clone();
+            let r = srds::coordinator::parataa(be.as_ref(), &x0, &cfg);
+            (r.sample, format!("parataa: {} iters, {} total evals", r.stats.iters, r.stats.total_evals))
+        }
+        _ => {
+            let mut cfg = SrdsConfig::new(n).with_tol(tol).with_seed(seed).with_cond(cond);
+            if let Some(k) = flags.get("max-iters") {
+                cfg = cfg.with_max_iters(k.parse()?);
+            }
+            let r = srds::coordinator::srds(be.as_ref(), &x0, &cfg);
+            (
+                r.sample,
+                format!(
+                    "srds: {} iters (converged={}), eff serial evals {} (pipelined {}), total {}",
+                    r.stats.iters,
+                    r.stats.converged,
+                    r.stats.eff_serial_evals,
+                    r.stats.eff_serial_evals_pipelined,
+                    r.stats.total_evals
+                ),
+            )
+        }
+    };
+    println!("{line}; wall {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    let d = sample.len();
+    let side = (d as f64).sqrt() as usize;
+    if side * side == d {
+        println!("{}", srds::viz::ascii_image(&sample, side, side));
+        if let Some(path) = flags.get("out") {
+            srds::viz::write_pgm(std::path::Path::new(path), &sample, side, side)?;
+            println!("wrote {path}");
+        }
+    } else {
+        println!("sample[0..8] = {:?}", &sample[..8.min(d)]);
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: HashMap<String, String>) -> srds::Result<()> {
+    let model = flags.get("model").cloned().unwrap_or_else(|| "gmm_church".into());
+    let solver = Solver::parse(flags.get("solver").map(|s| s.as_str()).unwrap_or("ddim"))
+        .ok_or_else(|| anyhow::anyhow!("unknown solver"))?;
+    let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".into());
+    let factory: Arc<dyn BackendFactory> = match flags.get("backend").map(|s| s.as_str()) {
+        Some("pjrt") => Arc::new(PjrtFactory::new(srds::artifacts_dir(), &model, solver)?),
+        _ => Arc::new(NativeFactory::new(native_model(&model), solver)),
+    };
+    serve(ServeConfig { addr, workers, model_name: model, factory })
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("info");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    let r = match cmd {
+        "sample" => cmd_sample(flags),
+        "serve" => cmd_serve(flags),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown command {other:?}; try: info | sample | serve");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,270 @@
+//! Sample-quality metrics — the substitutes for the paper's FID / KID /
+//! CLIP score (DESIGN.md §Substitutions). All have analytic references
+//! against the known GMM data distribution.
+//!
+//! * [`fd_gaussian`] — Fréchet distance between Gaussian fits in sample
+//!   space (exactly the FID formula, minus the Inception embedding).
+//! * [`kid_poly`] — unbiased MMD² with the KID polynomial kernel.
+//! * [`cond_score`] — mean class-conditional log-likelihood under the
+//!   target mixture (the CLIP-score analogue for "prompt" adherence).
+
+use crate::data::Gmm;
+use crate::linalg::{matmul, sqrtm_psd, trace};
+
+/// Gaussian moments fitted to a flat `(n, d)` sample matrix.
+#[derive(Debug, Clone)]
+pub struct Moments {
+    pub dim: usize,
+    pub mean: Vec<f64>,
+    /// Row-major `d×d` covariance (unbiased).
+    pub cov: Vec<f64>,
+    pub count: usize,
+}
+
+/// Fit mean + covariance to samples.
+pub fn fit_moments(xs: &[f32], n: usize, d: usize) -> Moments {
+    assert_eq!(xs.len(), n * d);
+    assert!(n >= 2, "need at least two samples");
+    let mut mean = vec![0.0f64; d];
+    for i in 0..n {
+        for j in 0..d {
+            mean[j] += xs[i * d + j] as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut cov = vec![0.0f64; d * d];
+    for i in 0..n {
+        for a in 0..d {
+            let da = xs[i * d + a] as f64 - mean[a];
+            for b in a..d {
+                let db = xs[i * d + b] as f64 - mean[b];
+                cov[a * d + b] += da * db;
+            }
+        }
+    }
+    for a in 0..d {
+        for b in a..d {
+            let v = cov[a * d + b] / (n - 1) as f64;
+            cov[a * d + b] = v;
+            cov[b * d + a] = v;
+        }
+    }
+    Moments { dim: d, mean, cov, count: n }
+}
+
+/// Analytic reference moments of a GMM (class-restricted if `cls`).
+pub fn gmm_moments(gmm: &Gmm, cls: Option<u32>) -> Moments {
+    match cls {
+        None => Moments { dim: gmm.dim(), mean: gmm.mean().iter().map(|&x| x as f64).collect(), cov: gmm.cov(), count: usize::MAX },
+        Some(c) => {
+            // Restrict + renormalize the mixture, then moments.
+            let mask = gmm.class_mask(c);
+            let d = gmm.dim();
+            let wsum: f64 = gmm
+                .weights
+                .iter()
+                .zip(&mask)
+                .map(|(&w, &m)| (w * m) as f64)
+                .sum();
+            let mut mean = vec![0.0f64; d];
+            for k in 0..gmm.k() {
+                let w = (gmm.weights[k] * mask[k]) as f64 / wsum;
+                for (j, &mj) in gmm.mean_of(k).iter().enumerate() {
+                    mean[j] += w * mj as f64;
+                }
+            }
+            let mut cov = vec![0.0f64; d * d];
+            for k in 0..gmm.k() {
+                let w = (gmm.weights[k] * mask[k]) as f64 / wsum;
+                if w == 0.0 {
+                    continue;
+                }
+                let mk = gmm.mean_of(k);
+                let s2 = (gmm.sigmas[k] as f64) * (gmm.sigmas[k] as f64);
+                for a in 0..d {
+                    let da = mk[a] as f64 - mean[a];
+                    for b in 0..d {
+                        let db = mk[b] as f64 - mean[b];
+                        cov[a * d + b] += w * da * db;
+                    }
+                    cov[a * d + a] += w * s2;
+                }
+            }
+            Moments { dim: d, mean, cov, count: usize::MAX }
+        }
+    }
+}
+
+/// Fréchet distance between two Gaussian fits:
+/// `‖μ1−μ2‖² + tr(C1 + C2 − 2 (C1^{1/2} C2 C1^{1/2})^{1/2})`.
+pub fn fd_gaussian(a: &Moments, b: &Moments) -> f64 {
+    assert_eq!(a.dim, b.dim);
+    let d = a.dim;
+    let mean_term: f64 = a
+        .mean
+        .iter()
+        .zip(&b.mean)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum();
+    let s1 = sqrtm_psd(&a.cov, d);
+    let inner = matmul(&matmul(&s1, &b.cov, d), &s1, d);
+    let cross = sqrtm_psd(&inner, d);
+    let tr = trace(&a.cov, d) + trace(&b.cov, d) - 2.0 * trace(&cross, d);
+    (mean_term + tr).max(0.0)
+}
+
+/// Convenience: FD of generated samples against the analytic GMM
+/// reference.
+pub fn fd_vs_gmm(xs: &[f32], n: usize, gmm: &Gmm) -> f64 {
+    fd_gaussian(&fit_moments(xs, n, gmm.dim()), &gmm_moments(gmm, None))
+}
+
+/// Unbiased MMD² with the KID kernel `k(x,y) = (xᵀy/d + 1)³` between two
+/// flat sample matrices (this *is* the Kernel Inception Distance
+/// estimator, applied to raw sample features).
+pub fn kid_poly(xs: &[f32], nx: usize, ys: &[f32], ny: usize, d: usize) -> f64 {
+    assert!(nx >= 2 && ny >= 2);
+    let kf = |a: &[f32], b: &[f32]| -> f64 {
+        let dot: f64 = a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+        let v = dot / d as f64 + 1.0;
+        v * v * v
+    };
+    fn row(m: &[f32], i: usize, d: usize) -> &[f32] {
+        &m[i * d..(i + 1) * d]
+    }
+    let mut kxx = 0.0;
+    for i in 0..nx {
+        for j in 0..nx {
+            if i != j {
+                kxx += kf(row(xs, i, d), row(xs, j, d));
+            }
+        }
+    }
+    kxx /= (nx * (nx - 1)) as f64;
+    let mut kyy = 0.0;
+    for i in 0..ny {
+        for j in 0..ny {
+            if i != j {
+                kyy += kf(row(ys, i, d), row(ys, j, d));
+            }
+        }
+    }
+    kyy /= (ny * (ny - 1)) as f64;
+    let mut kxy = 0.0;
+    for i in 0..nx {
+        for j in 0..ny {
+            kxy += kf(row(xs, i, d), row(ys, j, d));
+        }
+    }
+    kxy /= (nx * ny) as f64;
+    kxx + kyy - 2.0 * kxy
+}
+
+/// Mean log-likelihood of samples under the (class-restricted) mixture —
+/// the CLIP-score analogue: higher = better adherence to the "prompt"
+/// (class). Computed per-dimension for scale comparability.
+pub fn cond_score(xs: &[f32], n: usize, gmm: &Gmm, cls: Option<u32>) -> f64 {
+    let d = gmm.dim();
+    let mask = match cls {
+        Some(c) => gmm.class_mask(c),
+        None => vec![1.0; gmm.k()],
+    };
+    let wsum: f64 = gmm.weights.iter().zip(&mask).map(|(&w, &m)| (w * m) as f64).sum();
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let x = &xs[i * d..(i + 1) * d];
+        // log sum_k w_k N(x; mu_k, sigma_k^2 I) via logsumexp
+        let mut logs = Vec::with_capacity(gmm.k());
+        for k in 0..gmm.k() {
+            if mask[k] == 0.0 {
+                continue;
+            }
+            let w = gmm.weights[k] as f64 / wsum;
+            let s2 = (gmm.sigmas[k] as f64) * (gmm.sigmas[k] as f64);
+            let mk = gmm.mean_of(k);
+            let sq: f64 = x
+                .iter()
+                .zip(mk)
+                .map(|(a, b)| ((*a - *b) as f64) * ((*a - *b) as f64))
+                .sum();
+            logs.push(w.ln() - 0.5 * d as f64 * (2.0 * std::f64::consts::PI * s2).ln() - 0.5 * sq / s2);
+        }
+        let mx = logs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lse = mx + logs.iter().map(|l| (l - mx).exp()).sum::<f64>().ln();
+        total += lse;
+    }
+    total / (n as f64 * d as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::make_gmm;
+
+    #[test]
+    fn fd_of_identical_moments_is_zero() {
+        let g = make_gmm("church");
+        let m = gmm_moments(&g, None);
+        let fd = fd_gaussian(&m, &m);
+        assert!(fd < 1e-6, "fd = {fd}");
+    }
+
+    #[test]
+    fn fd_of_true_samples_is_small_and_shifted_is_large() {
+        let g = make_gmm("cifar");
+        let n = 2000;
+        let xs = g.sample(n, 42, None);
+        let fd_true = fd_vs_gmm(&xs, n, &g);
+        // Shift every sample by 1.0 in every dim: FD grows by ≈ d.
+        let shifted: Vec<f32> = xs.iter().map(|&x| x + 1.0).collect();
+        let fd_shift = fd_vs_gmm(&shifted, n, &g);
+        assert!(fd_true < 5.0, "fd_true {fd_true}");
+        assert!(fd_shift > fd_true + 50.0, "fd_shift {fd_shift}");
+    }
+
+    #[test]
+    fn kid_separates_matching_and_mismatched_sets() {
+        let g = make_gmm("church");
+        let a = g.sample(200, 1, None);
+        let b = g.sample(200, 2, None);
+        let kid_same = kid_poly(&a, 200, &b, 200, g.dim());
+        let shifted: Vec<f32> = a.iter().map(|&x| x + 0.5).collect();
+        let kid_diff = kid_poly(&shifted, 200, &b, 200, g.dim());
+        assert!(kid_same.abs() < 0.5, "kid_same {kid_same}");
+        assert!(kid_diff > kid_same + 0.2, "kid_diff {kid_diff}");
+    }
+
+    #[test]
+    fn cond_score_prefers_matching_class() {
+        let g = make_gmm("latent_cond");
+        let xs = g.sample(64, 9, Some(1));
+        let right = cond_score(&xs, 64, &g, Some(1));
+        let wrong = cond_score(&xs, 64, &g, Some(3));
+        assert!(right > wrong, "{right} vs {wrong}");
+    }
+
+    #[test]
+    fn moments_of_reference_samples_match_analytic() {
+        let g = make_gmm("bedroom");
+        let n = 4000;
+        let xs = g.sample(n, 77, None);
+        let fit = fit_moments(&xs, n, g.dim());
+        let anal = gmm_moments(&g, None);
+        for j in 0..g.dim() {
+            assert!(
+                (fit.mean[j] - anal.mean[j]).abs() < 0.12,
+                "mean dim {j}: {} vs {}",
+                fit.mean[j],
+                anal.mean[j]
+            );
+        }
+        // diagonal covariance entries in the right ballpark
+        for j in 0..g.dim() {
+            let a = fit.cov[j * g.dim() + j];
+            let b = anal.cov[j * g.dim() + j];
+            assert!((a - b).abs() < 0.2 * (1.0 + b), "cov({j},{j}): {a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Native `SmallDenoiser` — the seeded residual-MLP eps-net, mirroring
+//! `python/compile/model.py` (weights regenerated from the shared
+//! splitmix64 stream; forward pass matches the fused_mlp Pallas kernel).
+
+use super::EpsModel;
+use crate::data::rng::{seed_for, SplitMix64};
+
+pub const NFREQ: usize = 16;
+pub const HIDDEN: usize = 256;
+pub const FF: usize = 512;
+pub const NBLOCK: usize = 2;
+
+/// tanh-approximation GELU — matches `kernels/ref.py:gelu_ref` (f32).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+struct Block {
+    w1: Vec<f32>, // (HIDDEN, FF) row-major
+    b1: Vec<f32>,
+    w2: Vec<f32>, // (FF, HIDDEN)
+    b2: Vec<f32>,
+}
+
+/// Residual-MLP eps-net (~0.5M params) with Fourier time features.
+pub struct SmallDenoiser {
+    dim: usize,
+    w_in: Vec<f32>, // (dim + 2*NFREQ, HIDDEN)
+    b_in: Vec<f32>,
+    blocks: Vec<Block>,
+    w_out: Vec<f32>, // (HIDDEN, dim)
+    b_out: Vec<f32>,
+}
+
+impl SmallDenoiser {
+    /// Weights from the shared stream; draw order matches python
+    /// `make_denoiser_weights` (w_in row-major, b_in, per block w1 b1 w2
+    /// b2, then w_out b_out; biases are zero but drawn as zeros there).
+    pub fn new(dim: usize) -> Self {
+        Self::named(dim, "small_denoiser")
+    }
+
+    pub fn named(dim: usize, name: &str) -> Self {
+        let mut rng = SplitMix64::new(seed_for(&format!("{name}:{dim}")));
+        let din = dim + 2 * NFREQ;
+        let mat = |rng: &mut SplitMix64, r: usize, c: usize, scale: f64| -> Vec<f32> {
+            (0..r * c).map(|_| (rng.next_normal() * scale) as f32).collect()
+        };
+        let w_in = mat(&mut rng, din, HIDDEN, 1.0 / (din as f64).sqrt());
+        let b_in = vec![0.0; HIDDEN];
+        let mut blocks = Vec::with_capacity(NBLOCK);
+        for _ in 0..NBLOCK {
+            let w1 = mat(&mut rng, HIDDEN, FF, 1.0 / (HIDDEN as f64).sqrt());
+            let b1 = vec![0.0; FF];
+            let w2 = mat(&mut rng, FF, HIDDEN, 0.5 / (FF as f64).sqrt());
+            let b2 = vec![0.0; HIDDEN];
+            blocks.push(Block { w1, b1, w2, b2 });
+        }
+        let w_out = mat(&mut rng, HIDDEN, dim, 1.0 / (HIDDEN as f64).sqrt());
+        let b_out = vec![0.0; dim];
+        SmallDenoiser { dim, w_in, b_in, blocks, w_out, b_out }
+    }
+
+    /// Approximate parameter count (for reporting).
+    pub fn num_params(&self) -> usize {
+        self.w_in.len() + self.b_in.len() + self.w_out.len() + self.b_out.len()
+            + self.blocks.iter().map(|b| b.w1.len() + b.b1.len() + b.w2.len() + b.b2.len()).sum::<usize>()
+    }
+}
+
+/// `out[r, :] += x[r, :] @ w` for row-major `w (in, out_cols)`.
+fn matmul_acc(x: &[f32], rows: usize, cin: usize, w: &[f32], cout: usize, out: &mut [f32]) {
+    for r in 0..rows {
+        let xr = &x[r * cin..(r + 1) * cin];
+        let or = &mut out[r * cout..(r + 1) * cout];
+        for (i, &xi) in xr.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let wr = &w[i * cout..(i + 1) * cout];
+            for j in 0..cout {
+                or[j] += xi * wr[j];
+            }
+        }
+    }
+}
+
+impl EpsModel for SmallDenoiser {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eps(&self, x: &[f32], s: &[f32], _mask: Option<&[f32]>, out: &mut [f32]) {
+        let b = s.len();
+        let d = self.dim;
+        let din = d + 2 * NFREQ;
+        // input = [x, sin(2^j pi s), cos(2^j pi s)]
+        let mut inp = vec![0.0f32; b * din];
+        for r in 0..b {
+            inp[r * din..r * din + d].copy_from_slice(&x[r * d..(r + 1) * d]);
+            for j in 0..NFREQ {
+                let ang = s[r] * (2.0f32).powi(j as i32) * std::f32::consts::PI;
+                inp[r * din + d + j] = ang.sin();
+                inp[r * din + d + NFREQ + j] = ang.cos();
+            }
+        }
+        // h = gelu(inp @ w_in + b_in)
+        let mut h = vec![0.0f32; b * HIDDEN];
+        for r in 0..b {
+            h[r * HIDDEN..(r + 1) * HIDDEN].copy_from_slice(&self.b_in);
+        }
+        matmul_acc(&inp, b, din, &self.w_in, HIDDEN, &mut h);
+        h.iter_mut().for_each(|v| *v = gelu(*v));
+        // residual blocks: h = h + gelu(h@w1+b1)@w2 + b2
+        let mut a = vec![0.0f32; b * FF];
+        for blk in &self.blocks {
+            a.iter_mut().for_each(|v| *v = 0.0);
+            for r in 0..b {
+                a[r * FF..(r + 1) * FF].copy_from_slice(&blk.b1);
+            }
+            matmul_acc(&h, b, HIDDEN, &blk.w1, FF, &mut a);
+            a.iter_mut().for_each(|v| *v = gelu(*v));
+            // h += a @ w2 + b2
+            for r in 0..b {
+                let hr = &mut h[r * HIDDEN..(r + 1) * HIDDEN];
+                for j in 0..HIDDEN {
+                    hr[j] += blk.b2[j];
+                }
+            }
+            matmul_acc(&a, b, FF, &blk.w2, HIDDEN, &mut h);
+        }
+        // out = h @ w_out + b_out
+        for r in 0..b {
+            out[r * d..(r + 1) * d].copy_from_slice(&self.b_out);
+        }
+        matmul_acc(&h, b, HIDDEN, &self.w_out, d, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sized() {
+        let m = SmallDenoiser::new(256);
+        assert!(m.num_params() > 400_000, "params = {}", m.num_params());
+        let m2 = SmallDenoiser::new(256);
+        assert_eq!(m.w_in, m2.w_in);
+    }
+
+    #[test]
+    fn batched_equals_rowwise() {
+        let m = SmallDenoiser::new(64);
+        let d = 64;
+        let b = 3;
+        let mut rng = SplitMix64::new(11);
+        let x = rng.normals_f32(b * d);
+        let s = [0.2f32, 0.5, 0.9];
+        let mut batched = vec![0.0; b * d];
+        m.eps(&x, &s, None, &mut batched);
+        for i in 0..b {
+            let mut row = vec![0.0; d];
+            m.eps(&x[i * d..(i + 1) * d], &s[i..=i], None, &mut row);
+            for j in 0..d {
+                assert!((batched[i * d + j] - row[j]).abs() < 1e-5, "row {i} dim {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn output_is_bounded() {
+        // Variance-scaled weights keep the net ~1-Lipschitz; outputs on
+        // unit-normal inputs should be O(1).
+        let m = SmallDenoiser::new(64);
+        let mut rng = SplitMix64::new(5);
+        let x = rng.normals_f32(64);
+        let mut out = vec![0.0; 64];
+        m.eps(&x, &[0.5], None, &mut out);
+        let norm: f32 = out.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(norm.is_finite() && norm < 50.0, "|eps| = {norm}");
+    }
+
+    #[test]
+    fn time_conditioning_matters() {
+        let m = SmallDenoiser::new(64);
+        let x = vec![0.3f32; 64];
+        let (mut a, mut b) = (vec![0.0; 64], vec![0.0; 64]);
+        m.eps(&x, &[0.1], None, &mut a);
+        m.eps(&x, &[0.9], None, &mut b);
+        let diff: f32 = a.iter().zip(&b).map(|(p, q)| (p - q).abs()).sum();
+        assert!(diff > 1e-3, "time embedding should change the output");
+    }
+
+    #[test]
+    fn gelu_matches_known_values() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,196 @@
+//! Analytic Gaussian-mixture eps-model — mirrors the `gmm_score` Pallas
+//! kernel (`python/compile/kernels/gmm_score.py`) and its jnp oracle.
+
+use super::EpsModel;
+use crate::data::Gmm;
+use crate::schedule;
+
+/// Exact eps-prediction of a diffused GMM (the "pretrained model"
+/// substitute, DESIGN.md §Substitutions).
+///
+/// Diffused marginal at progress `s`:
+/// `p_s = Σ_k w_k N(√ᾱ μ_k, v_k I)`, `v_k = ᾱ σ_k² + (1-ᾱ)`; then
+/// `ε̂ = σ(s) Σ_k r_k (x − √ᾱ μ_k) / v_k` with softmaxed
+/// responsibilities `r_k`.
+#[derive(Debug, Clone)]
+pub struct GmmEps {
+    gmm: Gmm,
+    log_w: Vec<f32>,
+    sig2: Vec<f32>,
+}
+
+impl GmmEps {
+    pub fn new(gmm: Gmm) -> Self {
+        let log_w = gmm.weights.iter().map(|w| w.ln()).collect();
+        let sig2 = gmm.sigmas.iter().map(|s| s * s).collect();
+        GmmEps { gmm, log_w, sig2 }
+    }
+
+    pub fn gmm(&self) -> &Gmm {
+        &self.gmm
+    }
+
+    fn eps_row(&self, x: &[f32], s: f32, mask: Option<&[f32]>, out: &mut [f32]) {
+        let d = self.gmm.dim();
+        let k = self.gmm.k();
+        let tau = 1.0 - s;
+        let ab = schedule::log_alpha_bar(tau).exp();
+        let sab = ab.sqrt();
+        let sig = (1.0 - ab).max(0.0).sqrt().max(schedule::SIGMA_FLOOR);
+
+        // logits_k = log w_k + log(mask_k + 1e-30) − d/2 log v_k − ‖x−√ᾱμ‖²/(2v_k)
+        let mut logits = [0.0f32; 64];
+        debug_assert!(k <= 64);
+        let mut vk = [0.0f32; 64];
+        let mut max_logit = f32::NEG_INFINITY;
+        for c in 0..k {
+            let v = ab * self.sig2[c] + (1.0 - ab);
+            vk[c] = v;
+            let m = self.gmm.mean_of(c);
+            let mut sq = 0.0f32;
+            for j in 0..d {
+                let diff = x[j] - sab * m[j];
+                sq += diff * diff;
+            }
+            let lm = match mask {
+                Some(ms) => (ms[c] + 1e-30).ln(),
+                None => 0.0,
+            };
+            let l = self.log_w[c] + lm - 0.5 * d as f32 * v.ln() - 0.5 * sq / v;
+            logits[c] = l;
+            max_logit = max_logit.max(l);
+        }
+        let mut rsum = 0.0f32;
+        for c in 0..k {
+            logits[c] = (logits[c] - max_logit).exp();
+            rsum += logits[c];
+        }
+        // out = sig * Σ_k (r_k / v_k) (x − √ᾱ μ_k)
+        out.fill(0.0);
+        for c in 0..k {
+            let coeff = logits[c] / rsum / vk[c];
+            if coeff == 0.0 {
+                continue;
+            }
+            let m = self.gmm.mean_of(c);
+            for j in 0..d {
+                out[j] += coeff * (x[j] - sab * m[j]);
+            }
+        }
+        for j in 0..d {
+            out[j] *= sig;
+        }
+    }
+}
+
+impl EpsModel for GmmEps {
+    fn dim(&self) -> usize {
+        self.gmm.dim()
+    }
+
+    fn k(&self) -> usize {
+        self.gmm.k()
+    }
+
+    fn eps(&self, x: &[f32], s: &[f32], mask: Option<&[f32]>, out: &mut [f32]) {
+        let d = self.dim();
+        let k = self.k();
+        for (i, &si) in s.iter().enumerate() {
+            let m = mask.map(|ms| &ms[i * k..(i + 1) * k]);
+            self.eps_row(&x[i * d..(i + 1) * d], si, m, &mut out[i * d..(i + 1) * d]);
+        }
+    }
+}
+
+/// Guided conditional wrapper (same struct, guided entry point is on the
+/// trait). Exists so call sites can name the conditional model.
+pub type CondGmmEps = GmmEps;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::make_gmm;
+
+    fn model(name: &str) -> GmmEps {
+        GmmEps::new(make_gmm(name))
+    }
+
+    #[test]
+    fn single_gaussian_matches_closed_form() {
+        // For a 1-component mixture with mean mu, sigma: eps has closed form
+        // sig * (x - sab*mu) / v.
+        let mut g = make_gmm("church");
+        g.spec.n_components = 1;
+        g.means.truncate(g.dim());
+        g.sigmas.truncate(1);
+        g.weights = vec![1.0];
+        g.comp_class.truncate(1);
+        let m = GmmEps::new(g.clone());
+        let d = g.dim();
+        let x: Vec<f32> = (0..d).map(|i| (i as f32 * 0.1).sin()).collect();
+        let s = 0.35f32;
+        let mut out = vec![0.0; d];
+        m.eps(&x, &[s], None, &mut out);
+        let ab = crate::schedule::alpha_bar(s);
+        let sab = ab.sqrt();
+        let sig = (1.0 - ab).sqrt();
+        let v = ab * g.sigmas[0] * g.sigmas[0] + (1.0 - ab);
+        for j in 0..d {
+            let expect = sig * (x[j] - sab * g.means[j]) / v;
+            assert!((out[j] - expect).abs() < 1e-5, "{j}: {} vs {expect}", out[j]);
+        }
+    }
+
+    #[test]
+    fn eps_magnitude_near_noise_end_is_xlike() {
+        // At s→0, ab→0, v→1, sig→1: eps ≈ x (softmax over similar logits).
+        let m = model("church");
+        let d = m.dim();
+        let x = vec![0.5f32; d];
+        let mut out = vec![0.0; d];
+        m.eps(&x, &[0.0], None, &mut out);
+        for j in 0..d {
+            assert!((out[j] - x[j]).abs() < 0.2, "{}: {} vs {}", j, out[j], x[j]);
+        }
+    }
+
+    #[test]
+    fn batched_equals_rowwise() {
+        let m = model("imagenet64");
+        let d = m.dim();
+        let b = 5;
+        let mut rng = crate::data::rng::SplitMix64::new(9);
+        let x = rng.normals_f32(b * d);
+        let s: Vec<f32> = (0..b).map(|i| 0.1 + 0.15 * i as f32).collect();
+        let mut batched = vec![0.0; b * d];
+        m.eps(&x, &s, None, &mut batched);
+        for i in 0..b {
+            let mut row = vec![0.0; d];
+            m.eps(&x[i * d..(i + 1) * d], &s[i..=i], None, &mut row);
+            assert_eq!(&batched[i * d..(i + 1) * d], &row[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn guided_interpolates() {
+        let m = model("latent_cond");
+        let d = m.dim();
+        let k = m.k();
+        let mut rng = crate::data::rng::SplitMix64::new(3);
+        let x = rng.normals_f32(d);
+        let s = [0.4f32];
+        let mask = m.gmm().class_mask(1);
+        let (mut e_u, mut e_c, mut e_g) = (vec![0.0; d], vec![0.0; d], vec![0.0; d]);
+        m.eps(&x, &s, None, &mut e_u);
+        m.eps(&x, &s, Some(&mask), &mut e_c);
+        m.eps_guided(&x, &s, &mask, 1.0, &mut e_g);
+        for j in 0..d {
+            assert!((e_g[j] - e_c[j]).abs() < 1e-5, "w=1 reduces to conditional");
+        }
+        m.eps_guided(&x, &s, &mask, 0.0, &mut e_g);
+        for j in 0..d {
+            assert!((e_g[j] - e_u[j]).abs() < 1e-5, "w=0 reduces to unconditional");
+        }
+        let _ = k;
+    }
+}

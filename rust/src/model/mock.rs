@@ -1,0 +1,74 @@
+//! Mock eps-models for unit and property tests of the coordinator: cheap,
+//! smooth, deterministic maps with known structure.
+
+use super::EpsModel;
+
+/// `ε̂ = a·x + c·s` — an affine model giving a linear ODE whose flows are
+/// contractive/expansive in a controlled way. Proptests on the Parareal
+/// invariants (Props 1–3) use this.
+#[derive(Debug, Clone)]
+pub struct AffineModel {
+    pub dim: usize,
+    pub a: f32,
+    pub c: f32,
+}
+
+impl AffineModel {
+    pub fn new(dim: usize, a: f32, c: f32) -> Self {
+        AffineModel { dim, a, c }
+    }
+}
+
+impl EpsModel for AffineModel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eps(&self, x: &[f32], s: &[f32], _mask: Option<&[f32]>, out: &mut [f32]) {
+        let d = self.dim;
+        for (i, &si) in s.iter().enumerate() {
+            for j in 0..d {
+                out[i * d + j] = self.a * x[i * d + j] + self.c * si;
+            }
+        }
+    }
+}
+
+/// `ε̂ = 0` — under DDIM this gives the exactly-solvable flow
+/// `x' = √(ᾱ_to/ᾱ_from) · x`, used to pin solver coefficients in tests.
+#[derive(Debug, Clone)]
+pub struct ZeroModel {
+    pub dim: usize,
+}
+
+impl EpsModel for ZeroModel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eps(&self, _x: &[f32], s: &[f32], _mask: Option<&[f32]>, out: &mut [f32]) {
+        out[..s.len() * self.dim].fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affine_is_affine() {
+        let m = AffineModel::new(3, 2.0, 0.5);
+        let x = [1.0f32, 2.0, 3.0];
+        let mut out = [0.0f32; 3];
+        m.eps(&x, &[0.4], None, &mut out);
+        assert_eq!(out, [2.2, 4.2, 6.2]);
+    }
+
+    #[test]
+    fn zero_is_zero() {
+        let m = ZeroModel { dim: 2 };
+        let mut out = [1.0f32; 4];
+        m.eps(&[9.0; 4], &[0.1, 0.2], None, &mut out);
+        assert_eq!(out, [0.0; 4]);
+    }
+}

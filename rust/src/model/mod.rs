@@ -1,0 +1,47 @@
+//! Native eps-models (`ε_θ`).
+//!
+//! The coordinator is generic over where a solver step executes (see
+//! [`crate::solvers::StepBackend`]); these are the pure-rust model
+//! implementations used by tests, the simulated executor, and the
+//! native fallback path. They match the JAX models in
+//! `python/compile/model.py` to f32 tolerance (golden-tested against the
+//! AOT artifacts).
+
+mod denoiser;
+mod gmm_eps;
+mod mock;
+
+pub use denoiser::SmallDenoiser;
+pub use gmm_eps::{CondGmmEps, GmmEps};
+pub use mock::{AffineModel, ZeroModel};
+
+/// A batched eps-prediction model: `eps(x, s) → ε̂` with optional
+/// class-conditioning (component `mask` + guidance weight `w`).
+///
+/// `x` is flat row-major `(b, dim)`; `s` has length `b`; the result is
+/// flat `(b, dim)`.
+pub trait EpsModel: Send + Sync {
+    fn dim(&self) -> usize;
+
+    /// Unconditional (or mask-conditioned) eps prediction.
+    fn eps(&self, x: &[f32], s: &[f32], mask: Option<&[f32]>, out: &mut [f32]);
+
+    /// Classifier-free-guided prediction:
+    /// `eps_u + w (eps_c − eps_u)` (diffusers convention, paper Table 2
+    /// uses w = 7.5). Default composes two [`EpsModel::eps`] calls.
+    fn eps_guided(&self, x: &[f32], s: &[f32], mask: &[f32], w: f32, out: &mut [f32]) {
+        let b = s.len();
+        let d = self.dim();
+        let mut e_c = vec![0.0f32; b * d];
+        self.eps(x, s, None, out); // unconditional branch
+        self.eps(x, s, Some(mask), &mut e_c);
+        for i in 0..b * d {
+            out[i] += w * (e_c[i] - out[i]);
+        }
+    }
+
+    /// Number of mixture components / mask width (0 if unconditional).
+    fn k(&self) -> usize {
+        0
+    }
+}

@@ -1,0 +1,144 @@
+//! Table rendering used by every bench so outputs mirror the paper's
+//! rows, plus a tiny timing harness (criterion is unavailable offline).
+
+use std::time::Instant;
+
+/// A fixed-column text table.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<width$} ", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helpers shared by the benches.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn f4(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+pub fn speedup(base: f64, ours: f64) -> String {
+    if ours <= 0.0 {
+        return "-".into();
+    }
+    format!("{:.1}x", base / ours)
+}
+
+/// Median-of-runs micro timing (the in-tree stand-in for criterion).
+pub fn time_median<F: FnMut()>(mut f: F, warmup: usize, runs: usize) -> std::time::Duration {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<std::time::Duration> = (0..runs.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed()
+        })
+        .collect();
+    samples.sort();
+    samples[samples.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "blong"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("333"));
+        let lines: Vec<&str> = s.lines().filter(|l| l.contains('|')).collect();
+        assert_eq!(lines.len(), 3);
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "aligned columns");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn timing_returns_positive() {
+        let d = time_median(
+            || {
+                std::hint::black_box((0..100).sum::<u64>());
+            },
+            1,
+            5,
+        );
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn speedup_format() {
+        assert_eq!(speedup(10.0, 5.0), "2.0x");
+        assert_eq!(speedup(1.0, 0.0), "-");
+    }
+}

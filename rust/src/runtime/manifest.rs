@@ -1,0 +1,180 @@
+//! `manifest.json` — the artifact registry emitted by `python/compile/aot.py`.
+
+use crate::json::Value;
+use crate::solvers::Solver;
+use crate::Result;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub solver: String,
+    pub batch: usize,
+    pub dim: usize,
+    pub k: usize,
+    pub guided: bool,
+    pub evals_per_step: usize,
+    pub inputs: Vec<InputSpec>,
+}
+
+impl ArtifactMeta {
+    pub fn solver_enum(&self) -> Option<Solver> {
+        Solver::parse(&self.solver)
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let s = |k: &str| -> Result<String> { Ok(v.req(k)?.as_str().unwrap_or_default().to_string()) };
+        let u = |k: &str| -> Result<usize> {
+            v.req(k)?.as_usize().ok_or_else(|| anyhow::anyhow!("field {k} not a number"))
+        };
+        let mut inputs = Vec::new();
+        for iv in v.req("inputs")?.as_arr().unwrap_or(&[]) {
+            let shape = iv
+                .req("shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect();
+            inputs.push(InputSpec { name: iv.req("name")?.as_str().unwrap_or_default().to_string(), shape });
+        }
+        Ok(ArtifactMeta {
+            name: s("name")?,
+            file: s("file")?,
+            model: s("model")?,
+            solver: s("solver")?,
+            batch: u("batch")?,
+            dim: u("dim")?,
+            k: u("k")?,
+            guided: v.req("guided")?.as_bool().unwrap_or(false),
+            evals_per_step: u("evals_per_step")?,
+            inputs,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ScheduleMeta {
+    pub beta_min: f32,
+    pub beta_max: f32,
+    pub sigma_floor: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub schedule: ScheduleMeta,
+    pub batch_buckets: Vec<usize>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = crate::json::parse(text)?;
+        let sc = v.req("schedule")?;
+        let schedule = ScheduleMeta {
+            beta_min: sc.req("beta_min")?.as_f64().unwrap_or(0.0) as f32,
+            beta_max: sc.req("beta_max")?.as_f64().unwrap_or(0.0) as f32,
+            sigma_floor: sc.req("sigma_floor")?.as_f64().unwrap_or(0.0) as f32,
+        };
+        // The schedule constants are baked into the HLO; refuse to run
+        // against artifacts built with a different schedule than this
+        // binary's native mirror.
+        anyhow::ensure!(
+            (schedule.beta_min - crate::schedule::BETA_MIN).abs() < 1e-9
+                && (schedule.beta_max - crate::schedule::BETA_MAX).abs() < 1e-9,
+            "artifact schedule ({}, {}) != native schedule ({}, {})",
+            schedule.beta_min,
+            schedule.beta_max,
+            crate::schedule::BETA_MIN,
+            crate::schedule::BETA_MAX,
+        );
+        let batch_buckets = v
+            .req("batch_buckets")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|x| x.as_usize())
+            .collect();
+        let mut artifacts = Vec::new();
+        for av in v.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            artifacts.push(ArtifactMeta::from_json(av)?);
+        }
+        Ok(Manifest { schedule, batch_buckets, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts for one (model, solver), sorted by batch descending.
+    pub fn steps_for(&self, model: &str, solver: &str) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.solver == solver)
+            .collect();
+        v.sort_by(|a, b| b.batch.cmp(&a.batch));
+        v
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.iter().map(|a| a.model.as_str()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "schedule": {"beta_min": 0.1, "beta_max": 20.0, "sigma_floor": 1e-4},
+      "batch_buckets": [1, 8, 32],
+      "artifacts": [
+        {"name": "step_gmm_church_ddim_b1", "file": "step_gmm_church_ddim_b1.hlo.txt",
+         "model": "gmm_church", "solver": "ddim", "batch": 1, "dim": 64, "k": 8,
+         "guided": false, "evals_per_step": 1,
+         "inputs": [{"name": "x", "shape": [1, 64]}, {"name": "s_from", "shape": [1]},
+                    {"name": "s_to", "shape": [1]}]}
+      ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch_buckets, vec![1, 8, 32]);
+        let a = m.artifact("step_gmm_church_ddim_b1").unwrap();
+        assert_eq!(a.dim, 64);
+        assert_eq!(a.solver_enum(), Some(Solver::Ddim));
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].shape, vec![1, 64]);
+    }
+
+    #[test]
+    fn rejects_schedule_mismatch() {
+        let bad = SAMPLE.replace("\"beta_max\": 20.0", "\"beta_max\": 10.0");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn steps_for_sorts_descending() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.steps_for("gmm_church", "ddim").len(), 1);
+        assert!(m.steps_for("gmm_church", "heun").is_empty());
+        assert_eq!(m.models(), vec!["gmm_church"]);
+    }
+}

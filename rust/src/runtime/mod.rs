@@ -1,0 +1,114 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (`make artifacts`)
+//! and execute them from the rust hot path.
+//!
+//! Interchange is HLO **text** — jax ≥ 0.5 emits `HloModuleProto`s with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `python/compile/aot.py`).
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (thread-bound); the
+//! measured multi-device executor therefore opens one [`PjrtRuntime`] per
+//! worker thread via [`PjrtFactory`].
+
+mod backend;
+mod manifest;
+
+pub use backend::{PjrtBackend, PjrtFactory};
+pub use manifest::{ArtifactMeta, InputSpec, Manifest};
+
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// A compiled step executable plus its manifest entry.
+pub struct LoadedStep {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedStep {
+    /// Execute with input literals in manifest order; returns the flat
+    /// f32 output (the artifact returns a 1-tuple, see aot.py).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple1()?.to_vec::<f32>()?)
+    }
+}
+
+/// One PJRT CPU client + a lazily-compiled executable cache over the
+/// artifact directory.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<LoadedStep>>>,
+}
+
+impl PjrtRuntime {
+    /// Open the artifacts directory (reads `manifest.json`, creates the
+    /// PJRT CPU client; executables compile lazily on first use).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {} (run `make artifacts`)", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Open the default artifacts dir (`$SRDS_ARTIFACTS` or `./artifacts`).
+    pub fn open_default() -> Result<Self> {
+        Self::open(crate::artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile-and-cache) one artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<LoadedStep>> {
+        if let Some(s) = self.cache.borrow().get(name) {
+            return Ok(s.clone());
+        }
+        let meta = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let step = Rc::new(LoadedStep { meta, exe });
+        self.cache.borrow_mut().insert(name.to_string(), step.clone());
+        Ok(step)
+    }
+
+    /// Number of executables compiled so far (diagnostics).
+    pub fn loaded_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Build a rank-2 literal from a flat slice.
+pub fn lit2(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Build a rank-1 literal.
+pub fn lit1(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Build a rank-0 (scalar) literal.
+pub fn lit0(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}

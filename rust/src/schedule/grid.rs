@@ -1,0 +1,164 @@
+//! Time grids and coarse/fine partitions of the denoising interval.
+
+/// The uniform `(n+1)`-point denoising grid `s_0 = 0, …, s_n = 1`.
+///
+/// Grid points are computed as `i / n` in f32 — identical to
+/// `jnp.linspace(0, 1, n+1)` on the python side, so native and HLO solves
+/// see the same times.
+#[derive(Debug, Clone)]
+pub struct Grid {
+    n: usize,
+    pts: Vec<f32>,
+}
+
+impl Grid {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "grid needs at least one step");
+        let pts = (0..=n).map(|i| i as f32 / n as f32).collect();
+        Grid { n, pts }
+    }
+
+    /// Number of fine steps `N`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// `s_i` for `i ∈ [0, n]`.
+    #[inline]
+    pub fn s(&self, i: usize) -> f32 {
+        self.pts[i]
+    }
+
+    pub fn points(&self) -> &[f32] {
+        &self.pts
+    }
+}
+
+/// A two-level partition of an `N`-step grid into `num_blocks` blocks of
+/// (up to) `block` fine steps each — the Parareal coarse discretization.
+///
+/// The paper uses `block ≈ √N` (App. B, Prop. 4); `N` need not be a
+/// perfect square — the last block is simply smaller (paper footnote 2).
+#[derive(Debug, Clone)]
+pub struct Partition {
+    grid: Grid,
+    block: usize,
+    /// Fine-grid index of each block boundary: `0 = b_0 < b_1 < … < b_M = N`.
+    bounds: Vec<usize>,
+}
+
+impl Partition {
+    /// Partition with an explicit block size `b` (fine steps per block).
+    pub fn with_block(n: usize, block: usize) -> Self {
+        assert!(block >= 1 && block <= n);
+        let grid = Grid::new(n);
+        let mut bounds = vec![0];
+        let mut i = 0;
+        while i < n {
+            i = (i + block).min(n);
+            bounds.push(i);
+        }
+        Partition { grid, block, bounds }
+    }
+
+    /// The paper's default: `block = ⌈√N⌉`.
+    pub fn sqrt_n(n: usize) -> Self {
+        let b = (n as f64).sqrt().ceil() as usize;
+        Self::with_block(n, b.max(1))
+    }
+
+    pub fn grid(&self) -> &Grid {
+        &self.grid
+    }
+
+    pub fn n(&self) -> usize {
+        self.grid.n()
+    }
+
+    /// Nominal fine steps per block (last block may be smaller).
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Number of blocks `M = ⌈N / block⌉`.
+    pub fn num_blocks(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Fine-grid index of coarse boundary `j ∈ [0, M]`.
+    #[inline]
+    pub fn bound(&self, j: usize) -> usize {
+        self.bounds[j]
+    }
+
+    /// `s` at coarse boundary `j`.
+    #[inline]
+    pub fn s_bound(&self, j: usize) -> f32 {
+        self.grid.s(self.bounds[j])
+    }
+
+    /// Fine steps inside block `j` (≥ 1).
+    #[inline]
+    pub fn block_len(&self, j: usize) -> usize {
+        self.bounds[j + 1] - self.bounds[j]
+    }
+
+    /// Fine-grid `s` values covered by block `j`: `block_len + 1` points.
+    pub fn block_points(&self, j: usize) -> &[f32] {
+        &self.grid.points()[self.bounds[j]..=self.bounds[j + 1]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_endpoints() {
+        let g = Grid::new(25);
+        assert_eq!(g.s(0), 0.0);
+        assert_eq!(g.s(25), 1.0);
+        assert_eq!(g.points().len(), 26);
+    }
+
+    #[test]
+    fn perfect_square_partition() {
+        let p = Partition::sqrt_n(25);
+        assert_eq!(p.block(), 5);
+        assert_eq!(p.num_blocks(), 5);
+        for j in 0..5 {
+            assert_eq!(p.block_len(j), 5);
+        }
+    }
+
+    #[test]
+    fn non_square_partition_last_block_smaller() {
+        // Paper footnote 2: ⌈√N⌉ blocks with a smaller last interval.
+        let p = Partition::sqrt_n(27); // block = 6 -> bounds 0,6,12,18,24,27
+        assert_eq!(p.block(), 6);
+        assert_eq!(p.num_blocks(), 5);
+        assert_eq!(p.block_len(4), 3);
+        let total: usize = (0..p.num_blocks()).map(|j| p.block_len(j)).sum();
+        assert_eq!(total, 27);
+    }
+
+    #[test]
+    fn block_points_are_contiguous() {
+        let p = Partition::with_block(16, 4);
+        let pts = p.block_points(2);
+        assert_eq!(pts.len(), 5);
+        assert_eq!(pts[0], p.s_bound(2));
+        assert_eq!(pts[4], p.s_bound(3));
+    }
+
+    #[test]
+    fn covers_every_fine_step() {
+        for n in [1usize, 2, 3, 16, 25, 27, 100, 196, 961, 1024] {
+            let p = Partition::sqrt_n(n);
+            assert_eq!(p.bound(0), 0);
+            assert_eq!(p.bound(p.num_blocks()), n);
+            let total: usize = (0..p.num_blocks()).map(|j| p.block_len(j)).sum();
+            assert_eq!(total, n, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Continuous VP diffusion schedule — bit-compatible (f32) with
+//! `python/compile/schedule.py`.
+//!
+//! Conventions (paper §2, reversed index): denoising progress `s ∈ [0,1]`
+//! with `s = 0` pure noise and `s = 1` data; diffusion time `tau = 1 - s`.
+//!
+//! ```text
+//! beta(tau)         = BETA_MIN + tau * (BETA_MAX - BETA_MIN)
+//! log alpha_bar(tau)= -(BETA_MIN*tau + 0.5*(BETA_MAX-BETA_MIN)*tau^2)
+//! ```
+
+mod grid;
+pub use grid::{Grid, Partition};
+
+/// Schedule constants — MUST match `python/compile/schedule.py`.
+pub const BETA_MIN: f32 = 0.1;
+pub const BETA_MAX: f32 = 20.0;
+pub const DBETA: f32 = BETA_MAX - BETA_MIN;
+/// Floor on `sqrt(1 - alpha_bar)`; guards the score→eps conversion at
+/// `s = 1` where `1 - alpha_bar = 0` (Euler/Heun/DPM evaluate there).
+pub const SIGMA_FLOOR: f32 = 1e-4;
+
+/// `beta(tau)`, the VP noise rate.
+#[inline]
+pub fn beta(tau: f32) -> f32 {
+    BETA_MIN + tau * DBETA
+}
+
+/// `log alpha_bar` as a function of diffusion time `tau`.
+#[inline]
+pub fn log_alpha_bar(tau: f32) -> f32 {
+    -(BETA_MIN * tau + 0.5 * DBETA * tau * tau)
+}
+
+/// `alpha_bar` as a function of denoising progress `s ∈ [0, 1]`.
+#[inline]
+pub fn alpha_bar(s: f32) -> f32 {
+    log_alpha_bar(1.0 - s).exp()
+}
+
+/// `sqrt(alpha_bar(s))`.
+#[inline]
+pub fn sqrt_ab(s: f32) -> f32 {
+    alpha_bar(s).sqrt()
+}
+
+/// `sqrt(1 - alpha_bar(s))`, floored away from zero (see [`SIGMA_FLOOR`]).
+#[inline]
+pub fn sigma(s: f32) -> f32 {
+    (1.0 - alpha_bar(s)).max(0.0).sqrt().max(SIGMA_FLOOR)
+}
+
+/// Half log-SNR `lambda(s) = log(sqrt_ab / sigma)` (DPM-Solver space).
+#[inline]
+pub fn lam(s: f32) -> f32 {
+    (sqrt_ab(s) / sigma(s)).ln()
+}
+
+/// Invert `lambda → s` in closed form (DPM-Solver-2 midpoints).
+///
+/// `alpha_bar = sigmoid(2 lambda)`, then solve the schedule quadratic for
+/// `tau ≥ 0`. Mirrors `schedule.s_of_lam` in python (same float32 ops).
+#[inline]
+pub fn s_of_lam(l: f32) -> f32 {
+    // log sigmoid(2l) = -log(1 + exp(-2l)) computed stably
+    let log_ab = -log1p_exp(-2.0 * l);
+    let disc = BETA_MIN * BETA_MIN - 2.0 * DBETA * log_ab;
+    let tau = (-BETA_MIN + disc.sqrt()) / DBETA;
+    1.0 - tau.clamp(0.0, 1.0)
+}
+
+/// Numerically stable `log(1 + exp(x))` (float32, matches jnp.logaddexp).
+#[inline]
+fn log1p_exp(x: f32) -> f32 {
+    if x > 0.0 {
+        x + (-x).exp().ln_1p()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints() {
+        assert!((alpha_bar(1.0) - 1.0).abs() < 1e-7, "s=1 is clean data");
+        let ab0 = alpha_bar(0.0);
+        assert!(ab0 < 1e-4 && ab0 > 0.0, "s=0 is (almost) pure noise: {ab0}");
+    }
+
+    #[test]
+    fn monotone() {
+        let mut prev = alpha_bar(0.0);
+        for i in 1..=100 {
+            let ab = alpha_bar(i as f32 / 100.0);
+            assert!(ab > prev, "alpha_bar must increase with s");
+            prev = ab;
+        }
+    }
+
+    #[test]
+    fn sigma_floored_at_data() {
+        assert_eq!(sigma(1.0), SIGMA_FLOOR);
+    }
+
+    #[test]
+    fn lam_inverse_roundtrip() {
+        for i in 1..100 {
+            let s = i as f32 / 100.0;
+            let back = s_of_lam(lam(s));
+            assert!(
+                (back - s).abs() < 2e-3,
+                "s_of_lam(lam({s})) = {back}"
+            );
+        }
+    }
+
+    #[test]
+    fn beta_positive() {
+        for i in 0..=10 {
+            assert!(beta(i as f32 / 10.0) > 0.0);
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! JSON-line sampling server — the L3 request path.
+//!
+//! Protocol (one JSON object per line, over TCP):
+//!
+//! ```json
+//! {"id": 1, "sampler": "srds", "n": 25, "class": 2, "guidance": 7.5,
+//!  "seed": 42, "tol": 0.0025, "max_iters": 3}
+//! ```
+//!
+//! Response line:
+//!
+//! ```json
+//! {"id": 1, "ok": true, "iters": 2, "eff_serial_evals": 17,
+//!  "total_evals": 74, "wall_ms": 12.3, "sample": [...]}
+//! ```
+//!
+//! Sampler workers each own a thread-bound backend (native or PJRT);
+//! requests are dispatched over an mpsc queue and responses routed back
+//! through per-request channels. Python is never involved.
+
+use crate::coordinator::{
+    paradigms, parataa, prior_sample, sequential, srds, Conditioning, ParadigmsConfig,
+    ParataaConfig, SrdsConfig,
+};
+use crate::data::make_gmm;
+use crate::json::{self, Value};
+use crate::solvers::{BackendFactory, StepBackend};
+use crate::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+/// A parsed sampling request.
+#[derive(Debug, Clone)]
+pub struct SampleRequest {
+    pub id: u64,
+    pub sampler: String,
+    pub n: usize,
+    pub class: Option<u32>,
+    pub guidance: f32,
+    pub seed: u64,
+    pub tol: f32,
+    pub max_iters: Option<usize>,
+    pub return_sample: bool,
+}
+
+impl SampleRequest {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let num = |k: &str, default: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(default);
+        Ok(SampleRequest {
+            id: num("id", 0.0) as u64,
+            sampler: v
+                .get("sampler")
+                .and_then(|x| x.as_str())
+                .unwrap_or("srds")
+                .to_string(),
+            n: num("n", 25.0) as usize,
+            class: v.get("class").and_then(|x| x.as_f64()).map(|c| c as u32),
+            guidance: num("guidance", 0.0) as f32,
+            seed: num("seed", 0.0) as u64,
+            tol: num("tol", 2.5e-3) as f32,
+            max_iters: v.get("max_iters").and_then(|x| x.as_usize()),
+            return_sample: v.get("sample").and_then(|x| x.as_bool()).unwrap_or(true),
+        })
+    }
+}
+
+/// Execute one request on a backend. The conditioning mask comes from the
+/// dataset zoo when the model is a conditional GMM.
+pub fn run_request(
+    backend: &dyn StepBackend,
+    model_name: &str,
+    req: &SampleRequest,
+) -> Value {
+    let dim = backend.dim();
+    let cond = match req.class {
+        Some(c) if model_name.contains("latent_cond") => {
+            let gmm = make_gmm("latent_cond");
+            Conditioning::class(gmm.class_mask(c), req.guidance)
+        }
+        _ => Conditioning::none(),
+    };
+    let x0 = prior_sample(dim, req.seed);
+    let t0 = std::time::Instant::now();
+    let (sample, iters, eff, total, converged) = match req.sampler.as_str() {
+        "sequential" => {
+            let (s, st) = sequential(backend, &x0, req.n, &cond, req.seed);
+            (s, 0, st.eff_serial_evals, st.total_evals, true)
+        }
+        "paradigms" => {
+            let mut cfg = ParadigmsConfig::new(req.n).with_tol(req.tol).with_seed(req.seed);
+            cfg.cond = cond;
+            let r = paradigms(backend, &x0, &cfg);
+            (r.sample, r.stats.iters, r.stats.eff_serial_evals, r.stats.total_evals, r.stats.converged)
+        }
+        "parataa" => {
+            let mut cfg = ParataaConfig::new(req.n).with_tol(req.tol).with_seed(req.seed);
+            cfg.cond = cond;
+            let r = parataa(backend, &x0, &cfg);
+            (r.sample, r.stats.iters, r.stats.eff_serial_evals, r.stats.total_evals, r.stats.converged)
+        }
+        _ => {
+            // srds (default)
+            let mut cfg = SrdsConfig::new(req.n).with_tol(req.tol).with_seed(req.seed).with_cond(cond);
+            if let Some(k) = req.max_iters {
+                cfg = cfg.with_max_iters(k);
+            }
+            let r = srds(backend, &x0, &cfg);
+            (
+                r.sample,
+                r.stats.iters,
+                r.stats.eff_serial_evals_pipelined,
+                r.stats.total_evals,
+                r.stats.converged,
+            )
+        }
+    };
+    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let mut pairs = vec![
+        ("id", Value::Num(req.id as f64)),
+        ("ok", Value::Bool(true)),
+        ("sampler", Value::Str(req.sampler.clone())),
+        ("iters", Value::Num(iters as f64)),
+        ("eff_serial_evals", Value::Num(eff as f64)),
+        ("total_evals", Value::Num(total as f64)),
+        ("converged", Value::Bool(converged)),
+        ("wall_ms", Value::Num(wall_ms)),
+    ];
+    if req.return_sample {
+        pairs.push(("sample", json::arr_f32(&sample)));
+    }
+    json::obj(pairs)
+}
+
+/// Handle one raw request line (exposed for tests; no socket needed).
+pub fn handle_line(backend: &dyn StepBackend, model_name: &str, line: &str) -> String {
+    let resp = match json::parse(line).and_then(|v| SampleRequest::from_json(&v)) {
+        Ok(req) => run_request(backend, model_name, &req),
+        Err(e) => json::obj(vec![
+            ("ok", Value::Bool(false)),
+            ("error", Value::Str(format!("{e:#}"))),
+        ]),
+    };
+    json::to_string(&resp)
+}
+
+/// Server configuration.
+pub struct ServeConfig {
+    pub addr: String,
+    /// Sampler worker threads (each owns one backend instance).
+    pub workers: usize,
+    pub model_name: String,
+    pub factory: Arc<dyn BackendFactory>,
+}
+
+enum WorkItem {
+    Line(String, Sender<String>),
+}
+
+/// Run the blocking accept loop. Each connection thread parses lines and
+/// queues them for the sampler workers; responses stream back in
+/// completion order per connection.
+pub fn serve(cfg: ServeConfig) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    eprintln!(
+        "srds-server listening on {} (model={}, workers={})",
+        cfg.addr, cfg.model_name, cfg.workers
+    );
+    let (work_tx, work_rx) = channel::<WorkItem>();
+    let work_rx = Arc::new(Mutex::new(work_rx));
+    for w in 0..cfg.workers {
+        let rx = work_rx.clone();
+        let factory = cfg.factory.clone();
+        let model_name = cfg.model_name.clone();
+        std::thread::Builder::new()
+            .name(format!("srds-sampler-{w}"))
+            .spawn(move || {
+                let backend = factory.create();
+                loop {
+                    let item = { rx.lock().unwrap().recv() };
+                    let Ok(WorkItem::Line(line, resp_tx)) = item else { break };
+                    let resp = handle_line(backend.as_ref(), &model_name, &line);
+                    let _ = resp_tx.send(resp);
+                }
+            })?;
+    }
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let work_tx = work_tx.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, work_tx) {
+                eprintln!("connection error: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, work_tx: Sender<WorkItem>) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let (resp_tx, resp_rx) = channel::<String>();
+    // Dedicated writer thread: responses stream back the moment a sampler
+    // worker finishes, independent of the (possibly idle) read side — a
+    // blocked reader must never delay completed work.
+    let writer_handle = std::thread::spawn(move || -> Result<()> {
+        for resp in resp_rx {
+            writeln!(writer, "{resp}")?;
+        }
+        Ok(())
+    });
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        work_tx
+            .send(WorkItem::Line(line, resp_tx.clone()))
+            .map_err(|_| anyhow::anyhow!("server shutting down"))?;
+    }
+    // Reader EOF: drop our resp_tx; the writer exits once the in-flight
+    // worker clones finish and the channel drains.
+    drop(resp_tx);
+    let _ = writer_handle.join();
+    eprintln!("connection {peer} done");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::NativeFactory;
+    use crate::model::GmmEps;
+    use crate::solvers::Solver;
+
+    fn backend() -> Box<dyn StepBackend> {
+        let model: Arc<dyn crate::model::EpsModel> = Arc::new(GmmEps::new(make_gmm("toy2d")));
+        NativeFactory::new(model, Solver::Ddim).create()
+    }
+
+    #[test]
+    fn handle_line_srds() {
+        let be = backend();
+        let resp = handle_line(be.as_ref(), "gmm_toy2d", r#"{"id": 5, "n": 16, "tol": 0.001}"#);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(5.0));
+        assert_eq!(v.get("sample").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn handle_line_all_samplers() {
+        let be = backend();
+        for sampler in ["sequential", "srds", "paradigms", "parataa"] {
+            let line = format!(r#"{{"id":1,"sampler":"{sampler}","n":16,"sample":false}}"#);
+            let resp = handle_line(be.as_ref(), "gmm_toy2d", &line);
+            let v = json::parse(&resp).unwrap();
+            assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{sampler}: {resp}");
+            assert!(v.get("sample").is_none());
+        }
+    }
+
+    #[test]
+    fn handle_line_bad_json() {
+        let be = backend();
+        let resp = handle_line(be.as_ref(), "gmm_toy2d", "{nope");
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn samplers_agree_on_sample() {
+        let be = backend();
+        let mk = |sampler: &str| {
+            let line =
+                format!(r#"{{"id":1,"sampler":"{sampler}","n":25,"seed":9,"tol":1e-6}}"#);
+            let resp = handle_line(be.as_ref(), "gmm_toy2d", &line);
+            json::parse(&resp).unwrap().get("sample").unwrap().as_f32_vec().unwrap()
+        };
+        let seq = mk("sequential");
+        let srds_s = mk("srds");
+        for (a, b) in seq.iter().zip(&srds_s) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

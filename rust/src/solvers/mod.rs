@@ -1,0 +1,186 @@
+//! Diffusion ODE solvers (the `F`/`G` maps Parareal composes).
+//!
+//! A *solver* is a deterministic map `F(x, s_from, s_to)` propagating the
+//! state (paper §2.1). SRDS instantiates the fine solver as `block`
+//! consecutive steps on the fine grid and the coarse solver as a single
+//! step across a block (paper §3.2).
+//!
+//! Two interchangeable execution paths implement [`StepBackend`]:
+//! [`native::NativeBackend`] (pure rust, mirrors `python/compile/model.py`
+//! to f32 tolerance) and [`crate::runtime::PjrtBackend`] (AOT-compiled
+//! HLO artifacts via PJRT). Golden tests pin them together.
+
+mod native;
+
+pub use native::NativeBackend;
+
+use crate::data::rng::{noise_key, SplitMix64};
+use crate::schedule;
+
+/// Solver families (paper §2.1 + App. C Table 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Solver {
+    /// DDIM (η = 0) — the paper's default.
+    Ddim,
+    /// DDIM(η = 1) ancestral sampling with deterministic per-position noise.
+    Ddpm,
+    /// Explicit Euler on the probability-flow ODE.
+    Euler,
+    /// Heun's 2nd-order method (Karras et al.) — 2 evals/step.
+    Heun,
+    /// DPM-Solver-2 midpoint (Lu et al.) — 2 evals/step.
+    Dpm2,
+}
+
+impl Solver {
+    pub const ALL: [Solver; 5] = [Solver::Ddim, Solver::Ddpm, Solver::Euler, Solver::Heun, Solver::Dpm2];
+
+    /// Model evaluations per step — the unit every latency table counts.
+    pub fn evals_per_step(self) -> usize {
+        match self {
+            Solver::Ddim | Solver::Ddpm | Solver::Euler => 1,
+            Solver::Heun | Solver::Dpm2 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Solver::Ddim => "ddim",
+            Solver::Ddpm => "ddpm",
+            Solver::Euler => "euler",
+            Solver::Heun => "heun",
+            Solver::Dpm2 => "dpm2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Solver> {
+        Solver::ALL.into_iter().find(|v| v.name() == s)
+    }
+
+    /// Whether the step consumes an exogenous noise vector.
+    pub fn stochastic(self) -> bool {
+        matches!(self, Solver::Ddpm)
+    }
+}
+
+/// One batched step request: row `i` propagates from `s_from[i]` to
+/// `s_to[i]`. Rows are independent — this is exactly the batched-inference
+/// opportunity of paper §3.4 (fine solves of different blocks, or of
+/// different requests, share one model evaluation).
+#[derive(Debug, Clone, Copy)]
+pub struct StepRequest<'a> {
+    /// Flat `(b, dim)` states.
+    pub x: &'a [f32],
+    pub s_from: &'a [f32],
+    pub s_to: &'a [f32],
+    /// Component mask `(b, k)` for guided models.
+    pub mask: Option<&'a [f32]>,
+    /// Classifier-free guidance weight (ignored when `mask` is `None`).
+    pub guidance: f32,
+    /// Per-row noise seeds (DDPM); noise is a pure function of
+    /// `(seed, s_from)` so the step map stays deterministic.
+    pub seeds: &'a [u64],
+}
+
+impl<'a> StepRequest<'a> {
+    pub fn rows(&self) -> usize {
+        self.s_from.len()
+    }
+}
+
+/// Where a solver step executes. Object-safe; PJRT-backed impls are
+/// thread-bound (the `xla` crate's client is `Rc`-based), so backends are
+/// created per worker thread via [`BackendFactory`].
+pub trait StepBackend {
+    fn dim(&self) -> usize;
+    fn solver(&self) -> Solver;
+    /// Execute one batched solver step; returns flat `(b, dim)`.
+    fn step(&self, req: &StepRequest) -> Vec<f32>;
+    fn evals_per_step(&self) -> usize {
+        self.solver().evals_per_step()
+    }
+}
+
+/// Creates per-thread [`StepBackend`] instances for the measured executor.
+pub trait BackendFactory: Send + Sync {
+    fn create(&self) -> Box<dyn StepBackend>;
+    fn dim(&self) -> usize;
+    fn solver(&self) -> Solver;
+}
+
+/// Deterministic DDPM noise for one row: a pure function of
+/// `(seed, s_from)` shared by the native backend and the PJRT wrapper
+/// (which feeds it to the artifact's `noise` input).
+pub fn ddpm_noise(seed: u64, s_from: f32, dim: usize, out: &mut [f32]) {
+    let key = noise_key(seed, s_from.to_bits(), 0);
+    SplitMix64::new(key).fill_normals(&mut out[..dim]);
+}
+
+/// Shared per-row DDIM coefficients: `x' = c1·x + c2·ε`.
+#[inline]
+pub fn ddim_coeffs(s_from: f32, s_to: f32) -> (f32, f32) {
+    let (sab_f, sab_t) = (schedule::sqrt_ab(s_from), schedule::sqrt_ab(s_to));
+    let (sig_f, sig_t) = (schedule::sigma(s_from), schedule::sigma(s_to));
+    let c1 = sab_t / sab_f;
+    (c1, sig_t - c1 * sig_f)
+}
+
+/// Shared per-row DDPM(η=1) coefficients: `x' = c1·x + c2·ε + c3·ξ`.
+#[inline]
+pub fn ddpm_coeffs(s_from: f32, s_to: f32) -> (f32, f32, f32) {
+    let (ab_f, ab_t) = (schedule::alpha_bar(s_from), schedule::alpha_bar(s_to));
+    let (sab_f, sab_t) = (ab_f.sqrt(), ab_t.sqrt());
+    let (sig_f, sig_t) = (schedule::sigma(s_from), schedule::sigma(s_to));
+    let std = ((sig_t / sig_f) * (1.0 - ab_f / ab_t).max(0.0).sqrt()).min(sig_t);
+    let dir = (sig_t * sig_t - std * std).max(0.0).sqrt();
+    let c1 = sab_t / sab_f;
+    (c1, dir - c1 * sig_f, std)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_counts() {
+        assert_eq!(Solver::Ddim.evals_per_step(), 1);
+        assert_eq!(Solver::Heun.evals_per_step(), 2);
+        assert_eq!(Solver::Dpm2.evals_per_step(), 2);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in Solver::ALL {
+            assert_eq!(Solver::parse(s.name()), Some(s));
+        }
+        assert_eq!(Solver::parse("nope"), None);
+    }
+
+    #[test]
+    fn ddim_identity_when_times_equal() {
+        let (c1, c2) = ddim_coeffs(0.3, 0.3);
+        assert!((c1 - 1.0).abs() < 1e-6);
+        assert!(c2.abs() < 1e-6);
+    }
+
+    #[test]
+    fn ddpm_noise_is_deterministic() {
+        let mut a = vec![0.0; 16];
+        let mut b = vec![0.0; 16];
+        ddpm_noise(7, 0.25, 16, &mut a);
+        ddpm_noise(7, 0.25, 16, &mut b);
+        assert_eq!(a, b);
+        ddpm_noise(8, 0.25, 16, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn ddpm_variance_is_bounded() {
+        for i in 0..20 {
+            let s = i as f32 / 20.0;
+            let t = s + 0.05;
+            let (_, _, c3) = ddpm_coeffs(s, t);
+            assert!(c3 >= 0.0 && c3 <= crate::schedule::sigma(t) + 1e-6);
+        }
+    }
+}

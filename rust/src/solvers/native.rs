@@ -1,0 +1,287 @@
+//! Pure-rust solver steps over an [`EpsModel`] — mirrors the JAX step
+//! functions in `python/compile/model.py` operation-for-operation (f32),
+//! so native solves agree with the AOT HLO artifacts to fp tolerance
+//! (pinned by `rust/tests/golden.rs`).
+
+use super::{ddim_coeffs, ddpm_coeffs, ddpm_noise, Solver, StepBackend, StepRequest};
+use crate::model::EpsModel;
+use crate::schedule;
+use std::sync::Arc;
+
+/// Native backend: batched eps through the model, per-row schedule
+/// coefficients, fused update.
+pub struct NativeBackend {
+    model: Arc<dyn EpsModel>,
+    solver: Solver,
+}
+
+impl NativeBackend {
+    pub fn new(model: Arc<dyn EpsModel>, solver: Solver) -> Self {
+        NativeBackend { model, solver }
+    }
+
+    pub fn model(&self) -> &Arc<dyn EpsModel> {
+        &self.model
+    }
+
+    fn eps(&self, x: &[f32], s: &[f32], req: &StepRequest, out: &mut [f32]) {
+        match req.mask {
+            Some(mask) => self.model.eps_guided(x, s, mask, req.guidance, out),
+            None => self.model.eps(x, s, None, out),
+        }
+    }
+
+    /// Probability-flow slope `dx/ds = 0.5 β(1-s) (x − ε̂/σ(s))` per row.
+    fn pf_slope(&self, x: &[f32], s: &[f32], req: &StepRequest, out: &mut [f32]) {
+        let d = self.model.dim();
+        self.eps(x, s, req, out);
+        for (i, &si) in s.iter().enumerate() {
+            let c = 0.5 * schedule::beta(1.0 - si);
+            let sig = schedule::sigma(si);
+            for j in 0..d {
+                let idx = i * d + j;
+                out[idx] = c * (x[idx] - out[idx] / sig);
+            }
+        }
+    }
+}
+
+impl StepBackend for NativeBackend {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn solver(&self) -> Solver {
+        self.solver
+    }
+
+    fn step(&self, req: &StepRequest) -> Vec<f32> {
+        let b = req.rows();
+        let d = self.model.dim();
+        let mut out = vec![0.0f32; b * d];
+        match self.solver {
+            Solver::Ddim => {
+                self.eps(req.x, req.s_from, req, &mut out);
+                for i in 0..b {
+                    let (c1, c2) = ddim_coeffs(req.s_from[i], req.s_to[i]);
+                    for j in 0..d {
+                        let idx = i * d + j;
+                        out[idx] = c1 * req.x[idx] + c2 * out[idx];
+                    }
+                }
+            }
+            Solver::Ddpm => {
+                self.eps(req.x, req.s_from, req, &mut out);
+                let mut xi = vec![0.0f32; d];
+                for i in 0..b {
+                    let (c1, c2, c3) = ddpm_coeffs(req.s_from[i], req.s_to[i]);
+                    ddpm_noise(req.seeds[i], req.s_from[i], d, &mut xi);
+                    for j in 0..d {
+                        let idx = i * d + j;
+                        out[idx] = c1 * req.x[idx] + c2 * out[idx] + c3 * xi[j];
+                    }
+                }
+            }
+            Solver::Euler => {
+                self.pf_slope(req.x, req.s_from, req, &mut out);
+                for i in 0..b {
+                    let h = req.s_to[i] - req.s_from[i];
+                    for j in 0..d {
+                        let idx = i * d + j;
+                        out[idx] = req.x[idx] + h * out[idx];
+                    }
+                }
+            }
+            Solver::Heun => {
+                let mut d1 = vec![0.0f32; b * d];
+                self.pf_slope(req.x, req.s_from, req, &mut d1);
+                let mut xe = vec![0.0f32; b * d];
+                for i in 0..b {
+                    let h = req.s_to[i] - req.s_from[i];
+                    for j in 0..d {
+                        let idx = i * d + j;
+                        xe[idx] = req.x[idx] + h * d1[idx];
+                    }
+                }
+                self.pf_slope(&xe, req.s_to, req, &mut out);
+                for i in 0..b {
+                    let h = req.s_to[i] - req.s_from[i];
+                    for j in 0..d {
+                        let idx = i * d + j;
+                        out[idx] = req.x[idx] + 0.5 * h * (d1[idx] + out[idx]);
+                    }
+                }
+            }
+            Solver::Dpm2 => {
+                // Exponential-integrator midpoint in half-log-SNR space.
+                let mut e1 = vec![0.0f32; b * d];
+                self.eps(req.x, req.s_from, req, &mut e1);
+                let mut u = vec![0.0f32; b * d];
+                let mut s_mid = vec![0.0f32; b];
+                for i in 0..b {
+                    let lam_f = schedule::lam(req.s_from[i]);
+                    let lam_t = schedule::lam(req.s_to[i]);
+                    let h = lam_t - lam_f;
+                    s_mid[i] = schedule::s_of_lam(lam_f + 0.5 * h);
+                    let c1 = schedule::sqrt_ab(s_mid[i]) / schedule::sqrt_ab(req.s_from[i]);
+                    let c2 = -schedule::sigma(s_mid[i]) * (0.5 * h).exp_m1();
+                    for j in 0..d {
+                        let idx = i * d + j;
+                        u[idx] = c1 * req.x[idx] + c2 * e1[idx];
+                    }
+                }
+                self.eps(&u, &s_mid, req, &mut out);
+                for i in 0..b {
+                    let lam_f = schedule::lam(req.s_from[i]);
+                    let h = schedule::lam(req.s_to[i]) - lam_f;
+                    let c1 = schedule::sqrt_ab(req.s_to[i]) / schedule::sqrt_ab(req.s_from[i]);
+                    let c2 = -schedule::sigma(req.s_to[i]) * h.exp_m1();
+                    for j in 0..d {
+                        let idx = i * d + j;
+                        out[idx] = c1 * req.x[idx] + c2 * out[idx];
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::make_gmm;
+    use crate::model::{GmmEps, ZeroModel};
+    use std::sync::Arc;
+
+    fn req<'a>(
+        x: &'a [f32],
+        s_from: &'a [f32],
+        s_to: &'a [f32],
+        seeds: &'a [u64],
+    ) -> StepRequest<'a> {
+        StepRequest { x, s_from, s_to, mask: None, guidance: 0.0, seeds }
+    }
+
+    #[test]
+    fn ddim_zero_model_closed_form() {
+        // With eps = 0, DDIM is x' = (sab_t/sab_f) x + sig_t - ... c2*0.
+        let be = NativeBackend::new(Arc::new(ZeroModel { dim: 4 }), Solver::Ddim);
+        let x = [1.0f32, -2.0, 0.5, 3.0];
+        let out = be.step(&req(&x, &[0.2], &[0.6], &[0]));
+        let c1 = schedule::sqrt_ab(0.6) / schedule::sqrt_ab(0.2);
+        for j in 0..4 {
+            assert!((out[j] - c1 * x[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn all_solvers_approach_same_solution_as_steps_increase() {
+        // Integrating the full trajectory with many steps, every
+        // deterministic solver should land near the same x(1).
+        let gmm = make_gmm("cifar");
+        let model: Arc<dyn crate::model::EpsModel> = Arc::new(GmmEps::new(gmm));
+        let d = 64;
+        let mut rng = crate::data::rng::SplitMix64::new(77);
+        let x0 = rng.normals_f32(d);
+        let n = 400;
+        let mut finals = vec![];
+        for solver in [Solver::Ddim, Solver::Euler, Solver::Heun, Solver::Dpm2] {
+            let be = NativeBackend::new(model.clone(), solver);
+            let mut x = x0.clone();
+            for i in 0..n {
+                let s0 = i as f32 / n as f32;
+                let s1 = (i + 1) as f32 / n as f32;
+                x = be.step(&req(&x, &[s0], &[s1], &[0]));
+            }
+            finals.push(x);
+        }
+        for other in &finals[1..] {
+            let rel: f32 = finals[0]
+                .iter()
+                .zip(other)
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f32>()
+                / d as f32;
+            assert!(rel < 0.08, "solver disagreement {rel}");
+        }
+    }
+
+    #[test]
+    fn ddpm_step_is_deterministic_given_seed() {
+        let gmm = make_gmm("church");
+        let be = NativeBackend::new(Arc::new(GmmEps::new(gmm)), Solver::Ddpm);
+        let mut rng = crate::data::rng::SplitMix64::new(1);
+        let x = rng.normals_f32(64);
+        let a = be.step(&req(&x, &[0.3], &[0.4], &[42]));
+        let b = be.step(&req(&x, &[0.3], &[0.4], &[42]));
+        assert_eq!(a, b);
+        let c = be.step(&req(&x, &[0.3], &[0.4], &[43]));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn batched_equals_rowwise_all_solvers() {
+        let gmm = make_gmm("bedroom");
+        let model: Arc<dyn crate::model::EpsModel> = Arc::new(GmmEps::new(gmm));
+        let d = 64;
+        let b = 4;
+        let mut rng = crate::data::rng::SplitMix64::new(2);
+        let x = rng.normals_f32(b * d);
+        let s_from: Vec<f32> = (0..b).map(|i| 0.1 + 0.2 * i as f32).collect();
+        let s_to: Vec<f32> = s_from.iter().map(|s| s + 0.1).collect();
+        let seeds: Vec<u64> = (0..b as u64).collect();
+        for solver in Solver::ALL {
+            let be = NativeBackend::new(model.clone(), solver);
+            let full = be.step(&req(&x, &s_from, &s_to, &seeds));
+            for i in 0..b {
+                let row = be.step(&req(
+                    &x[i * d..(i + 1) * d],
+                    &s_from[i..=i],
+                    &s_to[i..=i],
+                    &seeds[i..=i],
+                ));
+                for j in 0..d {
+                    assert!(
+                        (full[i * d + j] - row[j]).abs() < 1e-6,
+                        "{} row {i} dim {j}",
+                        solver.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heun_more_accurate_than_euler() {
+        // On a coarse grid, Heun should land closer to a fine reference.
+        let gmm = make_gmm("imagenet64");
+        let model: Arc<dyn crate::model::EpsModel> = Arc::new(GmmEps::new(gmm));
+        let d = 64;
+        let mut rng = crate::data::rng::SplitMix64::new(5);
+        let x0 = rng.normals_f32(d);
+        let solve = |solver: Solver, n: usize| {
+            let be = NativeBackend::new(model.clone(), solver);
+            let mut x = x0.clone();
+            for i in 0..n {
+                x = be.step(&req(
+                    &x,
+                    &[i as f32 / n as f32],
+                    &[(i + 1) as f32 / n as f32],
+                    &[0],
+                ));
+            }
+            x
+        };
+        let reference = solve(Solver::Heun, 512);
+        let l1 = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f32>() / d as f32
+        };
+        let err_euler = l1(&solve(Solver::Euler, 24), &reference);
+        let err_heun = l1(&solve(Solver::Heun, 24), &reference);
+        assert!(
+            err_heun < err_euler,
+            "heun {err_heun} should beat euler {err_euler}"
+        );
+    }
+}

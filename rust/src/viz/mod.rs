@@ -1,0 +1,156 @@
+//! Output rendering: PGM image dumps (sample figures), ASCII line plots
+//! (convergence figures) and gantt charts (the Fig. 4 pipeline trace).
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write a flat `(h, w)` f32 buffer as a binary PGM (P5), min-max
+/// normalized to 0..255. The 8×8 / 16×16 "images" of the GMM zoo render
+/// through this for Figs. 1/6/8.
+pub fn write_pgm(path: &Path, data: &[f32], w: usize, h: usize) -> crate::Result<()> {
+    assert_eq!(data.len(), w * h);
+    let lo = data.iter().cloned().fold(f32::MAX, f32::min);
+    let hi = data.iter().cloned().fold(f32::MIN, f32::max);
+    let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{w} {h}\n255\n")?;
+    let bytes: Vec<u8> = data.iter().map(|&v| ((v - lo) * scale) as u8).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Render a sample vector as an ASCII intensity grid (for terminal
+/// figure output), using a 10-level ramp.
+pub fn ascii_image(data: &[f32], w: usize, h: usize) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let lo = data.iter().cloned().fold(f32::MAX, f32::min);
+    let hi = data.iter().cloned().fold(f32::MIN, f32::max);
+    let scale = if hi > lo { (RAMP.len() - 1) as f32 / (hi - lo) } else { 0.0 };
+    let mut out = String::new();
+    for r in 0..h {
+        for c in 0..w {
+            let v = ((data[r * w + c] - lo) * scale) as usize;
+            let ch = RAMP[v.min(RAMP.len() - 1)] as char;
+            out.push(ch);
+            out.push(ch); // double width for aspect ratio
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// ASCII line plot of one or more series on a shared x-axis.
+pub fn ascii_plot(series: &[(&str, &[f64])], width: usize, height: usize) -> String {
+    let mut lo = f64::MAX;
+    let mut hi = f64::MIN;
+    let mut maxlen = 0usize;
+    for (_, ys) in series {
+        maxlen = maxlen.max(ys.len());
+        for &y in *ys {
+            lo = lo.min(y);
+            hi = hi.max(y);
+        }
+    }
+    if maxlen == 0 || !lo.is_finite() {
+        return String::from("(no data)\n");
+    }
+    if hi <= lo {
+        hi = lo + 1.0;
+    }
+    let marks = [b'*', b'o', b'+', b'x', b'#'];
+    let mut grid = vec![vec![b' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (i, &y) in ys.iter().enumerate() {
+            let cx = if maxlen == 1 { 0 } else { i * (width - 1) / (maxlen - 1) };
+            let fy = (y - lo) / (hi - lo);
+            let cy = height - 1 - ((fy * (height - 1) as f64).round() as usize).min(height - 1);
+            grid[cy][cx] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{hi:>12.4} ┐\n"));
+    for row in &grid {
+        out.push_str("             │");
+        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!("{lo:>12.4} ┴{}\n", "─".repeat(width)));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (n, _))| format!("{} {}", marks[i % marks.len()] as char, n))
+        .collect();
+    out.push_str(&format!("              {}\n", legend.join("   ")));
+    out
+}
+
+/// ASCII gantt chart of scheduled task spans `(label, lane, start, end)`.
+pub fn ascii_gantt(spans: &[(String, usize, u64, u64)], width: usize) -> String {
+    let lanes = spans.iter().map(|s| s.1).max().map(|m| m + 1).unwrap_or(0);
+    let t_max = spans.iter().map(|s| s.3).max().unwrap_or(1).max(1);
+    let mut out = String::new();
+    for lane in 0..lanes {
+        let mut row = vec![b'.'; width];
+        for (label, l, s, e) in spans {
+            if *l != lane {
+                continue;
+            }
+            let cs = (*s as usize * (width - 1) / t_max as usize).min(width - 1);
+            let ce = (*e as usize * (width - 1) / t_max as usize).min(width - 1);
+            let ch = label.bytes().next().unwrap_or(b'#');
+            for c in cs..=ce {
+                row[c] = ch;
+            }
+        }
+        out.push_str(&format!("dev{lane:<3}│"));
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!("      0{}t={}\n", " ".repeat(width.saturating_sub(8)), t_max));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pgm_roundtrip_header() {
+        let dir = std::env::temp_dir().join("srds_viz_test.pgm");
+        write_pgm(&dir, &[0.0, 0.5, 1.0, 0.25], 2, 2).unwrap();
+        let bytes = std::fs::read(&dir).unwrap();
+        assert!(bytes.starts_with(b"P5\n2 2\n255\n"));
+        assert_eq!(bytes.len(), b"P5\n2 2\n255\n".len() + 4);
+        assert_eq!(*bytes.last().unwrap(), 63); // 0.25 → 63/255
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn ascii_image_shape() {
+        let img = ascii_image(&[0.0, 1.0, 0.5, 0.2], 2, 2);
+        let lines: Vec<&str> = img.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].len(), 4);
+        assert!(img.contains('@'));
+    }
+
+    #[test]
+    fn ascii_plot_renders_series() {
+        let ys = [1.0, 2.0, 3.0, 2.0];
+        let s = ascii_plot(&[("err", &ys)], 20, 6);
+        assert!(s.contains('*'));
+        assert!(s.contains("err"));
+    }
+
+    #[test]
+    fn gantt_renders_lanes() {
+        let spans = vec![
+            ("F".to_string(), 0usize, 0u64, 5u64),
+            ("G".to_string(), 1, 2, 3),
+        ];
+        let g = ascii_gantt(&spans, 30);
+        assert!(g.contains("dev0"));
+        assert!(g.contains('F'));
+        assert!(g.contains('G'));
+    }
+}

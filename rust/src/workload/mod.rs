@@ -1,0 +1,117 @@
+//! Serving workload generation: Poisson request arrivals with "prompt"
+//! classes — drives the end-to-end serving example and the throughput
+//! bench (the small-batch, latency-sensitive use case the paper's
+//! Limitations section motivates).
+
+use crate::data::rng::SplitMix64;
+
+/// One sampling request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival offset from trace start, milliseconds.
+    pub arrival_ms: u64,
+    /// "Prompt": class id for conditional models, `None` for pixel zoo.
+    pub class: Option<u32>,
+    /// Denoising steps requested.
+    pub n: usize,
+    /// Chain seed.
+    pub seed: u64,
+}
+
+/// Trace generator configuration.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Mean arrival rate, requests/second.
+    pub rate_hz: f64,
+    pub num_requests: usize,
+    pub n_steps: usize,
+    pub num_classes: u32,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { rate_hz: 2.0, num_requests: 32, n_steps: 25, num_classes: 4, seed: 7 }
+    }
+}
+
+/// Generate a Poisson arrival trace (exponential inter-arrival gaps).
+pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
+    let mut rng = SplitMix64::new(cfg.seed);
+    let mut t_ms = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.num_requests);
+    for id in 0..cfg.num_requests {
+        let u = loop {
+            let u = rng.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let gap_s = -u.ln() / cfg.rate_hz;
+        t_ms += gap_s * 1000.0;
+        let class = if cfg.num_classes > 1 {
+            Some((rng.next_u64() % cfg.num_classes as u64) as u32)
+        } else {
+            None
+        };
+        out.push(Request {
+            id: id as u64,
+            arrival_ms: t_ms as u64,
+            class,
+            n: cfg.n_steps,
+            seed: cfg.seed ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        });
+    }
+    out
+}
+
+/// Latency percentiles helper for the serving reports.
+pub fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * p).round() as usize;
+    sorted_ms[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_ordered() {
+        let cfg = TraceConfig::default();
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a.len(), cfg.num_requests);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.class, y.class);
+        }
+        assert!(a.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+    }
+
+    #[test]
+    fn mean_rate_roughly_matches() {
+        let cfg = TraceConfig { rate_hz: 10.0, num_requests: 2000, ..Default::default() };
+        let tr = generate_trace(&cfg);
+        let span_s = tr.last().unwrap().arrival_ms as f64 / 1000.0;
+        let rate = cfg.num_requests as f64 / span_s;
+        assert!((rate - 10.0).abs() < 1.5, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn classes_in_range() {
+        let tr = generate_trace(&TraceConfig { num_classes: 4, ..Default::default() });
+        assert!(tr.iter().all(|r| r.class.unwrap() < 4));
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Golden tests pinning the three layers together:
+//!
+//! 1. AOT HLO artifacts (L2/L1, compiled by `make artifacts`) loaded and
+//!    executed through PJRT reproduce the python-computed golden vectors.
+//! 2. The native rust solver steps match the same goldens (so native and
+//!    PJRT paths are interchangeable inside the coordinator).
+//! 3. Cross-language substrate agreement: dataset parameters and the
+//!    schedule grid match `datasets_golden.json` / `schedule_golden.json`.
+//!
+//! Requires `make artifacts`; tests self-skip when the directory is absent
+//! (plain `cargo test` before artifacts are built still passes).
+
+use srds::data::{make_gmm, rng::SplitMix64, PIXEL_DATASETS};
+use srds::json;
+use srds::model::{EpsModel, GmmEps, SmallDenoiser};
+use srds::runtime::{PjrtBackend, PjrtRuntime};
+use srds::solvers::{NativeBackend, Solver, StepBackend, StepRequest};
+use std::sync::Arc;
+
+fn artifacts_ready() -> bool {
+    srds::artifacts_dir().join("manifest.json").exists()
+}
+
+fn load_golden(name: &str) -> Option<json::Value> {
+    let p = srds::artifacts_dir().join("golden").join(format!("{name}.json"));
+    let text = std::fs::read_to_string(p).ok()?;
+    Some(json::parse(&text).expect("golden json"))
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Native backend for a manifest model name.
+fn native_backend(model: &str, solver: Solver) -> NativeBackend {
+    let m: Arc<dyn EpsModel> = if model == "small_denoiser" {
+        Arc::new(SmallDenoiser::new(256))
+    } else {
+        Arc::new(GmmEps::new(make_gmm(model.trim_start_matches("gmm_"))))
+    };
+    NativeBackend::new(m, solver)
+}
+
+fn golden_step_request<'a>(
+    g: &json::Value,
+    x: &'a mut Vec<f32>,
+    sf: &'a mut Vec<f32>,
+    st: &'a mut Vec<f32>,
+    mask: &'a mut Vec<f32>,
+    guided: bool,
+) -> (StepRequest<'a>, Vec<f32>) {
+    let inputs = g.req("inputs").unwrap();
+    *x = inputs.req("x").unwrap().as_f32_vec().unwrap();
+    *sf = inputs.req("s_from").unwrap().as_f32_vec().unwrap();
+    *st = inputs.req("s_to").unwrap().as_f32_vec().unwrap();
+    let w = inputs
+        .get("w")
+        .and_then(|v| v.as_f32_vec())
+        .map(|v| v[0])
+        .unwrap_or(0.0);
+    let m = if guided {
+        *mask = inputs.req("mask").unwrap().as_f32_vec().unwrap();
+        Some(mask.as_slice())
+    } else {
+        None
+    };
+    let expect = g.req("output").unwrap().as_f32_vec().unwrap();
+    (
+        StepRequest { x, s_from: sf, s_to: st, mask: m, guidance: w, seeds: &[0] },
+        expect,
+    )
+}
+
+#[test]
+fn pjrt_executes_every_b1_artifact_to_golden() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = PjrtRuntime::open_default().expect("open runtime");
+    let mut checked = 0;
+    for meta in rt.manifest().artifacts.clone() {
+        if meta.batch != 1 || meta.solver == "ddpm" {
+            continue; // ddpm goldens exercise the noise input separately
+        }
+        let Some(g) = load_golden(&meta.name) else { continue };
+        let be = PjrtBackend::new(&rt, &meta.model, meta.solver_enum().unwrap()).unwrap();
+        let (mut x, mut sf, mut st, mut mask) = (vec![], vec![], vec![], vec![]);
+        let (req, expect) =
+            golden_step_request(&g, &mut x, &mut sf, &mut st, &mut mask, meta.guided);
+        let out = be.step(&req);
+        let d = max_abs_diff(&out, &expect);
+        assert!(d < 1e-4, "{}: pjrt vs golden max diff {d}", meta.name);
+        checked += 1;
+    }
+    assert!(checked >= 5, "expected several artifacts, checked {checked}");
+}
+
+#[test]
+fn native_matches_golden_vectors() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt_manifest_path = srds::artifacts_dir().join("manifest.json");
+    let manifest = srds::runtime::Manifest::load(&rt_manifest_path).unwrap();
+    let mut checked = 0;
+    for meta in &manifest.artifacts {
+        if meta.batch != 1 || meta.solver == "ddpm" {
+            continue;
+        }
+        let Some(g) = load_golden(&meta.name) else { continue };
+        let be = native_backend(&meta.model, meta.solver_enum().unwrap());
+        let (mut x, mut sf, mut st, mut mask) = (vec![], vec![], vec![], vec![]);
+        let (req, expect) =
+            golden_step_request(&g, &mut x, &mut sf, &mut st, &mut mask, meta.guided);
+        let out = be.step(&req);
+        let d = max_abs_diff(&out, &expect);
+        // Native is f32 like the artifact but op order differs slightly.
+        assert!(d < 5e-3, "{}: native vs golden max diff {d}", meta.name);
+        checked += 1;
+    }
+    assert!(checked >= 5, "checked {checked}");
+}
+
+#[test]
+fn ddpm_noise_path_agrees_native_vs_pjrt() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = PjrtRuntime::open_default().unwrap();
+    let model = "gmm_latent_cond";
+    if rt.manifest().steps_for(model, "ddpm").is_empty() {
+        return;
+    }
+    let pjrt = PjrtBackend::new(&rt, model, Solver::Ddpm).unwrap();
+    let native = native_backend(model, Solver::Ddpm);
+    let d = pjrt.dim();
+    let mut rng = SplitMix64::new(99);
+    let x = rng.normals_f32(d);
+    let mask = vec![1.0f32; pjrt.k()];
+    let req = StepRequest {
+        x: &x,
+        s_from: &[0.3],
+        s_to: &[0.35],
+        mask: Some(&mask),
+        guidance: 7.5,
+        seeds: &[1234],
+    };
+    let a = pjrt.step(&req);
+    let b = native.step(&req);
+    let diff = max_abs_diff(&a, &b);
+    assert!(diff < 5e-3, "ddpm pjrt vs native: {diff}");
+}
+
+#[test]
+fn batched_artifact_matches_per_row() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = PjrtRuntime::open_default().unwrap();
+    let be = PjrtBackend::new(&rt, "gmm_church", Solver::Ddim).unwrap();
+    let d = be.dim();
+    let b = 11; // exercises 8 + padded-1 bucket plan
+    let mut rng = SplitMix64::new(5);
+    let x = rng.normals_f32(b * d);
+    let s_from: Vec<f32> = (0..b).map(|i| i as f32 / b as f32 * 0.9).collect();
+    let s_to: Vec<f32> = s_from.iter().map(|s| s + 0.05).collect();
+    let seeds = vec![0u64; b];
+    let full = be.step(&StepRequest {
+        x: &x,
+        s_from: &s_from,
+        s_to: &s_to,
+        mask: None,
+        guidance: 0.0,
+        seeds: &seeds,
+    });
+    for i in 0..b {
+        let row = be.step(&StepRequest {
+            x: &x[i * d..(i + 1) * d],
+            s_from: &s_from[i..=i],
+            s_to: &s_to[i..=i],
+            mask: None,
+            guidance: 0.0,
+            seeds: &seeds[i..=i],
+        });
+        let diff = max_abs_diff(&full[i * d..(i + 1) * d], &row);
+        assert!(diff < 1e-5, "row {i} diff {diff}");
+    }
+}
+
+#[test]
+fn dataset_params_match_python() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let text =
+        std::fs::read_to_string(srds::artifacts_dir().join("datasets_golden.json")).unwrap();
+    let v = json::parse(&text).unwrap();
+    for name in PIXEL_DATASETS.iter().chain(["latent_cond", "toy2d"].iter()) {
+        let g = make_gmm(name);
+        let gj = v.req(name).unwrap();
+        assert_eq!(gj.req("dim").unwrap().as_usize().unwrap(), g.dim(), "{name} dim");
+        let means = gj.req("means").unwrap().as_f32_vec().unwrap();
+        assert_eq!(means.len(), g.means.len());
+        let d = max_abs_diff(&means, &g.means);
+        assert!(d < 1e-6, "{name}: means diff {d}");
+        let sig = gj.req("sigmas").unwrap().as_f32_vec().unwrap();
+        assert!(max_abs_diff(&sig, &g.sigmas) < 1e-6, "{name} sigmas");
+        let w = gj.req("weights").unwrap().as_f32_vec().unwrap();
+        assert!(max_abs_diff(&w, &g.weights) < 1e-6, "{name} weights");
+    }
+}
+
+#[test]
+fn schedule_matches_python() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let text =
+        std::fs::read_to_string(srds::artifacts_dir().join("schedule_golden.json")).unwrap();
+    let v = json::parse(&text).unwrap();
+    let s = v.req("s").unwrap().as_f32_vec().unwrap();
+    let ab = v.req("alpha_bar").unwrap().as_f32_vec().unwrap();
+    let lam = v.req("lam").unwrap().as_f32_vec().unwrap();
+    for i in 0..s.len() {
+        let mine = srds::schedule::alpha_bar(s[i]);
+        assert!(
+            (mine - ab[i]).abs() < 1e-6,
+            "alpha_bar(s={}) {} vs {}",
+            s[i],
+            mine,
+            ab[i]
+        );
+        let ml = srds::schedule::lam(s[i]);
+        let rel = (ml - lam[i]).abs() / lam[i].abs().max(1.0);
+        assert!(rel < 1e-4, "lam(s={}) {} vs {}", s[i], ml, lam[i]);
+    }
+}

@@ -1,0 +1,209 @@
+//! Property-based tests of the paper's propositions (randomized over
+//! many cases via the in-tree splitmix64 — the vendored crate set has no
+//! proptest, so generation is explicit and fully deterministic).
+//!
+//! * Prop. 1 — SRDS equals the sequential solve after ≤ M refinements,
+//!   bitwise, for random (N, block, model).
+//! * Prop. 2 — pipelined makespan ≤ N·epc with enough devices.
+//! * Prop. 3 — concurrency stays O(√N); bounded devices are respected.
+//! * Prop. 4 — per-iteration cost `⌈N/B⌉ + B` is minimized at B ≈ √N.
+
+use srds::coordinator::pipeline::pipeline_schedule;
+use srds::coordinator::{prior_sample, sequential, Conditioning, SrdsConfig};
+use srds::data::rng::SplitMix64;
+use srds::exec::{simulate_srds, NativeFactory, WorkerPool};
+use srds::json;
+use srds::model::{AffineModel, EpsModel};
+use srds::schedule::Partition;
+use srds::solvers::{NativeBackend, Solver};
+use std::sync::Arc;
+
+const CASES: usize = 40;
+
+#[test]
+fn prop1_srds_equals_sequential_after_m_iterations() {
+    let mut rng = SplitMix64::new(0xA11CE);
+    for case in 0..CASES {
+        let n = 2 + (rng.next_u64() % 60) as usize;
+        let dim = 1 + (rng.next_u64() % 6) as usize;
+        let a = (rng.next_f64() as f32) * 1.2 - 0.6;
+        let c = (rng.next_f64() as f32) * 0.8;
+        let block = 1 + (rng.next_u64() as usize % n);
+        let solver = if rng.next_u64() % 2 == 0 { Solver::Ddim } else { Solver::Euler };
+        let be = NativeBackend::new(Arc::new(AffineModel::new(dim, a, c)), solver);
+        let seed = rng.next_u64();
+        let x0 = prior_sample(dim, seed);
+        let (seq, _) = sequential(&be, &x0, n, &Conditioning::none(), seed);
+        let part = Partition::with_block(n, block);
+        let cfg = SrdsConfig::new(n)
+            .with_block(block)
+            .with_tol(0.0)
+            .with_max_iters(part.num_blocks())
+            .with_seed(seed);
+        let res = srds::coordinator::srds(&be, &x0, &cfg);
+        assert_eq!(
+            res.sample,
+            seq,
+            "case {case}: n={n} block={block} a={a} solver={}",
+            solver.name()
+        );
+    }
+}
+
+#[test]
+fn prop1_ddpm_exactness_with_derived_noise() {
+    // The stochastic solver is a deterministic map given the seed, so
+    // Parareal exactness must hold for it too.
+    let mut rng = SplitMix64::new(0xBEEF);
+    for _ in 0..12 {
+        let n = 4 + (rng.next_u64() % 30) as usize;
+        let dim = 2 + (rng.next_u64() % 4) as usize;
+        let be = NativeBackend::new(Arc::new(AffineModel::new(dim, 0.3, 0.2)), Solver::Ddpm);
+        let seed = rng.next_u64();
+        let x0 = prior_sample(dim, seed);
+        let (seq, _) = sequential(&be, &x0, n, &Conditioning::none(), seed);
+        let part = Partition::sqrt_n(n);
+        let cfg = SrdsConfig::new(n)
+            .with_tol(0.0)
+            .with_max_iters(part.num_blocks())
+            .with_seed(seed);
+        let res = srds::coordinator::srds(&be, &x0, &cfg);
+        assert_eq!(res.sample, seq, "n={n} dim={dim}");
+    }
+}
+
+#[test]
+fn prop2_pipelined_makespan_never_exceeds_sequential() {
+    let mut rng = SplitMix64::new(0xCAFE);
+    for _ in 0..CASES {
+        let n = 4 + (rng.next_u64() % 400) as usize;
+        let epc = 1 + (rng.next_u64() % 2);
+        let part = Partition::sqrt_n(n);
+        let m = part.num_blocks();
+        // Ideal schedule at the Prop. 1 worst case of M refinements.
+        let st = pipeline_schedule(&part, m, epc);
+        assert!(
+            st.finish <= n as u64 * epc,
+            "n={n} epc={epc}: {} > {}",
+            st.finish,
+            n as u64 * epc
+        );
+        // Bounded-device simulation with ample devices agrees.
+        let sim = simulate_srds(&part, m, epc, 2 * m + 2, true);
+        assert!(sim.makespan <= n as u64 * epc, "sim n={n}");
+    }
+}
+
+#[test]
+fn prop3_concurrency_bounds() {
+    let mut rng = SplitMix64::new(0xD00D);
+    for _ in 0..CASES {
+        let n = 9 + (rng.next_u64() % 500) as usize;
+        let part = Partition::sqrt_n(n);
+        let m = part.num_blocks();
+        let iters = 1 + (rng.next_u64() as usize % m);
+        let ideal = pipeline_schedule(&part, iters, 1);
+        assert!(
+            ideal.peak_concurrency <= 2 * m + 1,
+            "n={n} iters={iters}: peak {}",
+            ideal.peak_concurrency
+        );
+        // A D-device schedule never runs more than D tasks at once.
+        let d = 1 + (rng.next_u64() as usize % (m + 2));
+        let sim = simulate_srds(&part, iters, 1, d, true);
+        assert!(sim.peak_concurrency <= d, "devices {d}: peak {}", sim.peak_concurrency);
+    }
+}
+
+#[test]
+fn prop4_sqrt_block_minimizes_iteration_cost() {
+    // cost(B) = ⌈N/B⌉ + B; check B = round(√N) is within +1 of the true
+    // optimum for every N up to 2048 (exhaustive, not sampled).
+    for n in 2..=2048usize {
+        let cost = |b: usize| (n.div_ceil(b) + b) as f64;
+        let best_b = (1..=n).min_by(|&a, &b| cost(a).partial_cmp(&cost(b)).unwrap()).unwrap();
+        let best = cost(best_b);
+        let at_sqrt = cost(((n as f64).sqrt().round() as usize).max(1));
+        assert!(
+            at_sqrt <= best + 1.0 + 1e-9,
+            "n={n}: cost(sqrt)={at_sqrt} best={best} at B={best_b}"
+        );
+    }
+}
+
+#[test]
+fn block_size_one_and_n_are_degenerate() {
+    // B = N → one block: SRDS is just the fine solve after 1 iteration.
+    let dim = 3;
+    let be = NativeBackend::new(Arc::new(AffineModel::new(dim, 0.5, 0.1)), Solver::Ddim);
+    let x0 = prior_sample(dim, 5);
+    let n = 20;
+    let (seq, _) = sequential(&be, &x0, n, &Conditioning::none(), 5);
+    let cfg = SrdsConfig::new(n).with_block(n).with_tol(0.0).with_max_iters(1).with_seed(5);
+    let res = srds::coordinator::srds(&be, &x0, &cfg);
+    assert_eq!(res.sample, seq);
+    // B = 1 → coarse == fine: converged after the first refinement.
+    let cfg = SrdsConfig::new(n).with_block(1).with_tol(1e-9).with_seed(5);
+    let res = srds::coordinator::srds(&be, &x0, &cfg);
+    assert_eq!(res.sample, seq);
+    assert_eq!(res.stats.iters, 1);
+}
+
+#[test]
+fn measured_pipeline_equals_vanilla_for_random_configs() {
+    let mut rng = SplitMix64::new(0xF00D);
+    let model: Arc<dyn EpsModel> = Arc::new(AffineModel::new(4, 0.4, 0.3));
+    let pool = WorkerPool::new(Arc::new(NativeFactory::new(model.clone(), Solver::Ddim)), 3);
+    for _ in 0..10 {
+        let n = 4 + (rng.next_u64() % 40) as usize;
+        let seed = rng.next_u64();
+        let x0 = prior_sample(4, seed);
+        let cfg = SrdsConfig::new(n).with_tol(1e-5).with_seed(seed);
+        let be = NativeBackend::new(model.clone(), Solver::Ddim);
+        let vanilla = srds::coordinator::srds(&be, &x0, &cfg);
+        let measured =
+            srds::exec::measured_pipelined_srds(&pool, &x0, &cfg, &Conditioning::none());
+        assert_eq!(measured.stats.iters, vanilla.stats.iters, "n={n}");
+        assert_eq!(measured.sample, vanilla.sample, "n={n}");
+    }
+}
+
+#[test]
+fn json_roundtrip_random_documents() {
+    let mut rng = SplitMix64::new(0x15AAC);
+    for _ in 0..60 {
+        let v = random_json(&mut rng, 0);
+        let text = json::to_string(&v);
+        let back = json::parse(&text).expect("parse own output");
+        assert_eq!(back, v, "doc: {text}");
+    }
+}
+
+fn random_json(rng: &mut SplitMix64, depth: usize) -> json::Value {
+    use json::Value;
+    let choice = rng.next_u64() % if depth > 3 { 4 } else { 6 };
+    match choice {
+        0 => Value::Null,
+        1 => Value::Bool(rng.next_u64() % 2 == 0),
+        2 => Value::Num((rng.next_f64() * 2000.0 - 1000.0).round() / 8.0),
+        3 => {
+            let len = rng.next_u64() % 8;
+            let s: String = (0..len)
+                .map(|_| char::from_u32(0x20 + (rng.next_u64() % 0x50) as u32).unwrap())
+                .collect();
+            Value::Str(s)
+        }
+        4 => {
+            let len = (rng.next_u64() % 4) as usize;
+            Value::Arr((0..len).map(|_| random_json(rng, depth + 1)).collect())
+        }
+        _ => {
+            let len = (rng.next_u64() % 4) as usize;
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..len {
+                m.insert(format!("k{i}"), random_json(rng, depth + 1));
+            }
+            Value::Obj(m)
+        }
+    }
+}
