@@ -10,7 +10,7 @@
 //! Writes `figure1_iter<k>.pgm` next to an ASCII rendering of every
 //! iterate and its ℓ1 distance to the sequential solution.
 
-use srds::coordinator::{prior_sample, sequential, Conditioning, ConvNorm, SrdsConfig};
+use srds::coordinator::{prior_sample, sequential, Conditioning, ConvNorm, SamplerSpec};
 use srds::data::make_gmm;
 use srds::model::GmmEps;
 use srds::runtime::{PjrtBackend, PjrtRuntime};
@@ -31,7 +31,7 @@ fn main() -> srds::Result<()> {
     let x0 = prior_sample(64, seed);
     let (seq, _) = sequential(backend.as_ref(), &x0, n, &Conditioning::none(), seed);
 
-    let cfg = SrdsConfig::new(n)
+    let cfg = SamplerSpec::srds(n)
         .with_tol(0.0)
         .with_max_iters(6)
         .with_iterates()

@@ -9,7 +9,7 @@
 //! cargo run --release --example figure6_samples [--pjrt]
 //! ```
 
-use srds::coordinator::{prior_sample, sequential, Conditioning, ConvNorm, SrdsConfig};
+use srds::coordinator::{prior_sample, sequential, Conditioning, ConvNorm, SamplerSpec};
 use srds::data::make_gmm;
 use srds::metrics::cond_score;
 use srds::model::GmmEps;
@@ -44,7 +44,7 @@ fn main() -> srds::Result<()> {
         let cond = Conditioning::class(gmm.class_mask(cls as u32), w);
         let seed = 100 + cls as u64;
         let x0 = prior_sample(256, seed);
-        let cfg = SrdsConfig::new(n).with_tol(2.5e-3).with_cond(cond.clone()).with_seed(seed);
+        let cfg = SamplerSpec::srds(n).with_tol(2.5e-3).with_cond(cond.clone()).with_seed(seed);
         let res = srds::coordinator::srds(backend.as_ref(), &x0, &cfg);
         let (seq, _) = sequential(backend.as_ref(), &x0, n, &cond, seed);
         let diff = ConvNorm::L1Mean.dist(&res.sample, &seq);

@@ -9,7 +9,7 @@
 //! Uses the PJRT backend when artifacts are present, otherwise falls
 //! back to the pure-rust native model (identical semantics).
 
-use srds::coordinator::{prior_sample, sequential, Conditioning, SrdsConfig};
+use srds::coordinator::{prior_sample, registry, sequential, Conditioning, SamplerSpec};
 use srds::data::make_gmm;
 use srds::model::GmmEps;
 use srds::runtime::{PjrtBackend, PjrtRuntime};
@@ -33,11 +33,13 @@ fn main() -> srds::Result<()> {
         }
     };
 
-    // 2. Draw the prior and run SRDS (Algorithm 1).
+    // 2. Draw the prior and run SRDS (Algorithm 1) through the sampler
+    //    registry — the same dispatch the server and CLI use.
+    println!("registered samplers: {}", registry().list().join(", "));
     let x0 = prior_sample(backend.dim(), seed);
-    let cfg = SrdsConfig::new(n).with_tol(2.5e-3).with_seed(seed);
+    let cfg = SamplerSpec::srds(n).with_tol(2.5e-3).with_seed(seed);
     let t = std::time::Instant::now();
-    let res = srds::coordinator::srds(backend.as_ref(), &x0, &cfg);
+    let res = cfg.run(backend.as_ref(), &x0);
     let srds_ms = t.elapsed().as_secs_f64() * 1e3;
 
     // 3. Sequential baseline from the same prior.

@@ -119,7 +119,7 @@ fn main() -> srds::Result<()> {
         let sent = send_times.lock().unwrap()[&id];
         latencies.push(now_ms - sent);
         iters_sum += v.req("iters")?.as_f64().unwrap();
-        eff_sum += v.req("eff_serial_evals")?.as_f64().unwrap();
+        eff_sum += v.req("eff_serial_evals_pipelined")?.as_f64().unwrap();
         let sample = v.req("sample")?.as_f32_vec().unwrap();
         scores.push(cond_score(&sample, 1, &gmm, Some(class_of[&id])));
         done += 1;

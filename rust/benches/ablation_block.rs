@@ -9,7 +9,7 @@
 #[path = "common.rs"]
 mod common;
 
-use srds::coordinator::{prior_sample, SrdsConfig};
+use srds::coordinator::{prior_sample, SamplerSpec};
 use srds::exec::simulate_srds;
 use srds::report::{f1, Table};
 use srds::schedule::Partition;
@@ -39,7 +39,7 @@ fn main() {
         let mut effp = 0.0;
         for s in 0..reps {
             let x0 = prior_sample(64, 110_000 + s);
-            let cfg = SrdsConfig::new(n).with_block(b).with_tol(tol).with_seed(110_000 + s);
+            let cfg = SamplerSpec::srds(n).with_block(b).with_tol(tol).with_seed(110_000 + s);
             let r = srds::coordinator::srds(&be, &x0, &cfg);
             iters += r.stats.iters as f64;
             effp += r.stats.eff_serial_evals_pipelined as f64;

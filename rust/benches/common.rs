@@ -2,7 +2,7 @@
 //! `#[path = "common.rs"] mod common;`).
 #![allow(dead_code)]
 
-use srds::coordinator::{prior_sample, sequential, Conditioning, SrdsConfig};
+use srds::coordinator::{prior_sample, sequential, Conditioning, SamplerSpec};
 use srds::data::make_gmm;
 use srds::model::{EpsModel, GmmEps, SmallDenoiser};
 use srds::runtime::{PjrtBackend, PjrtRuntime};
@@ -67,7 +67,7 @@ pub struct SrdsAgg {
 
 pub fn srds_samples(
     be: &dyn StepBackend,
-    cfg_base: &SrdsConfig,
+    spec_base: &SamplerSpec,
     count: usize,
     seed0: u64,
 ) -> SrdsAgg {
@@ -77,8 +77,8 @@ pub fn srds_samples(
     let t = std::time::Instant::now();
     for s in 0..count as u64 {
         let x0 = prior_sample(d, seed0 + s);
-        let cfg = cfg_base.clone().with_seed(seed0 + s);
-        let r = srds::coordinator::srds(be, &x0, &cfg);
+        let spec = spec_base.clone().with_seed(seed0 + s);
+        let r = srds::coordinator::srds(be, &x0, &spec);
         samples.extend_from_slice(&r.sample);
         it += r.stats.iters as f64;
         eff += r.stats.eff_serial_evals as f64;

@@ -8,7 +8,7 @@
 #[path = "common.rs"]
 mod common;
 
-use srds::coordinator::{prior_sample, sequential, Conditioning, SrdsConfig};
+use srds::coordinator::{prior_sample, sequential, Conditioning, SamplerSpec};
 use srds::data::make_gmm;
 use srds::metrics::cond_score;
 use srds::solvers::Solver;
@@ -29,7 +29,7 @@ fn main() {
             let cls = (c % 4) as u32;
             let cond = Conditioning::class(gmm.class_mask(cls), w);
             let x0 = prior_sample(256, 90_000 + c);
-            let cfg = SrdsConfig::new(n)
+            let cfg = SamplerSpec::srds(n)
                 .with_tol(0.0)
                 .with_max_iters(max_show)
                 .with_iterates()

@@ -7,7 +7,7 @@
 #[path = "common.rs"]
 mod common;
 
-use srds::coordinator::{prior_sample, sequential, Conditioning, SrdsConfig};
+use srds::coordinator::{prior_sample, sequential, Conditioning, SamplerSpec};
 use srds::data::make_gmm;
 use srds::metrics::{fd_vs_gmm, fit_moments, fd_gaussian, gmm_moments};
 use srds::solvers::Solver;
@@ -24,7 +24,7 @@ fn main() {
     let mut seq_samples = Vec::new();
     for c in 0..count as u64 {
         let x0 = prior_sample(64, 95_000 + c);
-        let cfg = SrdsConfig::new(n)
+        let cfg = SamplerSpec::srds(n)
             .with_tol(0.0)
             .with_max_iters(max_show)
             .with_iterates()

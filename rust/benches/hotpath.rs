@@ -7,7 +7,7 @@
 #[path = "common.rs"]
 mod common;
 
-use srds::coordinator::{prior_sample, SrdsConfig};
+use srds::coordinator::{prior_sample, SamplerSpec};
 use srds::data::{make_gmm, rng::SplitMix64};
 use srds::exec::simulate_srds;
 use srds::metrics::fit_moments;
@@ -72,7 +72,7 @@ fn main() {
     let be = common::native("gmm_church", Solver::Ddim);
     let x0 = prior_sample(64, 3);
     bench(&mut t, "SRDS N=256 church (native, full run)", 1, || {
-        let cfg = SrdsConfig::new(256).with_tol(common::tol255(0.1)).with_seed(3);
+        let cfg = SamplerSpec::srds(256).with_tol(common::tol255(0.1)).with_seed(3);
         std::hint::black_box(srds::coordinator::srds(&be, &x0, &cfg));
     });
 

@@ -10,7 +10,7 @@
 #[path = "common.rs"]
 mod common;
 
-use srds::coordinator::SrdsConfig;
+use srds::coordinator::SamplerSpec;
 use srds::data::{make_gmm, PIXEL_DATASETS};
 use srds::metrics::fd_vs_gmm;
 use srds::report::{f1, f2, Table};
@@ -37,7 +37,7 @@ fn main() {
         let be = common::native(&format!("gmm_{ds}"), Solver::Ddim);
         let (seq, _) = common::sequential_samples(&be, n, count, &Default::default(), 10_000);
         let fd_seq = fd_vs_gmm(&seq, count, &gmm);
-        let cfg = SrdsConfig::new(n).with_tol(tol);
+        let cfg = SamplerSpec::srds(n).with_tol(tol);
         let agg = common::srds_samples(&be, &cfg, count, 10_000);
         let fd_srds = fd_vs_gmm(&agg.samples, count, &gmm);
         t.row(vec![

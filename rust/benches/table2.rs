@@ -10,7 +10,7 @@
 #[path = "common.rs"]
 mod common;
 
-use srds::coordinator::{Conditioning, SrdsConfig};
+use srds::coordinator::{Conditioning, SamplerSpec};
 use srds::data::make_gmm;
 use srds::metrics::cond_score;
 use srds::report::{f1, f3, speedup, Table};
@@ -51,7 +51,7 @@ fn main() {
             let (seq, ms) = common::sequential_samples(be.as_ref(), n, 1, &cond, 30_000 + c);
             seq_ms += ms;
             seq_all.push((seq, cls));
-            let cfg = SrdsConfig::new(n)
+            let cfg = SamplerSpec::srds(n)
                 .with_tol(common::tol255(0.1))
                 .with_max_iters(max_iter)
                 .with_cond(cond);

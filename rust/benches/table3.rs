@@ -7,7 +7,7 @@
 #[path = "common.rs"]
 mod common;
 
-use srds::coordinator::{prior_sample, Conditioning, SrdsConfig};
+use srds::coordinator::{prior_sample, SamplerSpec};
 use srds::data::make_gmm;
 use srds::exec::{measured_pipelined_srds, NativeFactory, WorkerPool};
 use srds::model::{EpsModel, GmmEps};
@@ -38,13 +38,13 @@ fn main() {
         let (mut ev, mut evp, mut ms_v, mut ms_p) = (0.0, 0.0, 0.0, 0.0);
         for s in 0..reps {
             let x0 = prior_sample(256, 40_000 + s);
-            let cfg = SrdsConfig::new(n).with_tol(tol).with_seed(40_000 + s);
+            let cfg = SamplerSpec::srds(n).with_tol(tol).with_seed(40_000 + s);
             let t0 = std::time::Instant::now();
             let v = srds::coordinator::srds(&be, &x0, &cfg);
             ms_v += t0.elapsed().as_secs_f64() * 1e3;
             ev += v.stats.eff_serial_evals as f64;
             let t0 = std::time::Instant::now();
-            let p = measured_pipelined_srds(&pool, &x0, &cfg, &Conditioning::none());
+            let p = measured_pipelined_srds(&pool, &x0, &cfg);
             ms_p += t0.elapsed().as_secs_f64() * 1e3;
             evp += p.stats.eff_serial_evals_pipelined as f64;
             assert_eq!(v.stats.iters, p.stats.iters, "pipelining must not change iterates");

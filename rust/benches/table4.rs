@@ -11,7 +11,7 @@
 #[path = "common.rs"]
 mod common;
 
-use srds::coordinator::{prior_sample, ParadigmsConfig, SrdsConfig};
+use srds::coordinator::{prior_sample, SamplerSpec};
 use srds::exec::{simulate_paradigms, simulate_srds, simulate_sequential};
 use srds::report::{f1, speedup, Table};
 use srds::schedule::Partition;
@@ -47,7 +47,7 @@ fn main() {
         let mut srds_time = 0.0;
         for s in 0..reps {
             let x0 = prior_sample(256, 50_000 + s);
-            let cfg = SrdsConfig::new(n).with_tol(tol).with_seed(50_000 + s);
+            let cfg = SamplerSpec::srds(n).with_tol(tol).with_seed(50_000 + s);
             let r = srds::coordinator::srds(&be, &x0, &cfg);
             let part = Partition::sqrt_n(n);
             // A device runs `batch_per_device` independent rows per eval
@@ -68,7 +68,7 @@ fn main() {
                 let x0 = prior_sample(256, 50_000 + s);
                 // ParaDiGMS compares squared error against its τ
                 // (config docs) — pass τ² to match the paper's 1e-3…1e-1.
-                let cfg = ParadigmsConfig::new(n)
+                let cfg = SamplerSpec::paradigms(n)
                     .with_tol(thr * thr)
                     .with_window(devices * batch_per_device)
                     .with_seed(50_000 + s);

@@ -7,7 +7,7 @@
 #[path = "common.rs"]
 mod common;
 
-use srds::coordinator::{prior_sample, sequential, Conditioning, SrdsConfig};
+use srds::coordinator::{prior_sample, sequential, Conditioning, SamplerSpec};
 use srds::report::{f1, f2, speedup, Table};
 use srds::solvers::Solver;
 
@@ -42,7 +42,7 @@ fn main() {
             let t0 = std::time::Instant::now();
             let _ = sequential(&be, &x0, n, &Conditioning::none(), 60_000 + s);
             seq_ms += t0.elapsed().as_secs_f64() * 1e3;
-            let cfg = SrdsConfig::new(n).with_tol(tol).with_seed(60_000 + s);
+            let cfg = SamplerSpec::srds(n).with_tol(tol).with_seed(60_000 + s);
             let t0 = std::time::Instant::now();
             let r = srds::coordinator::srds(&be, &x0, &cfg);
             srds_ms += t0.elapsed().as_secs_f64() * 1e3;

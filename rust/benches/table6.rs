@@ -11,7 +11,7 @@
 #[path = "common.rs"]
 mod common;
 
-use srds::coordinator::{prior_sample, Conditioning, ParadigmsConfig, SrdsConfig};
+use srds::coordinator::{prior_sample, SamplerSpec};
 use srds::data::make_gmm;
 use srds::exec::{measured_pipelined_srds, simulate_paradigms, simulate_srds, NativeFactory, WorkerPool};
 use srds::model::{EpsModel, GmmEps};
@@ -36,7 +36,7 @@ fn main() {
     let mut srds_iters = 0.0;
     for s in 0..reps {
         let x0 = prior_sample(256, 70_000 + s);
-        let cfg = SrdsConfig::new(n).with_tol(tol).with_seed(70_000 + s);
+        let cfg = SamplerSpec::srds(n).with_tol(tol).with_seed(70_000 + s);
         srds_iters += srds::coordinator::srds(&be, &x0, &cfg).stats.iters as f64;
     }
     let srds_iters = (srds_iters / reps as f64).round() as usize;
@@ -62,7 +62,7 @@ fn main() {
         let mut pd_sweeps = 0.0;
         for s in 0..reps {
             let x0 = prior_sample(256, 70_000 + s);
-            let pcfg = ParadigmsConfig::new(n).with_tol(1e-4).with_window(window).with_seed(70_000 + s);
+            let pcfg = SamplerSpec::paradigms(n).with_tol(1e-4).with_window(window).with_seed(70_000 + s);
             pd_sweeps += srds::coordinator::paradigms(&be, &x0, &pcfg).stats.iters as f64;
         }
         let pd = simulate_paradigms((pd_sweeps / reps as f64).round() as usize, window, devices, bpd, 1, SYNC_COST);
@@ -72,9 +72,9 @@ fn main() {
         let mut wall = 0.0;
         for s in 0..reps {
             let x0 = prior_sample(256, 70_000 + s);
-            let cfg = SrdsConfig::new(n).with_tol(tol).with_seed(70_000 + s);
+            let cfg = SamplerSpec::srds(n).with_tol(tol).with_seed(70_000 + s);
             let t0 = std::time::Instant::now();
-            let _ = measured_pipelined_srds(&pool, &x0, &cfg, &Conditioning::none());
+            let _ = measured_pipelined_srds(&pool, &x0, &cfg);
             wall += t0.elapsed().as_secs_f64() * 1e3;
         }
         t.row(vec![

@@ -4,12 +4,17 @@
 //! behaviour. Paper shape: SRDS 2.73x/1.72x > ParaTAA 1.92x/1.17x >
 //! ParaDiGMS 2.5x/1.0x.
 //!
+//! The method list comes from `coordinator::api::registry()` — a sampler
+//! added there gets a column here as soon as `modeled_time` learns its
+//! hardware model (the exhaustive `SamplerKind` match below makes the
+//! compiler point at the spot).
+//!
 //! `cargo bench --bench table7`
 
 #[path = "common.rs"]
 mod common;
 
-use srds::coordinator::{prior_sample, ParadigmsConfig, ParataaConfig, SrdsConfig};
+use srds::coordinator::{prior_sample, registry, RunStats, Sampler, SamplerKind, SamplerSpec};
 use srds::exec::{simulate_paradigms, simulate_srds};
 use srds::report::{speedup, Table};
 use srds::schedule::Partition;
@@ -20,49 +25,67 @@ use srds::solvers::Solver;
 /// a 3.4x wallclock speedup — i.e. ~4 evals of per-sweep sync overhead.
 const SYNC_COST: u64 = 4;
 
+/// The spec each method runs under (paper Table 7 setup).
+fn spec_for(sampler: &dyn Sampler, n: usize, seed: u64, devices: usize) -> SamplerSpec {
+    let tol = common::tol255(0.1);
+    let spec = SamplerSpec::for_kind(n, sampler.kind()).with_seed(seed);
+    match spec.kind {
+        // PD threshold is squared (paper quotes 1e-3; see SamplerSpec
+        // docs) and its window is the device capacity.
+        SamplerKind::Paradigms { .. } => spec.with_tol(1e-6).with_window(devices * 8),
+        _ => spec.with_tol(tol),
+    }
+}
+
+/// Wallclock model on `devices` simulated devices × 8 batched rows per
+/// eval slot (§3.4 batching), from the measured convergence stats.
+fn modeled_time(kind: SamplerKind, stats: &RunStats, n: usize, devices: usize) -> f64 {
+    match kind {
+        SamplerKind::Sequential => n as f64,
+        SamplerKind::Srds => {
+            simulate_srds(&Partition::sqrt_n(n), stats.iters, 1, devices * 8, true).makespan as f64
+        }
+        SamplerKind::Paradigms { .. } => {
+            simulate_paradigms(stats.iters, (devices * 8).min(n), devices, 8, 1, SYNC_COST)
+                .makespan as f64
+        }
+        // ParaTAA holds the whole trajectory in device memory (its
+        // authors used 8×80GB A800s): one batched eval slot per
+        // iteration + one sync.
+        SamplerKind::Parataa { .. } => {
+            (stats.iters as u64 * (n.div_ceil(devices * 8) as u64 + SYNC_COST)) as f64
+        }
+    }
+}
+
 fn main() {
     let be = common::native("gmm_latent_cond", Solver::Ddim);
     let devices = 4;
     let reps = 6u64;
-    let tol = common::tol255(0.1);
 
+    let reg = registry();
+    let methods: Vec<&dyn Sampler> =
+        reg.iter().filter(|s| s.kind() != SamplerKind::Sequential).collect();
+    let mut headers = vec!["Denoising Steps"];
+    headers.extend(methods.iter().map(|s| s.name()));
     let mut t = Table::new(
         &format!("Table 7 — wallclock-model speedup vs serial ({devices} devices)"),
-        &["Denoising Steps", "ParaDiGMS", "ParaTAA", "Pipelined SRDS"],
+        &headers,
     );
     for n in [100usize, 25] {
         let serial = n as f64;
-        let mut srds_time = 0.0;
-        let mut pd_time = 0.0;
-        let mut taa_time = 0.0;
-        for s in 0..reps {
-            let x0 = prior_sample(256, 80_000 + s);
-            let cfg = SrdsConfig::new(n).with_tol(tol).with_seed(80_000 + s);
-            let r = srds::coordinator::srds(&be, &x0, &cfg);
-            // devices × 8 batched rows per eval slot (§3.4 batching).
-            srds_time += simulate_srds(&Partition::sqrt_n(n), r.stats.iters, 1, devices * 8, true)
-                .makespan as f64;
-
-            // PD threshold is squared (paper quotes 1e-3; see config docs).
-            let pcfg = ParadigmsConfig::new(n).with_tol(1e-6).with_window(devices * 8).with_seed(80_000 + s);
-            let pr = srds::coordinator::paradigms(&be, &x0, &pcfg);
-            pd_time += simulate_paradigms(pr.stats.iters, (devices * 8).min(n), devices, 8, 1, SYNC_COST)
-                .makespan as f64;
-
-            let tcfg = ParataaConfig::new(n).with_tol(tol).with_seed(80_000 + s);
-            let tr = srds::coordinator::parataa(&be, &x0, &tcfg);
-            // ParaTAA holds the whole trajectory in device memory (its
-            // authors used 8×80GB A800s): one batched eval slot per
-            // iteration + one sync.
-            taa_time += (tr.stats.iters as u64 * (n.div_ceil(devices * 8) as u64 + SYNC_COST)) as f64;
+        let mut row = vec![format!("DDIM - {n}")];
+        for sampler in &methods {
+            let mut time = 0.0;
+            for s in 0..reps {
+                let x0 = prior_sample(256, 80_000 + s);
+                let spec = spec_for(*sampler, n, 80_000 + s, devices);
+                let r = sampler.run(&be, &x0, &spec);
+                time += modeled_time(spec.kind, &r.stats, n, devices);
+            }
+            row.push(speedup(serial, time / reps as f64));
         }
-        let r = reps as f64;
-        t.row(vec![
-            format!("DDIM - {n}"),
-            speedup(serial, pd_time / r),
-            speedup(serial, taa_time / r),
-            speedup(serial, srds_time / r),
-        ]);
+        t.row(row);
     }
     t.print();
     println!("\npaper shape (Table 7): SRDS 2.73x/1.72x > ParaTAA 1.92x/1.17x ≳ ParaDiGMS 2.5x/1.0x.");

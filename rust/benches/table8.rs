@@ -8,7 +8,7 @@
 #[path = "common.rs"]
 mod common;
 
-use srds::coordinator::SrdsConfig;
+use srds::coordinator::SamplerSpec;
 use srds::data::make_gmm;
 use srds::metrics::kid_poly;
 use srds::report::{f1, f4, Table};
@@ -36,7 +36,7 @@ fn main() {
         f4(kid_seq),
     ]);
     for tau in [0.1f32, 0.5, 1.0] {
-        let cfg = SrdsConfig::new(n).with_tol(common::tol255(tau));
+        let cfg = SamplerSpec::srds(n).with_tol(common::tol255(tau));
         let agg = common::srds_samples(&be, &cfg, count, 20_000);
         let kid = kid_poly(&agg.samples, count, &reference, count, gmm.dim());
         t.row(vec![

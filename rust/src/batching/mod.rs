@@ -139,6 +139,67 @@ mod tests {
     }
 
     #[test]
+    fn max_wait_runs_from_first_push() {
+        // `oldest` tracks the first queued row, not the last: a steady
+        // trickle of new rows must not starve the head of the queue.
+        let mut b = Batcher::new(BatchPolicy {
+            buckets: vec![8],
+            max_wait: Duration::from_millis(5),
+            max_queue: 100,
+        });
+        b.push(row(1));
+        std::thread::sleep(Duration::from_millis(7));
+        b.push(row(2)); // newer row; head has already expired
+        assert!(b.should_flush(), "expiry is measured from the oldest row");
+    }
+
+    #[test]
+    fn partial_drain_resets_oldest() {
+        // 3 rows over a 2-bucket: take_batch() drains 2 and must restart
+        // the max-wait clock for the remainder — the leftover row is
+        // "fresh" again, not instantly expired.
+        // A generous window: the !should_flush assert below only flakes
+        // if the test thread is preempted for more than max_wait between
+        // two adjacent statements.
+        let mut b = Batcher::new(BatchPolicy {
+            buckets: vec![2],
+            max_wait: Duration::from_millis(1000),
+            max_queue: 100,
+        });
+        for i in 0..3 {
+            b.push(row(i));
+        }
+        assert!(b.should_flush(), "bucket full");
+        assert_eq!(b.take_batch().len(), 2);
+        assert_eq!(b.pending(), 1);
+        assert!(
+            !b.should_flush(),
+            "leftover row got a fresh max-wait clock on partial drain"
+        );
+        std::thread::sleep(Duration::from_millis(1100));
+        assert!(b.should_flush(), "leftover row expires after a full max_wait");
+    }
+
+    #[test]
+    fn full_drain_clears_oldest() {
+        let mut b = Batcher::new(BatchPolicy {
+            buckets: vec![4],
+            max_wait: Duration::from_millis(1),
+            max_queue: 100,
+        });
+        b.push(row(1));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.should_flush());
+        assert_eq!(b.take_batch().len(), 1);
+        assert_eq!(b.pending(), 0);
+        // Empty queue: no oldest row, so the expiry clause can never fire.
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(!b.should_flush(), "empty batcher must not flush");
+        assert_eq!(b.flushed_batches, 1);
+        assert_eq!(b.flushed_rows, 1);
+    }
+
+    #[test]
     fn fifo_order_preserved() {
         let mut b = Batcher::new(Batcher::new(BatchPolicy::default()).policy.clone());
         for i in 0..3 {

@@ -37,12 +37,19 @@ impl ConvNorm {
         }
     }
 
+    pub const ALL: [ConvNorm; 3] = [ConvNorm::L1Mean, ConvNorm::L2Mean, ConvNorm::LInf];
+
     pub fn name(self) -> &'static str {
         match self {
             ConvNorm::L1Mean => "l1_mean",
             ConvNorm::L2Mean => "l2_mean",
             ConvNorm::LInf => "linf",
         }
+    }
+
+    /// Inverse of [`ConvNorm::name`] (the JSON protocol / CLI spelling).
+    pub fn parse(s: &str) -> Option<ConvNorm> {
+        ConvNorm::ALL.into_iter().find(|n| n.name() == s)
     }
 }
 
@@ -72,6 +79,14 @@ mod tests {
         for n in [ConvNorm::L1Mean, ConvNorm::L2Mean, ConvNorm::LInf] {
             assert_eq!(n.dist(&a, &a), 0.0);
         }
+    }
+
+    #[test]
+    fn names_roundtrip_through_parse() {
+        for n in ConvNorm::ALL {
+            assert_eq!(ConvNorm::parse(n.name()), Some(n));
+        }
+        assert_eq!(ConvNorm::parse("l3"), None);
     }
 
     #[test]

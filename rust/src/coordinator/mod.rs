@@ -1,5 +1,8 @@
 //! The paper's L3 contribution: trajectory-parallel diffusion samplers.
 //!
+//! * [`api`] — the unified sampler API: [`SamplerSpec`] (one config for
+//!   every sampler), the [`Sampler`] trait returning [`SampleOutput`],
+//!   and the [`registry`] the server/CLI/benches dispatch through.
 //! * [`sequential`] — the baseline `N`-step solve (paper §2.1).
 //! * [`srds`] — Self-Refining Diffusion Sampler, Algorithm 1: coarse
 //!   init sweep, batched parallel fine solves, sequential
@@ -17,6 +20,7 @@
 //! they run identically over the native rust models and the AOT-compiled
 //! PJRT artifacts.
 
+pub mod api;
 pub mod convergence;
 pub mod paradigms;
 pub mod parataa;
@@ -25,15 +29,14 @@ pub mod sequential;
 pub mod srds;
 pub mod stats;
 
+pub use api::{registry, Registry, SampleOutput, Sampler, SamplerKind, SamplerSpec};
 pub use convergence::ConvNorm;
-pub use paradigms::{paradigms, ParadigmsConfig, ParadigmsResult};
-pub use parataa::{parataa, ParataaConfig, ParataaResult};
+pub use paradigms::paradigms;
+pub use parataa::parataa;
 pub use pipeline::{pipeline_schedule, PipelineStats};
 pub use sequential::{sequential, sequential_trajectory};
-pub use srds::{srds, SrdsResult};
+pub use srds::srds;
 pub use stats::{IterStat, RunStats};
-
-use crate::schedule::Partition;
 
 /// Conditioning information threaded through every sampler.
 #[derive(Debug, Clone, Default)]
@@ -65,80 +68,6 @@ impl Conditioning {
     }
 }
 
-/// Configuration for one SRDS sampling run.
-#[derive(Debug, Clone)]
-pub struct SrdsConfig {
-    /// Fine-grid steps `N`.
-    pub n: usize,
-    /// Fine steps per block (`None` → `⌈√N⌉`, the Prop. 4 optimum).
-    pub block: Option<usize>,
-    /// Convergence tolerance τ on the chosen norm of the *final sample*
-    /// change between refinements (Alg. 1 line 13).
-    pub tol: f32,
-    /// Norm used for the convergence check.
-    pub norm: ConvNorm,
-    /// Iteration cap (`None` → `num_blocks`, the Prop. 1 worst case).
-    pub max_iters: Option<usize>,
-    /// Conditioning (guided models).
-    pub cond: Conditioning,
-    /// Seed for the DDPM noise derivation (ignored by ODE solvers).
-    pub seed: u64,
-    /// Keep the final-sample iterate after every refinement (Fig. 1/5/7).
-    pub keep_iterates: bool,
-}
-
-impl SrdsConfig {
-    pub fn new(n: usize) -> Self {
-        SrdsConfig {
-            n,
-            block: None,
-            tol: 2.5e-3,
-            norm: ConvNorm::L1Mean,
-            max_iters: None,
-            cond: Conditioning::none(),
-            seed: 0,
-            keep_iterates: false,
-        }
-    }
-
-    pub fn partition(&self) -> Partition {
-        match self.block {
-            Some(b) => Partition::with_block(self.n, b),
-            None => Partition::sqrt_n(self.n),
-        }
-    }
-
-    pub fn with_tol(mut self, tol: f32) -> Self {
-        self.tol = tol;
-        self
-    }
-
-    pub fn with_block(mut self, block: usize) -> Self {
-        self.block = Some(block);
-        self
-    }
-
-    pub fn with_max_iters(mut self, k: usize) -> Self {
-        self.max_iters = Some(k);
-        self
-    }
-
-    pub fn with_cond(mut self, cond: Conditioning) -> Self {
-        self.cond = cond;
-        self
-    }
-
-    pub fn with_seed(mut self, seed: u64) -> Self {
-        self.seed = seed;
-        self
-    }
-
-    pub fn with_iterates(mut self) -> Self {
-        self.keep_iterates = true;
-        self
-    }
-}
-
 /// Tag xored into chain seeds for the prior draw so the prior stream and
 /// the DDPM step-noise stream never collide.
 const PRIOR_TAG: u64 = 0x5EED_0000_0000_0F00;
@@ -159,14 +88,6 @@ mod tests {
     fn prior_is_deterministic_per_seed() {
         assert_eq!(prior_sample(8, 1), prior_sample(8, 1));
         assert_ne!(prior_sample(8, 1), prior_sample(8, 2));
-    }
-
-    #[test]
-    fn config_defaults_follow_paper() {
-        let c = SrdsConfig::new(1024);
-        let p = c.partition();
-        assert_eq!(p.block(), 32);
-        assert_eq!(p.num_blocks(), 32);
     }
 
     #[test]

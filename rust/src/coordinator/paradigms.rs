@@ -14,73 +14,28 @@
 //! per-point tolerance. Memory is O(window) trajectory states — the
 //! O(N)-vs-O(√N) contrast of paper §3.6 — and every sweep needs a
 //! cross-device prefix sum (the communication cost App. D discusses).
+//!
+//! Spec knobs: the sliding window comes from
+//! [`SamplerKind::Paradigms`](super::SamplerKind); `spec.tol` is the
+//! per-point mean *squared* update threshold (ParaDiGMS compares squared
+//! error against its τ, which is how the paper's Table 4 thresholds
+//! 1e-3 / 1e-2 / 1e-1 are quoted); `spec.max_iters` caps the parallel
+//! sweeps (`None` → `8·N`).
 
-use super::{Conditioning, IterStat, RunStats};
+use super::{IterStat, RunStats, SampleOutput, SamplerSpec};
 use crate::schedule::Grid;
 use crate::solvers::{StepBackend, StepRequest};
 use std::time::Instant;
 
-#[derive(Debug, Clone)]
-pub struct ParadigmsConfig {
-    /// Fine-grid steps `N`.
-    pub n: usize,
-    /// Sliding-window size (≈ devices × per-device batch). `None` → `N`.
-    pub window: Option<usize>,
-    /// Per-point tolerance: a point is converged when the mean squared
-    /// update `‖Δ‖²/d` falls below `tol` (ParaDiGMS compares squared
-    /// error against its τ, which is how the paper's Table 4 thresholds
-    /// 1e-3 / 1e-2 / 1e-1 are quoted).
-    pub tol: f32,
-    pub cond: Conditioning,
-    pub seed: u64,
-    /// Safety cap on parallel sweeps.
-    pub max_sweeps: Option<usize>,
-}
-
-impl ParadigmsConfig {
-    pub fn new(n: usize) -> Self {
-        ParadigmsConfig { n, window: None, tol: 1e-2, cond: Conditioning::none(), seed: 0, max_sweeps: None }
-    }
-
-    pub fn with_tol(mut self, tol: f32) -> Self {
-        self.tol = tol;
-        self
-    }
-
-    pub fn with_window(mut self, w: usize) -> Self {
-        self.window = Some(w);
-        self
-    }
-
-    pub fn with_cond(mut self, cond: Conditioning) -> Self {
-        self.cond = cond;
-        self
-    }
-
-    pub fn with_seed(mut self, seed: u64) -> Self {
-        self.seed = seed;
-        self
-    }
-}
-
-#[derive(Debug, Clone)]
-pub struct ParadigmsResult {
-    pub sample: Vec<f32>,
-    pub stats: RunStats,
-    /// Peak number of trajectory states held simultaneously (memory
-    /// accounting for the §3.6 comparison).
-    pub peak_states: usize,
-}
-
 /// Run ParaDiGMS from the prior sample `x0`.
-pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], cfg: &ParadigmsConfig) -> ParadigmsResult {
+pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
     let t0 = Instant::now();
-    let n = cfg.n;
+    let n = spec.n;
     let d = backend.dim();
     let grid = Grid::new(n);
     let epc = backend.evals_per_step() as u64;
-    let window = cfg.window.unwrap_or(n).max(1);
-    let max_sweeps = cfg.max_sweeps.unwrap_or(8 * n);
+    let window = spec.window().unwrap_or(n).max(1);
+    let max_sweeps = spec.max_iters.unwrap_or(8 * n).max(1);
 
     // Trajectory x[0..=n]; ParaDiGMS initializes every point to x0.
     let mut x: Vec<Vec<f32>> = vec![x0.to_vec(); n + 1];
@@ -88,7 +43,8 @@ pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], cfg: &ParadigmsConfig) -
     let mut total_evals = 0u64;
     let mut sweeps = 0usize;
     let mut per_iter = Vec::new();
-    let tol2 = cfg.tol; // squared-error threshold (see config docs)
+    let mut iterates = Vec::new();
+    let tol2 = spec.tol; // squared-error threshold (see module docs)
 
     while lo < n && sweeps < max_sweeps {
         let hi = (lo + window).min(n);
@@ -102,14 +58,14 @@ pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], cfg: &ParadigmsConfig) -
             s_from.push(grid.s(j));
             s_to.push(grid.s(j + 1));
         }
-        let mask = cfg.cond.tiled_mask(rows);
-        let seeds = vec![cfg.seed; rows];
+        let mask = spec.cond.tiled_mask(rows);
+        let seeds = vec![spec.seed; rows];
         let phi = backend.step(&StepRequest {
             x: &xin,
             s_from: &s_from,
             s_to: &s_to,
             mask: mask.as_deref(),
-            guidance: cfg.cond.guidance,
+            guidance: spec.cond.guidance,
             seeds: &seeds,
         });
         total_evals += rows as u64 * epc;
@@ -141,6 +97,9 @@ pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], cfg: &ParadigmsConfig) -
         // exact after its first evaluation, mirroring the reference impl).
         let stride = (first_unconverged - lo).max(1);
         per_iter.push(IterStat { iter: sweeps, residual: max_err.sqrt(), evals: rows as u64 * epc });
+        if spec.keep_iterates {
+            iterates.push(x[n].clone());
+        }
         lo += stride;
     }
 
@@ -151,14 +110,17 @@ pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], cfg: &ParadigmsConfig) -
         eff_serial_evals_pipelined: sweeps as u64 * epc,
         total_evals,
         wall: t0.elapsed(),
+        // The window of live trajectory states plus the window anchor —
+        // the O(window) memory of the §3.6 comparison.
+        peak_states: window.min(n) + 1,
         per_iter,
     };
-    ParadigmsResult { sample: x[n].clone(), stats, peak_states: window.min(n) + 1 }
+    SampleOutput { sample: x[n].clone(), stats, iterates }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::{prior_sample, sequential, Conditioning};
+    use super::super::{prior_sample, sequential, Conditioning, SamplerSpec};
     use super::*;
     use crate::data::make_gmm;
     use crate::model::GmmEps;
@@ -174,7 +136,7 @@ mod tests {
         let be = backend();
         let x0 = prior_sample(2, 17);
         let (seq, _) = sequential(&be, &x0, 25, &Conditioning::none(), 17);
-        let res = paradigms(&be, &x0, &ParadigmsConfig::new(25).with_tol(1e-5).with_seed(17));
+        let res = paradigms(&be, &x0, &SamplerSpec::paradigms(25).with_tol(1e-5).with_seed(17));
         assert!(res.stats.converged);
         let d: f32 =
             seq.iter().zip(&res.sample).map(|(a, b)| (a - b).abs()).sum::<f32>() / 2.0;
@@ -186,7 +148,7 @@ mod tests {
         // The whole point: effective serial evals << N.
         let be = backend();
         let x0 = prior_sample(2, 3);
-        let res = paradigms(&be, &x0, &ParadigmsConfig::new(100).with_tol(1e-3).with_seed(3));
+        let res = paradigms(&be, &x0, &SamplerSpec::paradigms(100).with_tol(1e-3).with_seed(3));
         assert!(res.stats.converged);
         assert!(
             res.stats.eff_serial_evals < 100,
@@ -202,18 +164,18 @@ mod tests {
         let res = paradigms(
             &be,
             &x0,
-            &ParadigmsConfig::new(64).with_tol(1e-4).with_window(16).with_seed(5),
+            &SamplerSpec::paradigms(64).with_tol(1e-4).with_window(16).with_seed(5),
         );
         assert!(res.stats.converged);
-        assert_eq!(res.peak_states, 17);
+        assert_eq!(res.stats.peak_states, 17);
     }
 
     #[test]
     fn looser_tolerance_is_cheaper() {
         let be = backend();
         let x0 = prior_sample(2, 9);
-        let tight = paradigms(&be, &x0, &ParadigmsConfig::new(64).with_tol(1e-4).with_seed(9));
-        let loose = paradigms(&be, &x0, &ParadigmsConfig::new(64).with_tol(1e-1).with_seed(9));
+        let tight = paradigms(&be, &x0, &SamplerSpec::paradigms(64).with_tol(1e-4).with_seed(9));
+        let loose = paradigms(&be, &x0, &SamplerSpec::paradigms(64).with_tol(1e-1).with_seed(9));
         assert!(loose.stats.eff_serial_evals <= tight.stats.eff_serial_evals);
     }
 }

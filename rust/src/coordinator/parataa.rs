@@ -7,57 +7,19 @@
 //! `X ∈ R^{(N+1)·d}`. Plain fixed-point iteration converges in ≤ N
 //! steps (triangular structure); Anderson mixing over a short residual
 //! history accelerates it — the "triangular Anderson acceleration" idea.
+//!
+//! Spec knobs: the Anderson history depth comes from
+//! [`SamplerKind::Parataa`](super::SamplerKind) (0 disables acceleration
+//! → plain Picard on the full trajectory); convergence is declared when
+//! the final sample moves less than `spec.tol` under `spec.norm`;
+//! `spec.max_iters` caps the iterations (`None` → `2·N`).
 
-use super::{Conditioning, IterStat, RunStats};
+use super::{IterStat, RunStats, SampleOutput, SamplerSpec};
+use crate::coordinator::Conditioning;
 use crate::schedule::Grid;
 use crate::solvers::{StepBackend, StepRequest};
 use std::collections::VecDeque;
 use std::time::Instant;
-
-#[derive(Debug, Clone)]
-pub struct ParataaConfig {
-    pub n: usize,
-    /// Anderson history depth (0 disables acceleration → plain Picard on
-    /// the full trajectory).
-    pub history: usize,
-    /// Converged when the final sample moves less than `tol` (mean-ℓ1).
-    pub tol: f32,
-    pub cond: Conditioning,
-    pub seed: u64,
-    pub max_iters: Option<usize>,
-}
-
-impl ParataaConfig {
-    pub fn new(n: usize) -> Self {
-        ParataaConfig { n, history: 2, tol: 2.5e-3, cond: Conditioning::none(), seed: 0, max_iters: None }
-    }
-
-    pub fn with_tol(mut self, tol: f32) -> Self {
-        self.tol = tol;
-        self
-    }
-
-    pub fn with_history(mut self, m: usize) -> Self {
-        self.history = m;
-        self
-    }
-
-    pub fn with_seed(mut self, seed: u64) -> Self {
-        self.seed = seed;
-        self
-    }
-
-    pub fn with_cond(mut self, cond: Conditioning) -> Self {
-        self.cond = cond;
-        self
-    }
-}
-
-#[derive(Debug, Clone)]
-pub struct ParataaResult {
-    pub sample: Vec<f32>,
-    pub stats: RunStats,
-}
 
 /// Apply the trajectory map `T`: one batched solver step at every grid
 /// point, fed by the previous trajectory.
@@ -88,14 +50,15 @@ fn apply_t(
 }
 
 /// Run the Anderson-accelerated fixed-point sampler.
-pub fn parataa(backend: &dyn StepBackend, x0: &[f32], cfg: &ParataaConfig) -> ParataaResult {
+pub fn parataa(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
     let t0 = Instant::now();
-    let n = cfg.n;
+    let n = spec.n;
     let d = backend.dim();
     let grid = Grid::new(n);
     let epc = backend.evals_per_step() as u64;
     let len = (n + 1) * d;
-    let max_iters = cfg.max_iters.unwrap_or(2 * n).max(1);
+    let history = spec.history();
+    let max_iters = spec.max_iters.unwrap_or(2 * n).max(1);
 
     // Initialize the trajectory at the prior (as ParaDiGMS does).
     let mut x = vec![0.0f32; len];
@@ -110,21 +73,25 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], cfg: &ParataaConfig) -> Pa
 
     let mut total_evals = 0u64;
     let mut per_iter = Vec::new();
+    let mut iterates = Vec::new();
     let mut converged = false;
     let mut iters = 0usize;
 
     for k in 1..=max_iters {
-        apply_t(backend, &grid, &x, &cfg.cond, cfg.seed, &mut tx);
+        apply_t(backend, &grid, &x, &spec.cond, spec.seed, &mut tx);
         total_evals += n as u64 * epc;
         let r: Vec<f32> = tx.iter().zip(&x).map(|(a, b)| a - b).collect();
 
         // Residual on the final sample only (matches the SRDS criterion).
-        let final_res = r[n * d..].iter().map(|v| v.abs()).sum::<f32>() / d as f32;
+        let final_res = spec.norm.dist(&tx[n * d..], &x[n * d..]);
         iters = k;
         per_iter.push(IterStat { iter: k, residual: final_res, evals: n as u64 * epc });
 
-        if final_res < cfg.tol {
+        if final_res < spec.tol {
             x.copy_from_slice(&tx);
+            if spec.keep_iterates {
+                iterates.push(x[n * d..].to_vec());
+            }
             converged = true;
             break;
         }
@@ -132,7 +99,7 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], cfg: &ParataaConfig) -> Pa
         // Anderson mixing: minimize ‖r_k + Σ γ_j (r_{k-j} − r_k)‖ over the
         // history, then combine the corresponding T(x) iterates. Solved
         // via normal equations on the (tiny) history dimension.
-        let mnow = hist_r.len().min(cfg.history);
+        let mnow = hist_r.len().min(history);
         if mnow > 0 {
             // Build difference vectors dR_j = r_hist[j] − r.
             let mut g = vec![0.0f64; mnow * mnow];
@@ -184,21 +151,27 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], cfg: &ParataaConfig) -> Pa
                 }
                 hist_x.push_front(x.clone());
                 hist_r.push_front(r);
-                if hist_x.len() > cfg.history {
+                if hist_x.len() > history {
                     hist_x.pop_back();
                     hist_r.pop_back();
                 }
                 x = xn;
+                if spec.keep_iterates {
+                    iterates.push(x[n * d..].to_vec());
+                }
                 continue;
             }
         }
         hist_x.push_front(x.clone());
         hist_r.push_front(r);
-        if hist_x.len() > cfg.history {
+        if hist_x.len() > history {
             hist_x.pop_back();
             hist_r.pop_back();
         }
         x.copy_from_slice(&tx);
+        if spec.keep_iterates {
+            iterates.push(x[n * d..].to_vec());
+        }
     }
 
     let stats = RunStats {
@@ -208,9 +181,12 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], cfg: &ParataaConfig) -> Pa
         eff_serial_evals_pipelined: iters as u64 * epc,
         total_evals,
         wall: t0.elapsed(),
+        // Whole-trajectory iterate, its T-image, the residual, and the
+        // Anderson history pairs — the O(N·history) memory of §3.6.
+        peak_states: (n + 1) * (3 + 2 * history),
         per_iter,
     };
-    ParataaResult { sample: x[n * d..].to_vec(), stats }
+    SampleOutput { sample: x[n * d..].to_vec(), stats, iterates }
 }
 
 /// Gaussian elimination for the tiny Anderson system (m ≤ ~4).
@@ -254,7 +230,7 @@ fn solve_small(g: &mut [f64], b: &mut [f64], m: usize) -> Option<Vec<f64>> {
 
 #[cfg(test)]
 mod tests {
-    use super::super::{prior_sample, sequential, Conditioning};
+    use super::super::{prior_sample, sequential, Conditioning, SamplerSpec};
     use super::*;
     use crate::data::make_gmm;
     use crate::model::GmmEps;
@@ -270,7 +246,7 @@ mod tests {
         let be = backend();
         let x0 = prior_sample(2, 31);
         let (seq, _) = sequential(&be, &x0, 25, &Conditioning::none(), 31);
-        let res = parataa(&be, &x0, &ParataaConfig::new(25).with_tol(1e-4).with_seed(31));
+        let res = parataa(&be, &x0, &SamplerSpec::parataa(25).with_tol(1e-4).with_seed(31));
         assert!(res.stats.converged, "iters {}", res.stats.iters);
         let d: f32 = seq.iter().zip(&res.sample).map(|(a, b)| (a - b).abs()).sum::<f32>() / 2.0;
         assert!(d < 5e-3, "parataa vs sequential {d}");
@@ -280,8 +256,16 @@ mod tests {
     fn anderson_accelerates_over_plain_picard() {
         let be = backend();
         let x0 = prior_sample(2, 8);
-        let plain = parataa(&be, &x0, &ParataaConfig::new(64).with_history(0).with_tol(1e-4).with_seed(8));
-        let acc = parataa(&be, &x0, &ParataaConfig::new(64).with_history(2).with_tol(1e-4).with_seed(8));
+        let plain = parataa(
+            &be,
+            &x0,
+            &SamplerSpec::parataa(64).with_history(0).with_tol(1e-4).with_seed(8),
+        );
+        let acc = parataa(
+            &be,
+            &x0,
+            &SamplerSpec::parataa(64).with_history(2).with_tol(1e-4).with_seed(8),
+        );
         assert!(
             acc.stats.iters <= plain.stats.iters,
             "anderson {} vs plain {}",
@@ -300,7 +284,7 @@ mod tests {
             Solver::Ddim,
         );
         let x0 = prior_sample(64, 4);
-        let res = parataa(&be, &x0, &ParataaConfig::new(100).with_tol(1e-3).with_seed(4));
+        let res = parataa(&be, &x0, &SamplerSpec::parataa(100).with_tol(1e-3).with_seed(4));
         assert!(res.stats.converged);
         assert!(res.stats.eff_serial_evals < 100, "evals {}", res.stats.eff_serial_evals);
     }

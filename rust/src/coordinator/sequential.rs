@@ -38,6 +38,7 @@ pub fn sequential(
         eff_serial_evals_pipelined: n as u64 * epc,
         total_evals: n as u64 * epc,
         wall: t0.elapsed(),
+        peak_states: 1,
         per_iter: vec![],
     };
     (x, stats)

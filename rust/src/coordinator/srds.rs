@@ -16,21 +16,10 @@
 //! batched-inference benefit (§3.4): a single sample generation fills the
 //! device batch dimension with its own trajectory blocks.
 
-use super::{Conditioning, IterStat, RunStats, SrdsConfig};
+use super::{Conditioning, IterStat, RunStats, SampleOutput, SamplerSpec};
 use crate::schedule::Partition;
 use crate::solvers::{StepBackend, StepRequest};
 use std::time::Instant;
-
-/// Result of one SRDS run.
-#[derive(Debug, Clone)]
-pub struct SrdsResult {
-    /// The generated sample `x^p_M`.
-    pub sample: Vec<f32>,
-    pub stats: RunStats,
-    /// Final-sample iterate after the coarse init (index 0) and after
-    /// every refinement — populated when `cfg.keep_iterates`.
-    pub iterates: Vec<Vec<f32>>,
-}
 
 /// One coarse step `G`: a single solver step across a whole block.
 fn coarse_step(
@@ -108,13 +97,13 @@ fn fine_solves(
 }
 
 /// Run SRDS from the prior sample `x0`. See module docs for the algorithm.
-pub fn srds(backend: &dyn StepBackend, x0: &[f32], cfg: &SrdsConfig) -> SrdsResult {
+pub fn srds(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
     let t0 = Instant::now();
-    let part = cfg.partition();
+    let part = spec.partition();
     let m = part.num_blocks();
     let b = part.block();
     let epc = backend.evals_per_step() as u64;
-    let max_iters = cfg.max_iters.unwrap_or(m).max(1);
+    let max_iters = spec.max_iters.unwrap_or(m).max(1);
 
     // Coarse init sweep (Alg. 1 lines 2–4).
     let mut x: Vec<Vec<f32>> = Vec::with_capacity(m + 1);
@@ -126,8 +115,8 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], cfg: &SrdsConfig) -> SrdsResu
             &x[i - 1],
             part.s_bound(i - 1),
             part.s_bound(i),
-            &cfg.cond,
-            cfg.seed,
+            &spec.cond,
+            spec.seed,
         );
         x.push(g.clone());
         prev.push(g);
@@ -135,7 +124,7 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], cfg: &SrdsConfig) -> SrdsResu
     let mut total_evals = m as u64 * epc;
     let mut eff_serial = m as u64 * epc;
     let mut iterates = Vec::new();
-    if cfg.keep_iterates {
+    if spec.keep_iterates {
         iterates.push(x[m].clone());
     }
 
@@ -147,7 +136,7 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], cfg: &SrdsConfig) -> SrdsResu
         let evals_before = total_evals;
         // Parallel fine solves from the previous iterate (line 7–8).
         let (y, fine_serial, fine_total) =
-            fine_solves(backend, &part, &x[0..m], &cfg.cond, cfg.seed);
+            fine_solves(backend, &part, &x[0..m], &spec.cond, spec.seed);
         total_evals += fine_total * epc;
         eff_serial += fine_serial * epc;
 
@@ -159,8 +148,8 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], cfg: &SrdsConfig) -> SrdsResu
                 &x[i - 1],
                 part.s_bound(i - 1),
                 part.s_bound(i),
-                &cfg.cond,
-                cfg.seed,
+                &spec.cond,
+                spec.seed,
             );
             let (yi, previ) = (&y[i - 1], &prev[i]);
             let xi = &mut x[i];
@@ -177,15 +166,15 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], cfg: &SrdsConfig) -> SrdsResu
         eff_serial += m as u64 * epc;
 
         iters = p;
-        let residual = cfg.norm.dist(&x[m], &x_final_prev);
+        let residual = spec.norm.dist(&x[m], &x_final_prev);
         per_iter.push(IterStat { iter: p, residual, evals: total_evals - evals_before });
-        if cfg.keep_iterates {
+        if spec.keep_iterates {
             iterates.push(x[m].clone());
         }
         // Line 13: convergence on the final generation; Prop. 1 makes
         // p == m exact regardless of τ.
-        if residual < cfg.tol || p >= m {
-            converged = residual < cfg.tol || p >= m;
+        if residual < spec.tol || p >= m {
+            converged = true;
             break;
         }
     }
@@ -205,14 +194,17 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], cfg: &SrdsConfig) -> SrdsResu
         eff_serial_evals_pipelined: eff_pipelined,
         total_evals,
         wall: t0.elapsed(),
+        // Boundary states x (M+1), previous coarse results (M+1), and
+        // the fine solves (M) — 3M+2 states, the O(√N) memory of §3.6.
+        peak_states: 3 * m + 2,
         per_iter,
     };
-    SrdsResult { sample: x.pop().unwrap(), stats, iterates }
+    SampleOutput { sample: x.pop().unwrap(), stats, iterates }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::{prior_sample, sequential, Conditioning, SrdsConfig};
+    use super::super::{prior_sample, sequential, Conditioning, SamplerSpec};
     use super::*;
     use crate::data::make_gmm;
     use crate::model::{AffineModel, GmmEps};
@@ -228,9 +220,9 @@ mod tests {
         let be = gmm_backend("toy2d", Solver::Ddim);
         let x0 = prior_sample(2, 11);
         let (seq, _) = sequential(&be, &x0, 25, &Conditioning::none(), 11);
-        let cfg = SrdsConfig::new(25).with_tol(1e-7).with_seed(11);
-        let res = srds(&be, &x0, &cfg);
-        let d = cfg.norm.dist(&res.sample, &seq);
+        let spec = SamplerSpec::srds(25).with_tol(1e-7).with_seed(11);
+        let res = srds(&be, &x0, &spec);
+        let d = spec.norm.dist(&res.sample, &seq);
         assert!(d < 1e-5, "srds vs sequential {d}");
     }
 
@@ -242,8 +234,8 @@ mod tests {
         let x0 = prior_sample(2, 3);
         let n = 16;
         let (seq, _) = sequential(&be, &x0, n, &Conditioning::none(), 3);
-        let cfg = SrdsConfig::new(n).with_tol(0.0).with_max_iters(4).with_seed(3);
-        let res = srds(&be, &x0, &cfg);
+        let spec = SamplerSpec::srds(n).with_tol(0.0).with_max_iters(4).with_seed(3);
+        let res = srds(&be, &x0, &spec);
         assert_eq!(res.sample, seq, "bitwise equality after sqrt(N) iterations");
         assert_eq!(res.stats.iters, 4);
     }
@@ -252,8 +244,8 @@ mod tests {
     fn eval_accounting_matches_formulas() {
         let be = gmm_backend("toy2d", Solver::Ddim);
         let x0 = prior_sample(2, 1);
-        let cfg = SrdsConfig::new(25).with_tol(0.0).with_max_iters(1);
-        let res = srds(&be, &x0, &cfg);
+        let spec = SamplerSpec::srds(25).with_tol(0.0).with_max_iters(1);
+        let res = srds(&be, &x0, &spec);
         // init M + (fine B + sweep M) = 5 + 5 + 5 = 15 (Table 3, N=25).
         assert_eq!(res.stats.eff_serial_evals, 15);
         // pipelined: M·p + B − p = 5 + 5 − 1 = 9 (Table 3).
@@ -266,8 +258,8 @@ mod tests {
     fn early_convergence_beats_worst_case() {
         let be = gmm_backend("church", Solver::Ddim);
         let x0 = prior_sample(64, 9);
-        let cfg = SrdsConfig::new(256).with_tol(2.5e-3).with_seed(9);
-        let res = srds(&be, &x0, &cfg);
+        let spec = SamplerSpec::srds(256).with_tol(2.5e-3).with_seed(9);
+        let res = srds(&be, &x0, &spec);
         assert!(res.stats.converged);
         assert!(
             res.stats.iters < 16,
@@ -281,11 +273,12 @@ mod tests {
         let be = gmm_backend("toy2d", Solver::Ddim);
         let x0 = prior_sample(2, 21);
         let (seq, _) = sequential(&be, &x0, 36, &Conditioning::none(), 21);
-        let cfg = SrdsConfig::new(36).with_tol(0.0).with_max_iters(6).with_iterates().with_seed(21);
-        let res = srds(&be, &x0, &cfg);
+        let spec =
+            SamplerSpec::srds(36).with_tol(0.0).with_max_iters(6).with_iterates().with_seed(21);
+        let res = srds(&be, &x0, &spec);
         assert_eq!(res.iterates.len(), 7); // init + 6 refinements
-        let err_first = cfg.norm.dist(&res.iterates[0], &seq);
-        let err_last = cfg.norm.dist(res.iterates.last().unwrap(), &seq);
+        let err_first = spec.norm.dist(&res.iterates[0], &seq);
+        let err_last = spec.norm.dist(res.iterates.last().unwrap(), &seq);
         assert!(err_last <= err_first, "{err_last} vs {err_first}");
         assert_eq!(err_last, 0.0, "exact after M iterations");
     }
@@ -297,9 +290,12 @@ mod tests {
         let x0 = prior_sample(2, 5);
         for n in [7usize, 27, 40] {
             let (seq, _) = sequential(&be, &x0, n, &Conditioning::none(), 5);
-            let part = SrdsConfig::new(n).partition();
-            let cfg = SrdsConfig::new(n).with_tol(0.0).with_max_iters(part.num_blocks()).with_seed(5);
-            let res = srds(&be, &x0, &cfg);
+            let part = SamplerSpec::srds(n).partition();
+            let spec = SamplerSpec::srds(n)
+                .with_tol(0.0)
+                .with_max_iters(part.num_blocks())
+                .with_seed(5);
+            let res = srds(&be, &x0, &spec);
             assert_eq!(res.sample, seq, "n={n}");
         }
     }
@@ -309,8 +305,8 @@ mod tests {
         let be = gmm_backend("toy2d", Solver::Ddpm);
         let x0 = prior_sample(2, 13);
         let (seq, _) = sequential(&be, &x0, 16, &Conditioning::none(), 13);
-        let cfg = SrdsConfig::new(16).with_tol(0.0).with_max_iters(4).with_seed(13);
-        let res = srds(&be, &x0, &cfg);
+        let spec = SamplerSpec::srds(16).with_tol(0.0).with_max_iters(4).with_seed(13);
+        let res = srds(&be, &x0, &spec);
         assert_eq!(res.sample, seq, "Parareal over the DDPM map is exact too");
     }
 
@@ -322,9 +318,9 @@ mod tests {
         let x0 = prior_sample(256, 2);
         let cond = Conditioning::class(mask, 7.5);
         let (seq, _) = sequential(&be, &x0, 25, &cond, 2);
-        let cfg = SrdsConfig::new(25).with_tol(1e-6).with_cond(cond).with_seed(2);
-        let res = srds(&be, &x0, &cfg);
-        let d = cfg.norm.dist(&res.sample, &seq);
+        let spec = SamplerSpec::srds(25).with_tol(1e-6).with_cond(cond).with_seed(2);
+        let res = srds(&be, &x0, &spec);
+        let d = spec.norm.dist(&res.sample, &seq);
         assert!(d < 1e-4, "guided srds vs sequential {d}");
     }
 
@@ -333,8 +329,8 @@ mod tests {
         // Linear ODE: parareal converges superlinearly; expect << M iters.
         let be = NativeBackend::new(Arc::new(AffineModel::new(8, 0.4, 0.1)), Solver::Ddim);
         let x0 = prior_sample(8, 4);
-        let cfg = SrdsConfig::new(144).with_tol(1e-5).with_seed(4);
-        let res = srds(&be, &x0, &cfg);
+        let spec = SamplerSpec::srds(144).with_tol(1e-5).with_seed(4);
+        let res = srds(&be, &x0, &spec);
         assert!(res.stats.converged);
         assert!(res.stats.iters <= 8, "iters = {}", res.stats.iters);
     }

@@ -40,6 +40,10 @@ pub struct RunStats {
     /// Wall-clock time of the run (measured executor only; zero for
     /// pure accounting runs).
     pub wall: Duration,
+    /// Peak number of `dim`-sized trajectory states held simultaneously —
+    /// the paper's §3.6 memory comparison (O(√N) for SRDS vs O(window)
+    /// for ParaDiGMS vs O(N·history) for ParaTAA; 1 for sequential).
+    pub peak_states: usize,
     /// Per-iteration details.
     pub per_iter: Vec<IterStat>,
 }

@@ -10,7 +10,7 @@
 //! round-trips through a coordinator device; here workers stay hot and
 //! only states cross threads).
 
-use crate::coordinator::{Conditioning, IterStat, RunStats, SrdsConfig, SrdsResult};
+use crate::coordinator::{Conditioning, IterStat, RunStats, SampleOutput, SamplerSpec};
 use crate::solvers::{BackendFactory, Solver, StepBackend, StepRequest};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -270,13 +270,13 @@ impl BackendFactory for NativeFactory {
 pub fn measured_pipelined_srds(
     pool: &WorkerPool,
     x0: &[f32],
-    cfg: &SrdsConfig,
-    cond: &Conditioning,
-) -> SrdsResult {
+    spec: &SamplerSpec,
+) -> SampleOutput {
     let t0 = Instant::now();
-    let part = cfg.partition();
+    let part = spec.partition();
     let m = part.num_blocks();
-    let max_iters = cfg.max_iters.unwrap_or(m).max(1).min(m);
+    let cond = &spec.cond;
+    let max_iters = spec.max_iters.unwrap_or(m).max(1).min(m);
 
     // Grid state, indexed [p][i].
     let mut x_state: Vec<Vec<Option<Vec<f32>>>> = vec![vec![None; m + 1]; max_iters + 1];
@@ -296,7 +296,7 @@ pub fn measured_pipelined_srds(
         cond: &'a Conditioning,
         seed: u64,
     }
-    let ctx = Ctx { pool, part: &part, cond, seed: cfg.seed };
+    let ctx = Ctx { pool, part: &part, cond, seed: spec.seed };
     let submit_fine = |ctx: &Ctx, p: usize, i: usize, x: Vec<f32>, inflight: &mut usize| {
         *inflight += 1;
         ctx.pool.submit(Job {
@@ -409,9 +409,9 @@ pub fn measured_pipelined_srds(
                     let (Some(curf), Some(prevf)) = (&x_state[pp][m], &x_state[pp - 1][m]) else {
                         break;
                     };
-                    let residual = cfg.norm.dist(curf, prevf);
+                    let residual = spec.norm.dist(curf, prevf);
                     per_iter.push(IterStat { iter: pp, residual, evals: 0 });
-                    if residual < cfg.tol || pp >= m {
+                    if residual < spec.tol || pp >= m {
                         stop_at_iter = Some(pp);
                     }
                 }
@@ -439,7 +439,7 @@ pub fn measured_pipelined_srds(
     let converged = per_iter
         .iter()
         .find(|s| s.iter == final_iter)
-        .map(|s| s.residual < cfg.tol || final_iter >= m)
+        .map(|s| s.residual < spec.tol || final_iter >= m)
         .unwrap_or(false);
     let b = part.block();
     let stats = RunStats {
@@ -453,15 +453,18 @@ pub fn measured_pipelined_srds(
         },
         total_evals,
         wall: t0.elapsed(),
+        // The dispatcher materializes the full (iterations × blocks) grid
+        // of x/G/F states — wall-clock-optimal, not memory-optimal.
+        peak_states: 3 * (max_iters + 1) * (m + 1),
         per_iter,
     };
-    SrdsResult { sample, stats, iterates: vec![] }
+    SampleOutput { sample, stats, iterates: vec![] }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{prior_sample, srds, SrdsConfig};
+    use crate::coordinator::{prior_sample, srds, SamplerSpec};
     use crate::data::make_gmm;
     use crate::model::GmmEps;
 
@@ -475,16 +478,15 @@ mod tests {
     fn pipelined_matches_vanilla_srds_output() {
         let p = pool(4);
         let x0 = prior_sample(64, 42);
-        let cfg = SrdsConfig::new(64).with_tol(1e-4).with_seed(42);
-        let cond = Conditioning::none();
-        let measured = measured_pipelined_srds(&p, &x0, &cfg, &cond);
+        let spec = SamplerSpec::srds(64).with_tol(1e-4).with_seed(42);
+        let measured = measured_pipelined_srds(&p, &x0, &spec);
 
         let model: Arc<dyn crate::model::EpsModel> =
             Arc::new(GmmEps::new(make_gmm("church")));
         let be = crate::solvers::NativeBackend::new(model, Solver::Ddim);
-        let vanilla = srds(&be, &x0, &cfg);
+        let vanilla = srds(&be, &x0, &spec);
         assert_eq!(measured.stats.iters, vanilla.stats.iters);
-        let d = cfg.norm.dist(&measured.sample, &vanilla.sample);
+        let d = spec.norm.dist(&measured.sample, &vanilla.sample);
         assert!(d < 1e-6, "measured vs vanilla {d}");
     }
 
@@ -492,8 +494,8 @@ mod tests {
     fn single_worker_still_completes() {
         let p = pool(1);
         let x0 = prior_sample(64, 7);
-        let cfg = SrdsConfig::new(25).with_tol(1e-3).with_seed(7);
-        let res = measured_pipelined_srds(&p, &x0, &cfg, &Conditioning::none());
+        let spec = SamplerSpec::srds(25).with_tol(1e-3).with_seed(7);
+        let res = measured_pipelined_srds(&p, &x0, &spec);
         assert!(res.stats.converged);
         assert!(!res.sample.iter().any(|v| v.is_nan()));
     }
@@ -503,8 +505,8 @@ mod tests {
         let p = pool(6);
         let x0 = prior_sample(64, 5);
         let n = 16;
-        let cfg = SrdsConfig::new(n).with_tol(0.0).with_seed(5);
-        let res = measured_pipelined_srds(&p, &x0, &cfg, &Conditioning::none());
+        let spec = SamplerSpec::srds(n).with_tol(0.0).with_seed(5);
+        let res = measured_pipelined_srds(&p, &x0, &spec);
         let model: Arc<dyn crate::model::EpsModel> =
             Arc::new(GmmEps::new(make_gmm("church")));
         let be = crate::solvers::NativeBackend::new(model, Solver::Ddim);

@@ -7,8 +7,10 @@
 //! * **L3 (this crate)** — the coordinator: the SRDS Parareal sampler
 //!   ([`coordinator::srds`]), its pipelined variant
 //!   ([`coordinator::pipeline`]), the ParaDiGMS/Picard and ParaTAA
-//!   baselines, dynamic batching, a device-pool executor, a
-//!   discrete-event simulated-clock executor, and a tokio serving loop.
+//!   baselines — all behind the unified [`coordinator::api`] sampler
+//!   trait + registry — plus dynamic batching, a device-pool executor, a
+//!   discrete-event simulated-clock executor, and the threaded JSON-line
+//!   serving loop ([`server`]).
 //! * **L2/L1 (python/, build-time only)** — JAX solver-step graphs calling
 //!   Pallas kernels, AOT-lowered once to HLO-text artifacts that
 //!   [`runtime`] loads and executes via the PJRT C API (`xla` crate).
@@ -16,8 +18,9 @@
 //! Python never runs on the request path: after `make artifacts` the rust
 //! binary is self-contained.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured numbers.
+//! See `DESIGN.md` at the repository root for the layer inventory, the
+//! `Sampler` trait / registry design, and the JSON wire protocol; the
+//! benches under `rust/benches/` print the paper-vs-measured tables.
 
 pub mod batching;
 pub mod coordinator;

@@ -1,19 +1,21 @@
 //! `srds` — the L3 coordinator CLI.
 //!
 //! ```text
-//! srds info                          # artifact + model inventory
+//! srds info                          # artifact + model + sampler inventory
 //! srds sample [--model gmm_church] [--solver ddim] [--n 1024]
-//!             [--sampler srds|sequential|paradigms|parataa]
-//!             [--backend native|pjrt] [--tol 2.5e-3] [--seed 0]
+//!             [--sampler <registry name>] [--backend native|pjrt]
+//!             [--tol 2.5e-3] [--norm l1_mean|l2_mean|linf] [--seed 0]
+//!             [--max-iters K] [--block B] [--window W] [--history H]
 //!             [--class C --guidance W] [--out sample.pgm]
 //! srds serve  [--addr 127.0.0.1:7878] [--workers 4] [--model …]
 //!             [--solver …] [--backend native|pjrt]
 //! ```
 //!
-//! (Argument parsing is in-tree: the offline vendored crate set has no
-//! clap.)
+//! `--sampler` accepts any name from `coordinator::api::registry()`;
+//! `srds info` lists them. (Argument parsing is in-tree: the offline
+//! vendored crate set has no clap.)
 
-use srds::coordinator::{prior_sample, Conditioning, SrdsConfig};
+use srds::coordinator::{prior_sample, registry, Conditioning, ConvNorm, SamplerSpec};
 use srds::data::make_gmm;
 use srds::exec::NativeFactory;
 use srds::model::{EpsModel, GmmEps, SmallDenoiser};
@@ -78,6 +80,7 @@ fn cmd_info() -> srds::Result<()> {
         Err(e) => println!("(artifacts unavailable: {e:#}; run `make artifacts`)"),
     }
     println!("native datasets: church bedroom imagenet64 cifar latent_cond toy2d");
+    println!("samplers: {}", registry().list().join(" "));
     Ok(())
 }
 
@@ -95,45 +98,46 @@ fn cmd_sample(flags: HashMap<String, String>) -> srds::Result<()> {
         }
         _ => Conditioning::none(),
     };
+    let reg = registry();
+    let entry = reg.parse(&sampler).ok_or_else(|| {
+        anyhow::anyhow!("unknown sampler {sampler:?}; available: {}", reg.list().join(", "))
+    })?;
+    let mut spec = SamplerSpec::for_kind(n, entry.kind())
+        .with_tol(tol)
+        .with_seed(seed)
+        .with_cond(cond);
+    if let Some(k) = flags.get("max-iters") {
+        spec = spec.with_max_iters(k.parse()?);
+    }
+    if let Some(b) = flags.get("block") {
+        spec = spec.with_block(b.parse()?);
+    }
+    if let Some(w) = flags.get("window") {
+        spec = spec.with_window(w.parse()?);
+    }
+    if let Some(h) = flags.get("history") {
+        spec = spec.with_history(h.parse()?);
+    }
+    if let Some(nm) = flags.get("norm") {
+        spec = spec.with_norm(
+            ConvNorm::parse(nm).ok_or_else(|| anyhow::anyhow!("unknown norm {nm:?}"))?,
+        );
+    }
+    spec.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
     let x0 = prior_sample(be.dim(), seed);
     let t0 = std::time::Instant::now();
-    let (sample, line) = match sampler.as_str() {
-        "sequential" => {
-            let (s, st) = srds::coordinator::sequential(be.as_ref(), &x0, n, &cond, seed);
-            (s, format!("sequential: {} evals", st.total_evals))
-        }
-        "paradigms" => {
-            let mut cfg = srds::coordinator::ParadigmsConfig::new(n).with_tol(tol).with_seed(seed);
-            cfg.cond = cond.clone();
-            let r = srds::coordinator::paradigms(be.as_ref(), &x0, &cfg);
-            (r.sample, format!("paradigms: {} sweeps, {} total evals", r.stats.iters, r.stats.total_evals))
-        }
-        "parataa" => {
-            let mut cfg = srds::coordinator::ParataaConfig::new(n).with_tol(tol).with_seed(seed);
-            cfg.cond = cond.clone();
-            let r = srds::coordinator::parataa(be.as_ref(), &x0, &cfg);
-            (r.sample, format!("parataa: {} iters, {} total evals", r.stats.iters, r.stats.total_evals))
-        }
-        _ => {
-            let mut cfg = SrdsConfig::new(n).with_tol(tol).with_seed(seed).with_cond(cond);
-            if let Some(k) = flags.get("max-iters") {
-                cfg = cfg.with_max_iters(k.parse()?);
-            }
-            let r = srds::coordinator::srds(be.as_ref(), &x0, &cfg);
-            (
-                r.sample,
-                format!(
-                    "srds: {} iters (converged={}), eff serial evals {} (pipelined {}), total {}",
-                    r.stats.iters,
-                    r.stats.converged,
-                    r.stats.eff_serial_evals,
-                    r.stats.eff_serial_evals_pipelined,
-                    r.stats.total_evals
-                ),
-            )
-        }
-    };
-    println!("{line}; wall {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    let r = entry.run(be.as_ref(), &x0, &spec);
+    let sample = r.sample;
+    println!(
+        "{}: {} iters (converged={}), eff serial evals {} (pipelined {}), total {}; wall {:.1} ms",
+        entry.name(),
+        r.stats.iters,
+        r.stats.converged,
+        r.stats.eff_serial_evals,
+        r.stats.eff_serial_evals_pipelined,
+        r.stats.total_evals,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
     let d = sample.len();
     let side = (d as f64).sqrt() as usize;
     if side * side == d {

@@ -1,17 +1,26 @@
 //! JSON-line sampling server — the L3 request path.
 //!
-//! Protocol (one JSON object per line, over TCP):
+//! Protocol (one JSON object per line, over TCP; see DESIGN.md for the
+//! full field table):
 //!
 //! ```json
 //! {"id": 1, "sampler": "srds", "n": 25, "class": 2, "guidance": 7.5,
-//!  "seed": 42, "tol": 0.0025, "max_iters": 3}
+//!  "seed": 42, "tol": 0.0025, "max_iters": 3, "block": 5,
+//!  "window": 32, "history": 2, "norm": "l1_mean"}
 //! ```
+//!
+//! `sampler` must name an entry of [`registry`] — unknown names are
+//! rejected with an `ok: false` error line rather than silently falling
+//! back. The kind-specific knobs (`block` for SRDS, `window` for
+//! ParaDiGMS, `history` for ParaTAA) are optional and ignored by
+//! samplers they don't apply to.
 //!
 //! Response line:
 //!
 //! ```json
-//! {"id": 1, "ok": true, "iters": 2, "eff_serial_evals": 17,
-//!  "total_evals": 74, "wall_ms": 12.3, "sample": [...]}
+//! {"id": 1, "ok": true, "sampler": "srds", "iters": 2, "converged": true,
+//!  "eff_serial_evals": 25, "eff_serial_evals_pipelined": 17,
+//!  "total_evals": 74, "peak_states": 17, "wall_ms": 12.3, "sample": [...]}
 //! ```
 //!
 //! Sampler workers each own a thread-bound backend (native or PJRT);
@@ -19,8 +28,7 @@
 //! through per-request channels. Python is never involved.
 
 use crate::coordinator::{
-    paradigms, parataa, prior_sample, sequential, srds, Conditioning, ParadigmsConfig,
-    ParataaConfig, SrdsConfig,
+    prior_sample, registry, Conditioning, ConvNorm, SampleOutput, SamplerSpec,
 };
 use crate::data::make_gmm;
 use crate::json::{self, Value};
@@ -31,7 +39,8 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 
-/// A parsed sampling request.
+/// A parsed sampling request: the sampler name plus every
+/// [`SamplerSpec`] knob the wire protocol exposes.
 #[derive(Debug, Clone)]
 pub struct SampleRequest {
     pub id: u64,
@@ -41,13 +50,27 @@ pub struct SampleRequest {
     pub guidance: f32,
     pub seed: u64,
     pub tol: f32,
+    pub norm: ConvNorm,
     pub max_iters: Option<usize>,
+    /// SRDS fine steps per block.
+    pub block: Option<usize>,
+    /// ParaDiGMS sliding window.
+    pub window: Option<usize>,
+    /// ParaTAA Anderson history depth.
+    pub history: Option<usize>,
     pub return_sample: bool,
+    /// Return the per-refinement final-sample iterates too.
+    pub return_iterates: bool,
 }
 
 impl SampleRequest {
     pub fn from_json(v: &Value) -> Result<Self> {
         let num = |k: &str, default: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(default);
+        let norm = match v.get("norm").and_then(|x| x.as_str()) {
+            None => ConvNorm::L1Mean,
+            Some(s) => ConvNorm::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown norm {s:?} (l1_mean/l2_mean/linf)"))?,
+        };
         Ok(SampleRequest {
             id: num("id", 0.0) as u64,
             sampler: v
@@ -60,20 +83,65 @@ impl SampleRequest {
             guidance: num("guidance", 0.0) as f32,
             seed: num("seed", 0.0) as u64,
             tol: num("tol", 2.5e-3) as f32,
+            norm,
             max_iters: v.get("max_iters").and_then(|x| x.as_usize()),
+            block: v.get("block").and_then(|x| x.as_usize()),
+            window: v.get("window").and_then(|x| x.as_usize()),
+            history: v.get("history").and_then(|x| x.as_usize()),
             return_sample: v.get("sample").and_then(|x| x.as_bool()).unwrap_or(true),
+            return_iterates: v.get("iterates").and_then(|x| x.as_bool()).unwrap_or(false),
         })
+    }
+
+    /// Build the [`SamplerSpec`] this request describes, given the
+    /// sampler's default kind and the request's conditioning.
+    pub fn to_spec(&self, kind: crate::coordinator::SamplerKind, cond: Conditioning) -> SamplerSpec {
+        let mut kind = kind;
+        if let Some(w) = self.window {
+            kind = kind.with_window(w);
+        }
+        if let Some(h) = self.history {
+            kind = kind.with_history(h);
+        }
+        let mut spec = SamplerSpec::for_kind(self.n, kind)
+            .with_tol(self.tol)
+            .with_norm(self.norm)
+            .with_seed(self.seed)
+            .with_cond(cond);
+        spec.block = self.block;
+        spec.max_iters = self.max_iters;
+        spec.keep_iterates = self.return_iterates;
+        spec
     }
 }
 
-/// Execute one request on a backend. The conditioning mask comes from the
-/// dataset zoo when the model is a conditional GMM.
+fn error_response(id: u64, msg: String) -> Value {
+    json::obj(vec![
+        ("id", Value::Num(id as f64)),
+        ("ok", Value::Bool(false)),
+        ("error", Value::Str(msg)),
+    ])
+}
+
+/// Execute one request on a backend via the sampler registry. The
+/// conditioning mask comes from the dataset zoo when the model is a
+/// conditional GMM.
 pub fn run_request(
     backend: &dyn StepBackend,
     model_name: &str,
     req: &SampleRequest,
 ) -> Value {
-    let dim = backend.dim();
+    let reg = registry();
+    let Some(sampler) = reg.parse(&req.sampler) else {
+        return error_response(
+            req.id,
+            format!(
+                "unknown sampler {:?}; available: {}",
+                req.sampler,
+                reg.list().join(", ")
+            ),
+        );
+    };
     let cond = match req.class {
         Some(c) if model_name.contains("latent_cond") => {
             let gmm = make_gmm("latent_cond");
@@ -81,62 +149,55 @@ pub fn run_request(
         }
         _ => Conditioning::none(),
     };
-    let x0 = prior_sample(dim, req.seed);
+    let spec = req.to_spec(sampler.kind(), cond);
+    // A range error must be an error line, not a worker-thread panic.
+    if let Err(msg) = spec.validate() {
+        return error_response(req.id, msg);
+    }
+    let x0 = prior_sample(backend.dim(), req.seed);
     let t0 = std::time::Instant::now();
-    let (sample, iters, eff, total, converged) = match req.sampler.as_str() {
-        "sequential" => {
-            let (s, st) = sequential(backend, &x0, req.n, &cond, req.seed);
-            (s, 0, st.eff_serial_evals, st.total_evals, true)
-        }
-        "paradigms" => {
-            let mut cfg = ParadigmsConfig::new(req.n).with_tol(req.tol).with_seed(req.seed);
-            cfg.cond = cond;
-            let r = paradigms(backend, &x0, &cfg);
-            (r.sample, r.stats.iters, r.stats.eff_serial_evals, r.stats.total_evals, r.stats.converged)
-        }
-        "parataa" => {
-            let mut cfg = ParataaConfig::new(req.n).with_tol(req.tol).with_seed(req.seed);
-            cfg.cond = cond;
-            let r = parataa(backend, &x0, &cfg);
-            (r.sample, r.stats.iters, r.stats.eff_serial_evals, r.stats.total_evals, r.stats.converged)
-        }
-        _ => {
-            // srds (default)
-            let mut cfg = SrdsConfig::new(req.n).with_tol(req.tol).with_seed(req.seed).with_cond(cond);
-            if let Some(k) = req.max_iters {
-                cfg = cfg.with_max_iters(k);
-            }
-            let r = srds(backend, &x0, &cfg);
-            (
-                r.sample,
-                r.stats.iters,
-                r.stats.eff_serial_evals_pipelined,
-                r.stats.total_evals,
-                r.stats.converged,
-            )
-        }
-    };
+    let out: SampleOutput = sampler.run(backend, &x0, &spec);
     let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
     let mut pairs = vec![
         ("id", Value::Num(req.id as f64)),
         ("ok", Value::Bool(true)),
-        ("sampler", Value::Str(req.sampler.clone())),
-        ("iters", Value::Num(iters as f64)),
-        ("eff_serial_evals", Value::Num(eff as f64)),
-        ("total_evals", Value::Num(total as f64)),
-        ("converged", Value::Bool(converged)),
+        ("sampler", Value::Str(sampler.name().to_string())),
+        ("iters", Value::Num(out.stats.iters as f64)),
+        ("converged", Value::Bool(out.stats.converged)),
+        ("eff_serial_evals", Value::Num(out.stats.eff_serial_evals as f64)),
+        (
+            "eff_serial_evals_pipelined",
+            Value::Num(out.stats.eff_serial_evals_pipelined as f64),
+        ),
+        ("total_evals", Value::Num(out.stats.total_evals as f64)),
+        ("peak_states", Value::Num(out.stats.peak_states as f64)),
         ("wall_ms", Value::Num(wall_ms)),
     ];
     if req.return_sample {
-        pairs.push(("sample", json::arr_f32(&sample)));
+        pairs.push(("sample", json::arr_f32(&out.sample)));
+    }
+    if req.return_iterates {
+        pairs.push((
+            "iterates",
+            Value::Arr(out.iterates.iter().map(|v| json::arr_f32(v)).collect()),
+        ));
     }
     json::obj(pairs)
 }
 
 /// Handle one raw request line (exposed for tests; no socket needed).
 pub fn handle_line(backend: &dyn StepBackend, model_name: &str, line: &str) -> String {
-    let resp = match json::parse(line).and_then(|v| SampleRequest::from_json(&v)) {
-        Ok(req) => run_request(backend, model_name, &req),
+    let resp = match json::parse(line) {
+        Ok(v) => match SampleRequest::from_json(&v) {
+            Ok(req) => run_request(backend, model_name, &req),
+            // Request-level validation errors still echo the id so
+            // pipelined clients can correlate them.
+            Err(e) => {
+                let id = v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+                error_response(id, format!("{e:#}"))
+            }
+        },
+        // Malformed JSON: no id to echo.
         Err(e) => json::obj(vec![
             ("ok", Value::Bool(false)),
             ("error", Value::Str(format!("{e:#}"))),
@@ -164,8 +225,11 @@ enum WorkItem {
 pub fn serve(cfg: ServeConfig) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)?;
     eprintln!(
-        "srds-server listening on {} (model={}, workers={})",
-        cfg.addr, cfg.model_name, cfg.workers
+        "srds-server listening on {} (model={}, workers={}, samplers={})",
+        cfg.addr,
+        cfg.model_name,
+        cfg.workers,
+        registry().list().join("/")
     );
     let (work_tx, work_rx) = channel::<WorkItem>();
     let work_rx = Arc::new(Mutex::new(work_rx));
@@ -231,6 +295,7 @@ fn handle_conn(stream: TcpStream, work_tx: Sender<WorkItem>) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::ConvNorm;
     use crate::exec::NativeFactory;
     use crate::model::GmmEps;
     use crate::solvers::Solver;
@@ -247,19 +312,79 @@ mod tests {
         let v = json::parse(&resp).unwrap();
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(v.get("id").unwrap().as_f64(), Some(5.0));
+        assert_eq!(v.get("sampler").unwrap().as_str(), Some("srds"));
         assert_eq!(v.get("sample").unwrap().as_arr().unwrap().len(), 2);
     }
 
     #[test]
-    fn handle_line_all_samplers() {
+    fn handle_line_every_registered_sampler() {
         let be = backend();
-        for sampler in ["sequential", "srds", "paradigms", "parataa"] {
+        for sampler in registry().list() {
             let line = format!(r#"{{"id":1,"sampler":"{sampler}","n":16,"sample":false}}"#);
             let resp = handle_line(be.as_ref(), "gmm_toy2d", &line);
             let v = json::parse(&resp).unwrap();
             assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{sampler}: {resp}");
+            assert_eq!(v.get("sampler").unwrap().as_str(), Some(sampler));
             assert!(v.get("sample").is_none());
+            assert!(v.get("eff_serial_evals_pipelined").is_some(), "{sampler}: {resp}");
         }
+    }
+
+    #[test]
+    fn handle_line_rejects_unknown_sampler() {
+        // No silent SRDS fallback: unknown names are an explicit error.
+        let be = backend();
+        let resp =
+            handle_line(be.as_ref(), "gmm_toy2d", r#"{"id": 9, "sampler": "ddim", "n": 16}"#);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(9.0), "error echoes the request id");
+        let err = v.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(err.contains("unknown sampler"), "{err}");
+        assert!(err.contains("srds"), "error lists the registry: {err}");
+        assert!(v.get("sample").is_none());
+    }
+
+    #[test]
+    fn handle_line_rejects_out_of_range_block() {
+        // block is asserted deep inside Partition::with_block; the server
+        // must reject it up front instead of panicking a worker thread.
+        let be = backend();
+        for bad in [r#"{"id":2,"n":16,"block":0}"#, r#"{"id":2,"n":16,"block":17}"#, r#"{"id":2,"n":0}"#] {
+            let resp = handle_line(be.as_ref(), "gmm_toy2d", bad);
+            let v = json::parse(&resp).unwrap();
+            assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{bad} -> {resp}");
+        }
+        // Boundary values are fine: block == n is one block of n steps.
+        let resp = handle_line(be.as_ref(), "gmm_toy2d", r#"{"id":3,"n":16,"block":16}"#);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+    }
+
+    #[test]
+    fn handle_line_rejects_unknown_norm() {
+        let be = backend();
+        let resp = handle_line(be.as_ref(), "gmm_toy2d", r#"{"id":7,"n":16,"norm":"l7"}"#);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        // Validation errors echo the id so pipelined clients can
+        // correlate them with the failed request.
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(7.0), "{resp}");
+    }
+
+    #[test]
+    fn paradigms_max_iters_zero_still_runs_one_sweep() {
+        // max_iters is clamped to >= 1 in every sampler; a cap of 0 must
+        // not return the untouched prior as a "sample".
+        let be = backend();
+        let resp = handle_line(
+            be.as_ref(),
+            "gmm_toy2d",
+            r#"{"id":1,"sampler":"paradigms","n":16,"max_iters":0}"#,
+        );
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        assert!(v.get("iters").unwrap().as_f64().unwrap() >= 1.0, "{resp}");
     }
 
     #[test]
@@ -271,7 +396,29 @@ mod tests {
     }
 
     #[test]
+    fn request_knobs_reach_the_spec() {
+        let v = json::parse(
+            r#"{"sampler":"paradigms","n":64,"window":16,"history":5,"block":4,
+                "norm":"linf","max_iters":7,"tol":0.5,"iterates":true}"#,
+        )
+        .unwrap();
+        let req = SampleRequest::from_json(&v).unwrap();
+        let kind = registry().parse(&req.sampler).unwrap().kind();
+        let spec = req.to_spec(kind, Conditioning::none());
+        assert_eq!(spec.window(), Some(16), "window reaches ParaDiGMS");
+        assert_eq!(spec.block, Some(4));
+        assert_eq!(spec.norm, ConvNorm::LInf);
+        assert_eq!(spec.max_iters, Some(7));
+        assert!(spec.keep_iterates);
+        // history is a ParaTAA knob; on a paradigms request it's ignored.
+        assert_eq!(spec.history(), 2);
+    }
+
+    #[test]
     fn samplers_agree_on_sample() {
+        // The registry-driven interchangeability check, over the wire
+        // protocol: every registered sampler reproduces the sequential
+        // sample at tight tolerance.
         let be = backend();
         let mk = |sampler: &str| {
             let line =
@@ -280,9 +427,10 @@ mod tests {
             json::parse(&resp).unwrap().get("sample").unwrap().as_f32_vec().unwrap()
         };
         let seq = mk("sequential");
-        let srds_s = mk("srds");
-        for (a, b) in seq.iter().zip(&srds_s) {
-            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        for sampler in registry().list() {
+            let out = mk(sampler);
+            let d = ConvNorm::L1Mean.dist(&out, &seq);
+            assert!(d < 1e-2, "{sampler} vs sequential: {d}");
         }
     }
 }

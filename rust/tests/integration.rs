@@ -4,7 +4,7 @@
 //!
 //! PJRT tests self-skip when artifacts are absent.
 
-use srds::coordinator::{prior_sample, sequential, srds as run_srds, Conditioning, SrdsConfig};
+use srds::coordinator::{prior_sample, sequential, srds as run_srds, Conditioning, SamplerSpec};
 use srds::data::make_gmm;
 use srds::exec::{measured_pipelined_srds, NativeFactory, WorkerPool};
 use srds::metrics::{fd_vs_gmm, kid_poly};
@@ -29,7 +29,7 @@ fn srds_over_pjrt_matches_native_srds() {
     let pjrt = PjrtBackend::new(&rt, "gmm_church", Solver::Ddim).unwrap();
     let native = NativeBackend::new(Arc::new(GmmEps::new(make_gmm("church"))), Solver::Ddim);
     let x0 = prior_sample(64, 3);
-    let cfg = SrdsConfig::new(64).with_tol(1e-4).with_seed(3);
+    let cfg = SamplerSpec::srds(64).with_tol(1e-4).with_seed(3);
     let a = run_srds(&pjrt, &x0, &cfg);
     let b = run_srds(&native, &x0, &cfg);
     assert_eq!(a.stats.iters, b.stats.iters);
@@ -49,7 +49,7 @@ fn guided_pjrt_sampling_hits_requested_class() {
     let cls = 2u32;
     let cond = Conditioning::class(gmm.class_mask(cls), 7.5);
     let x0 = prior_sample(256, 11);
-    let cfg = SrdsConfig::new(25).with_tol(1e-3).with_cond(cond).with_seed(11);
+    let cfg = SamplerSpec::srds(25).with_tol(1e-3).with_cond(cond).with_seed(11);
     let res = run_srds(&be, &x0, &cfg);
     // Nearest component must belong to the requested class.
     let d = gmm.dim();
@@ -82,7 +82,7 @@ fn srds_preserves_sample_quality_fd() {
         let x0 = prior_sample(64, s);
         let (xs, _) = sequential(&be, &x0, n, &Conditioning::none(), s);
         seq_samples.extend_from_slice(&xs);
-        let cfg = SrdsConfig::new(n).with_tol(tol).with_seed(s);
+        let cfg = SamplerSpec::srds(n).with_tol(tol).with_seed(s);
         let r = run_srds(&be, &x0, &cfg);
         srds_samples.extend_from_slice(&r.sample);
         assert!(r.stats.converged);
@@ -165,8 +165,8 @@ fn measured_pipelined_with_pjrt_factory() {
             .unwrap();
     let pool = WorkerPool::new(Arc::new(factory), 3);
     let x0 = prior_sample(64, 21);
-    let cfg = SrdsConfig::new(25).with_tol(1e-3).with_seed(21);
-    let res = measured_pipelined_srds(&pool, &x0, &cfg, &Conditioning::none());
+    let cfg = SamplerSpec::srds(25).with_tol(1e-3).with_seed(21);
+    let res = measured_pipelined_srds(&pool, &x0, &cfg);
     assert!(res.stats.converged);
     assert!(res.sample.iter().all(|v| v.is_finite()));
     assert!(res.stats.wall.as_nanos() > 0);
@@ -185,7 +185,7 @@ fn all_solver_artifacts_drive_srds() {
             Err(_) => continue,
         };
         let x0 = prior_sample(256, 2);
-        let cfg = SrdsConfig::new(16).with_tol(1e-2).with_seed(2);
+        let cfg = SamplerSpec::srds(16).with_tol(1e-2).with_seed(2);
         let res = run_srds(&be, &x0, &cfg);
         assert!(
             res.sample.iter().all(|v| v.is_finite()),

@@ -9,7 +9,7 @@
 //! * Prop. 4 — per-iteration cost `⌈N/B⌉ + B` is minimized at B ≈ √N.
 
 use srds::coordinator::pipeline::pipeline_schedule;
-use srds::coordinator::{prior_sample, sequential, Conditioning, SrdsConfig};
+use srds::coordinator::{prior_sample, sequential, Conditioning, SamplerSpec};
 use srds::data::rng::SplitMix64;
 use srds::exec::{simulate_srds, NativeFactory, WorkerPool};
 use srds::json;
@@ -35,7 +35,7 @@ fn prop1_srds_equals_sequential_after_m_iterations() {
         let x0 = prior_sample(dim, seed);
         let (seq, _) = sequential(&be, &x0, n, &Conditioning::none(), seed);
         let part = Partition::with_block(n, block);
-        let cfg = SrdsConfig::new(n)
+        let cfg = SamplerSpec::srds(n)
             .with_block(block)
             .with_tol(0.0)
             .with_max_iters(part.num_blocks())
@@ -63,7 +63,7 @@ fn prop1_ddpm_exactness_with_derived_noise() {
         let x0 = prior_sample(dim, seed);
         let (seq, _) = sequential(&be, &x0, n, &Conditioning::none(), seed);
         let part = Partition::sqrt_n(n);
-        let cfg = SrdsConfig::new(n)
+        let cfg = SamplerSpec::srds(n)
             .with_tol(0.0)
             .with_max_iters(part.num_blocks())
             .with_seed(seed);
@@ -139,11 +139,11 @@ fn block_size_one_and_n_are_degenerate() {
     let x0 = prior_sample(dim, 5);
     let n = 20;
     let (seq, _) = sequential(&be, &x0, n, &Conditioning::none(), 5);
-    let cfg = SrdsConfig::new(n).with_block(n).with_tol(0.0).with_max_iters(1).with_seed(5);
+    let cfg = SamplerSpec::srds(n).with_block(n).with_tol(0.0).with_max_iters(1).with_seed(5);
     let res = srds::coordinator::srds(&be, &x0, &cfg);
     assert_eq!(res.sample, seq);
     // B = 1 → coarse == fine: converged after the first refinement.
-    let cfg = SrdsConfig::new(n).with_block(1).with_tol(1e-9).with_seed(5);
+    let cfg = SamplerSpec::srds(n).with_block(1).with_tol(1e-9).with_seed(5);
     let res = srds::coordinator::srds(&be, &x0, &cfg);
     assert_eq!(res.sample, seq);
     assert_eq!(res.stats.iters, 1);
@@ -158,11 +158,11 @@ fn measured_pipeline_equals_vanilla_for_random_configs() {
         let n = 4 + (rng.next_u64() % 40) as usize;
         let seed = rng.next_u64();
         let x0 = prior_sample(4, seed);
-        let cfg = SrdsConfig::new(n).with_tol(1e-5).with_seed(seed);
+        let cfg = SamplerSpec::srds(n).with_tol(1e-5).with_seed(seed);
         let be = NativeBackend::new(model.clone(), Solver::Ddim);
         let vanilla = srds::coordinator::srds(&be, &x0, &cfg);
         let measured =
-            srds::exec::measured_pipelined_srds(&pool, &x0, &cfg, &Conditioning::none());
+            srds::exec::measured_pipelined_srds(&pool, &x0, &cfg);
         assert_eq!(measured.stats.iters, vanilla.stats.iters, "n={n}");
         assert_eq!(measured.sample, vanilla.sample, "n={n}");
     }

@@ -1,0 +1,167 @@
+//! Offline stub of the `xla` crate (xla-rs), exposing exactly the API
+//! surface `srds::runtime` uses. The container this repository builds in
+//! has no XLA/PJRT toolchain, so every runtime entry point returns a
+//! descriptive error instead: `PjRtClient::cpu()` fails, which makes
+//! `PjrtRuntime::open` fail, which every caller already handles by
+//! falling back to the native backend (and the PJRT integration tests
+//! self-skip when artifacts are absent).
+//!
+//! To run the AOT artifacts for real, point the `xla` dependency in
+//! `rust/Cargo.toml` at the actual xla-rs crate with `xla_extension`
+//! installed; this stub is call-compatible with the subset used.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (converts into `anyhow::Error` through `?`).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT unavailable (stub `xla` crate; swap rust/vendor/xla \
+         for the real xla-rs + xla_extension to run AOT artifacts)"
+    )))
+}
+
+/// Host-side literal: enough structure to build inputs; execution never
+/// happens in the stub, so conversions only need to typecheck.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn scalar(v: f32) -> Literal {
+        Literal { data: vec![v], dims: vec![] }
+    }
+
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+
+    pub fn to_vec<T: FromF32>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+}
+
+/// Element conversion for [`Literal::to_vec`].
+pub trait FromF32 {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl FromF32 for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+impl FromF32 for f64 {
+    fn from_f32(v: f32) -> Self {
+        v as f64
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Always fails in the stub — no PJRT plugin is linked.
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{e}").contains("unavailable"));
+    }
+
+    #[test]
+    fn literals_are_buildable() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(Literal::vec1(&[1.0]).reshape(&[3]).is_err());
+        let _ = Literal::scalar(0.5);
+    }
+}
