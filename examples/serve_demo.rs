@@ -45,7 +45,13 @@ fn main() -> srds::Result<()> {
         let addr = addr.clone();
         let model = model.to_string();
         std::thread::spawn(move || {
-            let _ = serve(ServeConfig { addr, workers, model_name: model, factory });
+            let _ = serve(ServeConfig {
+                addr,
+                workers,
+                model_name: model,
+                factory,
+                batch: srds::batching::BatchPolicy::default(),
+            });
         });
     }
     let mut stream = None;

@@ -1,0 +1,82 @@
+//! Serving-throughput bench for the multi-tenant engine: closed-loop
+//! concurrent clients hammering one shared `exec::engine` pool, at 1, 4
+//! and 16 clients. Reports requests/sec and the engine's mean batch
+//! occupancy per level, as one JSON line — the serving number the perf
+//! trajectory tracks (occupancy > 1.0 at the concurrent levels means
+//! cross-request step fusion is actually happening).
+//!
+//! `cargo bench --bench serving`
+
+use srds::batching::BatchPolicy;
+use srds::coordinator::{prior_sample, SamplerSpec};
+use srds::data::make_gmm;
+use srds::exec::{Engine, EngineConfig, NativeFactory};
+use srds::json::{self, Value};
+use srds::model::{EpsModel, GmmEps};
+use srds::solvers::Solver;
+use srds::workload::{generate_trace, percentile, ThroughputPoint, TraceConfig};
+use std::sync::Arc;
+use std::time::Instant;
+
+const WORKERS: usize = 2;
+const PER_CLIENT: usize = 8;
+const N_STEPS: usize = 25;
+
+fn main() {
+    let model: Arc<dyn EpsModel> = Arc::new(GmmEps::new(make_gmm("church")));
+    let mut points = Vec::new();
+    for clients in [1usize, 4, 16] {
+        // Fresh engine per level so occupancy reflects this level only.
+        let engine = Arc::new(Engine::new(
+            Arc::new(NativeFactory::new(model.clone(), Solver::Ddim)),
+            EngineConfig { workers: WORKERS, batch: BatchPolicy::default() },
+        ));
+        let trace = generate_trace(&TraceConfig {
+            rate_hz: 1000.0,
+            num_requests: clients * PER_CLIENT,
+            n_steps: N_STEPS,
+            num_classes: 1,
+            seed: 11,
+        });
+        let t0 = Instant::now();
+        let mut threads = Vec::new();
+        for c in 0..clients {
+            let engine = engine.clone();
+            let reqs: Vec<_> = trace[c * PER_CLIENT..(c + 1) * PER_CLIENT].to_vec();
+            threads.push(std::thread::spawn(move || {
+                let mut lat_ms = Vec::with_capacity(reqs.len());
+                for r in reqs {
+                    let x0 = prior_sample(engine.dim(), r.seed);
+                    let spec = SamplerSpec::srds(r.n).with_tol(1e-4).with_seed(r.seed);
+                    let t = Instant::now();
+                    let out = engine.run_srds(&x0, &spec);
+                    assert!(out.sample.iter().all(|v| v.is_finite()));
+                    lat_ms.push(t.elapsed().as_secs_f64() * 1000.0);
+                }
+                lat_ms
+            }));
+        }
+        let mut lat_ms: Vec<f64> =
+            threads.into_iter().flat_map(|t| t.join().unwrap()).collect();
+        let wall_s = t0.elapsed().as_secs_f64();
+        lat_ms.sort_by(f64::total_cmp);
+        let st = engine.stats();
+        points.push(ThroughputPoint {
+            clients,
+            requests: clients * PER_CLIENT,
+            wall_s,
+            mean_batch_occupancy: st.mean_occupancy,
+            p50_ms: percentile(&lat_ms, 0.5),
+            p95_ms: percentile(&lat_ms, 0.95),
+        });
+    }
+    let report = json::obj(vec![
+        ("bench", Value::Str("serving_throughput".into())),
+        ("model", Value::Str("gmm_church".into())),
+        ("sampler", Value::Str("srds".into())),
+        ("n", Value::Num(N_STEPS as f64)),
+        ("workers", Value::Num(WORKERS as f64)),
+        ("points", Value::Arr(points.iter().map(|p| p.to_json()).collect())),
+    ]);
+    println!("{}", json::to_string(&report));
+}

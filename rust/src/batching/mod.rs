@@ -35,7 +35,25 @@ pub struct BatchPolicy {
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { buckets: vec![32, 8, 1], max_wait: Duration::from_millis(2), max_queue: 1024 }
+        // A full power-of-two ladder rather than the sparse {32, 8, 1}:
+        // with bucket-preferring drains (see [`Batcher::take_batch`]) a
+        // finer ladder wastes less padding and lets the engine size
+        // batches close to whatever is actually pending.
+        BatchPolicy {
+            buckets: vec![32, 16, 8, 4, 2, 1],
+            max_wait: Duration::from_millis(2),
+            max_queue: 1024,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// Policy for the measured executor: flush immediately (never hold a
+    /// row hoping for co-tenants) and never refuse a push — the engine's
+    /// dispatcher is the only producer, so back-pressure belongs at the
+    /// admission layer above it, not here.
+    pub fn immediate() -> Self {
+        BatchPolicy { max_wait: Duration::ZERO, max_queue: usize::MAX, ..Self::default() }
     }
 }
 
@@ -43,6 +61,10 @@ impl Default for BatchPolicy {
 pub struct Batcher {
     policy: BatchPolicy,
     queue: Vec<PendingRow>,
+    /// Length of the critical-path head region: rows `[0, urgent)` were
+    /// pushed via [`Self::push_urgent`] and drain before normal rows,
+    /// FIFO among themselves.
+    urgent: usize,
     oldest: Option<Instant>,
     /// Flush statistics: (batches, rows, padded_rows).
     pub flushed_batches: u64,
@@ -51,7 +73,14 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
-        Batcher { policy, queue: Vec::new(), oldest: None, flushed_batches: 0, flushed_rows: 0 }
+        Batcher {
+            policy,
+            queue: Vec::new(),
+            urgent: 0,
+            oldest: None,
+            flushed_batches: 0,
+            flushed_rows: 0,
+        }
     }
 
     /// Push a row; returns `false` (back-pressure) when the queue is full.
@@ -64,6 +93,49 @@ impl Batcher {
         }
         self.queue.push(row);
         true
+    }
+
+    /// Push a critical-path row into the queue's *urgent head region* so
+    /// it drains before every normal row (FIFO among urgent rows). The
+    /// engine marks SRDS coarse steps urgent: the G chain is the serial
+    /// spine of the schedule (Prop. 2), and speculative fine work queued
+    /// earlier must not delay it — the FIFO-queue analogue of the old
+    /// worker pool's priority heap.
+    pub fn push_urgent(&mut self, row: PendingRow) -> bool {
+        if self.queue.len() >= self.policy.max_queue {
+            return false;
+        }
+        if self.queue.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.queue.insert(self.urgent, row);
+        self.urgent += 1;
+        true
+    }
+
+    /// Remove every queued row failing `keep` (dead-request purge) and
+    /// return the removed rows, preserving order among the kept ones.
+    pub fn purge<F: FnMut(&PendingRow) -> bool>(&mut self, mut keep: F) -> Vec<PendingRow> {
+        let urgent_was = self.urgent;
+        let mut removed = Vec::new();
+        let mut kept = Vec::with_capacity(self.queue.len());
+        let mut kept_urgent = 0usize;
+        for (idx, r) in self.queue.drain(..).enumerate() {
+            if keep(&r) {
+                if idx < urgent_was {
+                    kept_urgent += 1;
+                }
+                kept.push(r);
+            } else {
+                removed.push(r);
+            }
+        }
+        self.queue = kept;
+        self.urgent = kept_urgent;
+        if self.queue.is_empty() {
+            self.oldest = None;
+        }
+        removed
     }
 
     pub fn pending(&self) -> usize {
@@ -86,15 +158,40 @@ impl Batcher {
         }
     }
 
-    /// Remove and return the next batch (rows in FIFO order), up to the
-    /// largest bucket; sub-bucket remainders are padded downstream by the
-    /// runtime's bucket plan.
+    /// Remove and return the next batch (rows in FIFO order), honoring
+    /// the descending `buckets` preference list: the largest bucket that
+    /// the pending rows can *fill completely* wins. When even the
+    /// smallest bucket cannot be filled (the timeout-flush case), every
+    /// pending row is drained — a sub-bucket remainder that the runtime's
+    /// bucket plan pads up to the smallest compiled size.
     pub fn take_batch(&mut self) -> Vec<PendingRow> {
-        let take = self.queue.len().min(self.max_bucket());
+        self.take_up_to(usize::MAX)
+    }
+
+    /// [`Self::take_batch`] with an additional caller-imposed cap on the
+    /// batch size. The engine uses this to *spread* rows across idle
+    /// workers instead of fusing everything onto one: the cap is
+    /// `ceil(pending / idle_workers)` there, so fusion only grows once
+    /// every worker already has work.
+    pub fn take_up_to(&mut self, cap: usize) -> Vec<PendingRow> {
+        let avail = self.queue.len().min(cap);
+        let take = self
+            .policy
+            .buckets
+            .iter()
+            .copied()
+            .filter(|&b| b <= avail)
+            .max()
+            // No bucket fits under `avail`: drain it whole (it is below
+            // the smallest bucket, so downstream pads it up to one).
+            .unwrap_or(avail);
         let batch: Vec<PendingRow> = self.queue.drain(..take).collect();
+        self.urgent = self.urgent.saturating_sub(take);
         self.oldest = if self.queue.is_empty() { None } else { Some(Instant::now()) };
-        self.flushed_batches += 1;
-        self.flushed_rows += batch.len() as u64;
+        if !batch.is_empty() {
+            self.flushed_batches += 1;
+            self.flushed_rows += batch.len() as u64;
+        }
         batch
     }
 }
@@ -201,7 +298,13 @@ mod tests {
 
     #[test]
     fn fifo_order_preserved() {
-        let mut b = Batcher::new(Batcher::new(BatchPolicy::default()).policy.clone());
+        // A single bucket of 4: three pending rows drain whole (timeout
+        // fallback) and in push order.
+        let mut b = Batcher::new(BatchPolicy {
+            buckets: vec![4],
+            max_wait: Duration::from_millis(1),
+            max_queue: 100,
+        });
         for i in 0..3 {
             b.push(row(i));
         }
@@ -209,5 +312,114 @@ mod tests {
         let batch = b.take_batch();
         let tags: Vec<u64> = batch.iter().map(|r| r.tag).collect();
         assert_eq!(tags, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn take_batch_prefers_largest_fitting_bucket() {
+        // 11 pending over {8, 4, 2}: 8 is the largest completely-fillable
+        // bucket — not 11 rows, and not the max bucket unconditionally.
+        let mut b = Batcher::new(BatchPolicy {
+            buckets: vec![8, 4, 2],
+            max_wait: Duration::from_secs(10),
+            max_queue: 100,
+        });
+        for i in 0..11 {
+            b.push(row(i));
+        }
+        assert_eq!(b.take_batch().len(), 8);
+        // 3 left: only the 2-bucket fits.
+        assert_eq!(b.take_batch().len(), 2);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn timeout_flush_falls_back_below_smallest_bucket() {
+        // 3 pending rows, smallest bucket 4: nothing fills a bucket, so a
+        // timeout flush drains all 3 (padded downstream to the 4-bucket)
+        // instead of starving the queue head forever.
+        let mut b = Batcher::new(BatchPolicy {
+            buckets: vec![8, 4],
+            max_wait: Duration::from_millis(1),
+            max_queue: 100,
+        });
+        for i in 0..3 {
+            b.push(row(i));
+        }
+        assert!(!b.should_flush(), "no full bucket yet");
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.should_flush(), "max_wait expired");
+        assert_eq!(b.take_batch().len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn urgent_rows_jump_the_queue_fifo_among_themselves() {
+        let mut b = Batcher::new(BatchPolicy {
+            buckets: vec![4, 2, 1],
+            max_wait: Duration::from_secs(10),
+            max_queue: 4,
+        });
+        assert!(b.push(row(1)));
+        assert!(b.push(row(2)));
+        // Two urgent rows: both jump the normal rows, and keep their own
+        // submission order (8 before 9) — no LIFO inversion.
+        assert!(b.push_urgent(row(8)));
+        assert!(b.push_urgent(row(9)));
+        let batch = b.take_batch();
+        let tags: Vec<u64> = batch.iter().map(|r| r.tag).collect();
+        assert_eq!(tags, vec![8, 9, 1, 2], "urgent head region first, FIFO within");
+        // Back-pressure applies to urgent rows too.
+        for i in 3..7 {
+            assert!(b.push(row(i)));
+        }
+        assert!(!b.push_urgent(row(99)), "full queue refuses urgent rows as well");
+        // Draining past the urgent region resets it: later normal pushes
+        // are not mistaken for urgent rows.
+        assert_eq!(b.take_batch().len(), 4);
+        assert!(b.push_urgent(row(42)));
+        assert_eq!(b.take_batch().first().unwrap().tag, 42);
+    }
+
+    #[test]
+    fn purge_removes_matching_rows_and_returns_them() {
+        let mut b = Batcher::new(BatchPolicy {
+            buckets: vec![8],
+            max_wait: Duration::from_millis(1),
+            max_queue: 100,
+        });
+        for i in 0..5 {
+            b.push(row(i));
+        }
+        let dead = b.purge(|r| r.tag % 2 == 0);
+        let dead_tags: Vec<u64> = dead.iter().map(|r| r.tag).collect();
+        assert_eq!(dead_tags, vec![1, 3]);
+        assert_eq!(b.pending(), 3);
+        // Purging everything clears the max-wait clock.
+        let dead = b.purge(|_| false);
+        assert_eq!(dead.len(), 3);
+        assert_eq!(b.pending(), 0);
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(!b.should_flush(), "empty batcher after purge must not flush");
+    }
+
+    #[test]
+    fn take_up_to_caps_then_bucket_quantizes() {
+        let mut b = Batcher::new(BatchPolicy {
+            buckets: vec![8, 4, 2, 1],
+            max_wait: Duration::from_secs(10),
+            max_queue: 100,
+        });
+        for i in 0..10 {
+            b.push(row(i));
+        }
+        // Cap 3 → largest bucket ≤ 3 is 2.
+        assert_eq!(b.take_up_to(3).len(), 2);
+        // Cap larger than pending → plain bucket preference over pending.
+        assert_eq!(b.take_up_to(100).len(), 8);
+        assert_eq!(b.pending(), 0);
+        // Draining an empty queue is not a flushed batch.
+        let before = b.flushed_batches;
+        assert!(b.take_up_to(4).is_empty());
+        assert_eq!(b.flushed_batches, before);
     }
 }

@@ -113,6 +113,8 @@ pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> S
         // The window of live trajectory states plus the window anchor —
         // the O(window) memory of the §3.6 comparison.
         peak_states: window.min(n) + 1,
+        batch_occupancy: 0.0,
+        engine_rows: 0,
         per_iter,
     };
     SampleOutput { sample: x[n].clone(), stats, iterates }

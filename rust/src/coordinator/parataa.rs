@@ -184,6 +184,8 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sam
         // Whole-trajectory iterate, its T-image, the residual, and the
         // Anderson history pairs — the O(N·history) memory of §3.6.
         peak_states: (n + 1) * (3 + 2 * history),
+        batch_occupancy: 0.0,
+        engine_rows: 0,
         per_iter,
     };
     SampleOutput { sample: x[n * d..].to_vec(), stats, iterates }

@@ -39,6 +39,8 @@ pub fn sequential(
         total_evals: n as u64 * epc,
         wall: t0.elapsed(),
         peak_states: 1,
+        batch_occupancy: 0.0,
+        engine_rows: 0,
         per_iter: vec![],
     };
     (x, stats)

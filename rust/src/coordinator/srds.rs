@@ -197,6 +197,8 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sample
         // Boundary states x (M+1), previous coarse results (M+1), and
         // the fine solves (M) — 3M+2 states, the O(√N) memory of §3.6.
         peak_states: 3 * m + 2,
+        batch_occupancy: 0.0,
+        engine_rows: 0,
         per_iter,
     };
     SampleOutput { sample: x.pop().unwrap(), stats, iterates }

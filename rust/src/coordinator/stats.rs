@@ -44,6 +44,13 @@ pub struct RunStats {
     /// the paper's §3.6 memory comparison (O(√N) for SRDS vs O(window)
     /// for ParaDiGMS vs O(N·history) for ParaTAA; 1 for sequential).
     pub peak_states: usize,
+    /// Mean rows per multi-tenant-engine batch that this run's step rows
+    /// rode in (`crate::exec::engine`); > 1.0 means the run's steps were
+    /// fused with other step work (its own or co-tenant requests'). 0
+    /// when the run did not execute on the engine.
+    pub batch_occupancy: f64,
+    /// Step rows this run contributed to the engine (0 off-engine).
+    pub engine_rows: u64,
     /// Per-iteration details.
     pub per_iter: Vec<IterStat>,
 }

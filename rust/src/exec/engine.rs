@@ -1,0 +1,1054 @@
+//! Multi-tenant step-level execution engine.
+//!
+//! Generalizes the pipelined-SRDS dispatcher of Fig. 4 (previously a
+//! one-request-at-a-time loop in `exec::measured`) so **many concurrent
+//! sampling requests share one worker pool**: every fine/coarse solver
+//! step any request needs becomes a [`PendingRow`], rows are coalesced
+//! by [`Batcher`] into multi-row [`StepRequest`] batches, and workers
+//! execute whole batches in one backend call — the cross-request face of
+//! the paper's §3.4 batched-inference observation (one model evaluation
+//! serves rows from *different* users, not just different blocks of one
+//! trajectory).
+//!
+//! Two entry paths share the pool:
+//!
+//! * [`Engine::run_srds`] / [`Engine::submit_srds`] — SRDS requests run
+//!   as dependency-driven state machines *inside* the dispatcher thread
+//!   (the direct generalization of `measured_pipelined_srds`): a fine
+//!   block solve is a chain of single-step rows, a coarse step is one
+//!   row, and each completion unblocks exactly the O(1) cells it can.
+//! * [`Engine::backend`] — an adapter [`StepBackend`] for everything
+//!   else (sequential / ParaDiGMS / ParaTAA registry entries): the
+//!   sampler runs unchanged on its own thread, but every `step()` call
+//!   is decomposed into rows and funneled through the same batchers, so
+//!   baseline traffic fuses with SRDS traffic too.
+//!
+//! **Flush policy** (vLLM-style, adapted to a CPU/PJRT pool): the
+//! dispatcher is *work-conserving with spread-first sizing* — a row
+//! never waits while enough workers are idle. With `I` idle workers and
+//! `P` pending rows it dispatches batches of `ceil(P / I)` rows
+//! (bucket-quantized by [`Batcher::take_up_to`]), so a lone request's
+//! independent rows still fan out across the pool, while under load —
+//! all workers busy — rows accumulate and flush as large fused batches
+//! the moment a worker frees up. When *fewer rows than idle workers*
+//! are pending and work is already in flight, the dispatcher may hold
+//! them up to `BatchPolicy::max_wait` hoping co-tenant rows arrive
+//! (`max_wait == 0` disables holding entirely — the measured executor's
+//! configuration). SRDS coarse rows enter their batcher at the head
+//! ([`Batcher::push_urgent`]): the G chain is the schedule's serial
+//! spine (Prop. 2), and speculative fine work must not delay it — the
+//! FIFO analogue of the old worker pool's critical-path priority heap.
+//!
+//! **Invariant (pinned by tests):** a request's output is identical to a
+//! solo vanilla [`crate::coordinator::srds`] run with the same spec and
+//! seed, regardless of what else is in flight — every backend computes
+//! batch rows independently, so fusing a row with strangers never
+//! changes its value.
+
+use crate::batching::{Batcher, BatchPolicy, PendingRow};
+use crate::coordinator::{IterStat, RunStats, SampleOutput, SamplerSpec};
+use crate::schedule::Partition;
+use crate::solvers::{BackendFactory, Solver, StepBackend, StepRequest};
+use std::cell::Cell;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Engine construction knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads (one thread-bound backend instance each).
+    pub workers: usize,
+    /// Cross-request batch assembly policy.
+    pub batch: BatchPolicy,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { workers: 4, batch: BatchPolicy::default() }
+    }
+}
+
+/// Rows may only share a [`StepRequest`] when the request-wide scalar
+/// fields agree: one guidance weight and one mask shape per batch.
+type BatchKey = (u32, bool, usize);
+
+fn batch_key(row: &PendingRow) -> BatchKey {
+    (
+        row.guidance.to_bits(),
+        row.mask.is_some(),
+        row.mask.as_ref().map(|m| m.len()).unwrap_or(0),
+    )
+}
+
+/// Where a completed row's output must be routed.
+enum RowOrigin {
+    /// Engine-resident SRDS state machine: request id + (p, i, is_fine).
+    Srds { req: u64, key: (usize, usize, bool) },
+    /// Blocking adapter call: call id + row slot within the call.
+    Call { call: u64, slot: usize },
+}
+
+enum Msg {
+    Srds { x0: Vec<f32>, spec: SamplerSpec, reply: Sender<SampleOutput> },
+    Call { rows: Vec<PendingRow>, reply: Sender<(usize, Vec<f32>, usize)> },
+    BatchDone { outs: Vec<(u64, Vec<f32>)> },
+    Shutdown,
+}
+
+/// One batch handed to a worker. Tags are engine row ids.
+struct ExecBatch {
+    rows: Vec<PendingRow>,
+}
+
+#[derive(Default)]
+struct WorkState {
+    queue: VecDeque<ExecBatch>,
+    closed: bool,
+}
+
+type WorkQueue = (Mutex<WorkState>, Condvar);
+
+/// Aggregate engine counters, published by the dispatcher.
+#[derive(Debug, Clone, Copy, Default)]
+struct Counters {
+    flushed_batches: u64,
+    flushed_rows: u64,
+    queue_depth: usize,
+    inflight_requests: usize,
+}
+
+/// A point-in-time view of the engine's batching behavior.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineStats {
+    /// Batches dispatched to workers since engine start.
+    pub flushed_batches: u64,
+    /// Rows those batches carried.
+    pub flushed_rows: u64,
+    /// `flushed_rows / flushed_batches` — > 1.0 means step fusion is
+    /// actually happening.
+    pub mean_occupancy: f64,
+    /// Rows currently waiting in the batchers.
+    pub queue_depth: usize,
+    /// Requests (SRDS tasks + blocked adapter calls) currently open.
+    pub inflight_requests: usize,
+    /// Pool size.
+    pub workers: usize,
+}
+
+/// The multi-tenant execution engine. See the module docs.
+pub struct Engine {
+    tx: Mutex<Sender<Msg>>,
+    counters: Arc<Mutex<Counters>>,
+    dim: usize,
+    solver: Solver,
+    workers: usize,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    worker_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Spawn the dispatcher plus `cfg.workers` worker threads; each
+    /// worker calls `factory.create()` locally (PJRT clients are
+    /// `Rc`-based and cannot cross threads).
+    pub fn new(factory: Arc<dyn BackendFactory>, cfg: EngineConfig) -> Engine {
+        let workers = cfg.workers.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let work: Arc<WorkQueue> = Arc::new((Mutex::new(WorkState::default()), Condvar::new()));
+        let counters = Arc::new(Mutex::new(Counters::default()));
+        let mut worker_handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let work = work.clone();
+            let factory = factory.clone();
+            let done_tx = tx.clone();
+            worker_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("srds-engine-worker-{w}"))
+                    .spawn(move || {
+                        let backend = factory.create();
+                        worker_loop(backend.as_ref(), &work, &done_tx);
+                    })
+                    .expect("spawn engine worker"),
+            );
+        }
+        let dim = factory.dim();
+        let solver = factory.solver();
+        let epc = solver.evals_per_step() as u64;
+        let d_work = work.clone();
+        let d_counters = counters.clone();
+        // The dispatcher is the only producer into its batchers, so the
+        // queue cap is not a back-pressure point here (admission control
+        // belongs above the engine); an overflow would tear down every
+        // tenant at once, so disable it.
+        let mut policy = cfg.batch.clone();
+        policy.max_queue = usize::MAX;
+        let dispatcher = std::thread::Builder::new()
+            .name("srds-engine-dispatcher".into())
+            .spawn(move || {
+                Dispatcher::new(rx, d_work, d_counters, workers, policy, epc).run();
+            })
+            .expect("spawn engine dispatcher");
+        Engine {
+            tx: Mutex::new(tx),
+            counters,
+            dim,
+            solver,
+            workers,
+            dispatcher: Some(dispatcher),
+            worker_handles,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn solver(&self) -> Solver {
+        self.solver
+    }
+
+    fn send(&self, msg: Msg) {
+        self.tx.lock().unwrap().send(msg).expect("engine dispatcher alive");
+    }
+
+    /// Queue an SRDS request; the returned channel yields its
+    /// [`SampleOutput`] when the state machine finishes.
+    pub fn submit_srds(&self, x0: Vec<f32>, spec: SamplerSpec) -> Receiver<SampleOutput> {
+        let (reply, rx) = channel();
+        self.send(Msg::Srds { x0, spec, reply });
+        rx
+    }
+
+    /// Run one SRDS request to completion (blocking). Other requests may
+    /// be in flight concurrently; per-request output is unaffected.
+    pub fn run_srds(&self, x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
+        self.submit_srds(x0.to_vec(), spec.clone())
+            .recv()
+            .expect("engine dropped mid-request")
+    }
+
+    /// A [`StepBackend`] whose every `step()` is decomposed into rows
+    /// and batched with whatever else the engine is running. One handle
+    /// per request thread; not `Sync`.
+    pub fn backend(&self) -> EngineBackend {
+        EngineBackend {
+            tx: self.tx.lock().unwrap().clone(),
+            dim: self.dim,
+            solver: self.solver,
+            rows_done: Cell::new(0),
+            occ_sum: Cell::new(0),
+        }
+    }
+
+    /// Snapshot the engine counters.
+    pub fn stats(&self) -> EngineStats {
+        let c = *self.counters.lock().unwrap();
+        EngineStats {
+            flushed_batches: c.flushed_batches,
+            flushed_rows: c.flushed_rows,
+            mean_occupancy: c.flushed_rows as f64 / c.flushed_batches.max(1) as f64,
+            queue_depth: c.queue_depth,
+            inflight_requests: c.inflight_requests,
+            workers: self.workers,
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Msg::Shutdown);
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Adapter backend: decomposes each [`StepRequest`] into engine rows and
+/// blocks until all of them complete. Tracks the batch occupancy its
+/// rows observed so serving can report per-request fusion.
+pub struct EngineBackend {
+    tx: Sender<Msg>,
+    dim: usize,
+    solver: Solver,
+    rows_done: Cell<u64>,
+    occ_sum: Cell<u64>,
+}
+
+impl EngineBackend {
+    /// `(rows executed, mean batch occupancy)` over this handle's calls.
+    pub fn occupancy(&self) -> (u64, f64) {
+        let rows = self.rows_done.get();
+        (rows, self.occ_sum.get() as f64 / rows.max(1) as f64)
+    }
+}
+
+impl StepBackend for EngineBackend {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn solver(&self) -> Solver {
+        self.solver
+    }
+
+    fn step(&self, req: &StepRequest) -> Vec<f32> {
+        let b = req.rows();
+        let d = self.dim;
+        let mask_k = req.mask.map(|m| m.len() / b);
+        let rows: Vec<PendingRow> = (0..b)
+            .map(|i| PendingRow {
+                tag: i as u64,
+                x: req.x[i * d..(i + 1) * d].to_vec(),
+                s_from: req.s_from[i],
+                s_to: req.s_to[i],
+                mask: req.mask.map(|m| {
+                    let k = mask_k.unwrap();
+                    m[i * k..(i + 1) * k].to_vec()
+                }),
+                guidance: req.guidance,
+                seed: req.seeds[i],
+            })
+            .collect();
+        let (reply, rx) = channel();
+        self.tx.send(Msg::Call { rows, reply }).expect("engine dispatcher alive");
+        let mut out = vec![0.0f32; b * d];
+        for _ in 0..b {
+            let (slot, y, batch_rows) = rx.recv().expect("engine dropped mid-call");
+            out[slot * d..(slot + 1) * d].copy_from_slice(&y);
+            self.rows_done.set(self.rows_done.get() + 1);
+            self.occ_sum.set(self.occ_sum.get() + batch_rows as u64);
+        }
+        out
+    }
+}
+
+fn worker_loop(backend: &dyn StepBackend, work: &WorkQueue, done_tx: &Sender<Msg>) {
+    let d = backend.dim();
+    loop {
+        let batch = {
+            let (lock, cv) = work;
+            let mut st = lock.lock().unwrap();
+            loop {
+                if let Some(b) = st.queue.pop_front() {
+                    break Some(b);
+                }
+                if st.closed {
+                    break None;
+                }
+                st = cv.wait(st).unwrap();
+            }
+        };
+        let Some(batch) = batch else { break };
+        let n = batch.rows.len();
+        let mut x = Vec::with_capacity(n * d);
+        let mut s_from = Vec::with_capacity(n);
+        let mut s_to = Vec::with_capacity(n);
+        let mut seeds = Vec::with_capacity(n);
+        let mut mask: Option<Vec<f32>> =
+            batch.rows[0].mask.as_ref().map(|m| Vec::with_capacity(n * m.len()));
+        let guidance = batch.rows[0].guidance;
+        for r in &batch.rows {
+            x.extend_from_slice(&r.x);
+            s_from.push(r.s_from);
+            s_to.push(r.s_to);
+            seeds.push(r.seed);
+            if let (Some(acc), Some(m)) = (mask.as_mut(), r.mask.as_ref()) {
+                acc.extend_from_slice(m);
+            }
+        }
+        let out = backend.step(&StepRequest {
+            x: &x,
+            s_from: &s_from,
+            s_to: &s_to,
+            mask: mask.as_deref(),
+            guidance,
+            seeds: &seeds,
+        });
+        let outs = batch
+            .rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (r.tag, out[i * d..(i + 1) * d].to_vec()))
+            .collect();
+        if done_tx.send(Msg::BatchDone { outs }).is_err() {
+            break;
+        }
+    }
+}
+
+/// A fine block solve in flight: the chain of single-step rows walking
+/// `points`. `next` is the window index of the row currently queued or
+/// executing.
+struct FineChain {
+    points: Vec<f32>,
+    next: usize,
+}
+
+/// A step to enqueue, produced by a task while it holds `&mut self`
+/// (rows are materialized into the batchers afterwards, avoiding a
+/// simultaneous borrow of the task map and the batcher map).
+struct Emit {
+    key: (usize, usize, bool),
+    x: Vec<f32>,
+    s_from: f32,
+    s_to: f32,
+}
+
+/// Dependency-driven SRDS state machine for one request — the Fig. 4
+/// pipelined dataflow of `measured_pipelined_srds`, re-expressed as
+/// event handlers so the dispatcher can interleave many of them.
+struct SrdsTask {
+    spec: SamplerSpec,
+    part: Partition,
+    m: usize,
+    max_iters: usize,
+    x: Vec<Vec<Option<Vec<f32>>>>,
+    g: Vec<Vec<Option<Vec<f32>>>>,
+    y: Vec<Vec<Option<Vec<f32>>>>,
+    submitted: Vec<Vec<[bool; 2]>>,
+    fines: HashMap<(usize, usize), FineChain>,
+    per_iter: Vec<IterStat>,
+    stop_at_iter: Option<usize>,
+    inflight_rows: usize,
+    total_evals: u64,
+    rows_done: u64,
+    occ_sum: u64,
+    t0: Instant,
+    reply: Sender<SampleOutput>,
+}
+
+impl SrdsTask {
+    fn new(x0: &[f32], spec: SamplerSpec, reply: Sender<SampleOutput>) -> (SrdsTask, Vec<Emit>) {
+        let part = spec.partition();
+        let m = part.num_blocks();
+        let max_iters = spec.max_iters.unwrap_or(m).max(1).min(m);
+        let mut task = SrdsTask {
+            spec,
+            part,
+            m,
+            max_iters,
+            x: vec![vec![None; m + 1]; max_iters + 1],
+            g: vec![vec![None; m + 1]; max_iters + 1],
+            y: vec![vec![None; m + 1]; max_iters + 1],
+            submitted: vec![vec![[false; 2]; m + 1]; max_iters + 1],
+            fines: HashMap::new(),
+            per_iter: Vec::new(),
+            stop_at_iter: None,
+            inflight_rows: 0,
+            total_evals: 0,
+            rows_done: 0,
+            occ_sum: 0,
+            t0: Instant::now(),
+            reply,
+        };
+        // Seed the prior states and kick off everything x0 unblocks:
+        // G(p, 1) for every p (their input never changes) and F(p, 1) for
+        // every refinement (its input x^{p-1}_0 = x0 is already final).
+        let mut emits = Vec::new();
+        for p in 0..=task.max_iters {
+            task.x[p][0] = Some(x0.to_vec());
+        }
+        for p in 0..=task.max_iters {
+            task.submitted[p][1][0] = true;
+            emits.push(task.emit_coarse(p, 1, x0.to_vec()));
+            if p >= 1 {
+                task.submitted[p][1][1] = true;
+                emits.push(task.emit_fine_start(p, 1, x0.to_vec()));
+            }
+        }
+        (task, emits)
+    }
+
+    fn emit_coarse(&mut self, p: usize, i: usize, x: Vec<f32>) -> Emit {
+        self.inflight_rows += 1;
+        Emit {
+            key: (p, i, false),
+            x,
+            s_from: self.part.s_bound(i - 1),
+            s_to: self.part.s_bound(i),
+        }
+    }
+
+    fn emit_fine_start(&mut self, p: usize, i: usize, x: Vec<f32>) -> Emit {
+        let points = self.part.block_points(i - 1).to_vec();
+        let (s_from, s_to) = (points[0], points[1]);
+        self.fines.insert((p, i), FineChain { points, next: 0 });
+        self.inflight_rows += 1;
+        Emit { key: (p, i, true), x, s_from, s_to }
+    }
+
+    /// Handle one completed row; returns follow-up rows to enqueue.
+    /// `epc` is the backend's evals per step.
+    fn on_row(
+        &mut self,
+        key: (usize, usize, bool),
+        out: Vec<f32>,
+        batch_rows: usize,
+        epc: u64,
+    ) -> Vec<Emit> {
+        self.inflight_rows -= 1;
+        self.total_evals += epc;
+        self.rows_done += 1;
+        self.occ_sum += batch_rows as u64;
+        let (p, i, is_fine) = key;
+        let mut emits = Vec::new();
+        if is_fine {
+            let chain = self.fines.get_mut(&(p, i)).expect("live fine chain");
+            let last_window = chain.points.len() - 2;
+            if chain.next < last_window {
+                chain.next += 1;
+                let (s_from, s_to) = (chain.points[chain.next], chain.points[chain.next + 1]);
+                self.inflight_rows += 1;
+                emits.push(Emit { key, x: out, s_from, s_to });
+                return emits;
+            }
+            self.fines.remove(&(p, i));
+            self.y[p][i] = Some(out);
+        } else {
+            self.g[p][i] = Some(out);
+        }
+        // Corrector attempts unblocked by this result: cell (p, i) and —
+        // when a coarse result acts as `prev` — cell (p+1, i).
+        let mut attempts = vec![(p, i)];
+        if !is_fine && p + 1 <= self.max_iters {
+            attempts.push((p + 1, i));
+        }
+        let mut ready: Vec<(usize, usize)> = Vec::new();
+        for (ap, ai) in attempts {
+            if self.x[ap][ai].is_some() {
+                continue;
+            }
+            let materialized = if ap == 0 {
+                self.g[0][ai].clone()
+            } else if let (Some(yi), Some(cur), Some(prev)) =
+                (&self.y[ap][ai], &self.g[ap][ai], &self.g[ap - 1][ai])
+            {
+                // Eq. 6's parenthesization y + (G_new − G_old) is
+                // load-bearing for Prop. 1's bitwise collapse.
+                Some(yi.iter().zip(cur.iter().zip(prev)).map(|(a, (b, c))| a + (b - c)).collect())
+            } else {
+                None
+            };
+            if let Some(v) = materialized {
+                self.x[ap][ai] = Some(v);
+                ready.push((ap, ai));
+            }
+        }
+        // Propagate each new state to the jobs it unblocks.
+        while let Some((sp, si)) = ready.pop() {
+            let stop = self.stop_at_iter;
+            let past_stop = move |p: usize| stop.map(|s| p > s).unwrap_or(false);
+            if si + 1 <= self.m
+                && sp + 1 <= self.max_iters
+                && !self.submitted[sp + 1][si + 1][1]
+                && !past_stop(sp + 1)
+            {
+                self.submitted[sp + 1][si + 1][1] = true;
+                let x = self.x[sp][si].clone().unwrap();
+                emits.push(self.emit_fine_start(sp + 1, si + 1, x));
+            }
+            if si + 1 <= self.m && !self.submitted[sp][si + 1][0] && !past_stop(sp) {
+                self.submitted[sp][si + 1][0] = true;
+                let x = self.x[sp][si].clone().unwrap();
+                emits.push(self.emit_coarse(sp, si + 1, x));
+            }
+            // Convergence: strictly in iteration order (a later final
+            // state can exist before an earlier one).
+            if si == self.m {
+                while self.stop_at_iter.is_none() {
+                    let pp = self.per_iter.len() + 1;
+                    if pp > self.max_iters {
+                        break;
+                    }
+                    let (Some(curf), Some(prevf)) = (&self.x[pp][self.m], &self.x[pp - 1][self.m])
+                    else {
+                        break;
+                    };
+                    let residual = self.spec.norm.dist(curf, prevf);
+                    self.per_iter.push(IterStat { iter: pp, residual, evals: 0 });
+                    if residual < self.spec.tol || pp >= self.m {
+                        self.stop_at_iter = Some(pp);
+                    }
+                }
+            }
+        }
+        emits
+    }
+
+    /// Whether the request can produce its final answer now: either the
+    /// convergence test fired and the winning iterate exists, or no rows
+    /// remain in flight (the speculative frontier ran dry).
+    fn finished(&self) -> bool {
+        match self.stop_at_iter {
+            Some(s) => self.x[s][self.m].is_some(),
+            None => self.inflight_rows == 0,
+        }
+    }
+
+    fn finalize(self, epc: u64) {
+        let final_iter = self.stop_at_iter.unwrap_or_else(|| {
+            (1..=self.max_iters).rev().find(|&p| self.x[p][self.m].is_some()).unwrap_or(0)
+        });
+        let sample = self.x[final_iter][self.m].clone().expect("final state");
+        let converged = self
+            .per_iter
+            .iter()
+            .find(|s| s.iter == final_iter)
+            .map(|s| s.residual < self.spec.tol || final_iter >= self.m)
+            .unwrap_or(false);
+        let m = self.m as u64;
+        let b = self.part.block() as u64;
+        // Vanilla-schedule accounting, same formula as coordinator::srds:
+        // the coarse init sweep (M), then per iteration the longest fine
+        // block plus the sequential coarse sweep.
+        let b_max = (0..self.m).map(|j| self.part.block_len(j)).max().unwrap_or(0) as u64;
+        let iters = final_iter as u64;
+        let eff_serial = (m + iters * (b_max + m)) * epc;
+        let eff_pipelined =
+            if final_iter == 0 { m * epc } else { (m * iters + b).saturating_sub(iters) * epc };
+        let stats = RunStats {
+            iters: final_iter,
+            converged,
+            eff_serial_evals: eff_serial,
+            eff_serial_evals_pipelined: eff_pipelined,
+            total_evals: self.total_evals,
+            wall: self.t0.elapsed(),
+            // The dispatcher materializes the full (iterations × blocks)
+            // grid of x/G/F states — wall-clock-optimal, not
+            // memory-optimal.
+            peak_states: 3 * (self.max_iters + 1) * (self.m + 1),
+            batch_occupancy: self.occ_sum as f64 / self.rows_done.max(1) as f64,
+            engine_rows: self.rows_done,
+            per_iter: self.per_iter,
+        };
+        // A dropped receiver (client went away) is not an engine error.
+        let _ = self.reply.send(SampleOutput { sample, stats, iterates: vec![] });
+    }
+}
+
+struct CallTask {
+    reply: Sender<(usize, Vec<f32>, usize)>,
+    remaining: usize,
+}
+
+struct Dispatcher {
+    rx: Receiver<Msg>,
+    work: Arc<WorkQueue>,
+    counters: Arc<Mutex<Counters>>,
+    workers: usize,
+    policy: BatchPolicy,
+    epc: u64,
+    batchers: HashMap<BatchKey, Batcher>,
+    origins: HashMap<u64, RowOrigin>,
+    tasks: HashMap<u64, SrdsTask>,
+    calls: HashMap<u64, CallTask>,
+    next_row: u64,
+    next_id: u64,
+    in_flight: usize,
+    flushed_batches: u64,
+    flushed_rows: u64,
+}
+
+impl Dispatcher {
+    fn new(
+        rx: Receiver<Msg>,
+        work: Arc<WorkQueue>,
+        counters: Arc<Mutex<Counters>>,
+        workers: usize,
+        policy: BatchPolicy,
+        epc: u64,
+    ) -> Dispatcher {
+        Dispatcher {
+            rx,
+            work,
+            counters,
+            workers,
+            policy,
+            epc,
+            batchers: HashMap::new(),
+            origins: HashMap::new(),
+            tasks: HashMap::new(),
+            calls: HashMap::new(),
+            next_row: 0,
+            next_id: 0,
+            in_flight: 0,
+            flushed_batches: 0,
+            flushed_rows: 0,
+        }
+    }
+
+    fn run(mut self) {
+        loop {
+            // Park on the inbox. While rows are being held back (linger:
+            // idle capacity exists but we are waiting for co-tenants) the
+            // park is bounded so the max_wait flush fires on time.
+            let lingering =
+                self.in_flight < self.workers && self.batchers.values().any(|b| b.pending() > 0);
+            let msg = if lingering {
+                match self.rx.recv_timeout(self.policy.max_wait.max(Duration::from_micros(200))) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            } else {
+                match self.rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => break,
+                }
+            };
+            let mut shutdown = false;
+            if let Some(m) = msg {
+                shutdown = self.handle(m);
+                // Drain whatever else arrived before deciding batches —
+                // concurrent submitters' rows should co-batch.
+                while !shutdown {
+                    match self.rx.try_recv() {
+                        Ok(m) => shutdown = self.handle(m),
+                        Err(_) => break,
+                    }
+                }
+            }
+            if shutdown {
+                break;
+            }
+            self.flush();
+            self.publish();
+        }
+        // Close the worker queue; workers drain what is queued and exit.
+        let (lock, cv) = &*self.work;
+        lock.lock().unwrap().closed = true;
+        cv.notify_all();
+    }
+
+    /// Returns `true` on shutdown.
+    fn handle(&mut self, msg: Msg) -> bool {
+        match msg {
+            Msg::Shutdown => return true,
+            Msg::Srds { x0, spec, reply } => {
+                let id = self.next_id;
+                self.next_id += 1;
+                let (task, emits) = SrdsTask::new(&x0, spec, reply);
+                self.tasks.insert(id, task);
+                self.enqueue_srds_rows(id, emits);
+                self.maybe_finalize(id);
+            }
+            Msg::Call { rows, reply } => {
+                let id = self.next_id;
+                self.next_id += 1;
+                self.calls.insert(id, CallTask { reply, remaining: rows.len() });
+                for mut row in rows {
+                    let slot = row.tag as usize;
+                    row.tag = self.next_row;
+                    self.next_row += 1;
+                    self.origins.insert(row.tag, RowOrigin::Call { call: id, slot });
+                    self.push_row(row, false);
+                }
+            }
+            Msg::BatchDone { outs } => {
+                self.in_flight -= 1;
+                let batch_rows = outs.len();
+                let epc = self.epc;
+                for (tag, out) in outs {
+                    match self.origins.remove(&tag) {
+                        Some(RowOrigin::Srds { req, key }) => {
+                            let Some(task) = self.tasks.get_mut(&req) else { continue };
+                            let emits = task.on_row(key, out, batch_rows, epc);
+                            self.enqueue_srds_rows(req, emits);
+                            self.maybe_finalize(req);
+                        }
+                        Some(RowOrigin::Call { call, slot }) => {
+                            let Some(c) = self.calls.get_mut(&call) else { continue };
+                            c.remaining -= 1;
+                            let gone = c.reply.send((slot, out, batch_rows)).is_err();
+                            if gone || c.remaining == 0 {
+                                self.calls.remove(&call);
+                            }
+                        }
+                        // Row of a request that already finalized.
+                        None => {}
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    fn enqueue_srds_rows(&mut self, req: u64, emits: Vec<Emit>) {
+        // Borrow the task immutably for the shared row fields.
+        let (mask, guidance, seed) = {
+            let t = &self.tasks[&req];
+            (t.spec.cond.mask.clone(), t.spec.cond.guidance, t.spec.seed)
+        };
+        for e in emits {
+            let tag = self.next_row;
+            self.next_row += 1;
+            // Coarse steps are the schedule's serial spine (Prop. 2) —
+            // queue them ahead of speculative fine work.
+            let urgent = !e.key.2;
+            self.origins.insert(tag, RowOrigin::Srds { req, key: e.key });
+            self.push_row(
+                PendingRow {
+                    tag,
+                    x: e.x,
+                    s_from: e.s_from,
+                    s_to: e.s_to,
+                    mask: mask.clone(),
+                    guidance,
+                    seed,
+                },
+                urgent,
+            );
+        }
+    }
+
+    fn push_row(&mut self, row: PendingRow, urgent: bool) {
+        let key = batch_key(&row);
+        let batcher = self
+            .batchers
+            .entry(key)
+            .or_insert_with(|| Batcher::new(self.policy.clone()));
+        // The dispatcher is the only producer; queue overflow here means
+        // admission control above the engine failed, not a row to drop.
+        let pushed = if urgent { batcher.push_urgent(row) } else { batcher.push(row) };
+        assert!(pushed, "engine batcher overflow (raise BatchPolicy::max_queue)");
+    }
+
+    fn maybe_finalize(&mut self, req: u64) {
+        let done = self.tasks.get(&req).map(|t| t.finished()).unwrap_or(false);
+        if done {
+            if let Some(mut task) = self.tasks.remove(&req) {
+                // Eagerly purge this request's still-queued speculative
+                // rows — they will never run, and leaving them in place
+                // would inflate queue_depth and the spread-cap math until
+                // the lazy flush filter got to them.
+                let origins = &mut self.origins;
+                let mut queued = 0usize;
+                for b in self.batchers.values_mut() {
+                    let dead = b.purge(|r| {
+                        !matches!(origins.get(&r.tag),
+                                  Some(RowOrigin::Srds { req: rr, .. }) if *rr == req)
+                    });
+                    for row in dead {
+                        origins.remove(&row.tag);
+                        queued += 1;
+                    }
+                }
+                // Rows already handed to workers still execute and burn
+                // model evals; attribute them now (the old measured
+                // executor drained and counted them the same way). Their
+                // results are discarded on arrival via the origin map.
+                let executing = task.inflight_rows.saturating_sub(queued) as u64;
+                task.total_evals += executing * self.epc;
+                // Publish counters before the reply unblocks the caller,
+                // so a stats() read right after completion is current.
+                self.publish();
+                task.finalize(self.epc);
+            }
+        }
+    }
+
+    /// Work-conserving, spread-first flush. See the module docs.
+    fn flush(&mut self) {
+        loop {
+            let idle = self.workers.saturating_sub(self.in_flight);
+            if idle == 0 {
+                return;
+            }
+            let key = self.batchers.iter().find_map(|(k, b)| {
+                if b.pending() == 0 {
+                    return None;
+                }
+                let eager = self.in_flight == 0 || b.pending() >= idle || b.should_flush();
+                eager.then_some(*k)
+            });
+            let Some(key) = key else { return };
+            let batcher = self.batchers.get_mut(&key).unwrap();
+            let cap = batcher.pending().div_ceil(idle);
+            let mut rows = batcher.take_up_to(cap);
+            // Drop rows whose owner finished already (the lazy purge).
+            let (origins, tasks, calls) = (&mut self.origins, &self.tasks, &self.calls);
+            rows.retain(|r| {
+                let live = match origins.get(&r.tag) {
+                    Some(RowOrigin::Srds { req, .. }) => tasks.contains_key(req),
+                    Some(RowOrigin::Call { call, .. }) => calls.contains_key(call),
+                    None => false,
+                };
+                if !live {
+                    origins.remove(&r.tag);
+                }
+                live
+            });
+            if rows.is_empty() {
+                continue;
+            }
+            self.flushed_batches += 1;
+            self.flushed_rows += rows.len() as u64;
+            self.in_flight += 1;
+            let (lock, cv) = &*self.work;
+            lock.lock().unwrap().queue.push_back(ExecBatch { rows });
+            cv.notify_one();
+        }
+    }
+
+    fn publish(&self) {
+        let mut c = self.counters.lock().unwrap();
+        c.flushed_batches = self.flushed_batches;
+        c.flushed_rows = self.flushed_rows;
+        c.queue_depth = self.batchers.values().map(|b| b.pending()).sum();
+        c.inflight_requests = self.tasks.len() + self.calls.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{prior_sample, registry, srds, Conditioning, SamplerSpec};
+    use crate::data::make_gmm;
+    use crate::exec::NativeFactory;
+    use crate::model::GmmEps;
+
+    fn engine(workers: usize, batch: BatchPolicy) -> Engine {
+        let model: Arc<dyn crate::model::EpsModel> = Arc::new(GmmEps::new(make_gmm("church")));
+        Engine::new(
+            Arc::new(NativeFactory::new(model, Solver::Ddim)),
+            EngineConfig { workers, batch },
+        )
+    }
+
+    fn vanilla(x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
+        let model: Arc<dyn crate::model::EpsModel> = Arc::new(GmmEps::new(make_gmm("church")));
+        let be = crate::solvers::NativeBackend::new(model, Solver::Ddim);
+        srds(&be, x0, spec)
+    }
+
+    #[test]
+    fn concurrent_requests_match_solo_vanilla_srds() {
+        // The headline multi-tenant invariant: ≥4 requests in flight at
+        // once, each one's sample identical to a solo vanilla srds() run
+        // with the same spec and seed.
+        let eng = Arc::new(engine(3, BatchPolicy::default()));
+        let specs: Vec<(Vec<f32>, SamplerSpec)> = (0..5u64)
+            .map(|s| {
+                let spec = SamplerSpec::srds(36 + 9 * s as usize)
+                    .with_tol(1e-4)
+                    .with_seed(s);
+                (prior_sample(64, s), spec)
+            })
+            .collect();
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|(x0, spec)| eng.submit_srds(x0.clone(), spec.clone()))
+            .collect();
+        for ((x0, spec), rx) in specs.iter().zip(handles) {
+            let got = rx.recv().expect("engine reply");
+            let want = vanilla(x0, spec);
+            assert_eq!(got.stats.iters, want.stats.iters, "seed {}", spec.seed);
+            let d = spec.norm.dist(&got.sample, &want.sample);
+            assert!(d < 1e-6, "engine vs vanilla (seed {}): {d}", spec.seed);
+        }
+    }
+
+    #[test]
+    fn engine_reports_vanilla_eff_serial_evals() {
+        // No more `eff_serial_evals: 0` placeholder: the engine computes
+        // the vanilla-schedule count with coordinator::srds's formula.
+        let eng = engine(2, BatchPolicy::immediate());
+        let x0 = prior_sample(64, 1);
+        let spec = SamplerSpec::srds(25).with_tol(0.0).with_max_iters(1).with_seed(1);
+        let res = eng.run_srds(&x0, &spec);
+        let want = vanilla(&x0, &spec);
+        assert_eq!(res.stats.eff_serial_evals, want.stats.eff_serial_evals);
+        assert_eq!(
+            res.stats.eff_serial_evals_pipelined,
+            want.stats.eff_serial_evals_pipelined
+        );
+        assert!(res.stats.eff_serial_evals > 0);
+    }
+
+    #[test]
+    fn adapter_backend_runs_every_registered_sampler() {
+        let eng = engine(2, BatchPolicy::default());
+        let reg = registry();
+        let x0 = prior_sample(64, 9);
+        let reference = {
+            let model: Arc<dyn crate::model::EpsModel> =
+                Arc::new(GmmEps::new(make_gmm("church")));
+            let be = crate::solvers::NativeBackend::new(model, Solver::Ddim);
+            let (seq, _) =
+                crate::coordinator::sequential(&be, &x0, 25, &Conditioning::none(), 9);
+            seq
+        };
+        for name in reg.list() {
+            let s = reg.parse(name).unwrap();
+            let spec = SamplerSpec::for_kind(25, s.kind()).with_tol(1e-6).with_seed(9);
+            let be = eng.backend();
+            let out = s.run(&be, &x0, &spec);
+            let d = spec.norm.dist(&out.sample, &reference);
+            assert!(d < 1e-2, "{name} via engine adapter vs sequential: {d}");
+            let (rows, occ) = be.occupancy();
+            assert!(rows > 0, "{name} executed no engine rows");
+            assert!(occ >= 1.0, "{name} occupancy {occ}");
+        }
+    }
+
+    #[test]
+    fn fused_batches_preserve_per_request_outputs() {
+        // Saturate a 1-worker engine so rows MUST fuse across requests,
+        // then check nothing leaked between tenants. All six requests
+        // are enqueued before the first reply is awaited, so their rows
+        // demonstrably share the pool.
+        let eng = engine(1, BatchPolicy::default());
+        let reqs: Vec<(Vec<f32>, SamplerSpec)> = (0..6u64)
+            .map(|s| {
+                let x0 = prior_sample(64, 100 + s);
+                let spec = SamplerSpec::srds(25).with_tol(1e-4).with_seed(100 + s);
+                (x0, spec)
+            })
+            .collect();
+        let handles: Vec<_> = reqs
+            .iter()
+            .map(|(x0, spec)| eng.submit_srds(x0.clone(), spec.clone()))
+            .collect();
+        let mut saw_fusion = false;
+        for ((x0, spec), rx) in reqs.iter().zip(handles) {
+            let got = rx.recv().expect("engine reply");
+            let want = vanilla(x0, spec);
+            let d = spec.norm.dist(&got.sample, &want.sample);
+            assert!(d < 1e-6, "seed {}: {d}", spec.seed);
+            saw_fusion |= got.stats.batch_occupancy > 1.0;
+        }
+        let stats = eng.stats();
+        assert!(stats.flushed_batches > 0);
+        // With 6 concurrent requests on one worker, fusion must occur.
+        assert!(saw_fusion, "no request ever rode a multi-row batch");
+        assert!(stats.mean_occupancy > 1.0, "engine never fused rows");
+    }
+
+    #[test]
+    fn engine_stats_snapshot_is_consistent() {
+        let eng = engine(2, BatchPolicy::immediate());
+        let x0 = prior_sample(64, 3);
+        let spec = SamplerSpec::srds(25).with_tol(1e-4).with_seed(3);
+        let res = eng.run_srds(&x0, &spec);
+        assert!(res.stats.engine_rows > 0);
+        assert!(res.stats.batch_occupancy >= 1.0);
+        let st = eng.stats();
+        assert!(st.flushed_rows >= res.stats.engine_rows);
+        assert_eq!(st.inflight_requests, 0);
+        assert_eq!(st.workers, 2);
+    }
+
+    #[test]
+    fn engine_shuts_down_cleanly() {
+        let eng = engine(3, BatchPolicy::default());
+        drop(eng); // must not hang
+    }
+}

@@ -1,232 +1,60 @@
-//! Measured executor: real worker threads, each owning its own
-//! (thread-bound) backend instance, running the **pipelined SRDS**
-//! dataflow of Fig. 4 with true concurrency.
+//! Measured executor: real worker threads with thread-bound backends
+//! running the **pipelined SRDS** dataflow of Fig. 4 with true
+//! concurrency — wall-clock numbers come from here.
 //!
-//! The main thread is a dependency-driven dispatcher: it releases a fine
-//! solve `F(p, i)` the moment `x^{p-1}_{i-1}` materializes and a coarse
-//! step `G(p, i)` the moment `x^p_{i-1}` does — no iteration barrier, as
-//! in the paper's pipelined implementation (which it improves on: the
-//! paper's §4.2 footnote notes their torch.multiprocessing version still
-//! round-trips through a coordinator device; here workers stay hot and
-//! only states cross threads).
+//! Since the multi-tenant rework this module is a thin veneer over
+//! [`crate::exec::engine`]: [`WorkerPool`] owns an [`Engine`] configured
+//! with [`BatchPolicy::immediate`] (flush eagerly, never hold a row
+//! waiting for co-tenants — the right policy when one benchmark request
+//! owns the pool), and [`measured_pipelined_srds`] submits one request
+//! and blocks. The dependency-driven dispatcher that used to live here
+//! — release `F(p, i)` the moment `x^{p-1}_{i-1}` materializes, `G(p, i)`
+//! the moment `x^p_{i-1}` does, no iteration barrier — is now the
+//! engine's per-request SRDS state machine, shared by every tenant.
 
-use crate::coordinator::{Conditioning, IterStat, RunStats, SampleOutput, SamplerSpec};
-use crate::solvers::{BackendFactory, Solver, StepBackend, StepRequest};
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use crate::batching::BatchPolicy;
+use crate::coordinator::{SampleOutput, SamplerSpec};
+use crate::exec::engine::{Engine, EngineConfig};
+use crate::solvers::{BackendFactory, Solver};
+use std::sync::Arc;
 
-/// What a worker executes: a full fine block solve or one coarse step.
-#[derive(Debug)]
-pub enum JobKind {
-    /// `block_points` fine steps from `s[0]` to `s[last]`.
-    Fine { points: Vec<f32> },
-    /// One coarse step from `s_from` to `s_to`.
-    Coarse { s_from: f32, s_to: f32 },
-}
-
-/// A unit of work dispatched to the pool.
-#[derive(Debug)]
-pub struct Job {
-    /// (iteration p, block i, is_fine) — the dispatcher's bookkeeping key.
-    pub key: (usize, usize, bool),
-    pub kind: JobKind,
-    pub x: Vec<f32>,
-    pub mask: Option<Vec<f32>>,
-    pub guidance: f32,
-    pub seed: u64,
-}
-
-impl Job {
-    /// Critical-path priority: earlier iterations first, then earlier
-    /// blocks, with coarse steps ahead of fine solves at equal (p, i) —
-    /// the G chain is the serial spine of the schedule (Prop. 2 proof).
-    fn priority(&self) -> u64 {
-        let (p, i, is_fine) = self.key;
-        ((p as u64) << 32) | ((i as u64) << 1) | is_fine as u64
-    }
-}
-
-/// Completed work.
-pub struct JobDone {
-    pub key: (usize, usize, bool),
-    pub out: Vec<f32>,
-    /// Model evaluations this job burned.
-    pub evals: u64,
-}
-
-/// Priority entry (min-heap by `prio` via reversed Ord).
-struct QJob {
-    prio: u64,
-    seq: u64,
-    job: Job,
-}
-
-impl PartialEq for QJob {
-    fn eq(&self, other: &Self) -> bool {
-        (self.prio, self.seq) == (other.prio, other.seq)
-    }
-}
-impl Eq for QJob {}
-impl PartialOrd for QJob {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for QJob {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // reversed: BinaryHeap is a max-heap, we want the smallest prio.
-        (other.prio, other.seq).cmp(&(self.prio, self.seq))
-    }
-}
-
-struct PoolState {
-    queue: std::collections::BinaryHeap<QJob>,
-    closed: bool,
-    seq: u64,
-}
-
-/// Fixed pool of worker threads, one backend instance each, pulling from
-/// a shared **priority** queue (critical-path-first; speculative work
-/// from later iterations never delays the serial spine).
+/// Fixed pool of worker threads, one backend instance each. Kept as the
+/// single-request face of the engine for the benches and tests that
+/// measure one sampler at a time.
 pub struct WorkerPool {
-    state: Arc<(Mutex<PoolState>, std::sync::Condvar)>,
-    done_rx: Receiver<JobDone>,
-    stop: Arc<AtomicBool>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-    workers: usize,
+    engine: Engine,
 }
 
 impl WorkerPool {
     /// Spawn `workers` threads; each calls `factory.create()` locally
     /// (PJRT clients are `Rc`-based and cannot cross threads).
     pub fn new(factory: Arc<dyn BackendFactory>, workers: usize) -> Self {
-        let state = Arc::new((
-            Mutex::new(PoolState { queue: std::collections::BinaryHeap::new(), closed: false, seq: 0 }),
-            std::sync::Condvar::new(),
-        ));
-        let (done_tx, done_rx) = channel::<JobDone>();
-        let stop = Arc::new(AtomicBool::new(false));
-        let mut handles = Vec::new();
-        for w in 0..workers {
-            let state = state.clone();
-            let done_tx = done_tx.clone();
-            let factory = factory.clone();
-            let stop = stop.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("srds-worker-{w}"))
-                    .spawn(move || {
-                        let backend = factory.create();
-                        loop {
-                            let job = {
-                                let (lock, cv) = &*state;
-                                let mut st = lock.lock().unwrap();
-                                loop {
-                                    if let Some(qj) = st.queue.pop() {
-                                        break Some(qj.job);
-                                    }
-                                    if st.closed {
-                                        break None;
-                                    }
-                                    st = cv.wait(st).unwrap();
-                                }
-                            };
-                            let Some(job) = job else { break };
-                            if stop.load(Ordering::Relaxed) {
-                                break;
-                            }
-                            let done = run_job(backend.as_ref(), job);
-                            if done_tx.send(done).is_err() {
-                                break;
-                            }
-                        }
-                    })
-                    .expect("spawn worker"),
-            );
+        WorkerPool {
+            engine: Engine::new(factory, EngineConfig { workers, batch: BatchPolicy::immediate() }),
         }
-        WorkerPool { state, done_rx, stop, handles, workers }
     }
 
     pub fn workers(&self) -> usize {
-        self.workers
+        self.engine.workers()
     }
 
-    pub fn submit(&self, job: Job) {
-        let (lock, cv) = &*self.state;
-        let mut st = lock.lock().unwrap();
-        let prio = job.priority();
-        let seq = st.seq;
-        st.seq += 1;
-        st.queue.push(QJob { prio, seq, job });
-        cv.notify_one();
-    }
-
-    pub fn recv(&self) -> JobDone {
-        self.done_rx.recv().expect("pool alive")
-    }
-
-    /// Remove every job still queued (not yet started). Returns how many
-    /// were dropped — the dispatcher subtracts them from its in-flight
-    /// count. Used when SRDS converges early and the speculative tail of
-    /// the schedule becomes garbage.
-    pub fn purge_queued(&self) -> usize {
-        let (lock, _) = &*self.state;
-        let mut st = lock.lock().unwrap();
-        let n = st.queue.len();
-        st.queue.clear();
-        n
+    /// The underlying multi-tenant engine.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
     }
 }
 
-impl Drop for WorkerPool {
-    fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        {
-            let (lock, cv) = &*self.state;
-            let mut st = lock.lock().unwrap();
-            st.closed = true;
-            st.queue.clear();
-            cv.notify_all();
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-fn run_job(backend: &dyn StepBackend, job: Job) -> JobDone {
-    match job.kind {
-        JobKind::Coarse { s_from, s_to } => {
-            let out = backend.step(&StepRequest {
-                x: &job.x,
-                s_from: &[s_from],
-                s_to: &[s_to],
-                mask: job.mask.as_deref(),
-                guidance: job.guidance,
-                seeds: &[job.seed],
-            });
-            JobDone { key: job.key, out, evals: backend.evals_per_step() as u64 }
-        }
-        JobKind::Fine { points } => {
-            let mut x = job.x;
-            let mut evals = 0u64;
-            for w in points.windows(2) {
-                x = backend.step(&StepRequest {
-                    x: &x,
-                    s_from: &[w[0]],
-                    s_to: &[w[1]],
-                    mask: job.mask.as_deref(),
-                    guidance: job.guidance,
-                    seeds: &[job.seed],
-                });
-                evals += backend.evals_per_step() as u64;
-            }
-            JobDone { key: job.key, out: x, evals }
-        }
-    }
+/// Pipelined SRDS over a worker pool (Fig. 4), dependency-driven.
+///
+/// Produces the same iterates as [`crate::coordinator::srds`] (pinned by
+/// the integration tests) while overlapping iterations across devices;
+/// `stats.wall` is a real measurement.
+pub fn measured_pipelined_srds(
+    pool: &WorkerPool,
+    x0: &[f32],
+    spec: &SamplerSpec,
+) -> SampleOutput {
+    pool.engine.run_srds(x0, spec)
 }
 
 /// Factory producing native backends (each worker gets a cheap clone of
@@ -243,7 +71,7 @@ impl NativeFactory {
 }
 
 impl BackendFactory for NativeFactory {
-    fn create(&self) -> Box<dyn StepBackend> {
+    fn create(&self) -> Box<dyn crate::solvers::StepBackend> {
         Box::new(crate::solvers::NativeBackend::new(self.model.clone(), self.solver))
     }
 
@@ -256,215 +84,10 @@ impl BackendFactory for NativeFactory {
     }
 }
 
-/// Pipelined SRDS over a worker pool (Fig. 4), dependency-driven.
-///
-/// Produces the same iterates as [`crate::coordinator::srds`] (pinned by
-/// the integration tests) while overlapping iterations across devices;
-/// `stats.wall` is a real measurement.
-///
-/// The dispatcher is fully event-driven: each job completion touches only
-/// the O(1) cells it can unblock (corrector at its own cell, the fine /
-/// coarse jobs downstream of a newly-materialized state) instead of
-/// rescanning the whole (iteration × block) grid — see EXPERIMENTS.md
-/// §Perf L3 for the before/after.
-pub fn measured_pipelined_srds(
-    pool: &WorkerPool,
-    x0: &[f32],
-    spec: &SamplerSpec,
-) -> SampleOutput {
-    let t0 = Instant::now();
-    let part = spec.partition();
-    let m = part.num_blocks();
-    let cond = &spec.cond;
-    let max_iters = spec.max_iters.unwrap_or(m).max(1).min(m);
-
-    // Grid state, indexed [p][i].
-    let mut x_state: Vec<Vec<Option<Vec<f32>>>> = vec![vec![None; m + 1]; max_iters + 1];
-    let mut g: Vec<Vec<Option<Vec<f32>>>> = vec![vec![None; m + 1]; max_iters + 1];
-    let mut y: Vec<Vec<Option<Vec<f32>>>> = vec![vec![None; m + 1]; max_iters + 1];
-    let mut submitted = vec![vec![[false; 2]; m + 1]; max_iters + 1];
-    let mut total_evals = 0u64;
-    let mut per_iter: Vec<IterStat> = Vec::new();
-    let mut stop_at_iter: Option<usize> = None;
-    let mut inflight = 0usize;
-
-    // Submit helpers (closures can't borrow everything mutably; keep as
-    // small fns taking the needed state).
-    struct Ctx<'a> {
-        pool: &'a WorkerPool,
-        part: &'a crate::schedule::Partition,
-        cond: &'a Conditioning,
-        seed: u64,
-    }
-    let ctx = Ctx { pool, part: &part, cond, seed: spec.seed };
-    let submit_fine = |ctx: &Ctx, p: usize, i: usize, x: Vec<f32>, inflight: &mut usize| {
-        *inflight += 1;
-        ctx.pool.submit(Job {
-            key: (p, i, true),
-            kind: JobKind::Fine { points: ctx.part.block_points(i - 1).to_vec() },
-            x,
-            mask: ctx.cond.mask.clone(),
-            guidance: ctx.cond.guidance,
-            seed: ctx.seed,
-        });
-    };
-    let submit_coarse = |ctx: &Ctx, p: usize, i: usize, x: Vec<f32>, inflight: &mut usize| {
-        *inflight += 1;
-        ctx.pool.submit(Job {
-            key: (p, i, false),
-            kind: JobKind::Coarse {
-                s_from: ctx.part.s_bound(i - 1),
-                s_to: ctx.part.s_bound(i),
-            },
-            x,
-            mask: ctx.cond.mask.clone(),
-            guidance: ctx.cond.guidance,
-            seed: ctx.seed,
-        });
-    };
-
-    // Seed the prior states and kick off everything x0 unblocks:
-    // G(p, 1) for every p (their input never changes) and F(1, 1).
-    for p in 0..=max_iters {
-        x_state[p][0] = Some(x0.to_vec());
-    }
-    for p in 0..=max_iters {
-        if !submitted[p][1][0] {
-            submitted[p][1][0] = true;
-            submit_coarse(&ctx, p, 1, x0.to_vec(), &mut inflight);
-        }
-        // F(p, 1) for every refinement: its input x^{p-1}_0 = x0 is
-        // already final (block 1's fine solve is identical across
-        // iterations — recomputed here; the vanilla path caches it).
-        if p >= 1 && !submitted[p][1][1] {
-            submitted[p][1][1] = true;
-            submit_fine(&ctx, p, 1, x0.to_vec(), &mut inflight);
-        }
-    }
-
-    // Newly-materialized states to propagate.
-    let mut ready: Vec<(usize, usize)> = Vec::new();
-
-    while inflight > 0 {
-        let done = pool.recv();
-        inflight -= 1;
-        total_evals += done.evals;
-        let (p, i, is_fine) = done.key;
-        if is_fine {
-            y[p][i] = Some(done.out);
-        } else {
-            g[p][i] = Some(done.out);
-        }
-        // Corrector attempts unblocked by this result: cell (p, i) and —
-        // when a coarse result acts as `prev` — cell (p+1, i).
-        let mut attempts = vec![(p, i)];
-        if !is_fine && p + 1 <= max_iters {
-            attempts.push((p + 1, i));
-        }
-        for (ap, ai) in attempts {
-            if x_state[ap][ai].is_some() {
-                continue;
-            }
-            let materialized = if ap == 0 {
-                g[0][ai].clone()
-            } else if let (Some(yi), Some(cur), Some(prev)) =
-                (&y[ap][ai], &g[ap][ai], &g[ap - 1][ai])
-            {
-                Some(
-                    yi.iter()
-                        .zip(cur.iter().zip(prev))
-                        .map(|(a, (b, c))| a + (b - c))
-                        .collect(),
-                )
-            } else {
-                None
-            };
-            if let Some(v) = materialized {
-                x_state[ap][ai] = Some(v);
-                ready.push((ap, ai));
-            }
-        }
-        // Propagate each new state to the jobs it unblocks.
-        while let Some((sp, si)) = ready.pop() {
-            let past_stop = |p: usize| stop_at_iter.map(|s| p > s).unwrap_or(false);
-            // F(sp+1, si+1) needs x^{sp}_{si}.
-            if si + 1 <= m && sp + 1 <= max_iters && !submitted[sp + 1][si + 1][1] && !past_stop(sp + 1) {
-                submitted[sp + 1][si + 1][1] = true;
-                submit_fine(&ctx, sp + 1, si + 1, x_state[sp][si].clone().unwrap(), &mut inflight);
-            }
-            // G(sp, si+1) needs x^{sp}_{si}.
-            if si + 1 <= m && !submitted[sp][si + 1][0] && !past_stop(sp) {
-                submitted[sp][si + 1][0] = true;
-                submit_coarse(&ctx, sp, si + 1, x_state[sp][si].clone().unwrap(), &mut inflight);
-            }
-            // Convergence: strictly in iteration order (a later final
-            // state can exist before an earlier one, see the while-let
-            // ordering note in the history of this file).
-            if si == m {
-                while stop_at_iter.is_none() {
-                    let pp = per_iter.len() + 1;
-                    if pp > max_iters {
-                        break;
-                    }
-                    let (Some(curf), Some(prevf)) = (&x_state[pp][m], &x_state[pp - 1][m]) else {
-                        break;
-                    };
-                    let residual = spec.norm.dist(curf, prevf);
-                    per_iter.push(IterStat { iter: pp, residual, evals: 0 });
-                    if residual < spec.tol || pp >= m {
-                        stop_at_iter = Some(pp);
-                    }
-                }
-            }
-        }
-        if let Some(s) = stop_at_iter {
-            if x_state[s][m].is_some() {
-                // Converged: purge the speculative queued tail outright
-                // and only wait out the ≤ workers jobs already running.
-                inflight -= pool.purge_queued();
-                while inflight > 0 {
-                    let d = pool.recv();
-                    total_evals += d.evals;
-                    inflight -= 1;
-                }
-                break;
-            }
-        }
-    }
-
-    let final_iter = stop_at_iter.unwrap_or_else(|| {
-        (1..=max_iters).rev().find(|&p| x_state[p][m].is_some()).unwrap_or(0)
-    });
-    let sample = x_state[final_iter][m].clone().expect("final state");
-    let converged = per_iter
-        .iter()
-        .find(|s| s.iter == final_iter)
-        .map(|s| s.residual < spec.tol || final_iter >= m)
-        .unwrap_or(false);
-    let b = part.block();
-    let stats = RunStats {
-        iters: final_iter,
-        converged,
-        eff_serial_evals: 0, // accounting comes from the simclock path
-        eff_serial_evals_pipelined: if final_iter == 0 {
-            m as u64
-        } else {
-            (m * final_iter + b).saturating_sub(final_iter) as u64
-        },
-        total_evals,
-        wall: t0.elapsed(),
-        // The dispatcher materializes the full (iterations × blocks) grid
-        // of x/G/F states — wall-clock-optimal, not memory-optimal.
-        peak_states: 3 * (max_iters + 1) * (m + 1),
-        per_iter,
-    };
-    SampleOutput { sample, stats, iterates: vec![] }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{prior_sample, srds, SamplerSpec};
+    use crate::coordinator::{prior_sample, srds, Conditioning, SamplerSpec};
     use crate::data::make_gmm;
     use crate::model::GmmEps;
 
@@ -488,6 +111,9 @@ mod tests {
         assert_eq!(measured.stats.iters, vanilla.stats.iters);
         let d = spec.norm.dist(&measured.sample, &vanilla.sample);
         assert!(d < 1e-6, "measured vs vanilla {d}");
+        // Satellite of the engine rework: the measured path reports the
+        // vanilla-schedule eval count instead of a 0 placeholder.
+        assert_eq!(measured.stats.eff_serial_evals, vanilla.stats.eff_serial_evals);
     }
 
     #[test]

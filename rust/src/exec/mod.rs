@@ -5,13 +5,21 @@
 //!   with a fixed per-eval cost. This reproduces the paper's
 //!   effective-serial-eval and device-scaling tables exactly,
 //!   independent of host hardware.
-//! * [`measured`] — a real worker pool (one OS thread per simulated
-//!   device, each owning its own thread-bound PJRT or native backend)
-//!   running the *pipelined* SRDS dataflow of Fig. 4 with true
-//!   concurrency; wall-clock numbers come from here.
+//! * [`engine`] — the multi-tenant step-level engine: many concurrent
+//!   sampling requests share one worker pool, every fine/coarse step
+//!   becomes a [`crate::batching::PendingRow`], and rows are fused into
+//!   multi-row [`crate::solvers::StepRequest`] batches across requests
+//!   (§3.4's batched inference, applied to serving). The serving loop
+//!   dispatches into this.
+//! * [`measured`] — the single-request veneer over the engine (one OS
+//!   thread per simulated device, each owning its own thread-bound PJRT
+//!   or native backend) running the *pipelined* SRDS dataflow of Fig. 4
+//!   with true concurrency; wall-clock numbers come from here.
 
+pub mod engine;
 pub mod measured;
 pub mod simclock;
 
+pub use engine::{Engine, EngineBackend, EngineConfig, EngineStats};
 pub use measured::{measured_pipelined_srds, NativeFactory, WorkerPool};
 pub use simclock::{schedule_tasks, simulate_paradigms, simulate_sequential, simulate_srds, SimReport, SimTask};

@@ -8,9 +8,11 @@
 //!   ([`coordinator::srds`]), its pipelined variant
 //!   ([`coordinator::pipeline`]), the ParaDiGMS/Picard and ParaTAA
 //!   baselines — all behind the unified [`coordinator::api`] sampler
-//!   trait + registry — plus dynamic batching, a device-pool executor, a
-//!   discrete-event simulated-clock executor, and the threaded JSON-line
-//!   serving loop ([`server`]).
+//!   trait + registry — plus the multi-tenant step-level execution
+//!   engine ([`exec::engine`]: one shared worker pool, cross-request
+//!   batched steps via [`batching`]), a discrete-event simulated-clock
+//!   executor ([`exec::simclock`]), and the JSON-line serving loop
+//!   ([`server`]) that dispatches every request into the engine.
 //! * **L2/L1 (python/, build-time only)** — JAX solver-step graphs calling
 //!   Pallas kernels, AOT-lowered once to HLO-text artifacts that
 //!   [`runtime`] loads and executes via the PJRT C API (`xla` crate).

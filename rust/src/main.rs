@@ -9,12 +9,19 @@
 //!             [--class C --guidance W] [--out sample.pgm]
 //! srds serve  [--addr 127.0.0.1:7878] [--workers 4] [--model …]
 //!             [--solver …] [--backend native|pjrt]
+//!             [--batch-wait 2] [--buckets 32,16,8,4,2,1]
 //! ```
+//!
+//! `serve` runs every request on the shared multi-tenant engine
+//! (`exec::engine`): `--workers` sizes its pool, `--batch-wait` bounds
+//! how long (ms) an under-filled cross-request batch may linger, and
+//! `--buckets` lists the preferred batch sizes, descending.
 //!
 //! `--sampler` accepts any name from `coordinator::api::registry()`;
 //! `srds info` lists them. (Argument parsing is in-tree: the offline
 //! vendored crate set has no clap.)
 
+use srds::batching::BatchPolicy;
 use srds::coordinator::{prior_sample, registry, Conditioning, ConvNorm, SamplerSpec};
 use srds::data::make_gmm;
 use srds::exec::NativeFactory;
@@ -158,11 +165,32 @@ fn cmd_serve(flags: HashMap<String, String>) -> srds::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown solver"))?;
     let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(4);
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".into());
+    // Engine batching knobs: `--batch-wait` is the linger bound in
+    // milliseconds (0 = flush eagerly, never hold a row), `--buckets`
+    // the descending batch-size preference list, e.g. "32,8,1".
+    let mut batch = BatchPolicy::default();
+    if let Some(w) = flags.get("batch-wait") {
+        let ms: f64 = w.parse()?;
+        if !(0.0..=60_000.0).contains(&ms) {
+            return Err(anyhow::anyhow!("--batch-wait must be in 0..=60000 ms, got {ms}"));
+        }
+        batch.max_wait = std::time::Duration::from_secs_f64(ms / 1000.0);
+    }
+    if let Some(b) = flags.get("buckets") {
+        let buckets: Vec<usize> = b
+            .split(',')
+            .map(|t| t.trim().parse::<usize>())
+            .collect::<Result<_, _>>()?;
+        if buckets.is_empty() || buckets.contains(&0) {
+            return Err(anyhow::anyhow!("--buckets needs a comma list of sizes >= 1"));
+        }
+        batch.buckets = buckets;
+    }
     let factory: Arc<dyn BackendFactory> = match flags.get("backend").map(|s| s.as_str()) {
         Some("pjrt") => Arc::new(PjrtFactory::new(srds::artifacts_dir(), &model, solver)?),
         _ => Arc::new(NativeFactory::new(native_model(&model), solver)),
     };
-    serve(ServeConfig { addr, workers, model_name: model, factory })
+    serve(ServeConfig { addr, workers, model_name: model, factory, batch })
 }
 
 fn main() {

@@ -20,24 +20,37 @@
 //! ```json
 //! {"id": 1, "ok": true, "sampler": "srds", "iters": 2, "converged": true,
 //!  "eff_serial_evals": 25, "eff_serial_evals_pipelined": 17,
-//!  "total_evals": 74, "peak_states": 17, "wall_ms": 12.3, "sample": [...]}
+//!  "total_evals": 74, "peak_states": 17, "wall_ms": 12.3,
+//!  "batch_occupancy": 3.4, "engine_rows": 74,
+//!  "queue_depth": 12, "flushed_batches": 210, "sample": [...]}
 //! ```
 //!
-//! Sampler workers each own a thread-bound backend (native or PJRT);
-//! requests are dispatched over an mpsc queue and responses routed back
-//! through per-request channels. Python is never involved.
+//! `batch_occupancy` / `engine_rows` are per-request fusion stats;
+//! `queue_depth` / `flushed_batches` are engine-wide snapshots taken at
+//! completion (absent when a request is executed off-engine, e.g. via
+//! [`run_request`] in unit tests).
+//!
+//! Requests are dispatched into the shared multi-tenant
+//! [`crate::exec::engine`]: SRDS requests run as dependency-driven state
+//! machines inside the engine's dispatcher, every other registry entry
+//! runs through the engine's adapter backend — either way each solver
+//! step becomes a batch row that can fuse with co-tenant requests'
+//! rows (`batch_occupancy` in the response reports how much fusion the
+//! request actually saw). Python is never involved.
 
+use crate::batching::BatchPolicy;
 use crate::coordinator::{
-    prior_sample, registry, Conditioning, ConvNorm, SampleOutput, SamplerSpec,
+    prior_sample, registry, Conditioning, ConvNorm, SampleOutput, SamplerKind, SamplerSpec,
 };
 use crate::data::make_gmm;
+use crate::exec::{Engine, EngineConfig};
 use crate::json::{self, Value};
 use crate::solvers::{BackendFactory, StepBackend};
 use crate::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// A parsed sampling request: the sampler name plus every
 /// [`SamplerSpec`] knob the wire protocol exposes.
@@ -123,45 +136,53 @@ fn error_response(id: u64, msg: String) -> Value {
     ])
 }
 
-/// Execute one request on a backend via the sampler registry. The
-/// conditioning mask comes from the dataset zoo when the model is a
-/// conditional GMM.
-pub fn run_request(
-    backend: &dyn StepBackend,
-    model_name: &str,
-    req: &SampleRequest,
-) -> Value {
+/// Conditioning for a request: the mask comes from the dataset zoo when
+/// the model is a conditional GMM.
+fn request_cond(model_name: &str, req: &SampleRequest) -> Conditioning {
+    match req.class {
+        Some(c) if model_name.contains("latent_cond") => {
+            let gmm = make_gmm("latent_cond");
+            Conditioning::class(gmm.class_mask(c), req.guidance)
+        }
+        _ => Conditioning::none(),
+    }
+}
+
+/// Resolve the request's sampler kind and build its validated spec, or
+/// the error line to send back.
+fn request_spec(model_name: &str, req: &SampleRequest) -> std::result::Result<SamplerSpec, Value> {
     let reg = registry();
     let Some(sampler) = reg.parse(&req.sampler) else {
-        return error_response(
+        return Err(error_response(
             req.id,
             format!(
                 "unknown sampler {:?}; available: {}",
                 req.sampler,
                 reg.list().join(", ")
             ),
-        );
+        ));
     };
-    let cond = match req.class {
-        Some(c) if model_name.contains("latent_cond") => {
-            let gmm = make_gmm("latent_cond");
-            Conditioning::class(gmm.class_mask(c), req.guidance)
-        }
-        _ => Conditioning::none(),
-    };
-    let spec = req.to_spec(sampler.kind(), cond);
+    let spec = req.to_spec(sampler.kind(), request_cond(model_name, req));
     // A range error must be an error line, not a worker-thread panic.
     if let Err(msg) = spec.validate() {
-        return error_response(req.id, msg);
+        return Err(error_response(req.id, msg));
     }
-    let x0 = prior_sample(backend.dim(), req.seed);
-    let t0 = std::time::Instant::now();
-    let out: SampleOutput = sampler.run(backend, &x0, &spec);
-    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    Ok(spec)
+}
+
+/// Serialize a completed run; `engine` adds the engine-wide snapshot
+/// fields next to the per-request ones in `out.stats`.
+fn success_response(
+    req: &SampleRequest,
+    sampler_name: &str,
+    out: &SampleOutput,
+    wall_ms: f64,
+    engine: Option<&Engine>,
+) -> Value {
     let mut pairs = vec![
         ("id", Value::Num(req.id as f64)),
         ("ok", Value::Bool(true)),
-        ("sampler", Value::Str(sampler.name().to_string())),
+        ("sampler", Value::Str(sampler_name.to_string())),
         ("iters", Value::Num(out.stats.iters as f64)),
         ("converged", Value::Bool(out.stats.converged)),
         ("eff_serial_evals", Value::Num(out.stats.eff_serial_evals as f64)),
@@ -173,6 +194,13 @@ pub fn run_request(
         ("peak_states", Value::Num(out.stats.peak_states as f64)),
         ("wall_ms", Value::Num(wall_ms)),
     ];
+    if let Some(engine) = engine {
+        let st = engine.stats();
+        pairs.push(("batch_occupancy", Value::Num(out.stats.batch_occupancy)));
+        pairs.push(("engine_rows", Value::Num(out.stats.engine_rows as f64)));
+        pairs.push(("queue_depth", Value::Num(st.queue_depth as f64)));
+        pairs.push(("flushed_batches", Value::Num(st.flushed_batches as f64)));
+    }
     if req.return_sample {
         pairs.push(("sample", json::arr_f32(&out.sample)));
     }
@@ -185,23 +213,91 @@ pub fn run_request(
     json::obj(pairs)
 }
 
-/// Handle one raw request line (exposed for tests; no socket needed).
-pub fn handle_line(backend: &dyn StepBackend, model_name: &str, line: &str) -> String {
-    let resp = match json::parse(line) {
+/// Execute one request directly on a backend via the sampler registry —
+/// the single-tenant path (unit tests, library callers without an
+/// engine).
+pub fn run_request(
+    backend: &dyn StepBackend,
+    model_name: &str,
+    req: &SampleRequest,
+) -> Value {
+    let spec = match request_spec(model_name, req) {
+        Ok(s) => s,
+        Err(e) => return e,
+    };
+    let x0 = prior_sample(backend.dim(), req.seed);
+    let t0 = std::time::Instant::now();
+    // spec.run dispatches through the registry on spec.kind, which
+    // request_spec resolved from the request's sampler name.
+    let out: SampleOutput = spec.run(backend, &x0);
+    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    success_response(req, spec.kind.name(), &out, wall_ms, None)
+}
+
+/// Execute one request on the shared multi-tenant engine: SRDS requests
+/// run as engine-resident state machines (pipelined, cross-request
+/// batched); every other sampler runs through the engine's adapter
+/// backend so its steps batch with co-tenants too.
+pub fn run_request_engine(engine: &Engine, model_name: &str, req: &SampleRequest) -> Value {
+    let spec = match request_spec(model_name, req) {
+        Ok(s) => s,
+        Err(e) => return e,
+    };
+    let x0 = prior_sample(engine.dim(), req.seed);
+    let t0 = std::time::Instant::now();
+    // SRDS requests without iterates run as engine-resident pipelined
+    // state machines; iterate-keeping SRDS runs (a debugging/figure
+    // path) and every other sampler go through the adapter backend —
+    // still cross-request batched, just orchestrated on this thread.
+    let out: SampleOutput = if matches!(spec.kind, SamplerKind::Srds) && !spec.keep_iterates {
+        engine.run_srds(&x0, &spec)
+    } else {
+        let be = engine.backend();
+        let mut out = spec.run(&be, &x0);
+        let (rows, occ) = be.occupancy();
+        out.stats.engine_rows = rows;
+        out.stats.batch_occupancy = occ;
+        out
+    };
+    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    success_response(req, spec.kind.name(), &out, wall_ms, Some(engine))
+}
+
+fn line_to_request(line: &str) -> std::result::Result<SampleRequest, Value> {
+    match json::parse(line) {
         Ok(v) => match SampleRequest::from_json(&v) {
-            Ok(req) => run_request(backend, model_name, &req),
+            Ok(req) => Ok(req),
             // Request-level validation errors still echo the id so
             // pipelined clients can correlate them.
             Err(e) => {
                 let id = v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
-                error_response(id, format!("{e:#}"))
+                Err(error_response(id, format!("{e:#}")))
             }
         },
         // Malformed JSON: no id to echo.
-        Err(e) => json::obj(vec![
+        Err(e) => Err(json::obj(vec![
             ("ok", Value::Bool(false)),
             ("error", Value::Str(format!("{e:#}"))),
-        ]),
+        ])),
+    }
+}
+
+/// Handle one raw request line on a dedicated backend (exposed for
+/// tests; no socket, no engine).
+pub fn handle_line(backend: &dyn StepBackend, model_name: &str, line: &str) -> String {
+    let resp = match line_to_request(line) {
+        Ok(req) => run_request(backend, model_name, &req),
+        Err(e) => e,
+    };
+    json::to_string(&resp)
+}
+
+/// Handle one raw request line on the shared engine — what the TCP loop
+/// runs per request.
+pub fn handle_line_engine(engine: &Engine, model_name: &str, line: &str) -> String {
+    let resp = match line_to_request(line) {
+        Ok(req) => run_request_engine(engine, model_name, &req),
+        Err(e) => e,
     };
     json::to_string(&resp)
 }
@@ -209,51 +305,51 @@ pub fn handle_line(backend: &dyn StepBackend, model_name: &str, line: &str) -> S
 /// Server configuration.
 pub struct ServeConfig {
     pub addr: String,
-    /// Sampler worker threads (each owns one backend instance).
+    /// Engine worker threads (each owns one backend instance).
     pub workers: usize,
     pub model_name: String,
     pub factory: Arc<dyn BackendFactory>,
+    /// Cross-request batch assembly policy for the engine
+    /// (`--batch-wait` / `--buckets` on the CLI).
+    pub batch: BatchPolicy,
 }
 
-enum WorkItem {
-    Line(String, Sender<String>),
-}
-
-/// Run the blocking accept loop. Each connection thread parses lines and
-/// queues them for the sampler workers; responses stream back in
-/// completion order per connection.
+/// Run the blocking accept loop on a fresh listener bound to `cfg.addr`.
 pub fn serve(cfg: ServeConfig) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)?;
+    serve_on(listener, cfg)
+}
+
+/// Run the blocking accept loop on an already-bound listener (tests bind
+/// an ephemeral port first, then hand it over — no drop-and-rebind
+/// race).
+///
+/// One engine serves every connection: connection threads only parse
+/// lines and spawn a lightweight orchestration thread per request (it
+/// blocks inside the engine while the actual solver steps run, batched,
+/// on the engine's worker pool); responses stream back in completion
+/// order per connection. In-flight requests are capped at
+/// [`MAX_INFLIGHT_PER_CONN`] per connection — past that the read loop
+/// stops consuming, pushing back on the client through TCP.
+pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
+    let engine = Arc::new(Engine::new(
+        cfg.factory.clone(),
+        EngineConfig { workers: cfg.workers, batch: cfg.batch.clone() },
+    ));
     eprintln!(
-        "srds-server listening on {} (model={}, workers={}, samplers={})",
-        cfg.addr,
+        "srds-server listening on {} (model={}, engine workers={}, buckets={:?}, samplers={})",
+        listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| cfg.addr.clone()),
         cfg.model_name,
         cfg.workers,
+        cfg.batch.buckets,
         registry().list().join("/")
     );
-    let (work_tx, work_rx) = channel::<WorkItem>();
-    let work_rx = Arc::new(Mutex::new(work_rx));
-    for w in 0..cfg.workers {
-        let rx = work_rx.clone();
-        let factory = cfg.factory.clone();
-        let model_name = cfg.model_name.clone();
-        std::thread::Builder::new()
-            .name(format!("srds-sampler-{w}"))
-            .spawn(move || {
-                let backend = factory.create();
-                loop {
-                    let item = { rx.lock().unwrap().recv() };
-                    let Ok(WorkItem::Line(line, resp_tx)) = item else { break };
-                    let resp = handle_line(backend.as_ref(), &model_name, &line);
-                    let _ = resp_tx.send(resp);
-                }
-            })?;
-    }
     for stream in listener.incoming() {
         let stream = stream?;
-        let work_tx = work_tx.clone();
+        let engine = engine.clone();
+        let model_name = cfg.model_name.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, work_tx) {
+            if let Err(e) = handle_conn(stream, engine, model_name) {
                 eprintln!("connection error: {e:#}");
             }
         });
@@ -261,13 +357,19 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, work_tx: Sender<WorkItem>) -> Result<()> {
+/// Admission control: in-flight requests per connection. Past this the
+/// read loop stops consuming lines, so back-pressure propagates to the
+/// client through TCP instead of materializing unbounded orchestration
+/// threads and engine state.
+const MAX_INFLIGHT_PER_CONN: usize = 64;
+
+fn handle_conn(stream: TcpStream, engine: Arc<Engine>, model_name: String) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     let (resp_tx, resp_rx) = channel::<String>();
-    // Dedicated writer thread: responses stream back the moment a sampler
-    // worker finishes, independent of the (possibly idle) read side — a
+    // Dedicated writer thread: responses stream back the moment a
+    // request finishes, independent of the (possibly idle) read side — a
     // blocked reader must never delay completed work.
     let writer_handle = std::thread::spawn(move || -> Result<()> {
         for resp in resp_rx {
@@ -275,17 +377,37 @@ fn handle_conn(stream: TcpStream, work_tx: Sender<WorkItem>) -> Result<()> {
         }
         Ok(())
     });
+    let gate = Arc::new((Mutex::new(0usize), Condvar::new()));
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        work_tx
-            .send(WorkItem::Line(line, resp_tx.clone()))
-            .map_err(|_| anyhow::anyhow!("server shutting down"))?;
+        {
+            let (lock, cv) = &*gate;
+            let mut inflight = lock.lock().unwrap();
+            while *inflight >= MAX_INFLIGHT_PER_CONN {
+                inflight = cv.wait(inflight).unwrap();
+            }
+            *inflight += 1;
+        }
+        // One orchestration thread per in-flight request: it sleeps on
+        // the engine while the pool does the work, so concurrent requests
+        // from one connection interleave (and their step rows co-batch).
+        let engine = engine.clone();
+        let model_name = model_name.clone();
+        let resp_tx: Sender<String> = resp_tx.clone();
+        let gate = gate.clone();
+        std::thread::spawn(move || {
+            let resp = handle_line_engine(&engine, &model_name, &line);
+            let _ = resp_tx.send(resp);
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() -= 1;
+            cv.notify_one();
+        });
     }
     // Reader EOF: drop our resp_tx; the writer exits once the in-flight
-    // worker clones finish and the channel drains.
+    // request clones finish and the channel drains.
     drop(resp_tx);
     let _ = writer_handle.join();
     eprintln!("connection {peer} done");
@@ -412,6 +534,89 @@ mod tests {
         assert!(spec.keep_iterates);
         // history is a ParaTAA knob; on a paradigms request it's ignored.
         assert_eq!(spec.history(), 2);
+    }
+
+    fn engine() -> Engine {
+        let model: Arc<dyn crate::model::EpsModel> =
+            Arc::new(GmmEps::new(make_gmm("toy2d")));
+        Engine::new(
+            Arc::new(NativeFactory::new(model, Solver::Ddim)),
+            EngineConfig { workers: 2, batch: BatchPolicy::default() },
+        )
+    }
+
+    #[test]
+    fn handle_line_engine_every_registered_sampler() {
+        // The engine-dispatched serving path: every registry entry works
+        // and reports the engine stats fields.
+        let eng = engine();
+        for sampler in registry().list() {
+            let line = format!(r#"{{"id":1,"sampler":"{sampler}","n":16,"sample":false}}"#);
+            let resp = handle_line_engine(&eng, "gmm_toy2d", &line);
+            let v = json::parse(&resp).unwrap();
+            assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{sampler}: {resp}");
+            assert_eq!(v.get("sampler").unwrap().as_str(), Some(sampler));
+            let occ = v.get("batch_occupancy").unwrap().as_f64().unwrap();
+            assert!(occ >= 1.0, "{sampler} occupancy {occ}: {resp}");
+            assert!(v.get("engine_rows").unwrap().as_f64().unwrap() > 0.0, "{sampler}: {resp}");
+            assert!(v.get("queue_depth").is_some(), "{sampler}: {resp}");
+            assert!(v.get("flushed_batches").unwrap().as_f64().unwrap() > 0.0, "{sampler}: {resp}");
+        }
+    }
+
+    #[test]
+    fn engine_path_matches_direct_backend_path() {
+        // Same request line through the dedicated-backend path and the
+        // multi-tenant engine path: identical samples (the serving-layer
+        // face of the engine's equivalence invariant).
+        let eng = engine();
+        let be = backend();
+        for line in [
+            r#"{"id":1,"sampler":"srds","n":25,"seed":3,"tol":1e-4}"#,
+            r#"{"id":2,"sampler":"sequential","n":25,"seed":3}"#,
+            r#"{"id":3,"sampler":"paradigms","n":16,"seed":5,"tol":1e-6}"#,
+        ] {
+            let direct = json::parse(&handle_line(be.as_ref(), "gmm_toy2d", line)).unwrap();
+            let engined = json::parse(&handle_line_engine(&eng, "gmm_toy2d", line)).unwrap();
+            assert_eq!(engined.get("ok").unwrap().as_bool(), Some(true), "{line}");
+            let a = direct.get("sample").unwrap().as_f32_vec().unwrap();
+            let b = engined.get("sample").unwrap().as_f32_vec().unwrap();
+            let d = ConvNorm::L1Mean.dist(&a, &b);
+            assert!(d < 1e-6, "{line}: engine vs direct {d}");
+            assert_eq!(
+                direct.get("iters").unwrap().as_f64(),
+                engined.get("iters").unwrap().as_f64(),
+                "{line}"
+            );
+        }
+    }
+
+    #[test]
+    fn engine_path_still_serves_srds_iterates() {
+        // `iterates: true` falls back to the adapter-orchestrated vanilla
+        // srds, so the wire contract is unchanged on the engine path.
+        let eng = engine();
+        let line = r#"{"id":4,"sampler":"srds","n":16,"seed":2,"tol":0.0,"iterates":true}"#;
+        let v = json::parse(&handle_line_engine(&eng, "gmm_toy2d", line)).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{v:?}");
+        let iters = v.get("iters").unwrap().as_f64().unwrap() as usize;
+        let iterates = v.get("iterates").unwrap().as_arr().unwrap();
+        assert_eq!(iterates.len(), iters + 1, "coarse init + one per refinement");
+    }
+
+    #[test]
+    fn engine_path_rejects_bad_requests_like_direct_path() {
+        let eng = engine();
+        for bad in [
+            r#"{"id":9,"sampler":"ddim","n":16}"#,
+            r#"{"id":2,"n":16,"block":0}"#,
+            r#"{"id":7,"n":16,"norm":"l7"}"#,
+            "{nope",
+        ] {
+            let resp = handle_line_engine(&eng, "gmm_toy2d", bad);
+            let v = json::parse(&resp).unwrap();
+            assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{bad} -> {resp}");
+        }
     }
 
     #[test]

@@ -10,6 +10,15 @@ use std::sync::Arc;
 
 /// Native backend: batched eps through the model, per-row schedule
 /// coefficients, fused update.
+///
+/// Every solver path makes **one batched model call per eval** (two for
+/// the 2-eval solvers) followed by a single pass applying per-row
+/// coefficients — rows never interact. The multi-tenant engine
+/// (`crate::exec::engine`) relies on exactly this: it fuses step rows
+/// from *different requests* into one `StepRequest`, and per-request
+/// outputs must be bit-identical to a solo run (pinned below by
+/// `batched_mixed_rows_equal_solo_rows` and by the engine's equivalence
+/// tests).
 pub struct NativeBackend {
     model: Arc<dyn EpsModel>,
     solver: Solver,
@@ -248,6 +257,40 @@ mod tests {
                         solver.name()
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_mixed_rows_equal_solo_rows() {
+        // The engine's fusion contract, bit-level: a batch mixing rows
+        // from unrelated "requests" (different states, times, seeds, in
+        // arbitrary order) produces each row's solo result exactly.
+        let gmm = make_gmm("church");
+        let model: Arc<dyn crate::model::EpsModel> = Arc::new(GmmEps::new(gmm));
+        let d = 64;
+        let mut rng = crate::data::rng::SplitMix64::new(9);
+        for solver in [Solver::Ddim, Solver::Ddpm] {
+            let be = NativeBackend::new(model.clone(), solver);
+            // Three unrelated rows at very different schedule positions.
+            let x = rng.normals_f32(3 * d);
+            let s_from = [0.05f32, 0.8, 0.41];
+            let s_to = [0.1f32, 0.85, 0.47];
+            let seeds = [7u64, 900, 31];
+            let fused = be.step(&req(&x, &s_from, &s_to, &seeds));
+            for i in 0..3 {
+                let solo = be.step(&req(
+                    &x[i * d..(i + 1) * d],
+                    &s_from[i..=i],
+                    &s_to[i..=i],
+                    &seeds[i..=i],
+                ));
+                assert_eq!(
+                    &fused[i * d..(i + 1) * d],
+                    &solo[..],
+                    "{} row {i} not bit-identical in a mixed batch",
+                    solver.name()
+                );
             }
         }
     }

@@ -66,6 +66,48 @@ pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
     out
 }
 
+/// One concurrency level's serving-throughput measurement — what the
+/// `serving` bench records per client count and emits as JSON, so the
+/// perf trajectory has a serving number (requests/sec) next to the
+/// engine's fusion number (mean batch occupancy).
+#[derive(Debug, Clone)]
+pub struct ThroughputPoint {
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Total requests completed.
+    pub requests: usize,
+    /// Wall-clock for the whole level, seconds.
+    pub wall_s: f64,
+    /// Engine-wide mean rows per flushed batch over the level.
+    pub mean_batch_occupancy: f64,
+    /// Median request latency, milliseconds.
+    pub p50_ms: f64,
+    /// 95th-percentile request latency, milliseconds.
+    pub p95_ms: f64,
+}
+
+impl ThroughputPoint {
+    /// Requests per second over the level's wall-clock.
+    pub fn rps(&self) -> f64 {
+        self.requests as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn to_json(&self) -> crate::json::Value {
+        crate::json::obj(vec![
+            ("clients", crate::json::Value::Num(self.clients as f64)),
+            ("requests", crate::json::Value::Num(self.requests as f64)),
+            ("wall_s", crate::json::Value::Num(self.wall_s)),
+            ("rps", crate::json::Value::Num(self.rps())),
+            (
+                "mean_batch_occupancy",
+                crate::json::Value::Num(self.mean_batch_occupancy),
+            ),
+            ("p50_ms", crate::json::Value::Num(self.p50_ms)),
+            ("p95_ms", crate::json::Value::Num(self.p95_ms)),
+        ])
+    }
+}
+
 /// Latency percentiles helper for the serving reports.
 ///
 /// Rounding convention: *nearest rank* over the sorted input —
@@ -148,6 +190,23 @@ mod tests {
 
         // Empty input: defined as 0.0, not a panic.
         assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn throughput_point_json_roundtrip() {
+        let p = ThroughputPoint {
+            clients: 4,
+            requests: 32,
+            wall_s: 2.0,
+            mean_batch_occupancy: 3.5,
+            p50_ms: 10.0,
+            p95_ms: 20.0,
+        };
+        assert!((p.rps() - 16.0).abs() < 1e-12);
+        let v = crate::json::parse(&crate::json::to_string(&p.to_json())).unwrap();
+        assert_eq!(v.get("clients").unwrap().as_f64(), Some(4.0));
+        assert_eq!(v.get("rps").unwrap().as_f64(), Some(16.0));
+        assert_eq!(v.get("mean_batch_occupancy").unwrap().as_f64(), Some(3.5));
     }
 
     #[test]

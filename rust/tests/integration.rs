@@ -10,7 +10,7 @@ use srds::exec::{measured_pipelined_srds, NativeFactory, WorkerPool};
 use srds::metrics::{fd_vs_gmm, kid_poly};
 use srds::model::{EpsModel, GmmEps};
 use srds::runtime::{PjrtBackend, PjrtRuntime};
-use srds::server::{serve, ServeConfig};
+use srds::server::{serve_on, ServeConfig};
 use srds::solvers::{NativeBackend, Solver, StepBackend};
 use std::io::{BufRead, BufReader, Write};
 use std::sync::Arc;
@@ -105,15 +105,18 @@ fn tcp_server_round_trip() {
     let factory = Arc::new(NativeFactory::new(model, Solver::Ddim));
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    drop(listener); // free the port for serve()
     let addr2 = addr.clone();
     std::thread::spawn(move || {
-        let _ = serve(ServeConfig {
-            addr: addr2,
-            workers: 2,
-            model_name: "gmm_toy2d".into(),
-            factory,
-        });
+        let _ = serve_on(
+            listener,
+            ServeConfig {
+                addr: addr2,
+                workers: 2,
+                model_name: "gmm_toy2d".into(),
+                factory,
+                batch: srds::batching::BatchPolicy::default(),
+            },
+        );
     });
     // Wait for the listener.
     let mut stream = None;
