@@ -1,0 +1,115 @@
+//! Hot-path perf trail: steps/sec and *allocations per step* for the
+//! zero-copy step loop, as JSON lines — the numbers the PR trajectory
+//! tracks (the steady-state-zero-allocation claim of the `buf` layer,
+//! measured, not asserted).
+//!
+//! Two sections:
+//!
+//! * `hot_path` — the raw solver step loop at dim 64 / 256 / 1024 and
+//!   batch 1 / 8 / 32: a lockstep loop staging rows through one reused
+//!   [`BatchStage`] into pooled [`StateBuf`]s, exactly the shape of the
+//!   SRDS fine-solve inner loop. `allocs_per_step` counts pool misses
+//!   per executed row-step — ~0 after warm-up is the claim.
+//! * `hot_path_srds` — a full `coordinator::srds` run (church, N=256)
+//!   reporting its run-local pool counters plus steps/sec.
+//!
+//! `cargo bench --bench hot_path`
+//! One JSON object per line on stdout; no artifacts required.
+
+use srds::buf::{BatchStage, BufPool, StateBuf};
+use srds::coordinator::{prior_sample, SamplerSpec};
+use srds::data::{make_gmm, rng::SplitMix64};
+use srds::json::{self, Value};
+use srds::model::{AffineModel, EpsModel, GmmEps};
+use srds::solvers::{NativeBackend, Solver, StepBackend};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Run `iters` lockstep batch-steps of `batch` rows at dimension `dim`;
+/// returns (steps/sec over the timed phase, pool misses per row-step,
+/// final pool stats).
+fn step_loop(dim: usize, batch: usize, iters: usize) -> Value {
+    let model: Arc<dyn EpsModel> = Arc::new(AffineModel::new(dim, 0.35, 0.1));
+    let be = NativeBackend::new(model, Solver::Ddim);
+    let pool = BufPool::new();
+    let mut stage = BatchStage::new();
+    let mut rng = SplitMix64::new(9);
+    let x0 = rng.normals_f32(dim);
+    let mut states: Vec<StateBuf> = (0..batch).map(|_| pool.take(&x0)).collect();
+
+    let mut run = |iters: usize| {
+        for t in 0..iters {
+            let s0 = (t % 100) as f32 / 101.0;
+            stage.reset(0.0);
+            for st in states.iter() {
+                stage.push_row(st, s0, s0 + 1e-3, 0, None);
+            }
+            let out = stage.step(&be);
+            for (r, st) in states.iter_mut().enumerate() {
+                st.as_mut_slice().copy_from_slice(&out[r * dim..(r + 1) * dim]);
+            }
+        }
+    };
+    // Warm-up fills the stage and the (here trivial) pool demand.
+    run(iters / 10 + 1);
+    let warm = pool.stats();
+    let t0 = Instant::now();
+    run(iters);
+    let wall = t0.elapsed().as_secs_f64();
+    let end = pool.stats();
+
+    let row_steps = (iters * batch) as f64;
+    json::obj(vec![
+        ("bench", Value::Str("hot_path".into())),
+        ("dim", Value::Num(dim as f64)),
+        ("batch", Value::Num(batch as f64)),
+        ("steps_per_sec", Value::Num(row_steps / wall.max(1e-9))),
+        (
+            "allocs_per_step",
+            Value::Num((end.misses - warm.misses) as f64 / row_steps),
+        ),
+        ("pool_hits", Value::Num(end.hits as f64)),
+        ("pool_misses", Value::Num(end.misses as f64)),
+        ("pool_high_water", Value::Num(end.high_water as f64)),
+    ])
+}
+
+/// Full SRDS run on the church GMM: end-to-end steps/sec plus the
+/// run-local pool trail out of `RunStats`.
+fn srds_run(n: usize) -> Value {
+    let model: Arc<dyn EpsModel> = Arc::new(GmmEps::new(make_gmm("church")));
+    let be = NativeBackend::new(model, Solver::Ddim);
+    let x0 = prior_sample(be.dim(), 3);
+    let spec = SamplerSpec::srds(n).with_tol(0.0).with_max_iters(6).with_seed(3);
+    let t0 = Instant::now();
+    let out = srds::coordinator::srds(&be, &x0, &spec);
+    let wall = t0.elapsed().as_secs_f64();
+    json::obj(vec![
+        ("bench", Value::Str("hot_path_srds".into())),
+        ("n", Value::Num(n as f64)),
+        ("iters", Value::Num(out.stats.iters as f64)),
+        ("total_evals", Value::Num(out.stats.total_evals as f64)),
+        (
+            "steps_per_sec",
+            Value::Num(out.stats.total_evals as f64 / wall.max(1e-9)),
+        ),
+        ("pool_hits", Value::Num(out.stats.pool_hits as f64)),
+        ("pool_misses", Value::Num(out.stats.pool_misses as f64)),
+        (
+            "allocs_per_step",
+            Value::Num(out.stats.pool_misses as f64 / out.stats.total_evals.max(1) as f64),
+        ),
+    ])
+}
+
+fn main() {
+    for dim in [64usize, 256, 1024] {
+        for batch in [1usize, 8, 32] {
+            // Keep total work roughly constant across configurations.
+            let iters = (1 << 22) / (dim * batch).max(1);
+            let line = step_loop(dim, batch, iters.clamp(20, 20_000));
+            println!("{}", json::to_string(&line));
+        }
+    }
+    println!("{}", json::to_string(&srds_run(256)));
+}

@@ -6,19 +6,38 @@
 //! to `max_wait` and flushes when a bucket fills — classic
 //! vLLM-router-style batching adapted to diffusion steps.
 
+use crate::buf::{BatchStage, StateBuf};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// One row of pending step work (request-agnostic payload).
+///
+/// Zero-copy: the state is a refcounted [`StateBuf`] (queueing a row
+/// shares the producer's buffer, it does not copy it) and the mask is an
+/// `Arc` slice shared by every row of a request — a `clone()` of the row
+/// is two refcount bumps, no float moves.
 #[derive(Debug, Clone)]
 pub struct PendingRow {
     /// Opaque owner tag (request id, block id, …).
     pub tag: u64,
-    pub x: Vec<f32>,
+    pub x: StateBuf,
     pub s_from: f32,
     pub s_to: f32,
-    pub mask: Option<Vec<f32>>,
+    pub mask: Option<Arc<[f32]>>,
     pub guidance: f32,
     pub seed: u64,
+}
+
+/// Assemble `rows` into `stage` (cleared first): the flat `(b, dim)`
+/// states, per-row times/seeds and the concatenated masks, ready for one
+/// [`crate::solvers::StepBackend::step_into`] call. All rows must share
+/// one guidance weight and maskedness — the engine's batch key
+/// guarantees exactly that.
+pub fn stage_rows(rows: &[PendingRow], stage: &mut BatchStage) {
+    stage.reset(rows.first().map(|r| r.guidance).unwrap_or(0.0));
+    for r in rows {
+        stage.push_row(&r.x, r.s_from, r.s_to, r.seed, r.mask.as_deref());
+    }
 }
 
 /// Batch assembly policy.
@@ -201,7 +220,58 @@ mod tests {
     use super::*;
 
     fn row(tag: u64) -> PendingRow {
-        PendingRow { tag, x: vec![0.0; 4], s_from: 0.1, s_to: 0.2, mask: None, guidance: 0.0, seed: 0 }
+        PendingRow {
+            tag,
+            x: StateBuf::detached(vec![0.0; 4]),
+            s_from: 0.1,
+            s_to: 0.2,
+            mask: None,
+            guidance: 0.0,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn queued_rows_share_state_buffers() {
+        // Pushing a row must not copy the state: the queued row aliases
+        // the producer's buffer via refcount.
+        let buf = StateBuf::detached(vec![1.0, 2.0]);
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert!(b.push(PendingRow {
+            tag: 1,
+            x: buf.clone(),
+            s_from: 0.1,
+            s_to: 0.2,
+            mask: None,
+            guidance: 0.0,
+            seed: 0,
+        }));
+        assert!(!buf.is_unique(), "queue holds a share, not a copy");
+        let batch = b.take_batch();
+        assert_eq!(&batch[0].x[..], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn stage_rows_flattens_in_fifo_order() {
+        let mask: std::sync::Arc<[f32]> = vec![1.0f32, 0.0].into();
+        let rows: Vec<PendingRow> = (0..3)
+            .map(|i| PendingRow {
+                tag: i,
+                x: StateBuf::detached(vec![i as f32; 2]),
+                s_from: 0.1 * i as f32,
+                s_to: 0.1 * i as f32 + 0.05,
+                mask: Some(mask.clone()),
+                guidance: 7.5,
+                seed: i,
+            })
+            .collect();
+        let mut stage = crate::buf::BatchStage::new();
+        stage_rows(&rows, &mut stage);
+        assert_eq!(stage.rows(), 3);
+        assert_eq!(stage.x(), &[0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+        // Restaging reuses the same buffers and replaces the contents.
+        stage_rows(&rows[..1], &mut stage);
+        assert_eq!(stage.rows(), 1);
     }
 
     #[test]

@@ -1,0 +1,509 @@
+//! Zero-copy state buffers: the pooled [`StateBuf`] slab and the
+//! reusable [`BatchStage`] staging area.
+//!
+//! The paper's speedup analysis assumes the per-step model evaluation is
+//! the *only* cost on the trajectory (§3.4, §3.6); trajectory-parallel
+//! sampling at useful batch sizes is memory-bandwidth bound (ParaDiGMS,
+//! ParaTAA make the same observation), so the serving hot path cannot
+//! afford a `Vec<f32>` allocation per solver step. This module is the
+//! crate-wide answer:
+//!
+//! * [`BufPool`] — a thread-safe, dim-bucketed slab pool. `get(len)`
+//!   pops a recycled buffer off the bucket's free list (a *hit*) or
+//!   allocates fresh (a *miss*); dropping the last [`StateBuf`] handle
+//!   returns the slab to the pool. Free lists are bounded
+//!   (`max_free_per_bucket`, excess slabs are simply freed) and the pool
+//!   is observable via [`BufPool::stats`] — `pool_hits` / `pool_misses`
+//!   surface in [`crate::coordinator::RunStats`] and over the wire, so
+//!   "steady-state steps allocate nothing" is a measurable claim, not a
+//!   hope.
+//! * [`StateBuf`] — a refcounted `dim`-sized state vector. `clone()` is
+//!   a refcount bump (samplers and the engine share boundary states
+//!   across iterations and across queued step rows without copying);
+//!   mutation via [`StateBuf::as_mut_slice`] requires unique ownership —
+//!   write first, share after.
+//! * [`BatchStage`] — a reusable flat staging buffer for batched
+//!   [`StepRequest`]s: callers push rows (`x`, `s_from`, `s_to`, `seed`,
+//!   per-row mask) into persistent vectors and [`BatchStage::step`]
+//!   executes the whole batch via [`StepBackend::step_into`] into a
+//!   persistent output buffer. After warm-up a stage never reallocates.
+//!
+//! Recycled buffer contents are *unspecified*: every consumer writes the
+//! full buffer (solver steps write all `rows × dim` outputs) before
+//! reading it.
+
+use crate::solvers::{StepBackend, StepRequest};
+use std::collections::HashMap;
+use std::fmt;
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+/// Point-in-time pool counters (monotone except `live`/`free`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `get()` calls served from a free list (no allocation).
+    pub hits: u64,
+    /// `get()` calls that had to allocate a fresh slab.
+    pub misses: u64,
+    /// Buffers currently checked out (live `StateBuf`s).
+    pub live: usize,
+    /// Maximum of `live` ever observed — the leak detector: bounded
+    /// workloads must keep this bounded.
+    pub high_water: usize,
+    /// Buffers currently parked on the free lists.
+    pub free: usize,
+}
+
+struct PoolShared {
+    /// Free lists keyed by buffer length (the dim buckets).
+    free: Mutex<HashMap<usize, Vec<Box<[f32]>>>>,
+    /// Per-bucket free-list cap; returned slabs past it are freed.
+    max_free_per_bucket: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    live: AtomicUsize,
+    high_water: AtomicUsize,
+}
+
+impl PoolShared {
+    /// Return a slab to its bucket (or free it past the cap).
+    fn put(&self, data: Box<[f32]>) {
+        self.live.fetch_sub(1, Ordering::Relaxed);
+        let mut free = self.free.lock().unwrap();
+        let bucket = free.entry(data.len()).or_default();
+        if bucket.len() < self.max_free_per_bucket {
+            bucket.push(data);
+        }
+    }
+}
+
+/// Thread-safe slab pool of `f32` state buffers, bucketed by length.
+/// Cheap to clone (a handle); all clones share the same slabs and
+/// counters.
+#[derive(Clone)]
+pub struct BufPool {
+    shared: Arc<PoolShared>,
+}
+
+impl Default for BufPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufPool {
+    /// Default per-bucket free-list bound. Generous: at dim 1024 this
+    /// caps one bucket at 1 MiB of parked slabs.
+    pub const DEFAULT_MAX_FREE: usize = 256;
+
+    pub fn new() -> BufPool {
+        Self::with_max_free(Self::DEFAULT_MAX_FREE)
+    }
+
+    /// A pool whose free lists hold at most `max_free_per_bucket` slabs
+    /// per length bucket.
+    pub fn with_max_free(max_free_per_bucket: usize) -> BufPool {
+        BufPool {
+            shared: Arc::new(PoolShared {
+                free: Mutex::new(HashMap::new()),
+                max_free_per_bucket,
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                live: AtomicUsize::new(0),
+                high_water: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// Check out a buffer of exactly `len` floats. Contents are
+    /// unspecified (recycled slabs keep their old values) — write before
+    /// reading.
+    pub fn get(&self, len: usize) -> StateBuf {
+        let recycled = self.shared.free.lock().unwrap().get_mut(&len).and_then(Vec::pop);
+        let data = match recycled {
+            Some(d) => {
+                self.shared.hits.fetch_add(1, Ordering::Relaxed);
+                d
+            }
+            None => {
+                self.shared.misses.fetch_add(1, Ordering::Relaxed);
+                vec![0.0f32; len].into_boxed_slice()
+            }
+        };
+        let live = self.shared.live.fetch_add(1, Ordering::Relaxed) + 1;
+        self.shared.high_water.fetch_max(live, Ordering::Relaxed);
+        StateBuf {
+            inner: Arc::new(BufInner { data: Some(data), pool: Arc::downgrade(&self.shared) }),
+        }
+    }
+
+    /// Check out a buffer initialized to a copy of `data`.
+    pub fn take(&self, data: &[f32]) -> StateBuf {
+        let mut buf = self.get(data.len());
+        buf.as_mut_slice().copy_from_slice(data);
+        buf
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.shared.hits.load(Ordering::Relaxed),
+            misses: self.shared.misses.load(Ordering::Relaxed),
+            live: self.shared.live.load(Ordering::Relaxed),
+            high_water: self.shared.high_water.load(Ordering::Relaxed),
+            free: self.shared.free.lock().unwrap().values().map(Vec::len).sum(),
+        }
+    }
+}
+
+struct BufInner {
+    /// `Some` until drop; `Option` so `Drop` can move the slab back to
+    /// the pool without unsafe code.
+    data: Option<Box<[f32]>>,
+    /// Weak: a buffer outliving its pool just frees normally.
+    pool: Weak<PoolShared>,
+}
+
+impl Drop for BufInner {
+    fn drop(&mut self) {
+        // `data` is `None` when `into_vec` already stole the slab.
+        if let Some(data) = self.data.take() {
+            if let Some(pool) = self.pool.upgrade() {
+                pool.put(data);
+            }
+        }
+    }
+}
+
+/// A refcounted, pool-backed state vector. `clone()` bumps a refcount;
+/// the slab returns to its pool when the last handle drops. Mutable
+/// access requires unique ownership ([`StateBuf::as_mut_slice`]) —
+/// the write-then-share discipline every sampler follows.
+pub struct StateBuf {
+    inner: Arc<BufInner>,
+}
+
+impl StateBuf {
+    /// A pool-less buffer owning `data` directly (tests, one-off
+    /// callers); dropping it frees rather than recycles.
+    pub fn detached(data: Vec<f32>) -> StateBuf {
+        StateBuf {
+            inner: Arc::new(BufInner {
+                data: Some(data.into_boxed_slice()),
+                pool: Weak::new(),
+            }),
+        }
+    }
+
+    fn data(&self) -> &[f32] {
+        self.inner.data.as_deref().expect("slab present until drop")
+    }
+
+    pub fn len(&self) -> usize {
+        self.data().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data().is_empty()
+    }
+
+    /// Whether this handle is the only owner (mutation is allowed).
+    pub fn is_unique(&self) -> bool {
+        Arc::strong_count(&self.inner) == 1
+    }
+
+    /// Mutable view. Panics when the buffer is shared: mutate before
+    /// sharing (the zero-copy discipline — a shared state is immutable
+    /// by construction, so readers never race writers).
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        Arc::get_mut(&mut self.inner)
+            .expect("StateBuf mutated while shared; write before sharing")
+            .data
+            .as_deref_mut()
+            .expect("slab present until drop")
+    }
+
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.data().to_vec()
+    }
+
+    /// Consume the handle into a plain `Vec<f32>`. Unique handles steal
+    /// the slab (no copy, nothing returns to the pool); shared handles
+    /// copy.
+    pub fn into_vec(self) -> Vec<f32> {
+        match Arc::try_unwrap(self.inner) {
+            Ok(mut inner) => {
+                let data = inner.data.take().expect("slab present until drop");
+                if let Some(pool) = inner.pool.upgrade() {
+                    // The slab leaves the pool's accounting for good.
+                    pool.live.fetch_sub(1, Ordering::Relaxed);
+                    inner.pool = Weak::new();
+                }
+                data.into_vec()
+            }
+            Err(inner) => inner.data.as_deref().expect("slab present until drop").to_vec(),
+        }
+    }
+}
+
+impl Clone for StateBuf {
+    fn clone(&self) -> Self {
+        StateBuf { inner: self.inner.clone() }
+    }
+}
+
+impl Deref for StateBuf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.data()
+    }
+}
+
+impl fmt::Debug for StateBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "StateBuf(len={}, refs={})", self.len(), Arc::strong_count(&self.inner))
+    }
+}
+
+/// Resize `v` to exactly `n` elements, skipping all work (including the
+/// fill) when the length already matches — the common steady-state case.
+/// On a size change the whole buffer is zero-filled once (`clear` first,
+/// so old contents are never memcpy'd around by a realloc); callers
+/// always overwrite before reading, so the zeros are never observed.
+pub(crate) fn sized(v: &mut Vec<f32>, n: usize) {
+    if v.len() != n {
+        v.clear();
+        v.resize(n, 0.0);
+    }
+}
+
+/// Reusable flat staging buffer for one batched [`StepRequest`]: the
+/// `(b, dim)` states, per-row times/seeds, the tiled mask, and the
+/// batch output all live in persistent vectors that survive `reset()`.
+/// One stage per call site (a worker thread, a sampler run) makes the
+/// steady-state step loop allocation-free.
+#[derive(Default)]
+pub struct BatchStage {
+    x: Vec<f32>,
+    s_from: Vec<f32>,
+    s_to: Vec<f32>,
+    seeds: Vec<u64>,
+    mask: Vec<f32>,
+    has_mask: bool,
+    guidance: f32,
+    out: Vec<f32>,
+}
+
+impl BatchStage {
+    pub fn new() -> BatchStage {
+        BatchStage::default()
+    }
+
+    /// Clear the staged rows (keeping every allocation) and set the
+    /// batch-wide guidance weight.
+    pub fn reset(&mut self, guidance: f32) {
+        self.x.clear();
+        self.s_from.clear();
+        self.s_to.clear();
+        self.seeds.clear();
+        self.mask.clear();
+        self.has_mask = false;
+        self.guidance = guidance;
+    }
+
+    /// Stage one row. Rows of one batch must agree on maskedness (the
+    /// engine's batch key guarantees it; direct callers pass one
+    /// conditioning per run).
+    pub fn push_row(&mut self, x: &[f32], s_from: f32, s_to: f32, seed: u64, mask: Option<&[f32]>) {
+        debug_assert!(
+            self.s_from.is_empty() || self.has_mask == mask.is_some(),
+            "rows of one batch must agree on maskedness"
+        );
+        self.x.extend_from_slice(x);
+        self.s_from.push(s_from);
+        self.s_to.push(s_to);
+        self.seeds.push(seed);
+        if let Some(m) = mask {
+            self.has_mask = true;
+            self.mask.extend_from_slice(m);
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.s_from.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.s_from.is_empty()
+    }
+
+    /// The staged flat `(rows, dim)` input states (pre-step values; they
+    /// survive [`BatchStage::step`], which ParaDiGMS's drift rebuild
+    /// reads).
+    pub fn x(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// The last batch's flat `(rows, dim)` output.
+    pub fn out(&self) -> &[f32] {
+        &self.out
+    }
+
+    /// Execute the staged batch via [`StepBackend::step_into`] into the
+    /// persistent output buffer and return it.
+    pub fn step(&mut self, backend: &dyn StepBackend) -> &[f32] {
+        let rows = self.s_from.len();
+        let d = backend.dim();
+        sized(&mut self.out, rows * d);
+        let req = StepRequest {
+            x: &self.x,
+            s_from: &self.s_from,
+            s_to: &self.s_to,
+            mask: if self.has_mask { Some(self.mask.as_slice()) } else { None },
+            guidance: self.guidance,
+            seeds: &self.seeds,
+        };
+        backend.step_into(&req, &mut self.out);
+        &self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ZeroModel;
+    use crate::solvers::{NativeBackend, Solver};
+    use std::sync::Arc as StdArc;
+
+    #[test]
+    fn pool_recycles_and_counts() {
+        let pool = BufPool::new();
+        let a = pool.get(8);
+        assert_eq!(a.len(), 8);
+        let st = pool.stats();
+        assert_eq!((st.hits, st.misses, st.live, st.high_water), (0, 1, 1, 1));
+        drop(a);
+        assert_eq!(pool.stats().free, 1);
+        let b = pool.get(8);
+        let st = pool.stats();
+        assert_eq!((st.hits, st.misses, st.live), (1, 1, 1));
+        // A different length is a different bucket — a fresh miss.
+        let c = pool.get(4);
+        assert_eq!(pool.stats().misses, 2);
+        assert_eq!(pool.stats().high_water, 2);
+        drop((b, c));
+        assert_eq!(pool.stats().live, 0);
+        assert_eq!(pool.stats().free, 2);
+    }
+
+    #[test]
+    fn take_copies_contents() {
+        let pool = BufPool::new();
+        let src = vec![1.0f32, -2.0, 3.5];
+        let b = pool.take(&src);
+        assert_eq!(&b[..], &src[..]);
+    }
+
+    #[test]
+    fn recycled_slabs_are_reused_not_reallocated() {
+        let pool = BufPool::new();
+        for _ in 0..100 {
+            let _b = pool.take(&[0.0; 16]);
+        }
+        let st = pool.stats();
+        assert_eq!(st.misses, 1, "steady state allocates nothing");
+        assert_eq!(st.hits, 99);
+        assert_eq!(st.high_water, 1);
+    }
+
+    #[test]
+    fn free_list_is_bounded() {
+        let pool = BufPool::with_max_free(2);
+        let bufs: Vec<StateBuf> = (0..5).map(|_| pool.get(8)).collect();
+        assert_eq!(pool.stats().high_water, 5);
+        drop(bufs);
+        let st = pool.stats();
+        assert_eq!(st.free, 2, "excess slabs are freed, not hoarded");
+        assert_eq!(st.live, 0);
+    }
+
+    #[test]
+    fn shared_bufs_are_immutable_until_unique() {
+        let pool = BufPool::new();
+        let mut a = pool.take(&[1.0, 2.0]);
+        assert!(a.is_unique());
+        a.as_mut_slice()[0] = 9.0;
+        let b = a.clone();
+        assert!(!a.is_unique());
+        assert_eq!(&a[..], &b[..]);
+        drop(b);
+        assert!(a.is_unique());
+        a.as_mut_slice()[1] = 7.0;
+        assert_eq!(&a[..], &[9.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "write before sharing")]
+    fn mutating_a_shared_buf_panics() {
+        let pool = BufPool::new();
+        let mut a = pool.get(2);
+        let _b = a.clone();
+        a.as_mut_slice()[0] = 1.0;
+    }
+
+    #[test]
+    fn into_vec_steals_unique_slabs() {
+        let pool = BufPool::new();
+        let a = pool.take(&[1.0, 2.0]);
+        let v = a.into_vec();
+        assert_eq!(v, vec![1.0, 2.0]);
+        let st = pool.stats();
+        assert_eq!(st.live, 0, "stolen slab left the pool's accounting");
+        assert_eq!(st.free, 0, "stolen slab did not return to the pool");
+        // Shared handles copy instead.
+        let a = pool.take(&[3.0]);
+        let b = a.clone();
+        assert_eq!(a.into_vec(), vec![3.0]);
+        assert_eq!(&b[..], &[3.0]);
+    }
+
+    #[test]
+    fn detached_buf_ignores_pools() {
+        let b = StateBuf::detached(vec![4.0; 3]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.into_vec(), vec![4.0; 3]);
+    }
+
+    #[test]
+    fn stage_roundtrips_rows_and_reuses_buffers() {
+        let be = NativeBackend::new(StdArc::new(ZeroModel { dim: 2 }), Solver::Ddim);
+        let mut stage = BatchStage::new();
+        for trial in 0..3 {
+            stage.reset(0.0);
+            assert!(stage.is_empty());
+            stage.push_row(&[1.0 + trial as f32, 2.0], 0.2, 0.3, 0, None);
+            stage.push_row(&[3.0, 4.0], 0.4, 0.5, 1, None);
+            assert_eq!(stage.rows(), 2);
+            let out = stage.step(&be);
+            assert_eq!(out.len(), 4);
+            // ZeroModel DDIM: x' = c1·x with c2·0 — rows keep their order.
+            let c1 = crate::schedule::sqrt_ab(0.3) / crate::schedule::sqrt_ab(0.2);
+            assert!((out[0] - c1 * (1.0 + trial as f32)).abs() < 1e-6);
+            assert_eq!(stage.x()[2], 3.0, "staged inputs survive the step");
+        }
+    }
+
+    #[test]
+    fn stage_carries_per_row_masks() {
+        let mut stage = BatchStage::new();
+        stage.reset(7.5);
+        stage.push_row(&[0.0], 0.1, 0.2, 0, Some(&[1.0, 0.0]));
+        stage.push_row(&[0.0], 0.1, 0.2, 0, Some(&[0.0, 1.0]));
+        assert_eq!(stage.rows(), 2);
+        // The staged mask is the row-major concatenation.
+        let be = NativeBackend::new(StdArc::new(ZeroModel { dim: 1 }), Solver::Ddim);
+        stage.step(&be);
+        assert_eq!(stage.out().len(), 2);
+    }
+}

@@ -39,10 +39,14 @@ pub use srds::srds;
 pub use stats::{IterStat, RunStats};
 
 /// Conditioning information threaded through every sampler.
+///
+/// The mask is refcounted: the engine attaches it to every step row it
+/// emits, and an `Arc` clone per row beats copying `k` floats per row
+/// (requests at paper scale emit thousands of rows from one mask).
 #[derive(Debug, Clone, Default)]
 pub struct Conditioning {
-    /// Component mask for guided models (length = model k).
-    pub mask: Option<Vec<f32>>,
+    /// Component mask for guided models (length = model k), shared.
+    pub mask: Option<std::sync::Arc<[f32]>>,
     /// Classifier-free guidance weight (paper Table 2 uses 7.5).
     pub guidance: f32,
 }
@@ -53,18 +57,43 @@ impl Conditioning {
     }
 
     pub fn class(mask: Vec<f32>, guidance: f32) -> Self {
-        Conditioning { mask: Some(mask), guidance }
+        Conditioning { mask: Some(mask.into()), guidance }
     }
 
-    /// Tile the per-sample mask across `rows` batch rows.
-    pub(crate) fn tiled_mask(&self, rows: usize) -> Option<Vec<f32>> {
-        self.mask.as_ref().map(|m| {
-            let mut v = Vec::with_capacity(rows * m.len());
-            for _ in 0..rows {
-                v.extend_from_slice(m);
+    /// The single-sample mask as a slice (what single-row step requests
+    /// take directly — no tiling, no allocation).
+    pub fn mask_slice(&self) -> Option<&[f32]> {
+        self.mask.as_deref()
+    }
+
+    /// Tile the mask across up to `max_rows` batch rows **once per run**;
+    /// the returned [`TiledMask`] hands out row-count slices for every
+    /// batched step afterwards. Replaces the old per-call `tiled_mask`,
+    /// which re-allocated the tiling on every single coarse/fine call.
+    pub(crate) fn tiler(&self, max_rows: usize) -> TiledMask {
+        match &self.mask {
+            None => TiledMask { buf: Vec::new(), k: 0 },
+            Some(m) => {
+                let mut buf = Vec::with_capacity(max_rows * m.len());
+                for _ in 0..max_rows {
+                    buf.extend_from_slice(m);
+                }
+                TiledMask { buf, k: m.len() }
             }
-            v
-        })
+        }
+    }
+}
+
+/// A mask tiled once per run (see [`Conditioning::tiler`]).
+pub(crate) struct TiledMask {
+    buf: Vec<f32>,
+    k: usize,
+}
+
+impl TiledMask {
+    /// The `(rows, k)` mask slice, or `None` when unconditioned.
+    pub(crate) fn rows(&self, rows: usize) -> Option<&[f32]> {
+        (self.k > 0).then(|| &self.buf[..rows * self.k])
     }
 }
 
@@ -91,9 +120,14 @@ mod tests {
     }
 
     #[test]
-    fn tiled_mask_repeats() {
+    fn tiler_tiles_once_and_slices_per_row_count() {
         let c = Conditioning::class(vec![1.0, 0.0], 7.5);
-        assert_eq!(c.tiled_mask(3).unwrap(), vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
-        assert!(Conditioning::none().tiled_mask(3).is_none());
+        let t = c.tiler(3);
+        assert_eq!(t.rows(3).unwrap(), &[1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(t.rows(1).unwrap(), &[1.0, 0.0], "smaller batches slice the same tiling");
+        assert_eq!(c.mask_slice().unwrap(), &[1.0, 0.0]);
+        let none = Conditioning::none();
+        assert!(none.tiler(3).rows(3).is_none());
+        assert!(none.mask_slice().is_none());
     }
 }

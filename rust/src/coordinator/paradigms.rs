@@ -23,11 +23,18 @@
 //! sweeps (`None` → `8·N`).
 
 use super::{IterStat, RunStats, SampleOutput, SamplerSpec};
+use crate::buf::{BatchStage, BufPool, StateBuf};
 use crate::schedule::Grid;
-use crate::solvers::{StepBackend, StepRequest};
+use crate::solvers::StepBackend;
 use std::time::Instant;
 
 /// Run ParaDiGMS from the prior sample `x0`.
+///
+/// Zero-copy layout: the trajectory points are pooled [`StateBuf`]s
+/// written in place, every sweep's window is staged through one reused
+/// [`BatchStage`] (whose staged inputs double as the pre-sweep `x^k`
+/// values the drift rebuild needs), and the prefix-sum accumulator is a
+/// single persistent buffer — sweeps past the first allocate nothing.
 pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
     let t0 = Instant::now();
     let n = spec.n;
@@ -38,7 +45,10 @@ pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> S
     let max_sweeps = spec.max_iters.unwrap_or(8 * n).max(1);
 
     // Trajectory x[0..=n]; ParaDiGMS initializes every point to x0.
-    let mut x: Vec<Vec<f32>> = vec![x0.to_vec(); n + 1];
+    let pool = BufPool::new();
+    let mut x: Vec<StateBuf> = (0..=n).map(|_| pool.take(x0)).collect();
+    let mut stage = BatchStage::new();
+    let mut acc = vec![0.0f32; d];
     let mut lo = 0usize;
     let mut total_evals = 0u64;
     let mut sweeps = 0usize;
@@ -50,44 +60,34 @@ pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> S
         let hi = (lo + window).min(n);
         let rows = hi - lo;
         // Batched parallel evaluation of Φ at every window point.
-        let mut xin = Vec::with_capacity(rows * d);
-        let mut s_from = Vec::with_capacity(rows);
-        let mut s_to = Vec::with_capacity(rows);
-        for j in lo..hi {
-            xin.extend_from_slice(&x[j]);
-            s_from.push(grid.s(j));
-            s_to.push(grid.s(j + 1));
+        stage.reset(spec.cond.guidance);
+        for (j, xj) in x.iter().enumerate().take(hi).skip(lo) {
+            stage.push_row(xj, grid.s(j), grid.s(j + 1), spec.seed, spec.cond.mask_slice());
         }
-        let mask = spec.cond.tiled_mask(rows);
-        let seeds = vec![spec.seed; rows];
-        let phi = backend.step(&StepRequest {
-            x: &xin,
-            s_from: &s_from,
-            s_to: &s_to,
-            mask: mask.as_deref(),
-            guidance: spec.cond.guidance,
-            seeds: &seeds,
-        });
+        stage.step(backend);
         total_evals += rows as u64 * epc;
         sweeps += 1;
 
         // Prefix-sum rebuild + per-point error.
-        let mut acc = x[lo].clone();
+        acc.copy_from_slice(&x[lo]);
         let mut first_unconverged = hi; // index past lo of first bad point
         let mut max_err = 0.0f32;
+        // Drift is Φ(x^k_j) − x^k_j on the *pre-sweep* trajectory — the
+        // stage's staged inputs still hold it (x[j] may already be
+        // overwritten below).
+        let (xin, phi) = (stage.x(), stage.out());
         for j in lo..hi {
             let drift_base = (j - lo) * d;
             let mut err = 0.0f32;
-            // Drift is Φ(x^k_j) − x^k_j on the *pre-sweep* trajectory —
-            // `xin` still holds it (x[j] may already be overwritten).
+            let xj1 = x[j + 1].as_mut_slice();
             for t in 0..d {
                 acc[t] += phi[drift_base + t] - xin[drift_base + t];
-                let delta = acc[t] - x[j + 1][t];
+                let delta = acc[t] - xj1[t];
                 err += delta * delta;
             }
             err /= d as f32;
             max_err = max_err.max(err);
-            x[j + 1].copy_from_slice(&acc);
+            xj1.copy_from_slice(&acc);
             if err > tol2 && first_unconverged == hi {
                 first_unconverged = j;
             }
@@ -98,11 +98,12 @@ pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> S
         let stride = (first_unconverged - lo).max(1);
         per_iter.push(IterStat { iter: sweeps, residual: max_err.sqrt(), evals: rows as u64 * epc });
         if spec.keep_iterates {
-            iterates.push(x[n].clone());
+            iterates.push(x[n].to_vec());
         }
         lo += stride;
     }
 
+    let ps = pool.stats();
     let stats = RunStats {
         iters: sweeps,
         converged: lo >= n,
@@ -115,9 +116,11 @@ pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> S
         peak_states: window.min(n) + 1,
         batch_occupancy: 0.0,
         engine_rows: 0,
+        pool_hits: ps.hits,
+        pool_misses: ps.misses,
         per_iter,
     };
-    SampleOutput { sample: x[n].clone(), stats, iterates }
+    SampleOutput { sample: x.pop().unwrap().into_vec(), stats, iterates }
 }
 
 #[cfg(test)]

@@ -14,42 +14,68 @@
 //! the final sample moves less than `spec.tol` under `spec.norm`;
 //! `spec.max_iters` caps the iterations (`None` → `2·N`).
 
-use super::{IterStat, RunStats, SampleOutput, SamplerSpec};
-use crate::coordinator::Conditioning;
+use super::{IterStat, RunStats, SampleOutput, SamplerSpec, TiledMask};
+use crate::buf::{BufPool, StateBuf};
 use crate::schedule::Grid;
 use crate::solvers::{StepBackend, StepRequest};
 use std::collections::VecDeque;
 use std::time::Instant;
 
+/// Per-run staging for the trajectory map: grid times, seeds and the
+/// tiled mask are constant across iterations, so they are built once
+/// (the old code re-derived all four on every `T` application).
+struct TrajSchedule {
+    s_from: Vec<f32>,
+    s_to: Vec<f32>,
+    seeds: Vec<u64>,
+    mask: TiledMask,
+}
+
+impl TrajSchedule {
+    fn new(grid: &Grid, spec: &SamplerSpec) -> TrajSchedule {
+        let n = grid.n();
+        TrajSchedule {
+            s_from: (0..n).map(|i| grid.s(i)).collect(),
+            s_to: (0..n).map(|i| grid.s(i + 1)).collect(),
+            seeds: vec![spec.seed; n],
+            mask: spec.cond.tiler(n),
+        }
+    }
+}
+
 /// Apply the trajectory map `T`: one batched solver step at every grid
-/// point, fed by the previous trajectory.
+/// point, fed by the previous trajectory. Allocation-free: the stacked
+/// trajectory is already the flat `(n, d)` batch input, and the step
+/// writes straight into `out[d..]`.
 fn apply_t(
     backend: &dyn StepBackend,
-    grid: &Grid,
+    sched: &TrajSchedule,
     x: &[f32], // (n+1, d) stacked
-    cond: &Conditioning,
-    seed: u64,
+    guidance: f32,
     out: &mut [f32],
 ) {
-    let n = grid.n();
+    let n = sched.s_from.len();
     let d = backend.dim();
-    let s_from: Vec<f32> = (0..n).map(|i| grid.s(i)).collect();
-    let s_to: Vec<f32> = (0..n).map(|i| grid.s(i + 1)).collect();
-    let mask = cond.tiled_mask(n);
-    let seeds = vec![seed; n];
-    let phi = backend.step(&StepRequest {
-        x: &x[..n * d],
-        s_from: &s_from,
-        s_to: &s_to,
-        mask: mask.as_deref(),
-        guidance: cond.guidance,
-        seeds: &seeds,
-    });
     out[..d].copy_from_slice(&x[..d]); // T(X)_0 = x_0
-    out[d..(n + 1) * d].copy_from_slice(&phi);
+    backend.step_into(
+        &StepRequest {
+            x: &x[..n * d],
+            s_from: &sched.s_from,
+            s_to: &sched.s_to,
+            mask: sched.mask.rows(n),
+            guidance,
+            seeds: &sched.seeds,
+        },
+        &mut out[d..(n + 1) * d],
+    );
 }
 
 /// Run the Anderson-accelerated fixed-point sampler.
+///
+/// Zero-copy layout: the trajectory iterate, its `T`-image, the residual
+/// and the Anderson-mix scratch are persistent flat buffers; the history
+/// pairs are pooled [`StateBuf`]s, so once the history window fills the
+/// push/pop churn recycles through the pool instead of allocating.
 pub fn parataa(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
     let t0 = Instant::now();
     let n = spec.n;
@@ -59,6 +85,8 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sam
     let len = (n + 1) * d;
     let history = spec.history();
     let max_iters = spec.max_iters.unwrap_or(2 * n).max(1);
+    let sched = TrajSchedule::new(&grid, spec);
+    let pool = BufPool::new();
 
     // Initialize the trajectory at the prior (as ParaDiGMS does).
     let mut x = vec![0.0f32; len];
@@ -66,10 +94,12 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sam
         x[i * d..(i + 1) * d].copy_from_slice(x0);
     }
     let mut tx = vec![0.0f32; len];
+    let mut r = vec![0.0f32; len];
+    let mut xn = vec![0.0f32; len];
 
     // Anderson history of (x, residual) pairs.
-    let mut hist_x: VecDeque<Vec<f32>> = VecDeque::new();
-    let mut hist_r: VecDeque<Vec<f32>> = VecDeque::new();
+    let mut hist_x: VecDeque<StateBuf> = VecDeque::new();
+    let mut hist_r: VecDeque<StateBuf> = VecDeque::new();
 
     let mut total_evals = 0u64;
     let mut per_iter = Vec::new();
@@ -78,9 +108,11 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sam
     let mut iters = 0usize;
 
     for k in 1..=max_iters {
-        apply_t(backend, &grid, &x, &spec.cond, spec.seed, &mut tx);
+        apply_t(backend, &sched, &x, spec.cond.guidance, &mut tx);
         total_evals += n as u64 * epc;
-        let r: Vec<f32> = tx.iter().zip(&x).map(|(a, b)| a - b).collect();
+        for t in 0..len {
+            r[t] = tx[t] - x[t];
+        }
 
         // Residual on the final sample only (matches the SRDS criterion).
         let final_res = spec.norm.dist(&tx[n * d..], &x[n * d..]);
@@ -134,7 +166,7 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sam
             if let Some(gamma) = gamma {
                 // x_next = T(x) + Σ γ_j (T(x_hist_j) − T(x)) — with the
                 // standard identity T(x_j) = x_j + r_j.
-                let mut xn = tx.clone();
+                xn.copy_from_slice(&tx);
                 // Triangular awareness (the "TAA" in ParaTAA): after k
                 // plain applications of T the first k+1 trajectory points
                 // are *exactly* converged; mixing stale history there
@@ -149,21 +181,23 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sam
                         xn[t] += gj * ((xa[t] + ra[t]) - tx[t]);
                     }
                 }
-                hist_x.push_front(x.clone());
-                hist_r.push_front(r);
+                hist_x.push_front(pool.take(&x));
+                hist_r.push_front(pool.take(&r));
                 if hist_x.len() > history {
                     hist_x.pop_back();
                     hist_r.pop_back();
                 }
-                x = xn;
+                // xn becomes the iterate; the old iterate's buffer stays
+                // around as next round's mix scratch.
+                std::mem::swap(&mut x, &mut xn);
                 if spec.keep_iterates {
                     iterates.push(x[n * d..].to_vec());
                 }
                 continue;
             }
         }
-        hist_x.push_front(x.clone());
-        hist_r.push_front(r);
+        hist_x.push_front(pool.take(&x));
+        hist_r.push_front(pool.take(&r));
         if hist_x.len() > history {
             hist_x.pop_back();
             hist_r.pop_back();
@@ -174,6 +208,7 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sam
         }
     }
 
+    let ps = pool.stats();
     let stats = RunStats {
         iters,
         converged,
@@ -186,6 +221,8 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sam
         peak_states: (n + 1) * (3 + 2 * history),
         batch_occupancy: 0.0,
         engine_rows: 0,
+        pool_hits: ps.hits,
+        pool_misses: ps.misses,
         per_iter,
     };
     SampleOutput { sample: x[n * d..].to_vec(), stats, iterates }

@@ -2,12 +2,18 @@
 //! Eq. 3). This is the exact trajectory SRDS converges to (Prop. 1).
 
 use super::{Conditioning, RunStats};
+use crate::buf::BufPool;
 use crate::schedule::Grid;
 use crate::solvers::{StepBackend, StepRequest};
 use std::time::Instant;
 
 /// Run the `n`-step sequential solve from `x0` (the prior sample).
 /// Returns the final sample and its accounting.
+///
+/// Allocation-free after setup: the solve ping-pongs between two pooled
+/// state buffers via [`StepBackend::step_into`] (a step may not write
+/// over its own input), and the single-sample mask is passed straight
+/// through — no per-step tiling.
 pub fn sequential(
     backend: &dyn StepBackend,
     x0: &[f32],
@@ -17,20 +23,23 @@ pub fn sequential(
 ) -> (Vec<f32>, RunStats) {
     let t0 = Instant::now();
     let grid = Grid::new(n);
-    let mask = cond.tiled_mask(1);
-    let mut x = x0.to_vec();
+    let pool = BufPool::new();
+    let mut x = pool.take(x0);
+    let mut next = pool.get(x0.len());
     for i in 0..n {
         let req = StepRequest {
             x: &x,
             s_from: &[grid.s(i)],
             s_to: &[grid.s(i + 1)],
-            mask: mask.as_deref(),
+            mask: cond.mask_slice(),
             guidance: cond.guidance,
             seeds: &[seed],
         };
-        x = backend.step(&req);
+        backend.step_into(&req, next.as_mut_slice());
+        std::mem::swap(&mut x, &mut next);
     }
     let epc = backend.evals_per_step() as u64;
+    let ps = pool.stats();
     let stats = RunStats {
         iters: 0,
         converged: true,
@@ -41,9 +50,11 @@ pub fn sequential(
         peak_states: 1,
         batch_occupancy: 0.0,
         engine_rows: 0,
+        pool_hits: ps.hits,
+        pool_misses: ps.misses,
         per_iter: vec![],
     };
-    (x, stats)
+    (x.into_vec(), stats)
 }
 
 /// Sequential solve that also returns every intermediate block-boundary
@@ -56,21 +67,20 @@ pub fn sequential_trajectory(
     seed: u64,
 ) -> Vec<Vec<f32>> {
     let grid = Grid::new(n);
-    let mask = cond.tiled_mask(1);
     let mut out = Vec::with_capacity(n + 1);
     out.push(x0.to_vec());
-    let mut x = x0.to_vec();
+    let mut next = vec![0.0f32; x0.len()];
     for i in 0..n {
         let req = StepRequest {
-            x: &x,
+            x: out.last().unwrap(),
             s_from: &[grid.s(i)],
             s_to: &[grid.s(i + 1)],
-            mask: mask.as_deref(),
+            mask: cond.mask_slice(),
             guidance: cond.guidance,
             seeds: &[seed],
         };
-        x = backend.step(&req);
-        out.push(x.clone());
+        backend.step_into(&req, &mut next);
+        out.push(next.clone());
     }
     out
 }

@@ -17,11 +17,15 @@
 //! device batch dimension with its own trajectory blocks.
 
 use super::{Conditioning, IterStat, RunStats, SampleOutput, SamplerSpec};
+use crate::buf::{BatchStage, BufPool, StateBuf};
 use crate::schedule::Partition;
 use crate::solvers::{StepBackend, StepRequest};
 use std::time::Instant;
 
-/// One coarse step `G`: a single solver step across a whole block.
+/// One coarse step `G`: a single solver step across a whole block,
+/// written into `out`. Single row — the sample mask *is* the row mask,
+/// so there is no tiling on the coarse path at all (it used to re-tile
+/// on every call).
 fn coarse_step(
     backend: &dyn StepBackend,
     x: &[f32],
@@ -29,71 +33,78 @@ fn coarse_step(
     s_to: f32,
     cond: &Conditioning,
     seed: u64,
-) -> Vec<f32> {
-    let mask = cond.tiled_mask(1);
-    backend.step(&StepRequest {
-        x,
-        s_from: &[s_from],
-        s_to: &[s_to],
-        mask: mask.as_deref(),
-        guidance: cond.guidance,
-        seeds: &[seed],
-    })
+    out: &mut [f32],
+) {
+    backend.step_into(
+        &StepRequest {
+            x,
+            s_from: &[s_from],
+            s_to: &[s_to],
+            mask: cond.mask_slice(),
+            guidance: cond.guidance,
+            seeds: &[seed],
+        },
+        out,
+    );
 }
 
-/// All blocks' fine solves, batched in lockstep.
+/// All blocks' fine solves, batched in lockstep, written into the
+/// caller's persistent scratch: `stage` is the reused flat staging
+/// buffer and `y` the pooled per-block lockstep states (cleared first,
+/// so the previous iteration's buffers recycle through `pool`).
 ///
-/// Returns the per-block results `y[i]` plus the accounting pair
-/// `(serial_fine_steps, total_fine_steps)`.
+/// Returns the accounting pair `(serial_fine_steps, total_fine_steps)`;
+/// the per-block results are left in `y`.
+#[allow(clippy::too_many_arguments)]
 fn fine_solves(
     backend: &dyn StepBackend,
     part: &Partition,
-    x_prev: &[Vec<f32>],
+    x_prev: &[StateBuf],
     cond: &Conditioning,
     seed: u64,
-) -> (Vec<Vec<f32>>, u64, u64) {
+    pool: &BufPool,
+    stage: &mut BatchStage,
+    y: &mut Vec<StateBuf>,
+) -> (u64, u64) {
     let m = part.num_blocks();
     let d = backend.dim();
     let grid = part.grid();
     let max_len = (0..m).map(|j| part.block_len(j)).max().unwrap_or(0);
 
-    // states[j] starts at the previous iterate of boundary j (block j+1's
+    // y[j] starts at the previous iterate of boundary j (block j+1's
     // initial value); rows drop out once their block is fully solved.
-    let mut states: Vec<Vec<f32>> = (0..m).map(|j| x_prev[j].clone()).collect();
+    y.clear();
+    for xj in x_prev {
+        y.push(pool.take(xj));
+    }
     let mut serial = 0u64;
     let mut total = 0u64;
     for t in 0..max_len {
-        let active: Vec<usize> = (0..m).filter(|&j| t < part.block_len(j)).collect();
-        if active.is_empty() {
+        stage.reset(cond.guidance);
+        for (j, yj) in y.iter().enumerate() {
+            if t >= part.block_len(j) {
+                continue;
+            }
+            let base = part.bound(j) + t;
+            stage.push_row(yj, grid.s(base), grid.s(base + 1), seed, cond.mask_slice());
+        }
+        if stage.is_empty() {
             break;
         }
-        let rows = active.len();
-        let mut x = Vec::with_capacity(rows * d);
-        let mut s_from = Vec::with_capacity(rows);
-        let mut s_to = Vec::with_capacity(rows);
-        for &j in &active {
-            x.extend_from_slice(&states[j]);
-            let base = part.bound(j) + t;
-            s_from.push(grid.s(base));
-            s_to.push(grid.s(base + 1));
-        }
-        let mask = cond.tiled_mask(rows);
-        let seeds = vec![seed; rows];
-        let out = backend.step(&StepRequest {
-            x: &x,
-            s_from: &s_from,
-            s_to: &s_to,
-            mask: mask.as_deref(),
-            guidance: cond.guidance,
-            seeds: &seeds,
-        });
-        for (r, &j) in active.iter().enumerate() {
-            states[j].copy_from_slice(&out[r * d..(r + 1) * d]);
+        let rows = stage.rows();
+        let out = stage.step(backend);
+        let mut r = 0usize;
+        for (j, yj) in y.iter_mut().enumerate() {
+            if t >= part.block_len(j) {
+                continue;
+            }
+            yj.as_mut_slice().copy_from_slice(&out[r * d..(r + 1) * d]);
+            r += 1;
         }
         serial += 1;
         total += rows as u64;
     }
-    (states, serial, total)
+    (serial, total)
 }
 
 /// Run SRDS from the prior sample `x0`. See module docs for the algorithm.
@@ -102,22 +113,37 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sample
     let part = spec.partition();
     let m = part.num_blocks();
     let b = part.block();
+    let d = backend.dim();
     let epc = backend.evals_per_step() as u64;
     let max_iters = spec.max_iters.unwrap_or(m).max(1);
 
+    // Run-local slab pool + staging: every boundary state, coarse result
+    // and fine lockstep state is a pooled StateBuf written in place, so
+    // after the first iteration the loop runs entirely on recycled
+    // buffers (stats.pool_misses stops growing, stats.pool_hits climbs).
+    let pool = BufPool::new();
+    let mut stage = BatchStage::new();
+    let mut y: Vec<StateBuf> = Vec::new();
+
     // Coarse init sweep (Alg. 1 lines 2–4).
-    let mut x: Vec<Vec<f32>> = Vec::with_capacity(m + 1);
-    x.push(x0.to_vec());
-    let mut prev: Vec<Vec<f32>> = vec![Vec::new()];
+    let mut x: Vec<StateBuf> = Vec::with_capacity(m + 1);
+    x.push(pool.take(x0));
+    // prev[0] is never read; an empty placeholder keeps the 1-based
+    // block indexing of the paper.
+    let mut prev: Vec<StateBuf> = vec![StateBuf::detached(Vec::new())];
     for i in 1..=m {
-        let g = coarse_step(
+        let mut g = pool.get(d);
+        coarse_step(
             backend,
             &x[i - 1],
             part.s_bound(i - 1),
             part.s_bound(i),
             &spec.cond,
             spec.seed,
+            g.as_mut_slice(),
         );
+        // Refcount share, not a copy: both are read-only from here and
+        // each is replaced (never mutated) by the corrector sweep.
         x.push(g.clone());
         prev.push(g);
     }
@@ -125,7 +151,7 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sample
     let mut eff_serial = m as u64 * epc;
     let mut iterates = Vec::new();
     if spec.keep_iterates {
-        iterates.push(x[m].clone());
+        iterates.push(x[m].to_vec());
     }
 
     let mut per_iter = Vec::new();
@@ -135,31 +161,45 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sample
     for p in 1..=max_iters {
         let evals_before = total_evals;
         // Parallel fine solves from the previous iterate (line 7–8).
-        let (y, fine_serial, fine_total) =
-            fine_solves(backend, &part, &x[0..m], &spec.cond, spec.seed);
+        let (fine_serial, fine_total) = fine_solves(
+            backend,
+            &part,
+            &x[0..m],
+            &spec.cond,
+            spec.seed,
+            &pool,
+            &mut stage,
+            &mut y,
+        );
         total_evals += fine_total * epc;
         eff_serial += fine_serial * epc;
 
         // Sequential coarse sweep + predictor-corrector (lines 9–12).
         let x_final_prev = x[m].clone();
         for i in 1..=m {
-            let cur = coarse_step(
+            let mut cur = pool.get(d);
+            coarse_step(
                 backend,
                 &x[i - 1],
                 part.s_bound(i - 1),
                 part.s_bound(i),
                 &spec.cond,
                 spec.seed,
+                cur.as_mut_slice(),
             );
-            let (yi, previ) = (&y[i - 1], &prev[i]);
-            let xi = &mut x[i];
-            // Eq. 6's parenthesization y + (G_new − G_old) is load-bearing:
-            // once the coarse solves agree bitwise the correction is an
-            // exact 0.0 and x collapses onto the fine solve (Prop. 1's
-            // bitwise-equality property).
-            for j in 0..xi.len() {
-                xi[j] = yi[j] + (cur[j] - previ[j]);
+            let mut xi = pool.get(d);
+            {
+                let xs = xi.as_mut_slice();
+                let (yi, previ) = (&y[i - 1], &prev[i]);
+                // Eq. 6's parenthesization y + (G_new − G_old) is
+                // load-bearing: once the coarse solves agree bitwise the
+                // correction is an exact 0.0 and x collapses onto the
+                // fine solve (Prop. 1's bitwise-equality property).
+                for j in 0..d {
+                    xs[j] = yi[j] + (cur[j] - previ[j]);
+                }
             }
+            x[i] = xi; // the replaced buffers return to the pool
             prev[i] = cur;
         }
         total_evals += m as u64 * epc;
@@ -169,7 +209,7 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sample
         let residual = spec.norm.dist(&x[m], &x_final_prev);
         per_iter.push(IterStat { iter: p, residual, evals: total_evals - evals_before });
         if spec.keep_iterates {
-            iterates.push(x[m].clone());
+            iterates.push(x[m].to_vec());
         }
         // Line 13: convergence on the final generation; Prop. 1 makes
         // p == m exact regardless of τ.
@@ -187,6 +227,7 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sample
         ((m * iters + b).saturating_sub(iters)) as u64 * epc
     };
 
+    let ps = pool.stats();
     let stats = RunStats {
         iters,
         converged,
@@ -199,9 +240,11 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sample
         peak_states: 3 * m + 2,
         batch_occupancy: 0.0,
         engine_rows: 0,
+        pool_hits: ps.hits,
+        pool_misses: ps.misses,
         per_iter,
     };
-    SampleOutput { sample: x.pop().unwrap(), stats, iterates }
+    SampleOutput { sample: x.pop().unwrap().into_vec(), stats, iterates }
 }
 
 #[cfg(test)]
@@ -324,6 +367,26 @@ mod tests {
         let res = srds(&be, &x0, &spec);
         let d = spec.norm.dist(&res.sample, &seq);
         assert!(d < 1e-4, "guided srds vs sequential {d}");
+    }
+
+    #[test]
+    fn steady_state_iterations_allocate_no_buffers() {
+        // The zero-copy claim, run-local: more refinement iterations must
+        // not allocate more state buffers — after the first iteration the
+        // pool serves everything from its free lists.
+        let be = gmm_backend("church", Solver::Ddim);
+        let x0 = prior_sample(64, 9);
+        let run = |k: usize| {
+            srds(&be, &x0, &SamplerSpec::srds(256).with_tol(0.0).with_max_iters(k).with_seed(9))
+        };
+        let short = run(2);
+        let long = run(8);
+        assert!(short.stats.pool_misses > 0, "states do come from the pool");
+        assert_eq!(
+            short.stats.pool_misses, long.stats.pool_misses,
+            "iterations past warm-up allocated fresh buffers"
+        );
+        assert!(long.stats.pool_hits > short.stats.pool_hits, "recycling is happening");
     }
 
     #[test]

@@ -51,6 +51,16 @@ pub struct RunStats {
     pub batch_occupancy: f64,
     /// Step rows this run contributed to the engine (0 off-engine).
     pub engine_rows: u64,
+    /// State-buffer pool requests served from the free list
+    /// ([`crate::buf::BufPool`]). For coordinator runs this is the
+    /// run-local pool; for engine-resident requests it is a snapshot of
+    /// the engine's shared pool at completion — either way, steady-state
+    /// zero allocation means `pool_misses` stops growing while
+    /// `pool_hits` keeps climbing.
+    pub pool_hits: u64,
+    /// Pool requests that had to allocate a fresh buffer (see
+    /// [`RunStats::pool_hits`]).
+    pub pool_misses: u64,
     /// Per-iteration details.
     pub per_iter: Vec<IterStat>,
 }

@@ -9,8 +9,10 @@
 //!   sampling requests share one worker pool, every fine/coarse step
 //!   becomes a [`crate::batching::PendingRow`], and rows are fused into
 //!   multi-row [`crate::solvers::StepRequest`] batches across requests
-//!   (§3.4's batched inference, applied to serving). The serving loop
-//!   dispatches into this.
+//!   (§3.4's batched inference, applied to serving). All request state
+//!   rides in pooled [`crate::buf::StateBuf`]s from one engine-wide
+//!   slab pool — a warm engine allocates no state buffers. The serving
+//!   loop dispatches into this.
 //! * [`measured`] — the single-request veneer over the engine (one OS
 //!   thread per simulated device, each owning its own thread-bound PJRT
 //!   or native backend) running the *pipelined* SRDS dataflow of Fig. 4

@@ -12,7 +12,13 @@
 //!   engine ([`exec::engine`]: one shared worker pool, cross-request
 //!   batched steps via [`batching`]), a discrete-event simulated-clock
 //!   executor ([`exec::simclock`]), and the JSON-line serving loop
-//!   ([`server`]) that dispatches every request into the engine.
+//!   ([`server`]) that dispatches every request into the engine. All
+//!   state on the hot path lives in the zero-copy buffer layer ([`buf`]:
+//!   the pooled refcounted `StateBuf` slab + the reusable `BatchStage`
+//!   staging buffer), and solver steps write in place via the
+//!   [`solvers::StepBackend::step_into`] contract — steady-state steps
+//!   allocate nothing, observable as `pool_hits`/`pool_misses` in
+//!   [`coordinator::RunStats`] and over the wire.
 //! * **L2/L1 (python/, build-time only)** — JAX solver-step graphs calling
 //!   Pallas kernels, AOT-lowered once to HLO-text artifacts that
 //!   [`runtime`] loads and executes via the PJRT C API (`xla` crate).
@@ -25,6 +31,7 @@
 //! benches under `rust/benches/` print the paper-vs-measured tables.
 
 pub mod batching;
+pub mod buf;
 pub mod coordinator;
 pub mod data;
 pub mod exec;

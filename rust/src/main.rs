@@ -136,13 +136,16 @@ fn cmd_sample(flags: HashMap<String, String>) -> srds::Result<()> {
     let r = entry.run(be.as_ref(), &x0, &spec);
     let sample = r.sample;
     println!(
-        "{}: {} iters (converged={}), eff serial evals {} (pipelined {}), total {}; wall {:.1} ms",
+        "{}: {} iters (converged={}), eff serial evals {} (pipelined {}), total {}; \
+         state pool {} hits / {} misses; wall {:.1} ms",
         entry.name(),
         r.stats.iters,
         r.stats.converged,
         r.stats.eff_serial_evals,
         r.stats.eff_serial_evals_pipelined,
         r.stats.total_evals,
+        r.stats.pool_hits,
+        r.stats.pool_misses,
         t0.elapsed().as_secs_f64() * 1e3
     );
     let d = sample.len();

@@ -4,9 +4,22 @@
 use super::{lit0, lit1, lit2, LoadedStep, PjrtRuntime};
 use crate::solvers::{ddpm_noise, BackendFactory, Solver, StepBackend, StepRequest};
 use crate::Result;
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::path::PathBuf;
 use std::rc::Rc;
+
+/// Bucket-padding scratch reused across chunks and calls: the padded
+/// `x` / `s_from` / `s_to` / mask / noise marshalling buffers. Keeps the
+/// steady-state step loop free of fresh allocations on the host side
+/// (the PJRT call itself still materializes device literals).
+#[derive(Default)]
+struct PadScratch {
+    xb: Vec<f32>,
+    sf: Vec<f32>,
+    st: Vec<f32>,
+    mb: Vec<f32>,
+    noise: Vec<f32>,
+}
 
 /// PJRT-backed solver step for one (model, solver) pair.
 ///
@@ -26,6 +39,7 @@ pub struct PjrtBackend {
     /// Model evaluations actually executed (incl. padding), diagnostics.
     evals_executed: Cell<u64>,
     calls: Cell<u64>,
+    scratch: RefCell<PadScratch>,
 }
 
 impl PjrtBackend {
@@ -51,6 +65,7 @@ impl PjrtBackend {
             steps,
             evals_executed: Cell::new(0),
             calls: Cell::new(0),
+            scratch: RefCell::new(PadScratch::default()),
         })
     }
 
@@ -101,6 +116,9 @@ impl PjrtBackend {
         &self.steps.iter().find(|&&(b, _)| b == bucket).expect("bucket").1
     }
 
+    /// Execute one padded bucket, writing the `rows * dim` real outputs
+    /// into `out` (pad rows are discarded).
+    #[allow(clippy::too_many_arguments)]
     fn run_chunk(
         &self,
         bucket: usize,
@@ -111,43 +129,50 @@ impl PjrtBackend {
         mask: Option<&[f32]>,
         guidance: f32,
         seeds: &[u64],
-    ) -> Result<Vec<f32>> {
+        out: &mut [f32],
+    ) -> Result<()> {
         let d = self.dim;
         let k = self.k;
+        let mut sc = self.scratch.borrow_mut();
         // Pad by replicating the last real row (keeps values finite).
-        let pad = |src: &[f32], width: usize| -> Vec<f32> {
-            let mut v = Vec::with_capacity(bucket * width);
-            v.extend_from_slice(&src[..rows * width]);
+        let pad = |dst: &mut Vec<f32>, src: &[f32], width: usize| {
+            dst.clear();
+            dst.extend_from_slice(&src[..rows * width]);
             for _ in rows..bucket {
-                v.extend_from_slice(&src[(rows - 1) * width..rows * width]);
+                dst.extend_from_slice(&src[(rows - 1) * width..rows * width]);
             }
-            v
         };
-        let xb = pad(x, d);
-        let sf = pad(s_from, 1);
-        let st = pad(s_to, 1);
-        let mut lits: Vec<xla::Literal> = vec![lit2(&xb, bucket, d)?, lit1(&sf), lit1(&st)];
+        let PadScratch { xb, sf, st, mb, noise } = &mut *sc;
+        pad(xb, x, d);
+        pad(sf, s_from, 1);
+        pad(st, s_to, 1);
+        let mut lits: Vec<xla::Literal> = vec![lit2(xb, bucket, d)?, lit1(sf), lit1(st)];
         if self.guided {
-            let mb = match mask {
-                Some(m) => pad(m, k),
-                None => vec![1.0f32; bucket * k],
-            };
-            lits.push(lit2(&mb, bucket, k)?);
+            match mask {
+                Some(m) => pad(mb, m, k),
+                None => {
+                    mb.clear();
+                    mb.resize(bucket * k, 1.0);
+                }
+            }
+            lits.push(lit2(mb, bucket, k)?);
             lits.push(lit0(if mask.is_some() { guidance } else { 0.0 }));
         }
         if self.solver.stochastic() {
-            let mut noise = vec![0.0f32; bucket * d];
+            noise.clear();
+            noise.resize(bucket * d, 0.0);
             for r in 0..bucket {
                 let rr = r.min(rows - 1);
                 ddpm_noise(seeds[rr], sf[r], d, &mut noise[r * d..(r + 1) * d]);
             }
-            lits.push(lit2(&noise, bucket, d)?);
+            lits.push(lit2(noise, bucket, d)?);
         }
-        let out = self.exe_for(bucket).run(&lits)?;
+        let res = self.exe_for(bucket).run(&lits)?;
         self.evals_executed
             .set(self.evals_executed.get() + (bucket * self.solver.evals_per_step()) as u64);
         self.calls.set(self.calls.get() + 1);
-        Ok(out[..rows * d].to_vec())
+        out[..rows * d].copy_from_slice(&res[..rows * d]);
+        Ok(())
     }
 }
 
@@ -160,28 +185,26 @@ impl StepBackend for PjrtBackend {
         self.solver
     }
 
-    fn step(&self, req: &StepRequest) -> Vec<f32> {
+    fn step_into(&self, req: &StepRequest, out: &mut [f32]) {
         let rows = req.rows();
         let d = self.dim;
-        let mut out = Vec::with_capacity(rows * d);
+        debug_assert_eq!(out.len(), rows * d, "step_into output must be exactly (b, dim)");
         let mut off = 0usize;
         for (bucket, real) in self.plan(rows) {
-            let chunk = self
-                .run_chunk(
-                    bucket,
-                    real,
-                    &req.x[off * d..(off + real) * d],
-                    &req.s_from[off..off + real],
-                    &req.s_to[off..off + real],
-                    req.mask.map(|m| &m[off * self.k.max(1)..(off + real) * self.k.max(1)]),
-                    req.guidance,
-                    &req.seeds[off..off + real],
-                )
-                .expect("pjrt step execution failed");
-            out.extend_from_slice(&chunk);
+            self.run_chunk(
+                bucket,
+                real,
+                &req.x[off * d..(off + real) * d],
+                &req.s_from[off..off + real],
+                &req.s_to[off..off + real],
+                req.mask.map(|m| &m[off * self.k.max(1)..(off + real) * self.k.max(1)]),
+                req.guidance,
+                &req.seeds[off..off + real],
+                &mut out[off * d..(off + real) * d],
+            )
+            .expect("pjrt step execution failed");
             off += real;
         }
-        out
     }
 }
 

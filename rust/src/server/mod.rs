@@ -192,6 +192,11 @@ fn success_response(
         ),
         ("total_evals", Value::Num(out.stats.total_evals as f64)),
         ("peak_states", Value::Num(out.stats.peak_states as f64)),
+        // State-buffer pool accounting (run-local for direct runs,
+        // engine-pool snapshot for engine-resident SRDS): steady-state
+        // zero allocation shows up as flat pool_misses across responses.
+        ("pool_hits", Value::Num(out.stats.pool_hits as f64)),
+        ("pool_misses", Value::Num(out.stats.pool_misses as f64)),
         ("wall_ms", Value::Num(wall_ms)),
     ];
     if let Some(engine) = engine {
@@ -200,6 +205,7 @@ fn success_response(
         pairs.push(("engine_rows", Value::Num(out.stats.engine_rows as f64)));
         pairs.push(("queue_depth", Value::Num(st.queue_depth as f64)));
         pairs.push(("flushed_batches", Value::Num(st.flushed_batches as f64)));
+        pairs.push(("pool_high_water", Value::Num(st.pool_high_water as f64)));
     }
     if req.return_sample {
         pairs.push(("sample", json::arr_f32(&out.sample)));
@@ -449,6 +455,9 @@ mod tests {
             assert_eq!(v.get("sampler").unwrap().as_str(), Some(sampler));
             assert!(v.get("sample").is_none());
             assert!(v.get("eff_serial_evals_pipelined").is_some(), "{sampler}: {resp}");
+            // The zero-copy satellite: pool accounting is on the wire.
+            assert!(v.get("pool_hits").is_some(), "{sampler}: {resp}");
+            assert!(v.get("pool_misses").is_some(), "{sampler}: {resp}");
         }
     }
 
@@ -561,6 +570,7 @@ mod tests {
             assert!(v.get("engine_rows").unwrap().as_f64().unwrap() > 0.0, "{sampler}: {resp}");
             assert!(v.get("queue_depth").is_some(), "{sampler}: {resp}");
             assert!(v.get("flushed_batches").unwrap().as_f64().unwrap() > 0.0, "{sampler}: {resp}");
+            assert!(v.get("pool_high_water").unwrap().as_f64().unwrap() > 0.0, "{sampler}: {resp}");
         }
     }
 

@@ -91,11 +91,27 @@ impl<'a> StepRequest<'a> {
 /// Where a solver step executes. Object-safe; PJRT-backed impls are
 /// thread-bound (the `xla` crate's client is `Rc`-based), so backends are
 /// created per worker thread via [`BackendFactory`].
+///
+/// The required method is the *write-into* form [`StepBackend::step_into`]:
+/// the caller owns the output buffer (typically a pooled
+/// [`crate::buf::StateBuf`] or a [`crate::buf::BatchStage`]'s persistent
+/// output), so steady-state step loops allocate nothing. `out` must not
+/// alias `req.x` (guaranteed by `&mut` — ping-pong two buffers when
+/// feeding a step its own output). Implementations may keep internal
+/// scratch (they are `!Sync`, one instance per thread).
 pub trait StepBackend {
     fn dim(&self) -> usize;
     fn solver(&self) -> Solver;
-    /// Execute one batched solver step; returns flat `(b, dim)`.
-    fn step(&self, req: &StepRequest) -> Vec<f32>;
+    /// Execute one batched solver step, writing the flat `(b, dim)`
+    /// result into `out` (whose length must be exactly `b * dim`).
+    fn step_into(&self, req: &StepRequest, out: &mut [f32]);
+    /// Allocating convenience wrapper over [`StepBackend::step_into`]
+    /// (tests, one-off callers — not the hot path).
+    fn step(&self, req: &StepRequest) -> Vec<f32> {
+        let mut out = vec![0.0f32; req.rows() * self.dim()];
+        self.step_into(req, &mut out);
+        out
+    }
     fn evals_per_step(&self) -> usize {
         self.solver().evals_per_step()
     }

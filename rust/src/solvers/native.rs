@@ -4,9 +4,21 @@
 //! (pinned by `rust/tests/golden.rs`).
 
 use super::{ddim_coeffs, ddpm_coeffs, ddpm_noise, Solver, StepBackend, StepRequest};
+use crate::buf::sized;
 use crate::model::EpsModel;
 use crate::schedule;
+use std::cell::RefCell;
 use std::sync::Arc;
+
+/// Per-backend model-eval scratch, reused across [`StepBackend::step_into`]
+/// calls so the 2-eval solvers (Heun, DPM-2) and DDPM's noise row never
+/// allocate on the hot path. Sized lazily to the largest batch seen.
+#[derive(Default)]
+struct Scratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    s: Vec<f32>,
+}
 
 /// Native backend: batched eps through the model, per-row schedule
 /// coefficients, fused update.
@@ -19,14 +31,18 @@ use std::sync::Arc;
 /// outputs must be bit-identical to a solo run (pinned below by
 /// `batched_mixed_rows_equal_solo_rows` and by the engine's equivalence
 /// tests).
+///
+/// The scratch `RefCell` makes the backend `!Sync` — one instance per
+/// thread, which is already the [`super::BackendFactory`] contract.
 pub struct NativeBackend {
     model: Arc<dyn EpsModel>,
     solver: Solver,
+    scratch: RefCell<Scratch>,
 }
 
 impl NativeBackend {
     pub fn new(model: Arc<dyn EpsModel>, solver: Solver) -> Self {
-        NativeBackend { model, solver }
+        NativeBackend { model, solver, scratch: RefCell::new(Scratch::default()) }
     }
 
     pub fn model(&self) -> &Arc<dyn EpsModel> {
@@ -64,13 +80,14 @@ impl StepBackend for NativeBackend {
         self.solver
     }
 
-    fn step(&self, req: &StepRequest) -> Vec<f32> {
+    fn step_into(&self, req: &StepRequest, out: &mut [f32]) {
         let b = req.rows();
         let d = self.model.dim();
-        let mut out = vec![0.0f32; b * d];
+        debug_assert_eq!(out.len(), b * d, "step_into output must be exactly (b, dim)");
+        let mut sc = self.scratch.borrow_mut();
         match self.solver {
             Solver::Ddim => {
-                self.eps(req.x, req.s_from, req, &mut out);
+                self.eps(req.x, req.s_from, req, out);
                 for i in 0..b {
                     let (c1, c2) = ddim_coeffs(req.s_from[i], req.s_to[i]);
                     for j in 0..d {
@@ -80,11 +97,12 @@ impl StepBackend for NativeBackend {
                 }
             }
             Solver::Ddpm => {
-                self.eps(req.x, req.s_from, req, &mut out);
-                let mut xi = vec![0.0f32; d];
+                self.eps(req.x, req.s_from, req, out);
+                let xi = &mut sc.a;
+                sized(xi, d);
                 for i in 0..b {
                     let (c1, c2, c3) = ddpm_coeffs(req.s_from[i], req.s_to[i]);
-                    ddpm_noise(req.seeds[i], req.s_from[i], d, &mut xi);
+                    ddpm_noise(req.seeds[i], req.s_from[i], d, xi);
                     for j in 0..d {
                         let idx = i * d + j;
                         out[idx] = c1 * req.x[idx] + c2 * out[idx] + c3 * xi[j];
@@ -92,7 +110,7 @@ impl StepBackend for NativeBackend {
                 }
             }
             Solver::Euler => {
-                self.pf_slope(req.x, req.s_from, req, &mut out);
+                self.pf_slope(req.x, req.s_from, req, out);
                 for i in 0..b {
                     let h = req.s_to[i] - req.s_from[i];
                     for j in 0..d {
@@ -102,9 +120,10 @@ impl StepBackend for NativeBackend {
                 }
             }
             Solver::Heun => {
-                let mut d1 = vec![0.0f32; b * d];
-                self.pf_slope(req.x, req.s_from, req, &mut d1);
-                let mut xe = vec![0.0f32; b * d];
+                let Scratch { a: d1, b: xe, .. } = &mut *sc;
+                sized(d1, b * d);
+                sized(xe, b * d);
+                self.pf_slope(req.x, req.s_from, req, d1);
                 for i in 0..b {
                     let h = req.s_to[i] - req.s_from[i];
                     for j in 0..d {
@@ -112,7 +131,7 @@ impl StepBackend for NativeBackend {
                         xe[idx] = req.x[idx] + h * d1[idx];
                     }
                 }
-                self.pf_slope(&xe, req.s_to, req, &mut out);
+                self.pf_slope(xe, req.s_to, req, out);
                 for i in 0..b {
                     let h = req.s_to[i] - req.s_from[i];
                     for j in 0..d {
@@ -123,10 +142,11 @@ impl StepBackend for NativeBackend {
             }
             Solver::Dpm2 => {
                 // Exponential-integrator midpoint in half-log-SNR space.
-                let mut e1 = vec![0.0f32; b * d];
-                self.eps(req.x, req.s_from, req, &mut e1);
-                let mut u = vec![0.0f32; b * d];
-                let mut s_mid = vec![0.0f32; b];
+                let Scratch { a: e1, b: u, s: s_mid } = &mut *sc;
+                sized(e1, b * d);
+                sized(u, b * d);
+                sized(s_mid, b);
+                self.eps(req.x, req.s_from, req, e1);
                 for i in 0..b {
                     let lam_f = schedule::lam(req.s_from[i]);
                     let lam_t = schedule::lam(req.s_to[i]);
@@ -139,7 +159,7 @@ impl StepBackend for NativeBackend {
                         u[idx] = c1 * req.x[idx] + c2 * e1[idx];
                     }
                 }
-                self.eps(&u, &s_mid, req, &mut out);
+                self.eps(u, s_mid, req, out);
                 for i in 0..b {
                     let lam_f = schedule::lam(req.s_from[i]);
                     let h = schedule::lam(req.s_to[i]) - lam_f;
@@ -152,7 +172,6 @@ impl StepBackend for NativeBackend {
                 }
             }
         }
-        out
     }
 }
 
@@ -294,6 +313,10 @@ mod tests {
             }
         }
     }
+
+    // Scratch-reuse bitwise stability across varying batch shapes is
+    // pinned in rust/tests/golden.rs (`step_into_scratch_reuse_*`), for
+    // both backends — no duplicate unit-level copy here.
 
     #[test]
     fn heun_more_accurate_than_euler() {

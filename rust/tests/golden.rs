@@ -88,7 +88,10 @@ fn pjrt_executes_every_b1_artifact_to_golden() {
         let (mut x, mut sf, mut st, mut mask) = (vec![], vec![], vec![], vec![]);
         let (req, expect) =
             golden_step_request(&g, &mut x, &mut sf, &mut st, &mut mask, meta.guided);
-        let out = be.step(&req);
+        // Exercise the write-into contract directly against the recorded
+        // python-side goldens (not via the allocating wrapper).
+        let mut out = vec![0.0f32; expect.len()];
+        be.step_into(&req, &mut out);
         let d = max_abs_diff(&out, &expect);
         assert!(d < 1e-4, "{}: pjrt vs golden max diff {d}", meta.name);
         checked += 1;
@@ -114,7 +117,9 @@ fn native_matches_golden_vectors() {
         let (mut x, mut sf, mut st, mut mask) = (vec![], vec![], vec![], vec![]);
         let (req, expect) =
             golden_step_request(&g, &mut x, &mut sf, &mut st, &mut mask, meta.guided);
-        let out = be.step(&req);
+        // step_into against the recorded goldens, as for PJRT above.
+        let mut out = vec![0.0f32; expect.len()];
+        be.step_into(&req, &mut out);
         let d = max_abs_diff(&out, &expect);
         // Native is f32 like the artifact but op order differs slightly.
         assert!(d < 5e-3, "{}: native vs golden max diff {d}", meta.name);
@@ -188,6 +193,71 @@ fn batched_artifact_matches_per_row() {
         });
         let diff = max_abs_diff(&full[i * d..(i + 1) * d], &row);
         assert!(diff < 1e-5, "row {i} diff {diff}");
+    }
+}
+
+/// Drive one backend through a batch of varied step_into calls (dirty
+/// scratch, shrinking/growing batches) and pin every output bitwise
+/// against a freshly-constructed backend's first call. This isolates the
+/// scratch-reuse class of regression: a reused backend whose internal
+/// scratch leaks state across calls or batch shapes diverges from a
+/// fresh instance here. (It is deliberately *not* the recorded-output
+/// pin — `step` is a wrapper over `step_into`, so comparing them cannot
+/// catch a semantic change made to both. The recorded pins are
+/// `native_matches_golden_vectors` / `pjrt_executes_every_b1_artifact_to_golden`
+/// above, which run `step_into` against python-side golden JSON.)
+fn pin_step_into<F: Fn() -> B, B: StepBackend>(make: F, label: &str) {
+    let d = make().dim();
+    let mut rng = SplitMix64::new(77);
+    for trial in 0..2 {
+        let reused = make();
+        for b in [3usize, 1, 5, 2] {
+            let x = rng.normals_f32(b * d);
+            let s_from: Vec<f32> =
+                (0..b).map(|i| 0.04 + 0.13 * i as f32 + 0.01 * trial as f32).collect();
+            let s_to: Vec<f32> = s_from.iter().map(|s| s + 0.06).collect();
+            let seeds: Vec<u64> = (trial as u64 * 100..trial as u64 * 100 + b as u64).collect();
+            let req = StepRequest {
+                x: &x,
+                s_from: &s_from,
+                s_to: &s_to,
+                mask: None,
+                guidance: 0.0,
+                seeds: &seeds,
+            };
+            let mut out = vec![0.0f32; b * d];
+            reused.step_into(&req, &mut out);
+            let fresh = make().step(&req);
+            assert_eq!(out, fresh, "{label} b={b}: dirty scratch diverged from a fresh backend");
+        }
+    }
+}
+
+#[test]
+fn step_into_scratch_reuse_is_bitwise_stable_native_all_solvers() {
+    for solver in Solver::ALL {
+        pin_step_into(
+            || native_backend("gmm_church", solver),
+            &format!("native/{}", solver.name()),
+        );
+    }
+}
+
+#[test]
+fn step_into_scratch_reuse_is_bitwise_stable_pjrt_all_solvers() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = PjrtRuntime::open_default().expect("open runtime");
+    for solver in Solver::ALL {
+        if rt.manifest().steps_for("gmm_church", solver.name()).is_empty() {
+            continue;
+        }
+        pin_step_into(
+            || PjrtBackend::new(&rt, "gmm_church", solver).expect("load backend"),
+            &format!("pjrt/{}", solver.name()),
+        );
     }
 }
 
