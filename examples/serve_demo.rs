@@ -51,6 +51,7 @@ fn main() -> srds::Result<()> {
                 model_name: model,
                 factory,
                 batch: srds::batching::BatchPolicy::default(),
+                max_inflight: srds::server::DEFAULT_MAX_INFLIGHT,
             });
         });
     }

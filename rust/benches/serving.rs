@@ -5,10 +5,17 @@
 //! trajectory tracks (occupancy > 1.0 at the concurrent levels means
 //! cross-request step fusion is actually happening).
 //!
+//! Since the engine-native task rework the engine serves *every*
+//! registry sampler as a dispatcher-resident task, so the report also
+//! carries a **mixed-fleet point**: one closed-loop client per
+//! registered sampler, all four kinds in flight simultaneously, with
+//! per-sampler rps + mean per-request batch occupancy — the
+//! heterogeneous-tenant number.
+//!
 //! `cargo bench --bench serving`
 
 use srds::batching::BatchPolicy;
-use srds::coordinator::{prior_sample, SamplerSpec};
+use srds::coordinator::{prior_sample, registry, SamplerSpec};
 use srds::data::make_gmm;
 use srds::exec::{Engine, EngineConfig, NativeFactory};
 use srds::json::{self, Value};
@@ -22,15 +29,19 @@ const WORKERS: usize = 2;
 const PER_CLIENT: usize = 8;
 const N_STEPS: usize = 25;
 
+fn fresh_engine(model: &Arc<dyn EpsModel>) -> Arc<Engine> {
+    Arc::new(Engine::new(
+        Arc::new(NativeFactory::new(model.clone(), Solver::Ddim)),
+        EngineConfig { workers: WORKERS, batch: BatchPolicy::default() },
+    ))
+}
+
 fn main() {
     let model: Arc<dyn EpsModel> = Arc::new(GmmEps::new(make_gmm("church")));
     let mut points = Vec::new();
     for clients in [1usize, 4, 16] {
         // Fresh engine per level so occupancy reflects this level only.
-        let engine = Arc::new(Engine::new(
-            Arc::new(NativeFactory::new(model.clone(), Solver::Ddim)),
-            EngineConfig { workers: WORKERS, batch: BatchPolicy::default() },
-        ));
+        let engine = fresh_engine(&model);
         let trace = generate_trace(&TraceConfig {
             rate_hz: 1000.0,
             num_requests: clients * PER_CLIENT,
@@ -49,7 +60,7 @@ fn main() {
                     let x0 = prior_sample(engine.dim(), r.seed);
                     let spec = SamplerSpec::srds(r.n).with_tol(1e-4).with_seed(r.seed);
                     let t = Instant::now();
-                    let out = engine.run_srds(&x0, &spec);
+                    let out = engine.run(&x0, &spec);
                     assert!(out.sample.iter().all(|v| v.is_finite()));
                     lat_ms.push(t.elapsed().as_secs_f64() * 1000.0);
                 }
@@ -70,6 +81,80 @@ fn main() {
             p95_ms: percentile(&lat_ms, 0.95),
         });
     }
+
+    // Mixed fleet: one closed-loop client per registered sampler, all
+    // kinds resident in the engine's task table at once. Per-sampler
+    // throughput plus the mean per-request occupancy each kind saw
+    // (from its responses' `batch_occupancy`, not the engine-wide mean).
+    let engine = fresh_engine(&model);
+    let sampler_names = registry().list();
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for (i, name) in sampler_names.iter().enumerate() {
+        let engine = engine.clone();
+        let kind = registry().parse(name).unwrap().kind();
+        threads.push(std::thread::spawn(move || {
+            // Per-client wall clock: rps must reflect how fast THIS
+            // sampler's closed loop ran, not the joint fleet wall (the
+            // fastest kind finishes long before the slowest).
+            let t_client = Instant::now();
+            let mut lat_ms = Vec::with_capacity(PER_CLIENT);
+            let mut occ_sum = 0.0f64;
+            for j in 0..PER_CLIENT {
+                let seed = 500 + (i * PER_CLIENT + j) as u64;
+                let x0 = prior_sample(engine.dim(), seed);
+                let spec = SamplerSpec::for_kind(N_STEPS, kind).with_tol(1e-4).with_seed(seed);
+                let t = Instant::now();
+                let out = engine.run(&x0, &spec);
+                assert!(out.sample.iter().all(|v| v.is_finite()));
+                lat_ms.push(t.elapsed().as_secs_f64() * 1000.0);
+                occ_sum += out.stats.batch_occupancy;
+            }
+            lat_ms.sort_by(f64::total_cmp);
+            (lat_ms, occ_sum / PER_CLIENT as f64, t_client.elapsed().as_secs_f64())
+        }));
+    }
+    let per_sampler: Vec<(String, Vec<f64>, f64, f64)> = sampler_names
+        .iter()
+        .zip(threads)
+        .map(|(name, t)| {
+            let (lat, occ, wall_s) = t.join().unwrap();
+            (name.to_string(), lat, occ, wall_s)
+        })
+        .collect();
+    let mixed_wall_s = t0.elapsed().as_secs_f64();
+    let mixed_stats = engine.stats();
+    let mixed = json::obj(vec![
+        ("clients", Value::Num(sampler_names.len() as f64)),
+        ("requests", Value::Num((sampler_names.len() * PER_CLIENT) as f64)),
+        ("wall_s", Value::Num(mixed_wall_s)),
+        (
+            "rps",
+            Value::Num((sampler_names.len() * PER_CLIENT) as f64 / mixed_wall_s.max(1e-9)),
+        ),
+        ("engine_mean_occupancy", Value::Num(mixed_stats.mean_occupancy)),
+        (
+            "per_sampler",
+            json::obj(
+                per_sampler
+                    .iter()
+                    .map(|(name, lat, occ, wall_s)| {
+                        (
+                            name.as_str(),
+                            json::obj(vec![
+                                ("rps", Value::Num(PER_CLIENT as f64 / wall_s.max(1e-9))),
+                                ("wall_s", Value::Num(*wall_s)),
+                                ("mean_batch_occupancy", Value::Num(*occ)),
+                                ("p50_ms", Value::Num(percentile(lat, 0.5))),
+                                ("p95_ms", Value::Num(percentile(lat, 0.95))),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+
     let report = json::obj(vec![
         ("bench", Value::Str("serving_throughput".into())),
         ("model", Value::Str("gmm_church".into())),
@@ -77,6 +162,7 @@ fn main() {
         ("n", Value::Num(N_STEPS as f64)),
         ("workers", Value::Num(WORKERS as f64)),
         ("points", Value::Arr(points.iter().map(|p| p.to_json()).collect())),
+        ("mixed", mixed),
     ]);
     println!("{}", json::to_string(&report));
 }

@@ -2,9 +2,11 @@
 //! bucketed batch sizes (the request-level complement of SRDS's
 //! within-sample batching from §3.4).
 //!
-//! The server collects step rows from multiple in-flight samplers for up
-//! to `max_wait` and flushes when a bucket fills — classic
-//! vLLM-router-style batching adapted to diffusion steps.
+//! The engine collects step rows from multiple in-flight sampler tasks
+//! (`crate::exec::task` — every registered sampler emits its steps as
+//! rows here, whole sweeps at a time for the window/trajectory
+//! samplers) for up to `max_wait` and flushes when a bucket fills —
+//! classic vLLM-router-style batching adapted to diffusion steps.
 
 use crate::buf::{BatchStage, StateBuf};
 use std::sync::Arc;

@@ -15,7 +15,10 @@
 //! * [`registry`] — the single place that knows which samplers exist.
 //!   The server, CLI, benches and examples all dispatch through it;
 //!   adding a sampler means implementing the trait and registering it
-//!   here, nothing else.
+//!   here — plus, if it should serve on the multi-tenant engine, an
+//!   engine-native [`crate::exec::task::SamplerTask`] port (the serving
+//!   path runs every registered kind as a dispatcher-resident state
+//!   machine; `exec::task::new_task` is the kind → task map).
 
 use super::convergence::ConvNorm;
 use super::{Conditioning, RunStats};
@@ -260,6 +263,11 @@ pub struct SampleOutput {
 /// implementations run against [`StepBackend`], so they execute
 /// identically over the native rust models and the AOT-compiled PJRT
 /// artifacts.
+///
+/// This is the *direct* (single-tenant, blocking) face of a sampler.
+/// On the serving path the same algorithms run as engine-native
+/// [`crate::exec::task::SamplerTask`] state machines — bit-identical
+/// outputs, pinned by the task drive-harness and mixed-fleet tests.
 pub trait Sampler: Send + Sync {
     /// This sampler's kind with its default per-kind parameters.
     fn kind(&self) -> SamplerKind;

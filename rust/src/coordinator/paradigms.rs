@@ -28,6 +28,28 @@ use crate::schedule::Grid;
 use crate::solvers::StepBackend;
 use std::time::Instant;
 
+/// One window point's Picard rebuild: fold the point's drift
+/// `Φ(x^k_j) − x^k_j` into the running prefix sum `acc` and return the
+/// per-point mean *squared* update `‖acc − x^k_{j+1}‖²/d` (ParaDiGMS's
+/// convergence quantity; `acc` afterwards holds the new `x^{k+1}_{j+1}`).
+/// Shared by the vanilla sweep below and the engine-resident
+/// [`crate::exec::task`] sweep task so the two paths cannot drift.
+#[inline]
+pub(crate) fn picard_point_update(
+    acc: &mut [f32],
+    phi: &[f32],
+    xin: &[f32],
+    x_next: &[f32],
+) -> f32 {
+    let mut err = 0.0f32;
+    for t in 0..acc.len() {
+        acc[t] += phi[t] - xin[t];
+        let delta = acc[t] - x_next[t];
+        err += delta * delta;
+    }
+    err / acc.len() as f32
+}
+
 /// Run ParaDiGMS from the prior sample `x0`.
 ///
 /// Zero-copy layout: the trajectory points are pooled [`StateBuf`]s
@@ -77,17 +99,15 @@ pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> S
         // overwritten below).
         let (xin, phi) = (stage.x(), stage.out());
         for j in lo..hi {
-            let drift_base = (j - lo) * d;
-            let mut err = 0.0f32;
-            let xj1 = x[j + 1].as_mut_slice();
-            for t in 0..d {
-                acc[t] += phi[drift_base + t] - xin[drift_base + t];
-                let delta = acc[t] - xj1[t];
-                err += delta * delta;
-            }
-            err /= d as f32;
+            let base = (j - lo) * d;
+            let err = picard_point_update(
+                &mut acc,
+                &phi[base..base + d],
+                &xin[base..base + d],
+                &x[j + 1],
+            );
             max_err = max_err.max(err);
-            xj1.copy_from_slice(&acc);
+            x[j + 1].as_mut_slice().copy_from_slice(&acc);
             if err > tol2 && first_unconverged == hi {
                 first_unconverged = j;
             }

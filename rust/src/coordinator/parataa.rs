@@ -70,6 +70,122 @@ fn apply_t(
     );
 }
 
+/// The Anderson-accelerated fixed-point update, factored out of the run
+/// loop so the vanilla sampler below and the engine-resident
+/// [`crate::exec::task`] sweep task share one bit-identical
+/// implementation. Owns the (x, residual) history pairs (pooled
+/// [`StateBuf`]s — once the window fills, the push/pop churn recycles
+/// through the pool) and the mix scratch.
+pub(crate) struct AndersonMixer {
+    history: usize,
+    hist_x: VecDeque<StateBuf>,
+    hist_r: VecDeque<StateBuf>,
+    xn: Vec<f32>,
+}
+
+impl AndersonMixer {
+    pub(crate) fn new(history: usize, len: usize) -> AndersonMixer {
+        AndersonMixer {
+            history,
+            hist_x: VecDeque::new(),
+            hist_r: VecDeque::new(),
+            xn: vec![0.0f32; len],
+        }
+    }
+
+    fn push_hist(&mut self, x: &[f32], r: &[f32], pool: &BufPool) {
+        self.hist_x.push_front(pool.take(x));
+        self.hist_r.push_front(pool.take(r));
+        if self.hist_x.len() > self.history {
+            self.hist_x.pop_back();
+            self.hist_r.pop_back();
+        }
+    }
+
+    /// Advance the iterate `x` given its image `tx = T(x)` and residual
+    /// `r = tx − x` at (1-based) iteration `k` — the Anderson-mixed
+    /// update when the history supports it, the plain Picard step
+    /// otherwise. The pre-update `(x, r)` pair enters the history either
+    /// way.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn advance(
+        &mut self,
+        k: usize,
+        n: usize,
+        d: usize,
+        x: &mut Vec<f32>,
+        tx: &[f32],
+        r: &[f32],
+        pool: &BufPool,
+    ) {
+        let len = x.len();
+        // Anderson mixing: minimize ‖r_k + Σ γ_j (r_{k-j} − r_k)‖ over the
+        // history, then combine the corresponding T(x) iterates. Solved
+        // via normal equations on the (tiny) history dimension.
+        let mnow = self.hist_r.len().min(self.history);
+        let gamma = if mnow > 0 {
+            // Build difference vectors dR_j = r_hist[j] − r.
+            let mut g = vec![0.0f64; mnow * mnow];
+            let mut b = vec![0.0f64; mnow];
+            for a in 0..mnow {
+                let ra = &self.hist_r[a];
+                for c in a..mnow {
+                    let rc = &self.hist_r[c];
+                    let mut dot = 0.0f64;
+                    for t in 0..len {
+                        dot += (ra[t] - r[t]) as f64 * (rc[t] - r[t]) as f64;
+                    }
+                    g[a * mnow + c] = dot;
+                    g[c * mnow + a] = dot;
+                }
+                let mut dotb = 0.0f64;
+                for t in 0..len {
+                    dotb += (ra[t] - r[t]) as f64 * (-r[t]) as f64;
+                }
+                b[a] = dotb;
+            }
+            // Tikhonov-regularized solve (history ≤ 3 → direct Gauss).
+            for a in 0..mnow {
+                g[a * mnow + a] += 1e-10 + 1e-8 * g[a * mnow + a];
+            }
+            solve_small(&mut g, &mut b, mnow).filter(|gm| {
+                // Safeguard: reject wild extrapolations (large mixing
+                // weights amplify the strongly non-normal triangular
+                // dynamics); fall back to the plain Picard step.
+                gm.iter().map(|v| v.abs()).sum::<f64>() <= 1.0
+            })
+        } else {
+            None
+        };
+        if let Some(gamma) = gamma {
+            // x_next = T(x) + Σ γ_j (T(x_hist_j) − T(x)) — with the
+            // standard identity T(x_j) = x_j + r_j.
+            self.xn.copy_from_slice(tx);
+            // Triangular awareness (the "TAA" in ParaTAA): after k
+            // plain applications of T the first k+1 trajectory points
+            // are *exactly* converged; mixing stale history there
+            // would destroy the finite-convergence property, so the
+            // accelerated update only touches the unconverged tail.
+            let prefix = (k + 1).min(n + 1) * d;
+            for (j, &gj) in gamma.iter().enumerate() {
+                let xa = &self.hist_x[j];
+                let ra = &self.hist_r[j];
+                let gj = gj as f32;
+                for t in prefix..len {
+                    self.xn[t] += gj * ((xa[t] + ra[t]) - tx[t]);
+                }
+            }
+            self.push_hist(x, r, pool);
+            // xn becomes the iterate; the old iterate's buffer stays
+            // around as next round's mix scratch.
+            std::mem::swap(x, &mut self.xn);
+        } else {
+            self.push_hist(x, r, pool);
+            x.copy_from_slice(tx);
+        }
+    }
+}
+
 /// Run the Anderson-accelerated fixed-point sampler.
 ///
 /// Zero-copy layout: the trajectory iterate, its `T`-image, the residual
@@ -95,11 +211,7 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sam
     }
     let mut tx = vec![0.0f32; len];
     let mut r = vec![0.0f32; len];
-    let mut xn = vec![0.0f32; len];
-
-    // Anderson history of (x, residual) pairs.
-    let mut hist_x: VecDeque<StateBuf> = VecDeque::new();
-    let mut hist_r: VecDeque<StateBuf> = VecDeque::new();
+    let mut mixer = AndersonMixer::new(history, len);
 
     let mut total_evals = 0u64;
     let mut per_iter = Vec::new();
@@ -128,81 +240,7 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sam
             break;
         }
 
-        // Anderson mixing: minimize ‖r_k + Σ γ_j (r_{k-j} − r_k)‖ over the
-        // history, then combine the corresponding T(x) iterates. Solved
-        // via normal equations on the (tiny) history dimension.
-        let mnow = hist_r.len().min(history);
-        if mnow > 0 {
-            // Build difference vectors dR_j = r_hist[j] − r.
-            let mut g = vec![0.0f64; mnow * mnow];
-            let mut b = vec![0.0f64; mnow];
-            for a in 0..mnow {
-                let ra = &hist_r[a];
-                for c in a..mnow {
-                    let rc = &hist_r[c];
-                    let mut dot = 0.0f64;
-                    for t in 0..len {
-                        dot += (ra[t] - r[t]) as f64 * (rc[t] - r[t]) as f64;
-                    }
-                    g[a * mnow + c] = dot;
-                    g[c * mnow + a] = dot;
-                }
-                let mut dotb = 0.0f64;
-                for t in 0..len {
-                    dotb += (ra[t] - r[t]) as f64 * (-r[t]) as f64;
-                }
-                b[a] = dotb;
-            }
-            // Tikhonov-regularized solve (history ≤ 3 → direct Gauss).
-            for a in 0..mnow {
-                g[a * mnow + a] += 1e-10 + 1e-8 * g[a * mnow + a];
-            }
-            let gamma = solve_small(&mut g, &mut b, mnow).filter(|gm| {
-                // Safeguard: reject wild extrapolations (large mixing
-                // weights amplify the strongly non-normal triangular
-                // dynamics); fall back to the plain Picard step.
-                gm.iter().map(|v| v.abs()).sum::<f64>() <= 1.0
-            });
-            if let Some(gamma) = gamma {
-                // x_next = T(x) + Σ γ_j (T(x_hist_j) − T(x)) — with the
-                // standard identity T(x_j) = x_j + r_j.
-                xn.copy_from_slice(&tx);
-                // Triangular awareness (the "TAA" in ParaTAA): after k
-                // plain applications of T the first k+1 trajectory points
-                // are *exactly* converged; mixing stale history there
-                // would destroy the finite-convergence property, so the
-                // accelerated update only touches the unconverged tail.
-                let prefix = (k + 1).min(n + 1) * d;
-                for (j, &gj) in gamma.iter().enumerate() {
-                    let xa = &hist_x[j];
-                    let ra = &hist_r[j];
-                    let gj = gj as f32;
-                    for t in prefix..len {
-                        xn[t] += gj * ((xa[t] + ra[t]) - tx[t]);
-                    }
-                }
-                hist_x.push_front(pool.take(&x));
-                hist_r.push_front(pool.take(&r));
-                if hist_x.len() > history {
-                    hist_x.pop_back();
-                    hist_r.pop_back();
-                }
-                // xn becomes the iterate; the old iterate's buffer stays
-                // around as next round's mix scratch.
-                std::mem::swap(&mut x, &mut xn);
-                if spec.keep_iterates {
-                    iterates.push(x[n * d..].to_vec());
-                }
-                continue;
-            }
-        }
-        hist_x.push_front(pool.take(&x));
-        hist_r.push_front(pool.take(&r));
-        if hist_x.len() > history {
-            hist_x.pop_back();
-            hist_r.pop_back();
-        }
-        x.copy_from_slice(&tx);
+        mixer.advance(k, n, d, &mut x, &tx, &r, &pool);
         if spec.keep_iterates {
             iterates.push(x[n * d..].to_vec());
         }

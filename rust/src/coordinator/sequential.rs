@@ -7,6 +7,22 @@ use crate::schedule::Grid;
 use crate::solvers::{StepBackend, StepRequest};
 use std::time::Instant;
 
+/// The baseline chain's accounting, shared by the direct run below and
+/// the engine-resident [`crate::exec::task`] chain task: an `n`-step
+/// chain is `n` serial evals however it executes. Wall-clock, batch
+/// occupancy and pool counters are filled in by the caller.
+pub(crate) fn chain_stats(n: usize, epc: u64) -> RunStats {
+    RunStats {
+        iters: 0,
+        converged: true,
+        eff_serial_evals: n as u64 * epc,
+        eff_serial_evals_pipelined: n as u64 * epc,
+        total_evals: n as u64 * epc,
+        peak_states: 1,
+        ..RunStats::default()
+    }
+}
+
 /// Run the `n`-step sequential solve from `x0` (the prior sample).
 /// Returns the final sample and its accounting.
 ///
@@ -40,20 +56,10 @@ pub fn sequential(
     }
     let epc = backend.evals_per_step() as u64;
     let ps = pool.stats();
-    let stats = RunStats {
-        iters: 0,
-        converged: true,
-        eff_serial_evals: n as u64 * epc,
-        eff_serial_evals_pipelined: n as u64 * epc,
-        total_evals: n as u64 * epc,
-        wall: t0.elapsed(),
-        peak_states: 1,
-        batch_occupancy: 0.0,
-        engine_rows: 0,
-        pool_hits: ps.hits,
-        pool_misses: ps.misses,
-        per_iter: vec![],
-    };
+    let mut stats = chain_stats(n, epc);
+    stats.wall = t0.elapsed();
+    stats.pool_hits = ps.hits;
+    stats.pool_misses = ps.misses;
     (x.into_vec(), stats)
 }
 

@@ -48,6 +48,20 @@ fn coarse_step(
     );
 }
 
+/// Eq. 6's predictor-corrector: `out = y + (G_new − G_old)`. The
+/// parenthesization is load-bearing: once the coarse solves agree
+/// bitwise the correction is an exact `0.0` and `out` collapses onto the
+/// fine solve (Prop. 1's bitwise-equality property). Shared by the
+/// vanilla loop below and the engine-resident
+/// [`crate::exec::task`] SRDS state machine so the two paths cannot
+/// drift apart numerically.
+#[inline]
+pub(crate) fn corrector(y: &[f32], g_new: &[f32], g_old: &[f32], out: &mut [f32]) {
+    for j in 0..out.len() {
+        out[j] = y[j] + (g_new[j] - g_old[j]);
+    }
+}
+
 /// All blocks' fine solves, batched in lockstep, written into the
 /// caller's persistent scratch: `stage` is the reused flat staging
 /// buffer and `y` the pooled per-block lockstep states (cleared first,
@@ -188,17 +202,7 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sample
                 cur.as_mut_slice(),
             );
             let mut xi = pool.get(d);
-            {
-                let xs = xi.as_mut_slice();
-                let (yi, previ) = (&y[i - 1], &prev[i]);
-                // Eq. 6's parenthesization y + (G_new − G_old) is
-                // load-bearing: once the coarse solves agree bitwise the
-                // correction is an exact 0.0 and x collapses onto the
-                // fine solve (Prop. 1's bitwise-equality property).
-                for j in 0..d {
-                    xs[j] = yi[j] + (cur[j] - previ[j]);
-                }
-            }
+            corrector(&y[i - 1], &cur, &prev[i], xi.as_mut_slice());
             x[i] = xi; // the replaced buffers return to the pool
             prev[i] = cur;
         }

@@ -47,7 +47,9 @@ pub struct RunStats {
     /// Mean rows per multi-tenant-engine batch that this run's step rows
     /// rode in (`crate::exec::engine`); > 1.0 means the run's steps were
     /// fused with other step work (its own or co-tenant requests'). 0
-    /// when the run did not execute on the engine.
+    /// when the run did not execute on the engine. Every engine-served
+    /// request — any registered sampler, each running as its own
+    /// `crate::exec::task::SamplerTask` — meters this per request.
     pub batch_occupancy: f64,
     /// Step rows this run contributed to the engine (0 off-engine).
     pub engine_rows: u64,

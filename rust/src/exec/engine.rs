@@ -4,24 +4,25 @@
 //! one-request-at-a-time loop in `exec::measured`) so **many concurrent
 //! sampling requests share one worker pool**: every fine/coarse solver
 //! step any request needs becomes a [`PendingRow`], rows are coalesced
-//! by [`Batcher`] into multi-row [`StepRequest`] batches, and workers
+//! by [`Batcher`] into multi-row [`StepRequest`](crate::solvers::StepRequest)
+//! batches, and workers
 //! execute whole batches in one backend call — the cross-request face of
 //! the paper's §3.4 batched-inference observation (one model evaluation
 //! serves rows from *different* users, not just different blocks of one
 //! trajectory).
 //!
-//! Two entry paths share the pool:
-//!
-//! * [`Engine::run_srds`] / [`Engine::submit_srds`] — SRDS requests run
-//!   as dependency-driven state machines *inside* the dispatcher thread
-//!   (the direct generalization of `measured_pipelined_srds`): a fine
-//!   block solve is a chain of single-step rows, a coarse step is one
-//!   row, and each completion unblocks exactly the O(1) cells it can.
-//! * [`Engine::backend`] — an adapter [`StepBackend`] for everything
-//!   else (sequential / ParaDiGMS / ParaTAA registry entries): the
-//!   sampler runs unchanged on its own thread, but every `step()` call
-//!   is decomposed into rows and funneled through the same batchers, so
-//!   baseline traffic fuses with SRDS traffic too.
+//! **Every request is a [`SamplerTask`]** (`exec::task`): an
+//! engine-resident state machine the dispatcher drives by event —
+//! SRDS's dependency grid, the sequential one-row chain, ParaDiGMS's
+//! whole-window sweeps and ParaTAA's whole-trajectory sweeps all live in
+//! one heterogeneous task table. There are no per-request threads
+//! anywhere: [`Engine::submit`] hands the dispatcher a spec, and the
+//! request's entire lifetime is event handling on the dispatcher thread
+//! plus batched solver steps on the workers. (The previous adapter
+//! `StepBackend`, which parked one blocking OS thread per non-SRDS
+//! request, is gone.) A ParaDiGMS sweep's N rows fill worker batches
+//! alongside SRDS fine blocks and sequential chain steps — baseline
+//! traffic fuses with everything else.
 //!
 //! **Flush policy** (vLLM-style, adapted to a CPU/PJRT pool): the
 //! dispatcher is *work-conserving with spread-first sizing* — a row
@@ -40,10 +41,10 @@
 //! FIFO analogue of the old worker pool's critical-path priority heap.
 //!
 //! **Invariant (pinned by tests):** a request's output is identical to a
-//! solo vanilla [`crate::coordinator::srds`] run with the same spec and
-//! seed, regardless of what else is in flight — every backend computes
-//! batch rows independently, so fusing a row with strangers never
-//! changes its value.
+//! solo vanilla run of its registry sampler with the same spec and seed,
+//! regardless of what else is in flight — every backend computes batch
+//! rows independently, so fusing a row with strangers never changes its
+//! value.
 //!
 //! **Zero-copy state:** every state the engine touches is a pooled
 //! refcounted [`StateBuf`] from one engine-wide [`BufPool`] — task grid
@@ -57,21 +58,23 @@
 
 use crate::batching::{stage_rows, BatchPolicy, Batcher, PendingRow};
 use crate::buf::{BatchStage, BufPool, StateBuf};
-use crate::coordinator::{IterStat, RunStats, SampleOutput, SamplerSpec};
-use crate::schedule::Partition;
-use crate::solvers::{BackendFactory, Solver, StepBackend, StepRequest};
-use std::cell::Cell;
+use crate::coordinator::{SampleOutput, SamplerSpec};
+use crate::exec::task::{new_task, Completion, SamplerTask, TaskRow};
+use crate::solvers::{BackendFactory, Solver, StepBackend};
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Free-list cap per dim bucket for the engine's shared [`BufPool`].
-/// Sized for the multi-tenant working set: admission control allows 64
-/// in-flight requests per connection and each SRDS task retains its
-/// full iteration × block grid until finalize (~200 buffers at n=1024),
-/// so a serving burst legitimately parks thousands of slabs. At dim 64
-/// the fully-parked worst case is 4 MiB per bucket.
+/// Sized for the multi-tenant working set: per-connection admission
+/// control defaults to 64 in-flight requests
+/// (`crate::server::DEFAULT_MAX_INFLIGHT`; operators can raise it with
+/// `--max-inflight`) and each SRDS task retains its full iteration ×
+/// block grid until finalize (~200 buffers at n=1024), so a serving
+/// burst legitimately parks thousands of slabs. At dim 64 the
+/// fully-parked worst case is 4 MiB per bucket; much larger configured
+/// caps may see extra pool misses under burst, never unbounded growth.
 const ENGINE_POOL_MAX_FREE: usize = 16 * 1024;
 
 /// Engine construction knobs.
@@ -101,17 +104,38 @@ fn batch_key(row: &PendingRow) -> BatchKey {
     )
 }
 
-/// Where a completed row's output must be routed.
-enum RowOrigin {
-    /// Engine-resident SRDS state machine: request id + (p, i, is_fine).
-    Srds { req: u64, key: (usize, usize, bool) },
-    /// Blocking adapter call: call id + row slot within the call.
-    Call { call: u64, slot: usize },
+/// Where a completed engine row routes back to: the owning task and the
+/// task-local row key it echoed.
+struct RowOrigin {
+    req: u64,
+    key: u64,
+}
+
+/// How a finished task's [`SampleOutput`] leaves the engine.
+enum ReplySink {
+    /// Blocking callers ([`Engine::submit`] / [`Engine::run`]).
+    Channel(Sender<SampleOutput>),
+    /// Non-blocking callers ([`Engine::submit_with`]): invoked on the
+    /// dispatcher thread with a consistent [`EngineStats`] snapshot
+    /// taken at completion. Must not block.
+    Callback(Box<dyn FnOnce(SampleOutput, EngineStats) + Send>),
+}
+
+impl ReplySink {
+    fn send(self, out: SampleOutput, stats: EngineStats) {
+        match self {
+            // A dropped receiver (client went away) is not an engine
+            // error.
+            ReplySink::Channel(tx) => {
+                let _ = tx.send(out);
+            }
+            ReplySink::Callback(f) => f(out, stats),
+        }
+    }
 }
 
 enum Msg {
-    Srds { x0: Vec<f32>, spec: SamplerSpec, reply: Sender<SampleOutput> },
-    Call { rows: Vec<PendingRow>, reply: Sender<(usize, StateBuf, usize)> },
+    Submit { x0: Vec<f32>, spec: SamplerSpec, reply: ReplySink },
     BatchDone { outs: Vec<(u64, StateBuf)> },
     Shutdown,
 }
@@ -135,7 +159,7 @@ struct Counters {
     flushed_batches: u64,
     flushed_rows: u64,
     queue_depth: usize,
-    inflight_requests: usize,
+    active_tasks: usize,
 }
 
 /// A point-in-time view of the engine's batching behavior.
@@ -150,8 +174,10 @@ pub struct EngineStats {
     pub mean_occupancy: f64,
     /// Rows currently waiting in the batchers.
     pub queue_depth: usize,
-    /// Requests (SRDS tasks + blocked adapter calls) currently open.
-    pub inflight_requests: usize,
+    /// Tasks currently resident in the dispatcher's heterogeneous task
+    /// table — every in-flight request of every sampler kind is exactly
+    /// one entry here (there is no other request state anywhere).
+    pub active_tasks: usize,
     /// Pool size.
     pub workers: usize,
     /// Shared state-buffer pool: requests served from the free lists.
@@ -168,9 +194,8 @@ pub struct EngineStats {
 pub struct Engine {
     tx: Mutex<Sender<Msg>>,
     counters: Arc<Mutex<Counters>>,
-    /// Shared state-buffer slab pool: SRDS task grids, queued row
-    /// states, and worker batch outputs all draw from (and recycle
-    /// into) it.
+    /// Shared state-buffer slab pool: task grids, queued row states, and
+    /// worker batch outputs all draw from (and recycle into) it.
     pool: BufPool,
     dim: usize,
     solver: Solver,
@@ -262,34 +287,35 @@ impl Engine {
         self.tx.lock().unwrap().send(msg).expect("engine dispatcher alive");
     }
 
-    /// Queue an SRDS request; the returned channel yields its
-    /// [`SampleOutput`] when the state machine finishes.
-    pub fn submit_srds(&self, x0: Vec<f32>, spec: SamplerSpec) -> Receiver<SampleOutput> {
+    /// Queue a request of any registered sampler kind (the dispatcher
+    /// builds the matching [`SamplerTask`] from `spec.kind`); the
+    /// returned channel yields its [`SampleOutput`] when the state
+    /// machine finishes.
+    pub fn submit(&self, x0: Vec<f32>, spec: SamplerSpec) -> Receiver<SampleOutput> {
         let (reply, rx) = channel();
-        self.send(Msg::Srds { x0, spec, reply });
+        self.send(Msg::Submit { x0, spec, reply: ReplySink::Channel(reply) });
         rx
     }
 
-    /// Run one SRDS request to completion (blocking). Other requests may
-    /// be in flight concurrently; per-request output is unaffected.
-    pub fn run_srds(&self, x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
-        self.submit_srds(x0.to_vec(), spec.clone())
-            .recv()
-            .expect("engine dropped mid-request")
+    /// [`Engine::submit`] with a completion callback instead of a
+    /// channel: `done` runs on the dispatcher thread the moment the task
+    /// finalizes, with an [`EngineStats`] snapshot taken at that instant.
+    /// This is the serving path's shape — no thread ever blocks waiting
+    /// for a request. The callback must be cheap and must not block (it
+    /// runs inside the engine's event loop).
+    pub fn submit_with<F>(&self, x0: Vec<f32>, spec: SamplerSpec, done: F)
+    where
+        F: FnOnce(SampleOutput, EngineStats) + Send + 'static,
+    {
+        self.send(Msg::Submit { x0, spec, reply: ReplySink::Callback(Box::new(done)) });
     }
 
-    /// A [`StepBackend`] whose every `step()` is decomposed into rows
-    /// and batched with whatever else the engine is running. One handle
-    /// per request thread; not `Sync`.
-    pub fn backend(&self) -> EngineBackend {
-        EngineBackend {
-            tx: self.tx.lock().unwrap().clone(),
-            pool: self.pool.clone(),
-            dim: self.dim,
-            solver: self.solver,
-            rows_done: Cell::new(0),
-            occ_sum: Cell::new(0),
-        }
+    /// Run one request to completion (blocking). Other requests may be
+    /// in flight concurrently; per-request output is unaffected.
+    pub fn run(&self, x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
+        self.submit(x0.to_vec(), spec.clone())
+            .recv()
+            .expect("engine dropped mid-request")
     }
 
     /// Snapshot the engine counters.
@@ -301,7 +327,7 @@ impl Engine {
             flushed_rows: c.flushed_rows,
             mean_occupancy: c.flushed_rows as f64 / c.flushed_batches.max(1) as f64,
             queue_depth: c.queue_depth,
-            inflight_requests: c.inflight_requests,
+            active_tasks: c.active_tasks,
             workers: self.workers,
             pool_hits: ps.hits,
             pool_misses: ps.misses,
@@ -318,80 +344,6 @@ impl Drop for Engine {
         }
         for h in self.worker_handles.drain(..) {
             let _ = h.join();
-        }
-    }
-}
-
-/// Adapter backend: decomposes each [`StepRequest`] into engine rows and
-/// blocks until all of them complete. Tracks the batch occupancy its
-/// rows observed so serving can report per-request fusion. Row states
-/// are pooled [`StateBuf`]s and a uniform request mask is shared as one
-/// `Arc` across all rows — decomposition allocates nothing after
-/// warm-up.
-pub struct EngineBackend {
-    tx: Sender<Msg>,
-    pool: BufPool,
-    dim: usize,
-    solver: Solver,
-    rows_done: Cell<u64>,
-    occ_sum: Cell<u64>,
-}
-
-impl EngineBackend {
-    /// `(rows executed, mean batch occupancy)` over this handle's calls.
-    pub fn occupancy(&self) -> (u64, f64) {
-        let rows = self.rows_done.get();
-        (rows, self.occ_sum.get() as f64 / rows.max(1) as f64)
-    }
-}
-
-impl StepBackend for EngineBackend {
-    fn dim(&self) -> usize {
-        self.dim
-    }
-
-    fn solver(&self) -> Solver {
-        self.solver
-    }
-
-    fn step_into(&self, req: &StepRequest, out: &mut [f32]) {
-        let b = req.rows();
-        let d = self.dim;
-        let mask_k = req.mask.map(|m| m.len() / b);
-        // Samplers tile one sample mask across their batch rows; detect
-        // that and share a single Arc instead of copying k floats per
-        // row (heterogeneous masks fall back to per-row Arcs).
-        let shared_mask: Option<Arc<[f32]>> = req.mask.and_then(|m| {
-            let k = mask_k.unwrap();
-            if k == 0 {
-                return None;
-            }
-            let first = &m[..k];
-            m.chunks_exact(k).all(|c| c == first).then(|| first.into())
-        });
-        let rows: Vec<PendingRow> = (0..b)
-            .map(|i| PendingRow {
-                tag: i as u64,
-                x: self.pool.take(&req.x[i * d..(i + 1) * d]),
-                s_from: req.s_from[i],
-                s_to: req.s_to[i],
-                mask: req.mask.map(|m| {
-                    let k = mask_k.unwrap();
-                    shared_mask
-                        .clone()
-                        .unwrap_or_else(|| m[i * k..(i + 1) * k].into())
-                }),
-                guidance: req.guidance,
-                seed: req.seeds[i],
-            })
-            .collect();
-        let (reply, rx) = channel();
-        self.tx.send(Msg::Call { rows, reply }).expect("engine dispatcher alive");
-        for _ in 0..b {
-            let (slot, y, batch_rows) = rx.recv().expect("engine dropped mid-call");
-            out[slot * d..(slot + 1) * d].copy_from_slice(&y);
-            self.rows_done.set(self.rows_done.get() + 1);
-            self.occ_sum.set(self.occ_sum.get() + batch_rows as u64);
         }
     }
 }
@@ -432,291 +384,17 @@ fn worker_loop(backend: &dyn StepBackend, work: &WorkQueue, done_tx: &Sender<Msg
     }
 }
 
-/// A fine block solve in flight: the chain of single-step rows walking
-/// `points`. `next` is the window index of the row currently queued or
-/// executing.
-struct FineChain {
-    points: Vec<f32>,
-    next: usize,
-}
-
-/// A step to enqueue, produced by a task while it holds `&mut self`
-/// (rows are materialized into the batchers afterwards, avoiding a
-/// simultaneous borrow of the task map and the batcher map). `x` is a
-/// refcounted share of the task-resident state, not a copy.
-struct Emit {
-    key: (usize, usize, bool),
-    x: StateBuf,
-    s_from: f32,
-    s_to: f32,
-}
-
-/// Dependency-driven SRDS state machine for one request — the Fig. 4
-/// pipelined dataflow of `measured_pipelined_srds`, re-expressed as
-/// event handlers so the dispatcher can interleave many of them.
-///
-/// Every cell of the `x`/`g`/`y` grids is a pooled [`StateBuf`]; cells
-/// are written once (by a worker or the corrector) and shared read-only
-/// from then on — emitting a follow-up row or reusing a coarse result
-/// as the next iteration's `prev` is a refcount bump.
-struct SrdsTask {
-    spec: SamplerSpec,
-    part: Partition,
-    m: usize,
-    max_iters: usize,
-    x: Vec<Vec<Option<StateBuf>>>,
-    g: Vec<Vec<Option<StateBuf>>>,
-    y: Vec<Vec<Option<StateBuf>>>,
-    submitted: Vec<Vec<[bool; 2]>>,
-    fines: HashMap<(usize, usize), FineChain>,
-    per_iter: Vec<IterStat>,
-    stop_at_iter: Option<usize>,
-    inflight_rows: usize,
-    total_evals: u64,
-    rows_done: u64,
-    occ_sum: u64,
-    t0: Instant,
-    reply: Sender<SampleOutput>,
-}
-
-impl SrdsTask {
-    fn new(
-        x0: &[f32],
-        spec: SamplerSpec,
-        reply: Sender<SampleOutput>,
-        pool: &BufPool,
-    ) -> (SrdsTask, Vec<Emit>) {
-        let part = spec.partition();
-        let m = part.num_blocks();
-        let max_iters = spec.max_iters.unwrap_or(m).max(1).min(m);
-        let mut task = SrdsTask {
-            spec,
-            part,
-            m,
-            max_iters,
-            x: vec![vec![None; m + 1]; max_iters + 1],
-            g: vec![vec![None; m + 1]; max_iters + 1],
-            y: vec![vec![None; m + 1]; max_iters + 1],
-            submitted: vec![vec![[false; 2]; m + 1]; max_iters + 1],
-            fines: HashMap::new(),
-            per_iter: Vec::new(),
-            stop_at_iter: None,
-            inflight_rows: 0,
-            total_evals: 0,
-            rows_done: 0,
-            occ_sum: 0,
-            t0: Instant::now(),
-            reply,
-        };
-        // Seed the prior states and kick off everything x0 unblocks:
-        // G(p, 1) for every p (their input never changes) and F(p, 1) for
-        // every refinement (its input x^{p-1}_0 = x0 is already final).
-        // One pooled buffer, shared by refcount across every iteration's
-        // x[p][0] and every seeded row.
-        let x0 = pool.take(x0);
-        let mut emits = Vec::new();
-        for p in 0..=task.max_iters {
-            task.x[p][0] = Some(x0.clone());
-        }
-        for p in 0..=task.max_iters {
-            task.submitted[p][1][0] = true;
-            emits.push(task.emit_coarse(p, 1, x0.clone()));
-            if p >= 1 {
-                task.submitted[p][1][1] = true;
-                emits.push(task.emit_fine_start(p, 1, x0.clone()));
-            }
-        }
-        (task, emits)
-    }
-
-    fn emit_coarse(&mut self, p: usize, i: usize, x: StateBuf) -> Emit {
-        self.inflight_rows += 1;
-        Emit {
-            key: (p, i, false),
-            x,
-            s_from: self.part.s_bound(i - 1),
-            s_to: self.part.s_bound(i),
-        }
-    }
-
-    fn emit_fine_start(&mut self, p: usize, i: usize, x: StateBuf) -> Emit {
-        let points = self.part.block_points(i - 1).to_vec();
-        let (s_from, s_to) = (points[0], points[1]);
-        self.fines.insert((p, i), FineChain { points, next: 0 });
-        self.inflight_rows += 1;
-        Emit { key: (p, i, true), x, s_from, s_to }
-    }
-
-    /// Handle one completed row; returns follow-up rows to enqueue.
-    /// `epc` is the backend's evals per step; corrector states
-    /// materialize out of `pool`.
-    fn on_row(
-        &mut self,
-        key: (usize, usize, bool),
-        out: StateBuf,
-        batch_rows: usize,
-        epc: u64,
-        pool: &BufPool,
-    ) -> Vec<Emit> {
-        self.inflight_rows -= 1;
-        self.total_evals += epc;
-        self.rows_done += 1;
-        self.occ_sum += batch_rows as u64;
-        let (p, i, is_fine) = key;
-        let mut emits = Vec::new();
-        if is_fine {
-            let chain = self.fines.get_mut(&(p, i)).expect("live fine chain");
-            let last_window = chain.points.len() - 2;
-            if chain.next < last_window {
-                chain.next += 1;
-                let (s_from, s_to) = (chain.points[chain.next], chain.points[chain.next + 1]);
-                self.inflight_rows += 1;
-                emits.push(Emit { key, x: out, s_from, s_to });
-                return emits;
-            }
-            self.fines.remove(&(p, i));
-            self.y[p][i] = Some(out);
-        } else {
-            self.g[p][i] = Some(out);
-        }
-        // Corrector attempts unblocked by this result: cell (p, i) and —
-        // when a coarse result acts as `prev` — cell (p+1, i).
-        let mut attempts = vec![(p, i)];
-        if !is_fine && p + 1 <= self.max_iters {
-            attempts.push((p + 1, i));
-        }
-        let mut ready: Vec<(usize, usize)> = Vec::new();
-        for (ap, ai) in attempts {
-            if self.x[ap][ai].is_some() {
-                continue;
-            }
-            let materialized = if ap == 0 {
-                // The init boundary IS the coarse result — share it.
-                self.g[0][ai].clone()
-            } else if let (Some(yi), Some(cur), Some(prev)) =
-                (&self.y[ap][ai], &self.g[ap][ai], &self.g[ap - 1][ai])
-            {
-                // Eq. 6's parenthesization y + (G_new − G_old) is
-                // load-bearing for Prop. 1's bitwise collapse.
-                let mut v = pool.get(yi.len());
-                let vs = v.as_mut_slice();
-                for (t, a) in yi.iter().enumerate() {
-                    vs[t] = a + (cur[t] - prev[t]);
-                }
-                Some(v)
-            } else {
-                None
-            };
-            if let Some(v) = materialized {
-                self.x[ap][ai] = Some(v);
-                ready.push((ap, ai));
-            }
-        }
-        // Propagate each new state to the jobs it unblocks.
-        while let Some((sp, si)) = ready.pop() {
-            let stop = self.stop_at_iter;
-            let past_stop = move |p: usize| stop.map(|s| p > s).unwrap_or(false);
-            if si + 1 <= self.m
-                && sp + 1 <= self.max_iters
-                && !self.submitted[sp + 1][si + 1][1]
-                && !past_stop(sp + 1)
-            {
-                self.submitted[sp + 1][si + 1][1] = true;
-                let x = self.x[sp][si].clone().unwrap();
-                emits.push(self.emit_fine_start(sp + 1, si + 1, x));
-            }
-            if si + 1 <= self.m && !self.submitted[sp][si + 1][0] && !past_stop(sp) {
-                self.submitted[sp][si + 1][0] = true;
-                let x = self.x[sp][si].clone().unwrap();
-                emits.push(self.emit_coarse(sp, si + 1, x));
-            }
-            // Convergence: strictly in iteration order (a later final
-            // state can exist before an earlier one).
-            if si == self.m {
-                while self.stop_at_iter.is_none() {
-                    let pp = self.per_iter.len() + 1;
-                    if pp > self.max_iters {
-                        break;
-                    }
-                    let (Some(curf), Some(prevf)) = (&self.x[pp][self.m], &self.x[pp - 1][self.m])
-                    else {
-                        break;
-                    };
-                    let residual = self.spec.norm.dist(curf, prevf);
-                    self.per_iter.push(IterStat { iter: pp, residual, evals: 0 });
-                    if residual < self.spec.tol || pp >= self.m {
-                        self.stop_at_iter = Some(pp);
-                    }
-                }
-            }
-        }
-        emits
-    }
-
-    /// Whether the request can produce its final answer now: either the
-    /// convergence test fired and the winning iterate exists, or no rows
-    /// remain in flight (the speculative frontier ran dry).
-    fn finished(&self) -> bool {
-        match self.stop_at_iter {
-            Some(s) => self.x[s][self.m].is_some(),
-            None => self.inflight_rows == 0,
-        }
-    }
-
-    fn finalize(self, epc: u64, pool: &BufPool) {
-        let final_iter = self.stop_at_iter.unwrap_or_else(|| {
-            (1..=self.max_iters).rev().find(|&p| self.x[p][self.m].is_some()).unwrap_or(0)
-        });
-        // Copy the winning state out (one d-sized copy per request, at
-        // egress) — deliberately NOT into_vec(): stealing the slab would
-        // shrink the engine-wide pool by one buffer per completed
-        // request and make pool_misses drift upward forever. Every grid
-        // cell, this one included, recycles when the task drops below.
-        let sample = self.x[final_iter][self.m].as_ref().expect("final state").to_vec();
-        let converged = self
-            .per_iter
-            .iter()
-            .find(|s| s.iter == final_iter)
-            .map(|s| s.residual < self.spec.tol || final_iter >= self.m)
-            .unwrap_or(false);
-        let m = self.m as u64;
-        let b = self.part.block() as u64;
-        // Vanilla-schedule accounting, same formula as coordinator::srds:
-        // the coarse init sweep (M), then per iteration the longest fine
-        // block plus the sequential coarse sweep.
-        let b_max = (0..self.m).map(|j| self.part.block_len(j)).max().unwrap_or(0) as u64;
-        let iters = final_iter as u64;
-        let eff_serial = (m + iters * (b_max + m)) * epc;
-        let eff_pipelined =
-            if final_iter == 0 { m * epc } else { (m * iters + b).saturating_sub(iters) * epc };
-        let ps = pool.stats();
-        let stats = RunStats {
-            iters: final_iter,
-            converged,
-            eff_serial_evals: eff_serial,
-            eff_serial_evals_pipelined: eff_pipelined,
-            total_evals: self.total_evals,
-            wall: self.t0.elapsed(),
-            // The dispatcher materializes the full (iterations × blocks)
-            // grid of x/G/F states — wall-clock-optimal, not
-            // memory-optimal.
-            peak_states: 3 * (self.max_iters + 1) * (self.m + 1),
-            batch_occupancy: self.occ_sum as f64 / self.rows_done.max(1) as f64,
-            engine_rows: self.rows_done,
-            // Engine-wide pool snapshot at completion: across a steady
-            // request stream, successive responses show flat misses.
-            pool_hits: ps.hits,
-            pool_misses: ps.misses,
-            per_iter: self.per_iter,
-        };
-        // A dropped receiver (client went away) is not an engine error.
-        let _ = self.reply.send(SampleOutput { sample, stats, iterates: vec![] });
-    }
-}
-
-struct CallTask {
-    reply: Sender<(usize, StateBuf, usize)>,
-    remaining: usize,
+/// One resident request: its state machine plus the request-wide row
+/// fields the dispatcher attaches to every row the task emits, and the
+/// count of rows currently queued or executing (for stray-eval
+/// accounting at finalize).
+struct TaskEntry {
+    task: Box<dyn SamplerTask>,
+    reply: ReplySink,
+    mask: Option<Arc<[f32]>>,
+    guidance: f32,
+    seed: u64,
+    inflight: usize,
 }
 
 struct Dispatcher {
@@ -729,8 +407,9 @@ struct Dispatcher {
     pool: BufPool,
     batchers: HashMap<BatchKey, Batcher>,
     origins: HashMap<u64, RowOrigin>,
-    tasks: HashMap<u64, SrdsTask>,
-    calls: HashMap<u64, CallTask>,
+    /// The heterogeneous task table: every in-flight request, whatever
+    /// its sampler kind.
+    tasks: HashMap<u64, TaskEntry>,
     next_row: u64,
     next_id: u64,
     in_flight: usize,
@@ -760,7 +439,6 @@ impl Dispatcher {
             batchers: HashMap::new(),
             origins: HashMap::new(),
             tasks: HashMap::new(),
-            calls: HashMap::new(),
             next_row: 0,
             next_id: 0,
             in_flight: 0,
@@ -816,79 +494,72 @@ impl Dispatcher {
     fn handle(&mut self, msg: Msg) -> bool {
         match msg {
             Msg::Shutdown => return true,
-            Msg::Srds { x0, spec, reply } => {
+            Msg::Submit { x0, spec, reply } => {
                 let id = self.next_id;
                 self.next_id += 1;
-                let (task, emits) = SrdsTask::new(&x0, spec, reply, &self.pool);
-                self.tasks.insert(id, task);
-                self.enqueue_srds_rows(id, emits);
+                let mask = spec.cond.mask.clone();
+                let guidance = spec.cond.guidance;
+                let seed = spec.seed;
+                let mut task = new_task(&x0, &spec, &self.pool, self.epc);
+                let rows = task.start();
+                self.tasks.insert(id, TaskEntry { task, reply, mask, guidance, seed, inflight: 0 });
+                self.enqueue_rows(id, rows);
                 self.maybe_finalize(id);
-            }
-            Msg::Call { rows, reply } => {
-                let id = self.next_id;
-                self.next_id += 1;
-                self.calls.insert(id, CallTask { reply, remaining: rows.len() });
-                for mut row in rows {
-                    let slot = row.tag as usize;
-                    row.tag = self.next_row;
-                    self.next_row += 1;
-                    self.origins.insert(row.tag, RowOrigin::Call { call: id, slot });
-                    self.push_row(row, false);
-                }
             }
             Msg::BatchDone { outs } => {
                 self.in_flight -= 1;
                 let batch_rows = outs.len();
-                let epc = self.epc;
+                // Group completions per owning task (preserving
+                // first-seen order) so a sweep task absorbs a whole
+                // batch's worth of its rows in one poll.
+                let mut grouped: Vec<(u64, Vec<Completion>)> = Vec::new();
                 for (tag, out) in outs {
-                    match self.origins.remove(&tag) {
-                        Some(RowOrigin::Srds { req, key }) => {
-                            let Some(task) = self.tasks.get_mut(&req) else { continue };
-                            let emits = task.on_row(key, out, batch_rows, epc, &self.pool);
-                            self.enqueue_srds_rows(req, emits);
-                            self.maybe_finalize(req);
-                        }
-                        Some(RowOrigin::Call { call, slot }) => {
-                            let Some(c) = self.calls.get_mut(&call) else { continue };
-                            c.remaining -= 1;
-                            let gone = c.reply.send((slot, out, batch_rows)).is_err();
-                            if gone || c.remaining == 0 {
-                                self.calls.remove(&call);
-                            }
-                        }
-                        // Row of a request that already finalized.
-                        None => {}
+                    // Rows of already-finalized requests have no origin
+                    // left; their results are discarded here.
+                    let Some(origin) = self.origins.remove(&tag) else { continue };
+                    if !self.tasks.contains_key(&origin.req) {
+                        continue;
                     }
+                    let done = Completion { key: origin.key, out, batch_rows };
+                    match grouped.iter_mut().find(|(r, _)| *r == origin.req) {
+                        Some((_, v)) => v.push(done),
+                        None => grouped.push((origin.req, vec![done])),
+                    }
+                }
+                for (req, completions) in grouped {
+                    let Some(entry) = self.tasks.get_mut(&req) else { continue };
+                    entry.inflight -= completions.len();
+                    let rows = entry.task.poll(completions);
+                    self.enqueue_rows(req, rows);
+                    self.maybe_finalize(req);
                 }
             }
         }
         false
     }
 
-    fn enqueue_srds_rows(&mut self, req: u64, emits: Vec<Emit>) {
-        // Borrow the task immutably for the shared row fields.
-        let (mask, guidance, seed) = {
-            let t = &self.tasks[&req];
-            (t.spec.cond.mask.clone(), t.spec.cond.guidance, t.spec.seed)
-        };
-        for e in emits {
+    fn enqueue_rows(&mut self, req: u64, rows: Vec<TaskRow>) {
+        if rows.is_empty() {
+            return;
+        }
+        let entry = self.tasks.get_mut(&req).expect("rows from a live task");
+        entry.inflight += rows.len();
+        let (mask, guidance, seed) = (entry.mask.clone(), entry.guidance, entry.seed);
+        for row in rows {
             let tag = self.next_row;
             self.next_row += 1;
-            // Coarse steps are the schedule's serial spine (Prop. 2) —
-            // queue them ahead of speculative fine work.
-            let urgent = !e.key.2;
-            self.origins.insert(tag, RowOrigin::Srds { req, key: e.key });
+            self.origins.insert(tag, RowOrigin { req, key: row.key });
             self.push_row(
                 PendingRow {
                     tag,
-                    x: e.x,
-                    s_from: e.s_from,
-                    s_to: e.s_to,
+                    x: row.x,
+                    s_from: row.s_from,
+                    s_to: row.s_to,
                     mask: mask.clone(),
                     guidance,
                     seed,
                 },
-                urgent,
+                row.urgent,
             );
         }
     }
@@ -906,37 +577,35 @@ impl Dispatcher {
     }
 
     fn maybe_finalize(&mut self, req: u64) {
-        let done = self.tasks.get(&req).map(|t| t.finished()).unwrap_or(false);
-        if done {
-            if let Some(mut task) = self.tasks.remove(&req) {
-                // Eagerly purge this request's still-queued speculative
-                // rows — they will never run, and leaving them in place
-                // would inflate queue_depth and the spread-cap math until
-                // the lazy flush filter got to them.
-                let origins = &mut self.origins;
-                let mut queued = 0usize;
-                for b in self.batchers.values_mut() {
-                    let dead = b.purge(|r| {
-                        !matches!(origins.get(&r.tag),
-                                  Some(RowOrigin::Srds { req: rr, .. }) if *rr == req)
-                    });
-                    for row in dead {
-                        origins.remove(&row.tag);
-                        queued += 1;
-                    }
-                }
-                // Rows already handed to workers still execute and burn
-                // model evals; attribute them now (the old measured
-                // executor drained and counted them the same way). Their
-                // results are discarded on arrival via the origin map.
-                let executing = task.inflight_rows.saturating_sub(queued) as u64;
-                task.total_evals += executing * self.epc;
-                // Publish counters before the reply unblocks the caller,
-                // so a stats() read right after completion is current.
-                self.publish();
-                task.finalize(self.epc, &self.pool);
+        let done = self.tasks.get(&req).map(|e| e.task.finished()).unwrap_or(false);
+        if !done {
+            return;
+        }
+        let Some(mut entry) = self.tasks.remove(&req) else { return };
+        // Eagerly purge this request's still-queued speculative rows —
+        // they will never run, and leaving them in place would inflate
+        // queue_depth and the spread-cap math until the lazy flush
+        // filter got to them.
+        let origins = &mut self.origins;
+        let mut queued = 0usize;
+        for b in self.batchers.values_mut() {
+            let dead = b.purge(|r| !matches!(origins.get(&r.tag), Some(o) if o.req == req));
+            for row in dead {
+                origins.remove(&row.tag);
+                queued += 1;
             }
         }
+        // Rows already handed to workers still execute and burn model
+        // evals; attribute them now. Their results are discarded on
+        // arrival via the origin map.
+        let executing = entry.inflight.saturating_sub(queued) as u64;
+        entry.task.charge_stray_rows(executing);
+        // Publish counters before the reply unblocks the caller, so a
+        // stats() read right after completion is current.
+        self.publish();
+        let out = entry.task.finalize();
+        let stats = self.snapshot_stats();
+        entry.reply.send(out, stats);
     }
 
     /// Work-conserving, spread-first flush. See the module docs.
@@ -958,13 +627,12 @@ impl Dispatcher {
             let cap = batcher.pending().div_ceil(idle);
             let mut rows = batcher.take_up_to(cap);
             // Drop rows whose owner finished already (the lazy purge).
-            let (origins, tasks, calls) = (&mut self.origins, &self.tasks, &self.calls);
+            let (origins, tasks) = (&mut self.origins, &self.tasks);
             rows.retain(|r| {
-                let live = match origins.get(&r.tag) {
-                    Some(RowOrigin::Srds { req, .. }) => tasks.contains_key(req),
-                    Some(RowOrigin::Call { call, .. }) => calls.contains_key(call),
-                    None => false,
-                };
+                let live = origins
+                    .get(&r.tag)
+                    .map(|o| tasks.contains_key(&o.req))
+                    .unwrap_or(false);
                 if !live {
                     origins.remove(&r.tag);
                 }
@@ -982,22 +650,40 @@ impl Dispatcher {
         }
     }
 
+    /// The full public stats view, built dispatcher-side (no lock on the
+    /// shared counters needed) — what completion callbacks receive.
+    fn snapshot_stats(&self) -> EngineStats {
+        let ps = self.pool.stats();
+        EngineStats {
+            flushed_batches: self.flushed_batches,
+            flushed_rows: self.flushed_rows,
+            mean_occupancy: self.flushed_rows as f64 / self.flushed_batches.max(1) as f64,
+            queue_depth: self.batchers.values().map(|b| b.pending()).sum(),
+            active_tasks: self.tasks.len(),
+            workers: self.workers,
+            pool_hits: ps.hits,
+            pool_misses: ps.misses,
+            pool_high_water: ps.high_water,
+        }
+    }
+
     fn publish(&self) {
         let mut c = self.counters.lock().unwrap();
         c.flushed_batches = self.flushed_batches;
         c.flushed_rows = self.flushed_rows;
         c.queue_depth = self.batchers.values().map(|b| b.pending()).sum();
-        c.inflight_requests = self.tasks.len() + self.calls.len();
+        c.active_tasks = self.tasks.len();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{prior_sample, registry, srds, Conditioning, SamplerSpec};
+    use crate::coordinator::{prior_sample, registry, srds, SamplerSpec};
     use crate::data::make_gmm;
     use crate::exec::NativeFactory;
     use crate::model::GmmEps;
+    use crate::solvers::NativeBackend;
 
     fn engine(workers: usize, batch: BatchPolicy) -> Engine {
         let model: Arc<dyn crate::model::EpsModel> = Arc::new(GmmEps::new(make_gmm("church")));
@@ -1007,10 +693,13 @@ mod tests {
         )
     }
 
-    fn vanilla(x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
+    fn native_backend() -> NativeBackend {
         let model: Arc<dyn crate::model::EpsModel> = Arc::new(GmmEps::new(make_gmm("church")));
-        let be = crate::solvers::NativeBackend::new(model, Solver::Ddim);
-        srds(&be, x0, spec)
+        NativeBackend::new(model, Solver::Ddim)
+    }
+
+    fn vanilla(x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
+        srds(&native_backend(), x0, spec)
     }
 
     #[test]
@@ -1029,7 +718,7 @@ mod tests {
             .collect();
         let handles: Vec<_> = specs
             .iter()
-            .map(|(x0, spec)| eng.submit_srds(x0.clone(), spec.clone()))
+            .map(|(x0, spec)| eng.submit(x0.clone(), spec.clone()))
             .collect();
         for ((x0, spec), rx) in specs.iter().zip(handles) {
             let got = rx.recv().expect("engine reply");
@@ -1047,7 +736,7 @@ mod tests {
         let eng = engine(2, BatchPolicy::immediate());
         let x0 = prior_sample(64, 1);
         let spec = SamplerSpec::srds(25).with_tol(0.0).with_max_iters(1).with_seed(1);
-        let res = eng.run_srds(&x0, &spec);
+        let res = eng.run(&x0, &spec);
         let want = vanilla(&x0, &spec);
         assert_eq!(res.stats.eff_serial_evals, want.stats.eff_serial_evals);
         assert_eq!(
@@ -1058,29 +747,43 @@ mod tests {
     }
 
     #[test]
-    fn adapter_backend_runs_every_registered_sampler() {
+    fn mixed_fleet_is_bit_identical_with_cross_request_fusion() {
+        // The tentpole acceptance test: all four registry samplers in
+        // flight through one engine simultaneously (two requests each,
+        // submitted before any reply is awaited), every request's output
+        // bit-identical to its solo vanilla run on a dedicated backend,
+        // and at least one request demonstrably riding fused batches.
         let eng = engine(2, BatchPolicy::default());
         let reg = registry();
-        let x0 = prior_sample(64, 9);
-        let reference = {
-            let model: Arc<dyn crate::model::EpsModel> =
-                Arc::new(GmmEps::new(make_gmm("church")));
-            let be = crate::solvers::NativeBackend::new(model, Solver::Ddim);
-            let (seq, _) =
-                crate::coordinator::sequential(&be, &x0, 25, &Conditioning::none(), 9);
-            seq
-        };
-        for name in reg.list() {
-            let s = reg.parse(name).unwrap();
-            let spec = SamplerSpec::for_kind(25, s.kind()).with_tol(1e-6).with_seed(9);
-            let be = eng.backend();
-            let out = s.run(&be, &x0, &spec);
-            let d = spec.norm.dist(&out.sample, &reference);
-            assert!(d < 1e-2, "{name} via engine adapter vs sequential: {d}");
-            let (rows, occ) = be.occupancy();
-            assert!(rows > 0, "{name} executed no engine rows");
-            assert!(occ >= 1.0, "{name} occupancy {occ}");
+        let mut reqs: Vec<(Vec<f32>, SamplerSpec)> = Vec::new();
+        for (i, name) in reg.list().iter().enumerate() {
+            let kind = reg.parse(name).unwrap().kind();
+            for rep in 0..2u64 {
+                let seed = 40 + 2 * i as u64 + rep;
+                let spec = SamplerSpec::for_kind(25, kind).with_tol(1e-5).with_seed(seed);
+                reqs.push((prior_sample(64, seed), spec));
+            }
         }
+        let handles: Vec<_> = reqs
+            .iter()
+            .map(|(x0, spec)| eng.submit(x0.clone(), spec.clone()))
+            .collect();
+        let be = native_backend();
+        let mut saw_fusion = false;
+        for ((x0, spec), rx) in reqs.iter().zip(handles) {
+            let got = rx.recv().expect("engine reply");
+            let want = spec.run(&be, x0);
+            let name = spec.kind.name();
+            assert_eq!(got.sample, want.sample, "{name} seed {}: engine vs solo", spec.seed);
+            assert_eq!(got.stats.iters, want.stats.iters, "{name} seed {}", spec.seed);
+            assert!(got.stats.engine_rows > 0, "{name} executed no engine rows");
+            assert!(got.stats.batch_occupancy >= 1.0, "{name} occupancy");
+            saw_fusion |= got.stats.batch_occupancy > 1.0;
+        }
+        assert!(saw_fusion, "no request of the mixed fleet ever rode a multi-row batch");
+        let stats = eng.stats();
+        assert!(stats.mean_occupancy > 1.0, "mixed fleet never fused rows");
+        assert_eq!(stats.active_tasks, 0, "task table drains");
     }
 
     #[test]
@@ -1099,7 +802,7 @@ mod tests {
             .collect();
         let handles: Vec<_> = reqs
             .iter()
-            .map(|(x0, spec)| eng.submit_srds(x0.clone(), spec.clone()))
+            .map(|(x0, spec)| eng.submit(x0.clone(), spec.clone()))
             .collect();
         let mut saw_fusion = false;
         for ((x0, spec), rx) in reqs.iter().zip(handles) {
@@ -1117,17 +820,65 @@ mod tests {
     }
 
     #[test]
+    fn submit_with_callback_runs_on_completion_with_stats() {
+        // The serving path's shape: no thread blocks on the reply; the
+        // callback fires on the dispatcher with a consistent snapshot.
+        let eng = engine(2, BatchPolicy::default());
+        let (tx, rx) = channel();
+        let x0 = prior_sample(64, 9);
+        let spec = SamplerSpec::sequential(16).with_seed(9);
+        eng.submit_with(x0.clone(), spec, move |out, stats| {
+            let _ = tx.send((out, stats));
+        });
+        let (out, stats) = rx.recv().expect("callback fired");
+        let be = native_backend();
+        let want = SamplerSpec::sequential(16).with_seed(9).run(&be, &x0);
+        assert_eq!(out.sample, want.sample);
+        assert!(stats.flushed_batches > 0);
+        assert_eq!(stats.active_tasks, 0, "snapshot taken after table removal");
+    }
+
+    #[test]
     fn engine_stats_snapshot_is_consistent() {
         let eng = engine(2, BatchPolicy::immediate());
         let x0 = prior_sample(64, 3);
         let spec = SamplerSpec::srds(25).with_tol(1e-4).with_seed(3);
-        let res = eng.run_srds(&x0, &spec);
+        let res = eng.run(&x0, &spec);
         assert!(res.stats.engine_rows > 0);
         assert!(res.stats.batch_occupancy >= 1.0);
         let st = eng.stats();
         assert!(st.flushed_rows >= res.stats.engine_rows);
-        assert_eq!(st.inflight_requests, 0);
+        assert_eq!(st.active_tasks, 0);
         assert_eq!(st.workers, 2);
+    }
+
+    #[test]
+    fn active_tasks_gauge_tracks_the_table() {
+        // Four requests submitted before any completes (each takes many
+        // worker round trips, so all four Submit messages sit in the
+        // dispatcher inbox ahead of the first request's completions):
+        // the first callback to fire must observe the other tasks still
+        // resident, and the table must drain to zero at the end.
+        let eng = engine(1, BatchPolicy::default());
+        let (tx, rx) = channel();
+        for s in 0..4u64 {
+            let tx = tx.clone();
+            eng.submit_with(
+                prior_sample(64, s),
+                SamplerSpec::srds(100).with_tol(1e-4).with_seed(s),
+                move |_, stats| {
+                    let _ = tx.send(stats.active_tasks);
+                },
+            );
+        }
+        drop(tx);
+        let seen: Vec<usize> = rx.iter().collect();
+        assert_eq!(seen.len(), 4);
+        assert!(
+            seen.iter().any(|&a| a > 0),
+            "no completion ever observed a co-resident task: {seen:?}"
+        );
+        assert_eq!(eng.stats().active_tasks, 0, "table drains to zero");
     }
 
     #[test]
@@ -1146,7 +897,7 @@ mod tests {
         let eng = engine(2, BatchPolicy::default());
         let run = |seed: u64| {
             let x0 = prior_sample(64, seed);
-            eng.run_srds(&x0, &SamplerSpec::srds(25).with_tol(1e-4).with_seed(seed))
+            eng.run(&x0, &SamplerSpec::srds(25).with_tol(1e-4).with_seed(seed))
         };
         for s in 0..3 {
             run(s);

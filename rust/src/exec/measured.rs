@@ -10,7 +10,8 @@
 //! and blocks. The dependency-driven dispatcher that used to live here
 //! — release `F(p, i)` the moment `x^{p-1}_{i-1}` materializes, `G(p, i)`
 //! the moment `x^p_{i-1}` does, no iteration barrier — is now the
-//! engine's per-request SRDS state machine, shared by every tenant.
+//! engine-native SRDS [`crate::exec::task::SamplerTask`], shared by
+//! every tenant.
 
 use crate::batching::BatchPolicy;
 use crate::coordinator::{SampleOutput, SamplerSpec};
@@ -54,7 +55,7 @@ pub fn measured_pipelined_srds(
     x0: &[f32],
     spec: &SamplerSpec,
 ) -> SampleOutput {
-    pool.engine.run_srds(x0, spec)
+    pool.engine.run(x0, spec)
 }
 
 /// Factory producing native backends (each worker gets a cheap clone of

@@ -5,14 +5,21 @@
 //!   with a fixed per-eval cost. This reproduces the paper's
 //!   effective-serial-eval and device-scaling tables exactly,
 //!   independent of host hardware.
+//! * [`task`] — engine-native sampler tasks: every registry sampler as
+//!   an object-safe [`task::SamplerTask`] state machine (SRDS's
+//!   dependency grid, the sequential one-row chain, ParaDiGMS's and
+//!   ParaTAA's whole-sweep batched rows) that emits step rows and
+//!   absorbs completions — the per-request unit the engine schedules.
 //! * [`engine`] — the multi-tenant step-level engine: many concurrent
-//!   sampling requests share one worker pool, every fine/coarse step
-//!   becomes a [`crate::batching::PendingRow`], and rows are fused into
-//!   multi-row [`crate::solvers::StepRequest`] batches across requests
-//!   (§3.4's batched inference, applied to serving). All request state
-//!   rides in pooled [`crate::buf::StateBuf`]s from one engine-wide
-//!   slab pool — a warm engine allocates no state buffers. The serving
-//!   loop dispatches into this.
+//!   sampling requests share one worker pool, each request is exactly
+//!   one dispatcher-resident `SamplerTask` (no per-request threads of
+//!   any kind), every fine/coarse step becomes a
+//!   [`crate::batching::PendingRow`], and rows are fused into multi-row
+//!   [`crate::solvers::StepRequest`] batches across requests (§3.4's
+//!   batched inference, applied to serving). All request state rides in
+//!   pooled [`crate::buf::StateBuf`]s from one engine-wide slab pool — a
+//!   warm engine allocates no state buffers. The serving loop dispatches
+//!   into this.
 //! * [`measured`] — the single-request veneer over the engine (one OS
 //!   thread per simulated device, each owning its own thread-bound PJRT
 //!   or native backend) running the *pipelined* SRDS dataflow of Fig. 4
@@ -21,7 +28,9 @@
 pub mod engine;
 pub mod measured;
 pub mod simclock;
+pub mod task;
 
-pub use engine::{Engine, EngineBackend, EngineConfig, EngineStats};
+pub use engine::{Engine, EngineConfig, EngineStats};
 pub use measured::{measured_pipelined_srds, NativeFactory, WorkerPool};
 pub use simclock::{schedule_tasks, simulate_paradigms, simulate_sequential, simulate_srds, SimReport, SimTask};
+pub use task::{new_task, Completion, SamplerTask, TaskRow};

@@ -1,0 +1,1086 @@
+//! Engine-native sampler tasks: every registered sampler as a
+//! dependency-driven state machine the multi-tenant engine can drive.
+//!
+//! The paper's Parareal framing treats SRDS, ParaDiGMS and ParaTAA as
+//! interchangeable trajectory-parallel iterations over the same ODE, and
+//! its §3.4/§3.5 pipelining argument applies to any of them. This module
+//! is that framing on the serving path: a [`SamplerTask`] is an
+//! object-safe state machine that *emits* step rows ([`TaskRow`]) and
+//! *absorbs* their results ([`Completion`]), so the engine's dispatcher
+//! can interleave many heterogeneous requests over one worker pool — no
+//! sampler ever occupies a thread of its own. (Before this layer
+//! existed, only SRDS ran dispatcher-resident; sequential / ParaDiGMS /
+//! ParaTAA each blocked a dedicated OS thread inside an adapter
+//! `StepBackend`, which capped concurrency at thread-spawn scale.)
+//!
+//! The four registry samplers map onto the trait naturally:
+//!
+//! * [`SrdsTask`] — the reference implementation: the Fig. 4 pipelined
+//!   dataflow as event handlers over the iteration × block grid (a fine
+//!   block solve is a chain of single-step rows, a coarse step one
+//!   urgent row, each completion unblocks exactly the O(1) cells it
+//!   can).
+//! * [`SeqTask`] — a trivial one-row chain: emit step `i+1` when step
+//!   `i` lands.
+//! * [`ParadigmsTask`] — the windowed Picard sweep emits a whole
+//!   window's rows at once (its natural parallel shape); when the last
+//!   row of the sweep lands it runs the prefix-sum rebuild and emits the
+//!   next window.
+//! * [`ParataaTask`] — the Anderson fixed-point emits one full
+//!   trajectory sweep per iteration and mixes via the shared
+//!   [`AndersonMixer`] when the sweep completes.
+//!
+//! Each task owns its pooled [`StateBuf`] state (grids, trajectories,
+//! sweep staging) and its `RunStats` accounting; emitted rows *share*
+//! task-resident buffers by refcount, never copy them. The numerical
+//! kernels (SRDS's Eq. 6 corrector, ParaDiGMS's Picard point update,
+//! ParaTAA's Anderson mix) are the same functions the vanilla
+//! coordinator samplers call, so a task's output is bit-identical to its
+//! solo vanilla run — pinned by the drive-harness tests below and the
+//! engine's mixed-fleet tests.
+
+use crate::buf::{BufPool, StateBuf};
+use crate::coordinator::paradigms::picard_point_update;
+use crate::coordinator::parataa::AndersonMixer;
+use crate::coordinator::sequential::chain_stats;
+use crate::coordinator::srds::corrector;
+use crate::coordinator::{IterStat, RunStats, SampleOutput, SamplerKind, SamplerSpec};
+use crate::schedule::{Grid, Partition};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// One row of step work a task wants executed. `key` is task-local (the
+/// engine echoes it back in the matching [`Completion`]); `x` is a
+/// refcounted share of task-resident state, not a copy. `urgent` rows
+/// enter their batcher's head region (the SRDS coarse spine, Prop. 2).
+/// The request-wide mask / guidance / seed are attached by the engine
+/// from the task's spec.
+pub struct TaskRow {
+    pub key: u64,
+    pub x: StateBuf,
+    pub s_from: f32,
+    pub s_to: f32,
+    pub urgent: bool,
+}
+
+/// One completed row, handed back to the task that emitted it.
+/// `batch_rows` is the size of the fused batch the row rode in (the
+/// per-request `batch_occupancy` accounting).
+pub struct Completion {
+    pub key: u64,
+    pub out: StateBuf,
+    pub batch_rows: usize,
+}
+
+/// A sampling request as a dependency-driven state machine. The engine's
+/// dispatcher drives the lifecycle: [`SamplerTask::start`] once, then
+/// [`SamplerTask::poll`] with each batch of completed rows until
+/// [`SamplerTask::finished`], then [`SamplerTask::finalize`] for the
+/// [`SampleOutput`]. Hooks run on the dispatcher thread and must not
+/// block; heavy lifting belongs in the rows they emit.
+pub trait SamplerTask: Send {
+    /// Emit the rows the initial state unblocks. Called exactly once.
+    fn start(&mut self) -> Vec<TaskRow>;
+
+    /// Absorb completed rows and emit the follow-up rows they unblock.
+    /// An empty return with [`SamplerTask::finished`] still false means
+    /// other rows of this task are still in flight.
+    fn poll(&mut self, done: Vec<Completion>) -> Vec<TaskRow>;
+
+    /// Whether the task can produce its final answer now.
+    fn finished(&self) -> bool;
+
+    /// Rows already handed to workers when the task finished (possible
+    /// only for speculative samplers); their model evals are attributed
+    /// to this request even though the results will be discarded.
+    fn charge_stray_rows(&mut self, _rows: u64) {}
+
+    /// Consume the task into its output. Only called after
+    /// [`SamplerTask::finished`] returns true.
+    fn finalize(self: Box<Self>) -> SampleOutput;
+}
+
+/// Build the engine-resident task for `spec.kind` — the task-table
+/// analogue of [`crate::coordinator::registry`]. `pool` is the engine's
+/// shared slab pool (the task's grids and sweep rows draw from and
+/// recycle into it) and `epc` the backend's evals per step.
+pub fn new_task(x0: &[f32], spec: &SamplerSpec, pool: &BufPool, epc: u64) -> Box<dyn SamplerTask> {
+    match spec.kind {
+        SamplerKind::Sequential => Box::new(SeqTask::new(x0, spec.clone(), pool.clone(), epc)),
+        SamplerKind::Srds => Box::new(SrdsTask::new(x0, spec.clone(), pool.clone(), epc)),
+        SamplerKind::Paradigms { .. } => {
+            Box::new(ParadigmsTask::new(x0, spec.clone(), pool.clone(), epc))
+        }
+        SamplerKind::Parataa { .. } => {
+            Box::new(ParataaTask::new(x0, spec.clone(), pool.clone(), epc))
+        }
+    }
+}
+
+/// Per-request fusion accounting every task keeps: rows completed and
+/// the mean batch occupancy they rode in.
+#[derive(Default)]
+struct RowMeter {
+    rows: u64,
+    occ_sum: u64,
+}
+
+impl RowMeter {
+    fn note(&mut self, batch_rows: usize) {
+        self.rows += 1;
+        self.occ_sum += batch_rows as u64;
+    }
+
+    fn occupancy(&self) -> f64 {
+        self.occ_sum as f64 / self.rows.max(1) as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sequential: a one-row chain.
+// ---------------------------------------------------------------------
+
+/// The `N`-step baseline as a task: one row in flight at any moment,
+/// each completion feeding the next step — the engine-native form of
+/// [`crate::coordinator::sequential`]. Its rows still fuse into
+/// co-tenant batches, so even baseline traffic fills worker batches.
+struct SeqTask {
+    spec: SamplerSpec,
+    pool: BufPool,
+    epc: u64,
+    grid: Grid,
+    n: usize,
+    x0: Option<StateBuf>,
+    last: Option<StateBuf>,
+    step: usize,
+    meter: RowMeter,
+    t0: Instant,
+}
+
+impl SeqTask {
+    fn new(x0: &[f32], spec: SamplerSpec, pool: BufPool, epc: u64) -> SeqTask {
+        let n = spec.n;
+        let x0 = pool.take(x0);
+        SeqTask {
+            spec,
+            pool,
+            epc,
+            grid: Grid::new(n),
+            n,
+            x0: Some(x0),
+            last: None,
+            step: 0,
+            meter: RowMeter::default(),
+            t0: Instant::now(),
+        }
+    }
+}
+
+impl SamplerTask for SeqTask {
+    fn start(&mut self) -> Vec<TaskRow> {
+        // n >= 1 is a Grid invariant, so the chain always has a head.
+        let x0 = self.x0.take().expect("start called once");
+        vec![TaskRow {
+            key: 0,
+            x: x0,
+            s_from: self.grid.s(0),
+            s_to: self.grid.s(1),
+            urgent: false,
+        }]
+    }
+
+    fn poll(&mut self, done: Vec<Completion>) -> Vec<TaskRow> {
+        let mut rows = Vec::new();
+        for c in done {
+            self.meter.note(c.batch_rows);
+            self.step += 1;
+            if self.step < self.n {
+                rows.push(TaskRow {
+                    key: self.step as u64,
+                    x: c.out,
+                    s_from: self.grid.s(self.step),
+                    s_to: self.grid.s(self.step + 1),
+                    urgent: false,
+                });
+            } else {
+                self.last = Some(c.out);
+            }
+        }
+        rows
+    }
+
+    fn finished(&self) -> bool {
+        self.last.is_some()
+    }
+
+    fn finalize(self: Box<Self>) -> SampleOutput {
+        // Copy the final state out (never steal the slab — see
+        // SrdsTask::finalize on why egress copies keep the engine pool
+        // steady-state-allocation-free).
+        let sample = self.last.as_ref().expect("chain complete").to_vec();
+        let ps = self.pool.stats();
+        let mut stats = chain_stats(self.n, self.epc);
+        stats.wall = self.t0.elapsed();
+        stats.batch_occupancy = self.meter.occupancy();
+        stats.engine_rows = self.meter.rows;
+        stats.pool_hits = ps.hits;
+        stats.pool_misses = ps.misses;
+        let iterates = if self.spec.keep_iterates { vec![sample.clone()] } else { vec![] };
+        SampleOutput { sample, stats, iterates }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SRDS: the dependency-driven grid state machine (the reference task).
+// ---------------------------------------------------------------------
+
+/// A fine block solve in flight: the chain of single-step rows walking
+/// `points`. `next` is the window index of the row currently queued or
+/// executing.
+struct FineChain {
+    points: Vec<f32>,
+    next: usize,
+}
+
+/// Row keys pack the grid cell: `(p, i, is_fine)`.
+fn srds_key(p: usize, i: usize, fine: bool) -> u64 {
+    ((p as u64) << 33) | ((i as u64) << 1) | fine as u64
+}
+
+fn srds_key_parts(key: u64) -> (usize, usize, bool) {
+    ((key >> 33) as usize, ((key >> 1) & 0xFFFF_FFFF) as usize, key & 1 == 1)
+}
+
+/// Dependency-driven SRDS state machine for one request — the Fig. 4
+/// pipelined dataflow of `measured_pipelined_srds`, expressed as event
+/// handlers so the dispatcher can interleave many of them.
+///
+/// Every cell of the `x`/`g`/`y` grids is a pooled [`StateBuf`]; cells
+/// are written once (by a worker or the corrector) and shared read-only
+/// from then on — emitting a follow-up row or reusing a coarse result
+/// as the next iteration's `prev` is a refcount bump.
+struct SrdsTask {
+    spec: SamplerSpec,
+    pool: BufPool,
+    epc: u64,
+    part: Partition,
+    m: usize,
+    max_iters: usize,
+    x0: Option<StateBuf>,
+    x: Vec<Vec<Option<StateBuf>>>,
+    g: Vec<Vec<Option<StateBuf>>>,
+    y: Vec<Vec<Option<StateBuf>>>,
+    submitted: Vec<Vec<[bool; 2]>>,
+    fines: HashMap<(usize, usize), FineChain>,
+    per_iter: Vec<IterStat>,
+    stop_at_iter: Option<usize>,
+    inflight_rows: usize,
+    total_evals: u64,
+    meter: RowMeter,
+    t0: Instant,
+}
+
+impl SrdsTask {
+    fn new(x0: &[f32], spec: SamplerSpec, pool: BufPool, epc: u64) -> SrdsTask {
+        let part = spec.partition();
+        let m = part.num_blocks();
+        let max_iters = spec.max_iters.unwrap_or(m).max(1).min(m);
+        let x0 = pool.take(x0);
+        SrdsTask {
+            spec,
+            pool,
+            epc,
+            part,
+            m,
+            max_iters,
+            x0: Some(x0),
+            x: vec![vec![None; m + 1]; max_iters + 1],
+            g: vec![vec![None; m + 1]; max_iters + 1],
+            y: vec![vec![None; m + 1]; max_iters + 1],
+            submitted: vec![vec![[false; 2]; m + 1]; max_iters + 1],
+            fines: HashMap::new(),
+            per_iter: Vec::new(),
+            stop_at_iter: None,
+            inflight_rows: 0,
+            total_evals: 0,
+            meter: RowMeter::default(),
+            t0: Instant::now(),
+        }
+    }
+
+    fn emit_coarse(&mut self, p: usize, i: usize, x: StateBuf) -> TaskRow {
+        self.inflight_rows += 1;
+        TaskRow {
+            key: srds_key(p, i, false),
+            x,
+            s_from: self.part.s_bound(i - 1),
+            s_to: self.part.s_bound(i),
+            // Coarse steps are the schedule's serial spine (Prop. 2) —
+            // queued ahead of speculative fine work.
+            urgent: true,
+        }
+    }
+
+    fn emit_fine_start(&mut self, p: usize, i: usize, x: StateBuf) -> TaskRow {
+        let points = self.part.block_points(i - 1).to_vec();
+        let (s_from, s_to) = (points[0], points[1]);
+        self.fines.insert((p, i), FineChain { points, next: 0 });
+        self.inflight_rows += 1;
+        TaskRow { key: srds_key(p, i, true), x, s_from, s_to, urgent: false }
+    }
+
+    /// Handle one completed row; pushes follow-up rows into `emits`.
+    fn on_row(&mut self, c: Completion, emits: &mut Vec<TaskRow>) {
+        self.inflight_rows -= 1;
+        self.total_evals += self.epc;
+        self.meter.note(c.batch_rows);
+        let (p, i, is_fine) = srds_key_parts(c.key);
+        let out = c.out;
+        if is_fine {
+            let chain = self.fines.get_mut(&(p, i)).expect("live fine chain");
+            let last_window = chain.points.len() - 2;
+            if chain.next < last_window {
+                chain.next += 1;
+                let (s_from, s_to) = (chain.points[chain.next], chain.points[chain.next + 1]);
+                self.inflight_rows += 1;
+                emits.push(TaskRow { key: c.key, x: out, s_from, s_to, urgent: false });
+                return;
+            }
+            self.fines.remove(&(p, i));
+            self.y[p][i] = Some(out);
+        } else {
+            self.g[p][i] = Some(out);
+        }
+        // Corrector attempts unblocked by this result: cell (p, i) and —
+        // when a coarse result acts as `prev` — cell (p+1, i).
+        let mut attempts = vec![(p, i)];
+        if !is_fine && p + 1 <= self.max_iters {
+            attempts.push((p + 1, i));
+        }
+        let mut ready: Vec<(usize, usize)> = Vec::new();
+        for (ap, ai) in attempts {
+            if self.x[ap][ai].is_some() {
+                continue;
+            }
+            let materialized = if ap == 0 {
+                // The init boundary IS the coarse result — share it.
+                self.g[0][ai].clone()
+            } else if let (Some(yi), Some(cur), Some(prev)) =
+                (&self.y[ap][ai], &self.g[ap][ai], &self.g[ap - 1][ai])
+            {
+                // Eq. 6, via the same corrector the vanilla loop uses.
+                let mut v = self.pool.get(yi.len());
+                corrector(yi, cur, prev, v.as_mut_slice());
+                Some(v)
+            } else {
+                None
+            };
+            if let Some(v) = materialized {
+                self.x[ap][ai] = Some(v);
+                ready.push((ap, ai));
+            }
+        }
+        // Propagate each new state to the jobs it unblocks.
+        while let Some((sp, si)) = ready.pop() {
+            let stop = self.stop_at_iter;
+            let past_stop = move |p: usize| stop.map(|s| p > s).unwrap_or(false);
+            if si + 1 <= self.m
+                && sp + 1 <= self.max_iters
+                && !self.submitted[sp + 1][si + 1][1]
+                && !past_stop(sp + 1)
+            {
+                self.submitted[sp + 1][si + 1][1] = true;
+                let x = self.x[sp][si].clone().unwrap();
+                emits.push(self.emit_fine_start(sp + 1, si + 1, x));
+            }
+            if si + 1 <= self.m && !self.submitted[sp][si + 1][0] && !past_stop(sp) {
+                self.submitted[sp][si + 1][0] = true;
+                let x = self.x[sp][si].clone().unwrap();
+                emits.push(self.emit_coarse(sp, si + 1, x));
+            }
+            // Convergence: strictly in iteration order (a later final
+            // state can exist before an earlier one).
+            if si == self.m {
+                while self.stop_at_iter.is_none() {
+                    let pp = self.per_iter.len() + 1;
+                    if pp > self.max_iters {
+                        break;
+                    }
+                    let (Some(curf), Some(prevf)) = (&self.x[pp][self.m], &self.x[pp - 1][self.m])
+                    else {
+                        break;
+                    };
+                    let residual = self.spec.norm.dist(curf, prevf);
+                    self.per_iter.push(IterStat { iter: pp, residual, evals: 0 });
+                    if residual < self.spec.tol || pp >= self.m {
+                        self.stop_at_iter = Some(pp);
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl SamplerTask for SrdsTask {
+    fn start(&mut self) -> Vec<TaskRow> {
+        // Seed the prior states and kick off everything x0 unblocks:
+        // G(p, 1) for every p (their input never changes) and F(p, 1) for
+        // every refinement (its input x^{p-1}_0 = x0 is already final).
+        // One pooled buffer, shared by refcount across every iteration's
+        // x[p][0] and every seeded row.
+        let x0 = self.x0.take().expect("start called once");
+        for p in 0..=self.max_iters {
+            self.x[p][0] = Some(x0.clone());
+        }
+        let mut emits = Vec::new();
+        for p in 0..=self.max_iters {
+            self.submitted[p][1][0] = true;
+            let row = self.emit_coarse(p, 1, x0.clone());
+            emits.push(row);
+            if p >= 1 {
+                self.submitted[p][1][1] = true;
+                let row = self.emit_fine_start(p, 1, x0.clone());
+                emits.push(row);
+            }
+        }
+        emits
+    }
+
+    fn poll(&mut self, done: Vec<Completion>) -> Vec<TaskRow> {
+        let mut emits = Vec::new();
+        for c in done {
+            self.on_row(c, &mut emits);
+        }
+        emits
+    }
+
+    /// Either the convergence test fired and the winning iterate exists,
+    /// or no rows remain in flight (the speculative frontier ran dry).
+    fn finished(&self) -> bool {
+        match self.stop_at_iter {
+            Some(s) => self.x[s][self.m].is_some(),
+            None => self.inflight_rows == 0,
+        }
+    }
+
+    fn charge_stray_rows(&mut self, rows: u64) {
+        self.total_evals += rows * self.epc;
+    }
+
+    fn finalize(self: Box<Self>) -> SampleOutput {
+        let final_iter = self.stop_at_iter.unwrap_or_else(|| {
+            (1..=self.max_iters).rev().find(|&p| self.x[p][self.m].is_some()).unwrap_or(0)
+        });
+        // Copy the winning state out (one d-sized copy per request, at
+        // egress) — deliberately NOT into_vec(): stealing the slab would
+        // shrink the engine-wide pool by one buffer per completed
+        // request and make pool_misses drift upward forever. Every grid
+        // cell, this one included, recycles when the task drops below.
+        let sample = self.x[final_iter][self.m].as_ref().expect("final state").to_vec();
+        // The grid retains every iteration's final state, so iterates
+        // cost nothing extra: the coarse init at index 0 plus one entry
+        // per refinement — the same contract as the vanilla sampler.
+        let iterates = if self.spec.keep_iterates {
+            (0..=final_iter)
+                .map(|p| {
+                    self.x[p][self.m]
+                        .as_ref()
+                        .expect("grid filled through the final iterate")
+                        .to_vec()
+                })
+                .collect()
+        } else {
+            vec![]
+        };
+        let converged = self
+            .per_iter
+            .iter()
+            .find(|s| s.iter == final_iter)
+            .map(|s| s.residual < self.spec.tol || final_iter >= self.m)
+            .unwrap_or(false);
+        let m = self.m as u64;
+        let b = self.part.block() as u64;
+        // Vanilla-schedule accounting, same formula as coordinator::srds:
+        // the coarse init sweep (M), then per iteration the longest fine
+        // block plus the sequential coarse sweep.
+        let b_max = (0..self.m).map(|j| self.part.block_len(j)).max().unwrap_or(0) as u64;
+        let iters = final_iter as u64;
+        let epc = self.epc;
+        let eff_serial = (m + iters * (b_max + m)) * epc;
+        let eff_pipelined =
+            if final_iter == 0 { m * epc } else { (m * iters + b).saturating_sub(iters) * epc };
+        let ps = self.pool.stats();
+        let stats = RunStats {
+            iters: final_iter,
+            converged,
+            eff_serial_evals: eff_serial,
+            eff_serial_evals_pipelined: eff_pipelined,
+            total_evals: self.total_evals,
+            wall: self.t0.elapsed(),
+            // The task materializes the full (iterations × blocks) grid
+            // of x/G/F states — wall-clock-optimal, not memory-optimal.
+            peak_states: 3 * (self.max_iters + 1) * (self.m + 1),
+            batch_occupancy: self.meter.occupancy(),
+            engine_rows: self.meter.rows,
+            // Engine-wide pool snapshot at completion: across a steady
+            // request stream, successive responses show flat misses.
+            pool_hits: ps.hits,
+            pool_misses: ps.misses,
+            per_iter: self.per_iter,
+        };
+        SampleOutput { sample, stats, iterates }
+    }
+}
+
+// ---------------------------------------------------------------------
+// ParaDiGMS: whole-window Picard sweeps.
+// ---------------------------------------------------------------------
+
+/// The windowed Picard sweep as a task: each sweep emits every window
+/// point's row at once — the sampler's natural parallel shape, which the
+/// retired adapter used to serialize through blocking `step()` calls.
+/// When the last row of the sweep lands, the prefix-sum rebuild runs
+/// (via the shared [`picard_point_update`]) and the next window is
+/// emitted.
+struct ParadigmsTask {
+    spec: SamplerSpec,
+    pool: BufPool,
+    epc: u64,
+    grid: Grid,
+    n: usize,
+    window: usize,
+    max_sweeps: usize,
+    /// Trajectory x[0..=n]; ParaDiGMS initializes every point to x0.
+    x: Vec<StateBuf>,
+    acc: Vec<f32>,
+    lo: usize,
+    sweeps: usize,
+    sweep_lo: usize,
+    sweep_hi: usize,
+    /// Pre-sweep window inputs (refcount shares — the drift rebuild
+    /// needs them after the grid slots are replaced).
+    sweep_in: Vec<StateBuf>,
+    sweep_out: Vec<Option<StateBuf>>,
+    remaining: usize,
+    total_evals: u64,
+    per_iter: Vec<IterStat>,
+    iterates: Vec<Vec<f32>>,
+    done: bool,
+    meter: RowMeter,
+    t0: Instant,
+}
+
+impl ParadigmsTask {
+    fn new(x0: &[f32], spec: SamplerSpec, pool: BufPool, epc: u64) -> ParadigmsTask {
+        let n = spec.n;
+        let window = spec.window().unwrap_or(n).max(1);
+        let max_sweeps = spec.max_iters.unwrap_or(8 * n).max(1);
+        let x: Vec<StateBuf> = (0..=n).map(|_| pool.take(x0)).collect();
+        ParadigmsTask {
+            spec,
+            pool,
+            epc,
+            grid: Grid::new(n),
+            n,
+            window,
+            max_sweeps,
+            x,
+            acc: vec![0.0f32; x0.len()],
+            lo: 0,
+            sweeps: 0,
+            sweep_lo: 0,
+            sweep_hi: 0,
+            sweep_in: Vec::new(),
+            sweep_out: Vec::new(),
+            remaining: 0,
+            total_evals: 0,
+            per_iter: Vec::new(),
+            iterates: Vec::new(),
+            done: false,
+            meter: RowMeter::default(),
+            t0: Instant::now(),
+        }
+    }
+
+    fn emit_sweep(&mut self) -> Vec<TaskRow> {
+        self.sweep_lo = self.lo;
+        self.sweep_hi = (self.lo + self.window).min(self.n);
+        let count = self.sweep_hi - self.sweep_lo;
+        self.sweep_in.clear();
+        self.sweep_out.clear();
+        self.sweep_out.resize_with(count, || None);
+        self.remaining = count;
+        let mut rows = Vec::with_capacity(count);
+        for j in self.sweep_lo..self.sweep_hi {
+            // Two refcount shares of the grid cell: one pinned as the
+            // pre-sweep input for the drift rebuild, one riding the row.
+            self.sweep_in.push(self.x[j].clone());
+            rows.push(TaskRow {
+                key: j as u64,
+                x: self.x[j].clone(),
+                s_from: self.grid.s(j),
+                s_to: self.grid.s(j + 1),
+                urgent: false,
+            });
+        }
+        rows
+    }
+
+    fn process_sweep(&mut self) -> Vec<TaskRow> {
+        let (lo, hi) = (self.sweep_lo, self.sweep_hi);
+        let rows = hi - lo;
+        self.total_evals += rows as u64 * self.epc;
+        self.sweeps += 1;
+        let tol2 = self.spec.tol; // squared-error threshold (module docs)
+
+        // Prefix-sum rebuild + per-point error, exactly the vanilla
+        // sweep: drift reads the staged pre-sweep inputs, the error
+        // compares against the not-yet-replaced x[j+1], and replaced
+        // slots are fresh pooled buffers (grid cells may still be shared
+        // with in-flight row copies, so they are replaced, not mutated).
+        self.acc.copy_from_slice(&self.sweep_in[0]);
+        let mut first_unconverged = hi;
+        let mut max_err = 0.0f32;
+        for j in lo..hi {
+            let slot = j - lo;
+            let phi = self.sweep_out[slot].as_ref().expect("sweep complete");
+            let err = picard_point_update(&mut self.acc, phi, &self.sweep_in[slot], &self.x[j + 1]);
+            max_err = max_err.max(err);
+            self.x[j + 1] = self.pool.take(&self.acc);
+            if err > tol2 && first_unconverged == hi {
+                first_unconverged = j;
+            }
+        }
+        // Advance past converged prefix (always ≥ 1 to guarantee
+        // progress, mirroring the vanilla sampler).
+        let stride = (first_unconverged - lo).max(1);
+        self.per_iter.push(IterStat {
+            iter: self.sweeps,
+            residual: max_err.sqrt(),
+            evals: rows as u64 * self.epc,
+        });
+        if self.spec.keep_iterates {
+            self.iterates.push(self.x[self.n].to_vec());
+        }
+        self.lo += stride;
+        self.sweep_in.clear();
+        self.sweep_out.clear();
+        if self.lo < self.n && self.sweeps < self.max_sweeps {
+            self.emit_sweep()
+        } else {
+            self.done = true;
+            vec![]
+        }
+    }
+}
+
+impl SamplerTask for ParadigmsTask {
+    fn start(&mut self) -> Vec<TaskRow> {
+        // n >= 1 (Grid invariant) and lo starts at 0, so the first
+        // window is never empty.
+        self.emit_sweep()
+    }
+
+    fn poll(&mut self, done: Vec<Completion>) -> Vec<TaskRow> {
+        for c in done {
+            self.meter.note(c.batch_rows);
+            let slot = c.key as usize - self.sweep_lo;
+            self.sweep_out[slot] = Some(c.out);
+            self.remaining -= 1;
+        }
+        if self.remaining == 0 && !self.done {
+            self.process_sweep()
+        } else {
+            vec![]
+        }
+    }
+
+    fn finished(&self) -> bool {
+        self.done
+    }
+
+    fn finalize(self: Box<Self>) -> SampleOutput {
+        let sample = self.x[self.n].to_vec();
+        let ps = self.pool.stats();
+        let stats = RunStats {
+            iters: self.sweeps,
+            converged: self.lo >= self.n,
+            eff_serial_evals: self.sweeps as u64 * self.epc,
+            eff_serial_evals_pipelined: self.sweeps as u64 * self.epc,
+            total_evals: self.total_evals,
+            wall: self.t0.elapsed(),
+            // The window of live trajectory states plus the window
+            // anchor — the O(window) memory of the §3.6 comparison.
+            peak_states: self.window.min(self.n) + 1,
+            batch_occupancy: self.meter.occupancy(),
+            engine_rows: self.meter.rows,
+            pool_hits: ps.hits,
+            pool_misses: ps.misses,
+            per_iter: self.per_iter,
+        };
+        SampleOutput { sample, stats, iterates: self.iterates }
+    }
+}
+
+// ---------------------------------------------------------------------
+// ParaTAA: whole-trajectory fixed-point sweeps with Anderson mixing.
+// ---------------------------------------------------------------------
+
+/// The Anderson fixed-point as a task: each iteration emits one full
+/// trajectory sweep (`n` rows at once); when the sweep completes, the
+/// residual check and the shared [`AndersonMixer`] update run, and the
+/// next sweep is emitted.
+struct ParataaTask {
+    spec: SamplerSpec,
+    pool: BufPool,
+    epc: u64,
+    n: usize,
+    d: usize,
+    max_iters: usize,
+    s_from: Vec<f32>,
+    s_to: Vec<f32>,
+    /// Stacked trajectory iterate (n+1, d), flat.
+    x: Vec<f32>,
+    tx: Vec<f32>,
+    r: Vec<f32>,
+    mixer: AndersonMixer,
+    /// 1-based iteration currently in flight.
+    k: usize,
+    sweep_out: Vec<Option<StateBuf>>,
+    remaining: usize,
+    total_evals: u64,
+    per_iter: Vec<IterStat>,
+    iterates: Vec<Vec<f32>>,
+    converged: bool,
+    iters: usize,
+    done: bool,
+    meter: RowMeter,
+    t0: Instant,
+}
+
+impl ParataaTask {
+    fn new(x0: &[f32], spec: SamplerSpec, pool: BufPool, epc: u64) -> ParataaTask {
+        let n = spec.n;
+        let d = x0.len();
+        let len = (n + 1) * d;
+        let grid = Grid::new(n);
+        let max_iters = spec.max_iters.unwrap_or(2 * n).max(1);
+        let history = spec.history();
+        // Initialize the trajectory at the prior (as ParaDiGMS does).
+        let mut x = vec![0.0f32; len];
+        for i in 0..=n {
+            x[i * d..(i + 1) * d].copy_from_slice(x0);
+        }
+        ParataaTask {
+            spec,
+            pool,
+            epc,
+            n,
+            d,
+            max_iters,
+            s_from: (0..n).map(|i| grid.s(i)).collect(),
+            s_to: (0..n).map(|i| grid.s(i + 1)).collect(),
+            x,
+            tx: vec![0.0f32; len],
+            r: vec![0.0f32; len],
+            mixer: AndersonMixer::new(history, len),
+            k: 1,
+            sweep_out: Vec::new(),
+            remaining: 0,
+            total_evals: 0,
+            per_iter: Vec::new(),
+            iterates: Vec::new(),
+            converged: false,
+            iters: 0,
+            done: false,
+            meter: RowMeter::default(),
+            t0: Instant::now(),
+        }
+    }
+
+    fn emit_sweep(&mut self) -> Vec<TaskRow> {
+        let d = self.d;
+        self.sweep_out.clear();
+        self.sweep_out.resize_with(self.n, || None);
+        self.remaining = self.n;
+        (0..self.n)
+            .map(|j| TaskRow {
+                key: j as u64,
+                // The trajectory is one flat vector; each emitted row
+                // takes a pooled d-sized copy of its point (recycled
+                // every sweep once the pool is warm).
+                x: self.pool.take(&self.x[j * d..(j + 1) * d]),
+                s_from: self.s_from[j],
+                s_to: self.s_to[j],
+                urgent: false,
+            })
+            .collect()
+    }
+
+    fn process_sweep(&mut self) -> Vec<TaskRow> {
+        let (n, d) = (self.n, self.d);
+        // Assemble T(X): T(X)_0 = x_0, T(X)_{j+1} = Φ(X_j).
+        self.tx[..d].copy_from_slice(&self.x[..d]);
+        for (j, out) in self.sweep_out.drain(..).enumerate() {
+            let out = out.expect("sweep complete");
+            self.tx[(j + 1) * d..(j + 2) * d].copy_from_slice(&out);
+        }
+        self.total_evals += n as u64 * self.epc;
+        for t in 0..self.x.len() {
+            self.r[t] = self.tx[t] - self.x[t];
+        }
+
+        // Residual on the final sample only (the SRDS criterion).
+        let final_res = self.spec.norm.dist(&self.tx[n * d..], &self.x[n * d..]);
+        self.iters = self.k;
+        self.per_iter.push(IterStat {
+            iter: self.k,
+            residual: final_res,
+            evals: n as u64 * self.epc,
+        });
+
+        if final_res < self.spec.tol {
+            self.x.copy_from_slice(&self.tx);
+            if self.spec.keep_iterates {
+                self.iterates.push(self.x[n * d..].to_vec());
+            }
+            self.converged = true;
+            self.done = true;
+            return vec![];
+        }
+
+        self.mixer.advance(self.k, n, d, &mut self.x, &self.tx, &self.r, &self.pool);
+        if self.spec.keep_iterates {
+            self.iterates.push(self.x[n * d..].to_vec());
+        }
+        self.k += 1;
+        if self.k <= self.max_iters {
+            self.emit_sweep()
+        } else {
+            self.done = true;
+            vec![]
+        }
+    }
+}
+
+impl SamplerTask for ParataaTask {
+    fn start(&mut self) -> Vec<TaskRow> {
+        // n >= 1 is a Grid invariant; the first sweep is never empty.
+        self.emit_sweep()
+    }
+
+    fn poll(&mut self, done: Vec<Completion>) -> Vec<TaskRow> {
+        for c in done {
+            self.meter.note(c.batch_rows);
+            self.sweep_out[c.key as usize] = Some(c.out);
+            self.remaining -= 1;
+        }
+        if self.remaining == 0 && !self.done {
+            self.process_sweep()
+        } else {
+            vec![]
+        }
+    }
+
+    fn finished(&self) -> bool {
+        self.done
+    }
+
+    fn finalize(self: Box<Self>) -> SampleOutput {
+        let (n, d) = (self.n, self.d);
+        let sample = self.x[n * d..].to_vec();
+        let ps = self.pool.stats();
+        let stats = RunStats {
+            iters: self.iters,
+            converged: self.converged,
+            eff_serial_evals: self.iters as u64 * self.epc,
+            eff_serial_evals_pipelined: self.iters as u64 * self.epc,
+            total_evals: self.total_evals,
+            wall: self.t0.elapsed(),
+            // Whole-trajectory iterate, its T-image, the residual, and
+            // the Anderson history pairs — the O(N·history) memory of
+            // §3.6.
+            peak_states: (n + 1) * (3 + 2 * self.spec.history()),
+            batch_occupancy: self.meter.occupancy(),
+            engine_rows: self.meter.rows,
+            pool_hits: ps.hits,
+            pool_misses: ps.misses,
+            per_iter: self.per_iter,
+        };
+        SampleOutput { sample, stats, iterates: self.iterates }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{prior_sample, registry, Conditioning};
+    use crate::data::make_gmm;
+    use crate::model::GmmEps;
+    use crate::solvers::{NativeBackend, Solver, StepBackend, StepRequest};
+    use std::sync::Arc;
+
+    /// Synchronous single-row driver: exactly what the engine dispatcher
+    /// does, minus threads and batching — every emitted row executes
+    /// immediately, one backend call per row. Any interleaving the real
+    /// dispatcher produces yields the same per-cell values (rows compute
+    /// independently), so this is a valid execution of the task.
+    fn drive(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
+        let pool = BufPool::new();
+        let mut task = new_task(x0, spec, &pool, backend.evals_per_step() as u64);
+        let mut rows = task.start();
+        let mut steps = 0u64;
+        while !rows.is_empty() {
+            let done: Vec<Completion> = rows
+                .drain(..)
+                .map(|r| {
+                    steps += 1;
+                    assert!(steps < 2_000_000, "task runaway");
+                    let out = backend.step(&StepRequest {
+                        x: &r.x,
+                        s_from: &[r.s_from],
+                        s_to: &[r.s_to],
+                        mask: spec.cond.mask_slice(),
+                        guidance: spec.cond.guidance,
+                        seeds: &[spec.seed],
+                    });
+                    Completion { key: r.key, out: pool.take(&out), batch_rows: 1 }
+                })
+                .collect();
+            rows = task.poll(done);
+        }
+        assert!(task.finished(), "no rows in flight but task not finished");
+        task.finalize()
+    }
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new(Arc::new(GmmEps::new(make_gmm("church"))), Solver::Ddim)
+    }
+
+    #[test]
+    fn every_task_is_bit_identical_to_its_vanilla_sampler() {
+        // The tentpole invariant at its root: for each registry entry,
+        // the engine-native task produces the exact sample, iteration
+        // count and eval accounting of the direct coordinator run.
+        let be = backend();
+        let reg = registry();
+        let x0 = prior_sample(64, 11);
+        for name in reg.list() {
+            let s = reg.parse(name).unwrap();
+            let spec = SamplerSpec::for_kind(25, s.kind()).with_tol(1e-5).with_seed(11);
+            let want = s.run(&be, &x0, &spec);
+            let got = drive(&be, &x0, &spec);
+            assert_eq!(got.sample, want.sample, "{name}: task vs vanilla sample");
+            assert_eq!(got.stats.iters, want.stats.iters, "{name}: iters");
+            assert_eq!(got.stats.converged, want.stats.converged, "{name}: converged");
+            assert_eq!(
+                got.stats.eff_serial_evals, want.stats.eff_serial_evals,
+                "{name}: eff serial evals"
+            );
+            assert!(got.stats.engine_rows > 0, "{name}: no engine rows metered");
+            assert!(got.stats.batch_occupancy >= 1.0, "{name}: occupancy");
+        }
+    }
+
+    #[test]
+    fn srds_task_exact_after_worst_case_iterations() {
+        // Prop. 1 through the task path: τ = 0 forces all M iterations
+        // and the result equals the sequential solve bit-for-bit.
+        let be = backend();
+        let x0 = prior_sample(64, 3);
+        let n = 16;
+        let (seq, _) =
+            crate::coordinator::sequential(&be, &x0, n, &Conditioning::none(), 3);
+        let spec = SamplerSpec::srds(n).with_tol(0.0).with_max_iters(4).with_seed(3);
+        let got = drive(&be, &x0, &spec);
+        assert_eq!(got.sample, seq);
+        assert_eq!(got.stats.iters, 4);
+    }
+
+    #[test]
+    fn srds_task_records_iterates_natively() {
+        // keep_iterates no longer needs an off-engine fallback: the task
+        // grid already retains every refinement's final state.
+        let be = backend();
+        let x0 = prior_sample(64, 21);
+        let spec = SamplerSpec::srds(36)
+            .with_tol(0.0)
+            .with_max_iters(6)
+            .with_iterates()
+            .with_seed(21);
+        let want = crate::coordinator::srds(&be, &x0, &spec);
+        let got = drive(&be, &x0, &spec);
+        assert_eq!(got.iterates.len(), got.stats.iters + 1, "coarse init + one per refinement");
+        assert_eq!(got.iterates, want.iterates, "same iterate trail as vanilla");
+        assert_eq!(got.iterates.last().unwrap(), &got.sample);
+    }
+
+    #[test]
+    fn tasks_honor_kind_specific_knobs() {
+        let be = backend();
+        let x0 = prior_sample(64, 5);
+        // Windowed ParaDiGMS through the task path.
+        let spec = SamplerSpec::paradigms(64).with_tol(1e-4).with_window(16).with_seed(5);
+        let want = crate::coordinator::paradigms(&be, &x0, &spec);
+        let got = drive(&be, &x0, &spec);
+        assert_eq!(got.sample, want.sample);
+        assert_eq!(got.stats.peak_states, 17);
+        // Plain-Picard ParaTAA (history 0) through the task path.
+        let spec = SamplerSpec::parataa(32).with_history(0).with_tol(1e-4).with_seed(8);
+        let want = crate::coordinator::parataa(&be, &x0, &spec);
+        let got = drive(&be, &x0, &spec);
+        assert_eq!(got.sample, want.sample);
+        assert_eq!(got.stats.iters, want.stats.iters);
+    }
+
+    #[test]
+    fn guided_tasks_match_guided_vanilla_runs() {
+        // Conditioning flows through the task path: mask + guidance are
+        // attached per row by the driver exactly as the engine does.
+        let gmm = make_gmm("latent_cond");
+        let mask = gmm.class_mask(2);
+        let be = NativeBackend::new(Arc::new(GmmEps::new(gmm)), Solver::Ddim);
+        let x0 = prior_sample(256, 2);
+        let cond = Conditioning::class(mask, 7.5);
+        for kind in ["sequential", "srds"] {
+            let s = registry().parse(kind).unwrap();
+            let spec = SamplerSpec::for_kind(25, s.kind())
+                .with_tol(1e-6)
+                .with_cond(cond.clone())
+                .with_seed(2);
+            let want = s.run(&be, &x0, &spec);
+            let got = drive(&be, &x0, &spec);
+            assert_eq!(got.sample, want.sample, "{kind} guided task vs vanilla");
+        }
+    }
+
+    #[test]
+    fn sequential_task_is_a_single_row_chain() {
+        let be = backend();
+        let x0 = prior_sample(64, 7);
+        let pool = BufPool::new();
+        let spec = SamplerSpec::sequential(10).with_seed(7);
+        let mut task = new_task(&x0, &spec, &pool, 1);
+        let rows = task.start();
+        assert_eq!(rows.len(), 1, "a chain emits exactly one row at a time");
+        let out = drive(&be, &x0, &spec);
+        assert_eq!(out.stats.engine_rows, 10, "one engine row per fine step");
+        assert_eq!(out.stats.total_evals, 10);
+    }
+
+    #[test]
+    fn sweep_tasks_emit_whole_sweeps_at_once() {
+        // The batched-row shape the adapter used to serialize: ParaDiGMS
+        // emits its full window, ParaTAA its full trajectory.
+        let x0 = prior_sample(64, 1);
+        let pool = BufPool::new();
+        let spec = SamplerSpec::paradigms(64).with_window(16).with_seed(1);
+        assert_eq!(new_task(&x0, &spec, &pool, 1).start().len(), 16);
+        let spec = SamplerSpec::parataa(25).with_seed(1);
+        assert_eq!(new_task(&x0, &spec, &pool, 1).start().len(), 25);
+        let spec = SamplerSpec::srds(25).with_seed(1);
+        // SRDS seeds the coarse chain head plus every iteration's first
+        // cells: (max_iters + 1) coarse rows + max_iters fine chains.
+        assert_eq!(new_task(&x0, &spec, &pool, 1).start().len(), 11);
+    }
+}

@@ -12,7 +12,10 @@
 //!   engine ([`exec::engine`]: one shared worker pool, cross-request
 //!   batched steps via [`batching`]), a discrete-event simulated-clock
 //!   executor ([`exec::simclock`]), and the JSON-line serving loop
-//!   ([`server`]) that dispatches every request into the engine. All
+//!   ([`server`]) that submits every request into the engine as an
+//!   engine-native sampler task ([`exec::task`]: each of the four
+//!   registered samplers is a dispatcher-resident state machine — no
+//!   per-request threads exist anywhere on the serving path). All
 //!   state on the hot path lives in the zero-copy buffer layer ([`buf`]:
 //!   the pooled refcounted `StateBuf` slab + the reusable `BatchStage`
 //!   staging buffer), and solver steps write in place via the

@@ -10,12 +10,16 @@
 //! srds serve  [--addr 127.0.0.1:7878] [--workers 4] [--model …]
 //!             [--solver …] [--backend native|pjrt]
 //!             [--batch-wait 2] [--buckets 32,16,8,4,2,1]
+//!             [--max-inflight 64]
 //! ```
 //!
 //! `serve` runs every request on the shared multi-tenant engine
-//! (`exec::engine`): `--workers` sizes its pool, `--batch-wait` bounds
-//! how long (ms) an under-filled cross-request batch may linger, and
-//! `--buckets` lists the preferred batch sizes, descending.
+//! (`exec::engine`) as an engine-native sampler task: `--workers` sizes
+//! its pool, `--batch-wait` bounds how long (ms) an under-filled
+//! cross-request batch may linger, `--buckets` lists the preferred batch
+//! sizes, descending, and `--max-inflight` caps the in-flight requests
+//! admitted per connection (past it the read loop stops consuming and
+//! TCP back-pressure reaches the client).
 //!
 //! `--sampler` accepts any name from `coordinator::api::registry()`;
 //! `srds info` lists them. (Argument parsing is in-tree: the offline
@@ -189,11 +193,21 @@ fn cmd_serve(flags: HashMap<String, String>) -> srds::Result<()> {
         }
         batch.buckets = buckets;
     }
+    let max_inflight: usize = match flags.get("max-inflight") {
+        Some(v) => {
+            let k: usize = v.parse()?;
+            if k == 0 {
+                return Err(anyhow::anyhow!("--max-inflight must be >= 1, got 0"));
+            }
+            k
+        }
+        None => srds::server::DEFAULT_MAX_INFLIGHT,
+    };
     let factory: Arc<dyn BackendFactory> = match flags.get("backend").map(|s| s.as_str()) {
         Some("pjrt") => Arc::new(PjrtFactory::new(srds::artifacts_dir(), &model, solver)?),
         _ => Arc::new(NativeFactory::new(native_model(&model), solver)),
     };
-    serve(ServeConfig { addr, workers, model_name: model, factory, batch })
+    serve(ServeConfig { addr, workers, model_name: model, factory, batch, max_inflight })
 }
 
 fn main() {

@@ -22,34 +22,42 @@
 //!  "eff_serial_evals": 25, "eff_serial_evals_pipelined": 17,
 //!  "total_evals": 74, "peak_states": 17, "wall_ms": 12.3,
 //!  "batch_occupancy": 3.4, "engine_rows": 74,
-//!  "queue_depth": 12, "flushed_batches": 210, "sample": [...]}
+//!  "queue_depth": 12, "active_tasks": 3, "flushed_batches": 210,
+//!  "sample": [...]}
 //! ```
 //!
 //! `batch_occupancy` / `engine_rows` are per-request fusion stats;
-//! `queue_depth` / `flushed_batches` are engine-wide snapshots taken at
-//! completion (absent when a request is executed off-engine, e.g. via
-//! [`run_request`] in unit tests).
+//! `queue_depth` / `active_tasks` / `flushed_batches` are engine-wide
+//! snapshots taken at completion (absent when a request is executed
+//! off-engine, e.g. via [`run_request`] in unit tests). `active_tasks`
+//! is the depth of the engine's heterogeneous task table — how many
+//! requests, of any sampler kind, were still resident when this one
+//! finished.
 //!
-//! Requests are dispatched into the shared multi-tenant
-//! [`crate::exec::engine`]: SRDS requests run as dependency-driven state
-//! machines inside the engine's dispatcher, every other registry entry
-//! runs through the engine's adapter backend — either way each solver
-//! step becomes a batch row that can fuse with co-tenant requests'
-//! rows (`batch_occupancy` in the response reports how much fusion the
-//! request actually saw). Python is never involved.
+//! Every request is dispatched into the shared multi-tenant
+//! [`crate::exec::engine`] as an engine-native
+//! [`crate::exec::task::SamplerTask`]: SRDS, sequential, ParaDiGMS and
+//! ParaTAA all run as dependency-driven state machines inside the
+//! engine's dispatcher, and each solver step becomes a batch row that
+//! can fuse with co-tenant requests' rows (`batch_occupancy` in the
+//! response reports how much fusion the request actually saw). There
+//! are **no per-request threads**: a connection's read loop submits
+//! requests with a completion callback and the engine's dispatcher +
+//! worker threads do everything else — the serve loop scales with
+//! connections, not with in-flight requests. Python is never involved.
 
 use crate::batching::BatchPolicy;
 use crate::coordinator::{
-    prior_sample, registry, Conditioning, ConvNorm, SampleOutput, SamplerKind, SamplerSpec,
+    prior_sample, registry, Conditioning, ConvNorm, SampleOutput, SamplerSpec,
 };
 use crate::data::make_gmm;
-use crate::exec::{Engine, EngineConfig};
+use crate::exec::{Engine, EngineConfig, EngineStats};
 use crate::json::{self, Value};
 use crate::solvers::{BackendFactory, StepBackend};
 use crate::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::channel;
 use std::sync::{Arc, Condvar, Mutex};
 
 /// A parsed sampling request: the sampler name plus every
@@ -171,13 +179,15 @@ fn request_spec(model_name: &str, req: &SampleRequest) -> std::result::Result<Sa
 }
 
 /// Serialize a completed run; `engine` adds the engine-wide snapshot
-/// fields next to the per-request ones in `out.stats`.
+/// fields next to the per-request ones in `out.stats` (the snapshot is
+/// taken at completion — for callback-submitted requests the engine's
+/// dispatcher provides it consistently at finalize time).
 fn success_response(
     req: &SampleRequest,
     sampler_name: &str,
     out: &SampleOutput,
     wall_ms: f64,
-    engine: Option<&Engine>,
+    engine: Option<&EngineStats>,
 ) -> Value {
     let mut pairs = vec![
         ("id", Value::Num(req.id as f64)),
@@ -193,17 +203,17 @@ fn success_response(
         ("total_evals", Value::Num(out.stats.total_evals as f64)),
         ("peak_states", Value::Num(out.stats.peak_states as f64)),
         // State-buffer pool accounting (run-local for direct runs,
-        // engine-pool snapshot for engine-resident SRDS): steady-state
+        // engine-pool snapshot for engine-resident tasks): steady-state
         // zero allocation shows up as flat pool_misses across responses.
         ("pool_hits", Value::Num(out.stats.pool_hits as f64)),
         ("pool_misses", Value::Num(out.stats.pool_misses as f64)),
         ("wall_ms", Value::Num(wall_ms)),
     ];
-    if let Some(engine) = engine {
-        let st = engine.stats();
+    if let Some(st) = engine {
         pairs.push(("batch_occupancy", Value::Num(out.stats.batch_occupancy)));
         pairs.push(("engine_rows", Value::Num(out.stats.engine_rows as f64)));
         pairs.push(("queue_depth", Value::Num(st.queue_depth as f64)));
+        pairs.push(("active_tasks", Value::Num(st.active_tasks as f64)));
         pairs.push(("flushed_batches", Value::Num(st.flushed_batches as f64)));
         pairs.push(("pool_high_water", Value::Num(st.pool_high_water as f64)));
     }
@@ -240,10 +250,11 @@ pub fn run_request(
     success_response(req, spec.kind.name(), &out, wall_ms, None)
 }
 
-/// Execute one request on the shared multi-tenant engine: SRDS requests
-/// run as engine-resident state machines (pipelined, cross-request
-/// batched); every other sampler runs through the engine's adapter
-/// backend so its steps batch with co-tenants too.
+/// Execute one request on the shared multi-tenant engine and block for
+/// the result (tests, simple callers). Every sampler kind — SRDS,
+/// sequential, ParaDiGMS, ParaTAA — runs as an engine-resident
+/// [`crate::exec::task::SamplerTask`], cross-request batched; only this
+/// caller's thread waits, nothing inside the engine blocks per request.
 pub fn run_request_engine(engine: &Engine, model_name: &str, req: &SampleRequest) -> Value {
     let spec = match request_spec(model_name, req) {
         Ok(s) => s,
@@ -251,22 +262,90 @@ pub fn run_request_engine(engine: &Engine, model_name: &str, req: &SampleRequest
     };
     let x0 = prior_sample(engine.dim(), req.seed);
     let t0 = std::time::Instant::now();
-    // SRDS requests without iterates run as engine-resident pipelined
-    // state machines; iterate-keeping SRDS runs (a debugging/figure
-    // path) and every other sampler go through the adapter backend —
-    // still cross-request batched, just orchestrated on this thread.
-    let out: SampleOutput = if matches!(spec.kind, SamplerKind::Srds) && !spec.keep_iterates {
-        engine.run_srds(&x0, &spec)
-    } else {
-        let be = engine.backend();
-        let mut out = spec.run(&be, &x0);
-        let (rows, occ) = be.occupancy();
-        out.stats.engine_rows = rows;
-        out.stats.batch_occupancy = occ;
-        out
-    };
+    let out: SampleOutput = engine.run(&x0, &spec);
     let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
-    success_response(req, spec.kind.name(), &out, wall_ms, Some(engine))
+    success_response(req, spec.kind.name(), &out, wall_ms, Some(&engine.stats()))
+}
+
+/// A response on its way out of [`submit_line_engine`]: either already
+/// serialized (parse/validation errors) or *deferred* — the completed
+/// run plus everything needed to serialize it. The engine invokes the
+/// completion callback on its dispatcher thread, which must stay free
+/// to form batches; deferring lets the receiver (the connection's
+/// writer thread, in the serve loop) pay for the JSON formatting of the
+/// sample vector instead.
+pub enum PendingResponse {
+    /// Serialized eagerly (error lines — cheap, no sample payload).
+    Ready(String),
+    /// A completed run (boxed: the payload carries the whole sample);
+    /// serialization deferred to [`PendingResponse::into_line`].
+    Finished(Box<FinishedResponse>),
+}
+
+/// The deferred payload of [`PendingResponse::Finished`].
+pub struct FinishedResponse {
+    req: SampleRequest,
+    name: &'static str,
+    out: SampleOutput,
+    stats: EngineStats,
+    wall_ms: f64,
+}
+
+impl PendingResponse {
+    /// Serialize to the wire line. For engine completions this is the
+    /// heavy part (formatting `d` floats, plus iterates when requested)
+    /// — call it off the dispatcher thread.
+    pub fn into_line(self) -> String {
+        match self {
+            PendingResponse::Ready(s) => s,
+            PendingResponse::Finished(f) => json::to_string(&success_response(
+                &f.req,
+                f.name,
+                &f.out,
+                f.wall_ms,
+                Some(&f.stats),
+            )),
+        }
+    }
+}
+
+/// Parse and submit one request line onto the engine **without
+/// blocking**: `done` receives the [`PendingResponse`] when the request
+/// completes (immediately, for parse/validation errors; otherwise from
+/// the engine's completion callback). This is what the TCP read loop
+/// calls — a request's whole lifetime lives inside the engine's
+/// dispatcher + workers, and no per-request thread exists anywhere.
+/// `done` may run on the dispatcher thread: it must be cheap and must
+/// not block — the serve loop's forwards the still-unserialized
+/// response to the connection's writer thread, which does the JSON
+/// formatting via [`PendingResponse::into_line`].
+pub fn submit_line_engine(
+    engine: &Engine,
+    model_name: &str,
+    line: &str,
+    done: impl FnOnce(PendingResponse) + Send + 'static,
+) {
+    let req = match line_to_request(line) {
+        Ok(r) => r,
+        Err(e) => return done(PendingResponse::Ready(json::to_string(&e))),
+    };
+    let spec = match request_spec(model_name, &req) {
+        Ok(s) => s,
+        Err(e) => return done(PendingResponse::Ready(json::to_string(&e))),
+    };
+    let x0 = prior_sample(engine.dim(), req.seed);
+    let t0 = std::time::Instant::now();
+    let name = spec.kind.name();
+    engine.submit_with(x0, spec, move |out, stats| {
+        let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        done(PendingResponse::Finished(Box::new(FinishedResponse {
+            req,
+            name,
+            out,
+            stats,
+            wall_ms,
+        })));
+    });
 }
 
 fn line_to_request(line: &str) -> std::result::Result<SampleRequest, Value> {
@@ -298,8 +377,9 @@ pub fn handle_line(backend: &dyn StepBackend, model_name: &str, line: &str) -> S
     json::to_string(&resp)
 }
 
-/// Handle one raw request line on the shared engine — what the TCP loop
-/// runs per request.
+/// Handle one raw request line on the shared engine, blocking for the
+/// response (tests, simple callers — the TCP loop uses the non-blocking
+/// [`submit_line_engine`] instead).
 pub fn handle_line_engine(engine: &Engine, model_name: &str, line: &str) -> String {
     let resp = match line_to_request(line) {
         Ok(req) => run_request_engine(engine, model_name, &req),
@@ -307,6 +387,9 @@ pub fn handle_line_engine(engine: &Engine, model_name: &str, line: &str) -> Stri
     };
     json::to_string(&resp)
 }
+
+/// Default per-connection admission cap (see [`ServeConfig::max_inflight`]).
+pub const DEFAULT_MAX_INFLIGHT: usize = 64;
 
 /// Server configuration.
 pub struct ServeConfig {
@@ -318,6 +401,12 @@ pub struct ServeConfig {
     /// Cross-request batch assembly policy for the engine
     /// (`--batch-wait` / `--buckets` on the CLI).
     pub batch: BatchPolicy,
+    /// Admission control: in-flight requests per connection
+    /// (`--max-inflight` on the CLI, [`DEFAULT_MAX_INFLIGHT`] by
+    /// default). Past this the connection's read loop stops consuming
+    /// lines, so back-pressure propagates to the client through TCP
+    /// instead of materializing unbounded engine state.
+    pub max_inflight: usize,
 }
 
 /// Run the blocking accept loop on a fresh listener bound to `cfg.addr`.
@@ -330,32 +419,38 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
 /// an ephemeral port first, then hand it over — no drop-and-rebind
 /// race).
 ///
-/// One engine serves every connection: connection threads only parse
-/// lines and spawn a lightweight orchestration thread per request (it
-/// blocks inside the engine while the actual solver steps run, batched,
-/// on the engine's worker pool); responses stream back in completion
-/// order per connection. In-flight requests are capped at
-/// [`MAX_INFLIGHT_PER_CONN`] per connection — past that the read loop
-/// stops consuming, pushing back on the client through TCP.
+/// One engine serves every connection, and **the only threads anywhere
+/// are the engine's dispatcher + workers plus one reader and one writer
+/// per connection**: the read loop submits each request into the engine
+/// with a completion callback ([`submit_line_engine`]) and immediately
+/// reads the next line, so any number of requests from one connection
+/// are in flight at once (their step rows co-batching) with zero
+/// per-request threads. Responses stream back in completion order per
+/// connection. In-flight requests are capped at
+/// [`ServeConfig::max_inflight`] per connection — past that the read
+/// loop stops consuming, pushing back on the client through TCP.
 pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
     let engine = Arc::new(Engine::new(
         cfg.factory.clone(),
         EngineConfig { workers: cfg.workers, batch: cfg.batch.clone() },
     ));
     eprintln!(
-        "srds-server listening on {} (model={}, engine workers={}, buckets={:?}, samplers={})",
+        "srds-server listening on {} (model={}, engine workers={}, buckets={:?}, \
+         max-inflight/conn={}, samplers={})",
         listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| cfg.addr.clone()),
         cfg.model_name,
         cfg.workers,
         cfg.batch.buckets,
+        cfg.max_inflight,
         registry().list().join("/")
     );
+    let max_inflight = cfg.max_inflight.max(1);
     for stream in listener.incoming() {
         let stream = stream?;
         let engine = engine.clone();
         let model_name = cfg.model_name.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, engine, model_name) {
+            if let Err(e) = handle_conn(stream, engine, model_name, max_inflight) {
                 eprintln!("connection error: {e:#}");
             }
         });
@@ -363,23 +458,24 @@ pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
     Ok(())
 }
 
-/// Admission control: in-flight requests per connection. Past this the
-/// read loop stops consuming lines, so back-pressure propagates to the
-/// client through TCP instead of materializing unbounded orchestration
-/// threads and engine state.
-const MAX_INFLIGHT_PER_CONN: usize = 64;
-
-fn handle_conn(stream: TcpStream, engine: Arc<Engine>, model_name: String) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    engine: Arc<Engine>,
+    model_name: String,
+    max_inflight: usize,
+) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
-    let (resp_tx, resp_rx) = channel::<String>();
+    let (resp_tx, resp_rx) = channel::<PendingResponse>();
     // Dedicated writer thread: responses stream back the moment a
     // request finishes, independent of the (possibly idle) read side — a
-    // blocked reader must never delay completed work.
+    // blocked reader must never delay completed work. Serialization
+    // happens HERE, not in the engine callback: the dispatcher must stay
+    // free to form batches while a response's sample vector is formatted.
     let writer_handle = std::thread::spawn(move || -> Result<()> {
         for resp in resp_rx {
-            writeln!(writer, "{resp}")?;
+            writeln!(writer, "{}", resp.into_line())?;
         }
         Ok(())
     });
@@ -392,20 +488,18 @@ fn handle_conn(stream: TcpStream, engine: Arc<Engine>, model_name: String) -> Re
         {
             let (lock, cv) = &*gate;
             let mut inflight = lock.lock().unwrap();
-            while *inflight >= MAX_INFLIGHT_PER_CONN {
+            while *inflight >= max_inflight {
                 inflight = cv.wait(inflight).unwrap();
             }
             *inflight += 1;
         }
-        // One orchestration thread per in-flight request: it sleeps on
-        // the engine while the pool does the work, so concurrent requests
-        // from one connection interleave (and their step rows co-batch).
-        let engine = engine.clone();
-        let model_name = model_name.clone();
-        let resp_tx: Sender<String> = resp_tx.clone();
+        // Submit and move on: the completion callback (run by the
+        // engine's dispatcher — error lines invoke it inline here)
+        // forwards the response to the writer and releases the
+        // admission slot. No thread exists for this request.
+        let resp_tx = resp_tx.clone();
         let gate = gate.clone();
-        std::thread::spawn(move || {
-            let resp = handle_line_engine(&engine, &model_name, &line);
+        submit_line_engine(&engine, &model_name, &line, move |resp| {
             let _ = resp_tx.send(resp);
             let (lock, cv) = &*gate;
             *lock.lock().unwrap() -= 1;
@@ -413,7 +507,7 @@ fn handle_conn(stream: TcpStream, engine: Arc<Engine>, model_name: String) -> Re
         });
     }
     // Reader EOF: drop our resp_tx; the writer exits once the in-flight
-    // request clones finish and the channel drains.
+    // requests' callback clones fire and the channel drains.
     drop(resp_tx);
     let _ = writer_handle.join();
     eprintln!("connection {peer} done");
@@ -569,8 +663,75 @@ mod tests {
             assert!(occ >= 1.0, "{sampler} occupancy {occ}: {resp}");
             assert!(v.get("engine_rows").unwrap().as_f64().unwrap() > 0.0, "{sampler}: {resp}");
             assert!(v.get("queue_depth").is_some(), "{sampler}: {resp}");
+            // The task-table gauge is on the wire; with one request at a
+            // time it reads 0 at completion.
+            assert_eq!(v.get("active_tasks").unwrap().as_f64(), Some(0.0), "{sampler}: {resp}");
             assert!(v.get("flushed_batches").unwrap().as_f64().unwrap() > 0.0, "{sampler}: {resp}");
             assert!(v.get("pool_high_water").unwrap().as_f64().unwrap() > 0.0, "{sampler}: {resp}");
+        }
+    }
+
+    #[test]
+    fn submit_path_serves_mixed_fleet_without_request_threads() {
+        // The serve loop's actual shape: submit_line_engine queues every
+        // registry sampler concurrently with completion callbacks — no
+        // thread blocks per request — and each response's sample is
+        // bit-identical to the dedicated-backend run of the same line.
+        let eng = engine();
+        let be = backend();
+        let (tx, rx) = std::sync::mpsc::channel::<PendingResponse>();
+        let mut want: Vec<(u64, Value)> = Vec::new();
+        for (i, sampler) in registry().list().iter().enumerate() {
+            let line =
+                format!(r#"{{"id":{i},"sampler":"{sampler}","n":16,"seed":{i},"tol":1e-6}}"#);
+            let reference = json::parse(&handle_line(be.as_ref(), "gmm_toy2d", &line)).unwrap();
+            want.push((i as u64, reference));
+            let tx = tx.clone();
+            submit_line_engine(&eng, "gmm_toy2d", &line, move |resp| {
+                let _ = tx.send(resp);
+            });
+        }
+        drop(tx);
+        // Serialization runs receiver-side (the serve loop's writer
+        // thread does the same via into_line).
+        let got: Vec<Value> = rx.iter().map(|r| json::parse(&r.into_line()).unwrap()).collect();
+        assert_eq!(got.len(), want.len(), "every callback fired exactly once");
+        for (id, reference) in want {
+            let g = got
+                .iter()
+                .find(|v| v.get("id").unwrap().as_f64() == Some(id as f64))
+                .unwrap_or_else(|| panic!("no response for id {id}"));
+            assert_eq!(g.get("ok").unwrap().as_bool(), Some(true), "{g:?}");
+            assert_eq!(
+                g.get("sampler").unwrap().as_str(),
+                reference.get("sampler").unwrap().as_str()
+            );
+            // Engine task vs direct backend, through the full wire
+            // serialization: bit-identical samples serialize identically.
+            assert_eq!(
+                g.get("sample").unwrap().as_f32_vec().unwrap(),
+                reference.get("sample").unwrap().as_f32_vec().unwrap(),
+                "id {id}: engine-native task vs direct run"
+            );
+            assert!(g.get("active_tasks").is_some());
+        }
+    }
+
+    #[test]
+    fn submit_path_reports_errors_through_the_callback() {
+        let eng = engine();
+        let (tx, rx) = std::sync::mpsc::channel::<PendingResponse>();
+        for bad in [r#"{"id":9,"sampler":"ddim","n":16}"#, "{nope"] {
+            let tx = tx.clone();
+            submit_line_engine(&eng, "gmm_toy2d", bad, move |resp| {
+                let _ = tx.send(resp);
+            });
+        }
+        drop(tx);
+        let got: Vec<Value> = rx.iter().map(|r| json::parse(&r.into_line()).unwrap()).collect();
+        assert_eq!(got.len(), 2);
+        for v in got {
+            assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{v:?}");
         }
     }
 
@@ -603,8 +764,9 @@ mod tests {
 
     #[test]
     fn engine_path_still_serves_srds_iterates() {
-        // `iterates: true` falls back to the adapter-orchestrated vanilla
-        // srds, so the wire contract is unchanged on the engine path.
+        // `iterates: true` is served natively by the SRDS task (its grid
+        // retains every refinement's final state), so the wire contract
+        // is unchanged on the engine path — no off-engine fallback.
         let eng = engine();
         let line = r#"{"id":4,"sampler":"srds","n":16,"seed":2,"tol":0.0,"iterates":true}"#;
         let v = json::parse(&handle_line_engine(&eng, "gmm_toy2d", line)).unwrap();

@@ -29,7 +29,7 @@ fn wave(eng: &Engine, conc: u64, base_seed: u64) {
             let spec = SamplerSpec::srds(25 + 11 * (i as usize % 3))
                 .with_tol(1e-4)
                 .with_seed(seed);
-            eng.submit_srds(prior_sample(64, seed), spec)
+            eng.submit(prior_sample(64, seed), spec)
         })
         .collect();
     for h in handles {
@@ -91,17 +91,18 @@ fn pool_high_water_stays_bounded_and_hits_dominate() {
 
 #[test]
 fn mixed_tenants_recycle_through_one_pool() {
-    // SRDS state machines and adapter-run samplers share the pool.
+    // Heterogeneous tasks — an SRDS grid machine and a sequential chain
+    // in flight at once — share the one engine-wide pool.
     let eng = engine(2);
     let x0 = prior_sample(64, 7);
-    let srds_handle =
-        eng.submit_srds(x0.clone(), SamplerSpec::srds(36).with_tol(1e-4).with_seed(7));
-    let be = eng.backend();
-    let spec = SamplerSpec::sequential(25).with_seed(7);
-    let seq = spec.run(&be, &x0);
+    let srds_handle = eng.submit(x0.clone(), SamplerSpec::srds(36).with_tol(1e-4).with_seed(7));
+    let seq_handle = eng.submit(x0, SamplerSpec::sequential(25).with_seed(7));
+    let seq = seq_handle.recv().expect("engine reply");
     srds_handle.recv().expect("engine reply");
     assert!(seq.stats.total_evals > 0);
+    assert!(seq.stats.engine_rows > 0, "the chain ran as engine rows");
     let st = eng.stats();
     assert!(st.pool_hits + st.pool_misses > 0, "both tenants drew from the pool");
     assert!(st.pool_high_water > 0);
+    assert_eq!(st.active_tasks, 0, "task table drained");
 }

@@ -2,7 +2,10 @@
 //! concurrent connections with interleaved samplers and seeds, every
 //! response id-correlated, and every served sample identical to a solo
 //! single-request run — the engine's equivalence invariant, observed
-//! through the real wire protocol.
+//! through the real wire protocol. Since the engine-native task rework
+//! the serve loop runs every request (all four registry samplers at
+//! once here) on the engine's dispatcher + worker threads only — there
+//! is no per-request thread for this test to accidentally depend on.
 
 use srds::batching::BatchPolicy;
 use srds::data::make_gmm;
@@ -29,6 +32,10 @@ fn concurrent_tcp_clients_get_solo_equivalent_samples() {
             model_name: "gmm_toy2d".into(),
             factory: factory.clone(),
             batch: BatchPolicy::default(),
+            // A tight per-connection admission cap: with 4 pipelined
+            // requests per client this also exercises the gate (the read
+            // loop stalls until a completion callback frees a slot).
+            max_inflight: 2,
         };
         std::thread::spawn(move || {
             let _ = serve_on(listener, cfg);
@@ -68,6 +75,8 @@ fn concurrent_tcp_clients_get_solo_equivalent_samples() {
                     v.get("batch_occupancy").unwrap().as_f64().unwrap() >= 1.0,
                     "{buf}"
                 );
+                // The task-table depth gauge rides every engine response.
+                assert!(v.get("active_tasks").unwrap().as_f64().unwrap() >= 0.0, "{buf}");
                 let sample = v.get("sample").unwrap().as_f32_vec().unwrap();
                 let fresh = got.insert(id, sample).is_none();
                 assert!(fresh, "duplicate response for id {id}");
