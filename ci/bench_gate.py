@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for CI.
+
+Compares a fresh `cargo bench --bench serving` JSON report against the
+committed baseline (BENCH_serving.json at the repo root) and exits
+non-zero when serving performance regressed beyond tolerance:
+
+* throughput keys (`rps`) must not drop more than 20% below baseline;
+* latency keys (`*_ms`) must not rise more than 20% above baseline.
+
+Only leaves present in the *baseline* are checked, so the baseline
+doubles as the contract: seed it with conservative floors, tighten it as
+real measurements accumulate. Keys starting with "_" are comments.
+
+Usage:
+    python3 ci/bench_gate.py BENCH_serving.json serving_output.json
+
+To refresh the baseline after an intentional perf change:
+    (cd rust && cargo bench --bench serving) | tail -n 1 > /tmp/serving.json
+then fold the numbers you want to pin into BENCH_serving.json.
+"""
+
+import json
+import sys
+
+TOLERANCE = 0.20
+
+
+def load_report(path):
+    """The bench prints one JSON object per line; runner chatter may
+    surround it. Take the last line that parses as the serving report."""
+    report = None
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line.startswith("{"):
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if obj.get("bench") == "serving_throughput" or report is None:
+                report = obj
+    if report is None:
+        sys.exit(f"error: no JSON report found in {path}")
+    return report
+
+
+def walk(baseline, current, path, failures, checked):
+    if isinstance(baseline, dict):
+        for key, base_val in baseline.items():
+            if key.startswith("_"):
+                continue
+            if not isinstance(current, dict) or key not in current:
+                failures.append(f"{'.'.join(path + [key])}: missing from bench output")
+                continue
+            walk(base_val, current[key], path + [key], failures, checked)
+    elif isinstance(baseline, list):
+        if not isinstance(current, list):
+            failures.append(f"{'.'.join(path)}: expected a list in bench output")
+            return
+        for i, base_val in enumerate(baseline):
+            # Match points by their "clients" level when present, else by index.
+            if isinstance(base_val, dict) and "clients" in base_val:
+                match = next(
+                    (c for c in current
+                     if isinstance(c, dict) and c.get("clients") == base_val["clients"]),
+                    None,
+                )
+                if match is None:
+                    failures.append(
+                        f"{'.'.join(path)}[clients={base_val['clients']}]: "
+                        "missing from bench output")
+                    continue
+                walk(base_val, match, path + [f"clients={base_val['clients']}"],
+                     failures, checked)
+            elif i < len(current):
+                walk(base_val, current[i], path + [str(i)], failures, checked)
+            else:
+                failures.append(f"{'.'.join(path)}[{i}]: missing from bench output")
+    elif isinstance(baseline, (int, float)):
+        key = path[-1]
+        where = ".".join(path)
+        if key == "rps" or key.endswith("_rps"):
+            floor = baseline * (1.0 - TOLERANCE)
+            if current < floor:
+                failures.append(
+                    f"{where}: throughput {current:.2f} regressed >"
+                    f"{TOLERANCE:.0%} below baseline {baseline:.2f}")
+            else:
+                checked.append(f"{where}: {current:.2f} rps (floor {floor:.2f})")
+        elif key.endswith("_ms"):
+            ceil = baseline * (1.0 + TOLERANCE)
+            if current > ceil:
+                failures.append(
+                    f"{where}: latency {current:.2f} ms regressed >"
+                    f"{TOLERANCE:.0%} above baseline {baseline:.2f}")
+            else:
+                checked.append(f"{where}: {current:.2f} ms (ceiling {ceil:.2f})")
+        # Other numeric leaves (clients, requests, weights) are identity
+        # context, not gated metrics.
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    with open(sys.argv[1]) as f:
+        baseline = json.load(f)
+    current = load_report(sys.argv[2])
+    failures, checked = [], []
+    walk(baseline, current, [], failures, checked)
+    if not checked and not failures:
+        sys.exit("error: baseline pinned no gated metrics (rps / *_ms leaves)")
+    print(f"bench gate: {len(checked) + len(failures)} metrics checked")
+    for line in checked:
+        print(f"  ok  {line}")
+    if failures:
+        for line in failures:
+            print(f"  FAIL {line}", file=sys.stderr)
+        sys.exit(1)
+    print("bench gate: no regression beyond tolerance")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,6 +52,7 @@ fn main() -> srds::Result<()> {
                 factory,
                 batch: srds::batching::BatchPolicy::default(),
                 max_inflight: srds::server::DEFAULT_MAX_INFLIGHT,
+                default_deadline: None,
             });
         });
     }

@@ -12,10 +12,17 @@
 //! per-sampler rps + mean per-request batch occupancy — the
 //! heterogeneous-tenant number.
 //!
+//! Third section, `qos`: a mixed interactive + batch fleet through the
+//! weighted-DRR scheduler — three flooding batch-class clients against
+//! one interactive client on the same engine, reporting **per-class**
+//! rps / p50 / p95 plus the engine's per-class lanes. The number the
+//! QoS layer is accountable for: interactive p95 staying a small
+//! multiple of its unloaded latency while the flood saturates the pool.
+//!
 //! `cargo bench --bench serving`
 
 use srds::batching::BatchPolicy;
-use srds::coordinator::{prior_sample, registry, SamplerSpec};
+use srds::coordinator::{prior_sample, registry, QosClass, SamplerSpec};
 use srds::data::make_gmm;
 use srds::exec::{Engine, EngineConfig, NativeFactory};
 use srds::json::{self, Value};
@@ -155,6 +162,81 @@ fn main() {
         ),
     ]);
 
+    // QoS fleet: three closed-loop batch-class floods vs one interactive
+    // client, all on one engine — the per-class latency number under
+    // contention (weighted DRR should hold interactive p95 down while
+    // the flood eats the leftover capacity).
+    let engine = fresh_engine(&model);
+    let qos_t0 = Instant::now();
+    let mut threads = Vec::new();
+    for (i, class) in [QosClass::Batch, QosClass::Batch, QosClass::Batch, QosClass::Interactive]
+        .into_iter()
+        .enumerate()
+    {
+        let engine = engine.clone();
+        threads.push(std::thread::spawn(move || {
+            let t_client = Instant::now();
+            let mut lat_ms = Vec::with_capacity(PER_CLIENT);
+            for j in 0..PER_CLIENT {
+                let seed = 900 + (i * PER_CLIENT + j) as u64;
+                let x0 = prior_sample(engine.dim(), seed);
+                let spec = SamplerSpec::srds(N_STEPS)
+                    .with_tol(1e-4)
+                    .with_seed(seed)
+                    .with_priority(class);
+                let t = Instant::now();
+                let out = engine.run(&x0, &spec);
+                assert!(out.sample.iter().all(|v| v.is_finite()));
+                lat_ms.push(t.elapsed().as_secs_f64() * 1000.0);
+            }
+            lat_ms.sort_by(f64::total_cmp);
+            (class, lat_ms, t_client.elapsed().as_secs_f64())
+        }));
+    }
+    let mut per_class: Vec<(QosClass, Vec<f64>, f64)> = Vec::new();
+    for t in threads {
+        let (class, mut lat, wall_s) = t.join().unwrap();
+        match per_class.iter_mut().find(|(c, _, _)| *c == class) {
+            Some((_, all, w)) => {
+                all.append(&mut lat);
+                all.sort_by(f64::total_cmp);
+                *w = w.max(wall_s);
+            }
+            None => per_class.push((class, lat, wall_s)),
+        }
+    }
+    let qos_stats = engine.stats();
+    let qos = json::obj(vec![
+        ("clients", Value::Num(4.0)),
+        ("requests", Value::Num((4 * PER_CLIENT) as f64)),
+        ("wall_s", Value::Num(qos_t0.elapsed().as_secs_f64())),
+        ("class_weights", Value::Arr(
+            BatchPolicy::default().class_weights.iter().map(|&w| Value::Num(w as f64)).collect(),
+        )),
+        (
+            "per_class",
+            json::obj(
+                per_class
+                    .iter()
+                    .map(|(class, lat, wall_s)| {
+                        let lane = qos_stats.class(*class);
+                        (
+                            class.name(),
+                            json::obj(vec![
+                                ("requests", Value::Num(lat.len() as f64)),
+                                ("rps", Value::Num(lat.len() as f64 / wall_s.max(1e-9))),
+                                ("p50_ms", Value::Num(percentile(lat, 0.5))),
+                                ("p95_ms", Value::Num(percentile(lat, 0.95))),
+                                ("engine_rows", Value::Num(lane.rows as f64)),
+                                ("engine_mean_wall_ms", Value::Num(lane.mean_wall_ms)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+
     let report = json::obj(vec![
         ("bench", Value::Str("serving_throughput".into())),
         ("model", Value::Str("gmm_church".into())),
@@ -163,6 +245,7 @@ fn main() {
         ("workers", Value::Num(WORKERS as f64)),
         ("points", Value::Arr(points.iter().map(|p| p.to_json()).collect())),
         ("mixed", mixed),
+        ("qos", qos),
     ]);
     println!("{}", json::to_string(&report));
 }

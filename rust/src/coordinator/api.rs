@@ -29,6 +29,52 @@ use crate::solvers::StepBackend;
 /// histories; 2 is this repo's bench setting).
 pub const DEFAULT_HISTORY: usize = 2;
 
+/// Quality-of-service priority class of a sampling request — the knob
+/// the multi-tenant engine's weighted deficit-round-robin batcher
+/// schedules by (`crate::batching::Batcher`). Classes shape *service
+/// share under contention*, never numerics: a request's output is
+/// identical whatever class it rides in.
+///
+/// On the wire this is the request's `"priority"` field
+/// (`"interactive"` / `"standard"` / `"batch"`); library callers set it
+/// with [`SamplerSpec::with_priority`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QosClass {
+    /// Latency-sensitive foreground traffic (a user is waiting).
+    Interactive,
+    /// The default class for unclassified requests.
+    #[default]
+    Standard,
+    /// Throughput traffic that tolerates queueing (bulk generation,
+    /// evals, backfills).
+    Batch,
+}
+
+impl QosClass {
+    /// Every class, in scheduling order (the DRR visit order).
+    pub const ALL: [QosClass; 3] = [QosClass::Interactive, QosClass::Standard, QosClass::Batch];
+
+    /// Canonical wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Standard => "standard",
+            QosClass::Batch => "batch",
+        }
+    }
+
+    /// Parse a wire name (exact, lowercase).
+    pub fn parse(s: &str) -> Option<QosClass> {
+        QosClass::ALL.into_iter().find(|c| c.name() == s)
+    }
+
+    /// Dense index into per-class counter arrays (`[interactive,
+    /// standard, batch]` — the [`QosClass::ALL`] order).
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
 /// Which sampler to run, with its kind-specific parameters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SamplerKind {
@@ -101,6 +147,20 @@ pub struct SamplerSpec {
     pub seed: u64,
     /// Keep the final-sample iterate after every refinement (Fig. 1/5/7).
     pub keep_iterates: bool,
+    /// QoS priority class: the multi-tenant engine's weighted
+    /// deficit-round-robin batcher schedules step rows by it. Never
+    /// affects numerics — only service share under contention.
+    pub priority: QosClass,
+    /// Anytime eval budget: once a run has spent this many model
+    /// evaluations, SRDS finalizes from its best *completed* iterate
+    /// (reporting `converged: false` + the achieved residual) instead of
+    /// refining further — graceful degradation under load, justified by
+    /// the paper's §4 early-convergence property (every Parareal iterate
+    /// is itself a valid approximate sample). Samplers without that
+    /// serial-equivalence anchor (sequential, ParaDiGMS, ParaTAA) ignore
+    /// the budget: truncating them mid-iteration has no quality
+    /// guarantee to fall back on. `None` → run to convergence/cap.
+    pub deadline_evals: Option<u64>,
     /// Which sampler this spec targets, with its per-kind parameters.
     pub kind: SamplerKind,
 }
@@ -117,6 +177,8 @@ impl SamplerSpec {
             cond: Conditioning::none(),
             seed: 0,
             keep_iterates: false,
+            priority: QosClass::Standard,
+            deadline_evals: None,
             kind,
         }
     }
@@ -220,6 +282,18 @@ impl SamplerSpec {
 
     pub fn with_iterates(mut self) -> Self {
         self.keep_iterates = true;
+        self
+    }
+
+    /// Set the QoS priority class (see [`SamplerSpec::priority`]).
+    pub fn with_priority(mut self, class: QosClass) -> Self {
+        self.priority = class;
+        self
+    }
+
+    /// Set the anytime eval budget (see [`SamplerSpec::deadline_evals`]).
+    pub fn with_deadline_evals(mut self, evals: u64) -> Self {
+        self.deadline_evals = Some(evals);
         self
     }
 
@@ -414,6 +488,31 @@ mod tests {
         // for every sampler.
         let spec = SamplerSpec::srds(64).with_window(16).with_history(3);
         assert_eq!(spec.kind, SamplerKind::Srds);
+    }
+
+    #[test]
+    fn qos_class_names_roundtrip() {
+        for c in QosClass::ALL {
+            assert_eq!(QosClass::parse(c.name()), Some(c));
+        }
+        assert_eq!(QosClass::parse("INTERACTIVE"), None, "names are case-sensitive");
+        assert_eq!(QosClass::parse("urgent"), None);
+        assert_eq!(QosClass::default(), QosClass::Standard);
+        // Dense indices cover 0..3 in ALL order (per-class counter arrays
+        // are indexed by them).
+        let idx: Vec<usize> = QosClass::ALL.iter().map(|c| c.index()).collect();
+        assert_eq!(idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn qos_knobs_ride_the_spec() {
+        let spec = SamplerSpec::srds(16);
+        assert_eq!(spec.priority, QosClass::Standard, "unclassified requests are standard");
+        assert_eq!(spec.deadline_evals, None);
+        let spec = spec.with_priority(QosClass::Interactive).with_deadline_evals(120);
+        assert_eq!(spec.priority, QosClass::Interactive);
+        assert_eq!(spec.deadline_evals, Some(120));
+        assert!(spec.validate().is_ok(), "qos knobs never invalidate a spec");
     }
 
     #[test]

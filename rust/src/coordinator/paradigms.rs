@@ -127,6 +127,7 @@ pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> S
     let stats = RunStats {
         iters: sweeps,
         converged: lo >= n,
+        deadline_hit: false,
         eff_serial_evals: sweeps as u64 * epc,
         eff_serial_evals_pipelined: sweeps as u64 * epc,
         total_evals,

@@ -235,6 +235,10 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sample
     let stats = RunStats {
         iters,
         converged,
+        // The blocking coordinator path has no scheduler above it to
+        // trade refinement against; anytime truncation is the engine
+        // task's job (`exec::task::SrdsTask`).
+        deadline_hit: false,
         eff_serial_evals: eff_serial,
         eff_serial_evals_pipelined: eff_pipelined,
         total_evals,

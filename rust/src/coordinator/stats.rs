@@ -26,6 +26,14 @@ pub struct RunStats {
     pub iters: usize,
     /// Whether the tolerance test triggered (vs hitting the cap).
     pub converged: bool,
+    /// Whether the anytime eval budget
+    /// ([`crate::coordinator::SamplerSpec::deadline_evals`]) fired: the
+    /// run was truncated to its best completed Parareal iterate instead
+    /// of refining to tolerance. Always reported together with an honest
+    /// `converged: false` and the achieved residual in
+    /// [`RunStats::per_iter`] — a deadline-degraded sample is a valid
+    /// early iterate (paper §4), never a silently-worse one.
+    pub deadline_hit: bool,
     /// Effective serial evals under the *vanilla* schedule: the coarse
     /// init sweep, then per iteration max-block fine steps + the
     /// sequential coarse sweep.

@@ -40,11 +40,26 @@
 //! spine (Prop. 2), and speculative fine work must not delay it — the
 //! FIFO analogue of the old worker pool's critical-path priority heap.
 //!
+//! **QoS scheduling:** every request carries a
+//! [`QosClass`] (`interactive` / `standard` / `batch`) and every row it
+//! emits drains from that class's lane under weighted deficit round
+//! robin ([`Batcher`], [`crate::batching::BatchPolicy::class_weights`]) —
+//! under contention the classes' service shares track the weight ratio
+//! and no class (hence no tenant) can be starved by another's flood.
+//! Deadline-budgeted SRDS requests
+//! ([`SamplerSpec::deadline_evals`](crate::coordinator::SamplerSpec::deadline_evals))
+//! additionally degrade *gracefully*: when the budget fires the task
+//! finalizes from its best completed Parareal iterate (honest
+//! `converged: false` + achieved residual), trading refinement quality
+//! for latency exactly as the paper's §4 early-convergence property
+//! licenses. Per-class occupancy/latency lanes ride [`EngineStats`].
+//!
 //! **Invariant (pinned by tests):** a request's output is identical to a
 //! solo vanilla run of its registry sampler with the same spec and seed,
-//! regardless of what else is in flight — every backend computes batch
-//! rows independently, so fusing a row with strangers never changes its
-//! value.
+//! regardless of what else is in flight or which QoS class it rides —
+//! every backend computes batch rows independently, so fusing a row with
+//! strangers never changes its value, and class selection reorders rows
+//! without touching them.
 //!
 //! **Zero-copy state:** every state the engine touches is a pooled
 //! refcounted [`StateBuf`] from one engine-wide [`BufPool`] — task grid
@@ -58,13 +73,13 @@
 
 use crate::batching::{stage_rows, BatchPolicy, Batcher, PendingRow};
 use crate::buf::{BatchStage, BufPool, StateBuf};
-use crate::coordinator::{SampleOutput, SamplerSpec};
+use crate::coordinator::{QosClass, SampleOutput, SamplerSpec};
 use crate::exec::task::{new_task, Completion, SamplerTask, TaskRow};
 use crate::solvers::{BackendFactory, Solver, StepBackend};
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Free-list cap per dim bucket for the engine's shared [`BufPool`].
 /// Sized for the multi-tenant working set: per-connection admission
@@ -160,6 +175,37 @@ struct Counters {
     flushed_rows: u64,
     queue_depth: usize,
     active_tasks: usize,
+    per_class: [ClassLane; 3],
+}
+
+/// Per-QoS-class occupancy and latency counters, one per
+/// [`QosClass`] in [`QosClass::ALL`] order inside
+/// [`EngineStats::per_class`]. The operator's starvation dashboard: a
+/// healthy engine under mixed load shows every class's `completed`
+/// climbing and `mean_wall_ms` tracking its weight share, never a flat
+/// lane.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClassLane {
+    /// Requests of this class admitted into the task table since start.
+    pub submitted: u64,
+    /// Requests of this class finalized since start.
+    pub completed: u64,
+    /// Step rows of this class flushed to workers since start.
+    pub rows: u64,
+    /// Mean request latency (submit → finalize) over this class's
+    /// completed requests, milliseconds.
+    pub mean_wall_ms: f64,
+    /// Completed requests whose anytime eval budget fired
+    /// ([`crate::coordinator::RunStats::deadline_hit`]) — how often this
+    /// class is being served degraded-but-valid samples under load.
+    pub deadline_hits: u64,
+}
+
+impl ClassLane {
+    /// Requests of this class currently resident (submitted − completed).
+    pub fn active(&self) -> u64 {
+        self.submitted - self.completed
+    }
 }
 
 /// A point-in-time view of the engine's batching behavior.
@@ -188,6 +234,17 @@ pub struct EngineStats {
     pub pool_misses: u64,
     /// Peak simultaneously-live state buffers (the leak detector).
     pub pool_high_water: usize,
+    /// Per-QoS-class occupancy/latency lanes, in [`QosClass::ALL`] order
+    /// (`[interactive, standard, batch]`); index with
+    /// [`QosClass::index`].
+    pub per_class: [ClassLane; 3],
+}
+
+impl EngineStats {
+    /// The lane for one class.
+    pub fn class(&self, c: QosClass) -> &ClassLane {
+        &self.per_class[c.index()]
+    }
 }
 
 /// The multi-tenant execution engine. See the module docs.
@@ -332,6 +389,7 @@ impl Engine {
             pool_hits: ps.hits,
             pool_misses: ps.misses,
             pool_high_water: ps.high_water,
+            per_class: c.per_class,
         }
     }
 }
@@ -394,6 +452,10 @@ struct TaskEntry {
     mask: Option<Arc<[f32]>>,
     guidance: f32,
     seed: u64,
+    /// QoS lane every row of this request drains from.
+    class: QosClass,
+    /// Submit instant (the per-class latency counters).
+    t_submit: Instant,
     inflight: usize,
 }
 
@@ -415,6 +477,14 @@ struct Dispatcher {
     in_flight: usize,
     flushed_batches: u64,
     flushed_rows: u64,
+    /// Per-class lanes (the public [`EngineStats::per_class`] view),
+    /// maintained incrementally: `submitted` at submit, `rows` after the
+    /// dead-row filter in [`Dispatcher::flush`] (so it stays consistent
+    /// with `flushed_rows` — the batchers' own per-class counters run at
+    /// drain time and would overcount purged rows), the rest at
+    /// finalize. `class_wall_ms_sum` backs the running `mean_wall_ms`.
+    per_class: [ClassLane; 3],
+    class_wall_ms_sum: [f64; 3],
 }
 
 impl Dispatcher {
@@ -444,6 +514,8 @@ impl Dispatcher {
             in_flight: 0,
             flushed_batches: 0,
             flushed_rows: 0,
+            per_class: [ClassLane::default(); 3],
+            class_wall_ms_sum: [0.0; 3],
         }
     }
 
@@ -500,9 +572,23 @@ impl Dispatcher {
                 let mask = spec.cond.mask.clone();
                 let guidance = spec.cond.guidance;
                 let seed = spec.seed;
+                let class = spec.priority;
+                self.per_class[class.index()].submitted += 1;
                 let mut task = new_task(&x0, &spec, &self.pool, self.epc);
                 let rows = task.start();
-                self.tasks.insert(id, TaskEntry { task, reply, mask, guidance, seed, inflight: 0 });
+                self.tasks.insert(
+                    id,
+                    TaskEntry {
+                        task,
+                        reply,
+                        mask,
+                        guidance,
+                        seed,
+                        class,
+                        t_submit: Instant::now(),
+                        inflight: 0,
+                    },
+                );
                 self.enqueue_rows(id, rows);
                 self.maybe_finalize(id);
             }
@@ -544,7 +630,8 @@ impl Dispatcher {
         }
         let entry = self.tasks.get_mut(&req).expect("rows from a live task");
         entry.inflight += rows.len();
-        let (mask, guidance, seed) = (entry.mask.clone(), entry.guidance, entry.seed);
+        let (mask, guidance, seed, class) =
+            (entry.mask.clone(), entry.guidance, entry.seed, entry.class);
         for row in rows {
             let tag = self.next_row;
             self.next_row += 1;
@@ -558,6 +645,7 @@ impl Dispatcher {
                     mask: mask.clone(),
                     guidance,
                     seed,
+                    class,
                 },
                 row.urgent,
             );
@@ -600,10 +688,21 @@ impl Dispatcher {
         // arrival via the origin map.
         let executing = entry.inflight.saturating_sub(queued) as u64;
         entry.task.charge_stray_rows(executing);
+        let out = entry.task.finalize();
+        // Per-class latency/deadline accounting, folded in before the
+        // publish so the reply's stats snapshot already includes this
+        // request's own completion.
+        let c = entry.class.index();
+        let lane = &mut self.per_class[c];
+        lane.completed += 1;
+        self.class_wall_ms_sum[c] += entry.t_submit.elapsed().as_secs_f64() * 1000.0;
+        lane.mean_wall_ms = self.class_wall_ms_sum[c] / lane.completed as f64;
+        if out.stats.deadline_hit {
+            lane.deadline_hits += 1;
+        }
         // Publish counters before the reply unblocks the caller, so a
         // stats() read right after completion is current.
         self.publish();
-        let out = entry.task.finalize();
         let stats = self.snapshot_stats();
         entry.reply.send(out, stats);
     }
@@ -615,13 +714,19 @@ impl Dispatcher {
             if idle == 0 {
                 return;
             }
-            let key = self.batchers.iter().find_map(|(k, b)| {
-                if b.pending() == 0 {
-                    return None;
-                }
-                let eager = self.in_flight == 0 || b.pending() >= idle || b.should_flush();
-                eager.then_some(*k)
-            });
+            // Among the eager batchers, drain the one whose head row has
+            // waited longest — HashMap iteration order must never decide
+            // who gets served, or a flooding tenant in one batch key
+            // (guidance / mask shape) could starve every other key.
+            let key = self
+                .batchers
+                .iter()
+                .filter(|(_, b)| {
+                    b.pending() > 0
+                        && (self.in_flight == 0 || b.pending() >= idle || b.should_flush())
+                })
+                .min_by_key(|(_, b)| b.oldest_since())
+                .map(|(k, _)| *k);
             let Some(key) = key else { return };
             let batcher = self.batchers.get_mut(&key).unwrap();
             let cap = batcher.pending().div_ceil(idle);
@@ -643,6 +748,12 @@ impl Dispatcher {
             }
             self.flushed_batches += 1;
             self.flushed_rows += rows.len() as u64;
+            // Per-class dispatch counters, taken after the dead-row
+            // filter so `classes[].rows` on the wire never counts work
+            // that was purged instead of executed.
+            for r in &rows {
+                self.per_class[r.class.index()].rows += 1;
+            }
             self.in_flight += 1;
             let (lock, cv) = &*self.work;
             lock.lock().unwrap().queue.push_back(ExecBatch { rows });
@@ -664,6 +775,7 @@ impl Dispatcher {
             pool_hits: ps.hits,
             pool_misses: ps.misses,
             pool_high_water: ps.high_water,
+            per_class: self.per_class,
         }
     }
 
@@ -673,6 +785,7 @@ impl Dispatcher {
         c.flushed_rows = self.flushed_rows;
         c.queue_depth = self.batchers.values().map(|b| b.pending()).sum();
         c.active_tasks = self.tasks.len();
+        c.per_class = self.per_class;
     }
 }
 
@@ -885,6 +998,101 @@ mod tests {
     fn engine_shuts_down_cleanly() {
         let eng = engine(3, BatchPolicy::default());
         drop(eng); // must not hang
+    }
+
+    #[test]
+    fn interactive_tenant_is_never_starved_by_a_batch_flood() {
+        // The ISSUE's fairness property, end to end: one tenant floods
+        // batch-class requests through a 1-worker engine; another then
+        // submits interactive requests. Weighted DRR must (a) complete
+        // every interactive request before the flood's tail (bounded
+        // queue age — pure FIFO would finish the entire flood first),
+        // and (b) leave every output bit-identical to a solo vanilla
+        // run: classes shape scheduling, never numerics.
+        let eng = engine(1, BatchPolicy::default());
+        let (tx, rx) = channel::<(&'static str, u64)>();
+        for s in 0..6u64 {
+            let x0 = prior_sample(64, 200 + s);
+            let spec = SamplerSpec::srds(36)
+                .with_tol(1e-4)
+                .with_seed(200 + s)
+                .with_priority(QosClass::Batch);
+            let tx = tx.clone();
+            eng.submit_with(x0, spec, move |out, _| {
+                let _ = tx.send(("batch", out.stats.engine_rows));
+            });
+        }
+        let mut inter = Vec::new();
+        for s in 0..2u64 {
+            let x0 = prior_sample(64, 300 + s);
+            let spec = SamplerSpec::srds(25)
+                .with_tol(1e-4)
+                .with_seed(300 + s)
+                .with_priority(QosClass::Interactive);
+            let tx = tx.clone();
+            let (otx, orx) = channel::<SampleOutput>();
+            eng.submit_with(x0.clone(), spec.clone(), move |out, _| {
+                let _ = tx.send(("interactive", out.stats.engine_rows));
+                let _ = otx.send(out);
+            });
+            inter.push((x0, spec, orx));
+        }
+        drop(tx);
+        let order: Vec<&'static str> = rx.iter().map(|(c, _)| c).collect();
+        assert_eq!(order.len(), 8, "every request completed");
+        let last_interactive = order.iter().rposition(|&c| c == "interactive").unwrap();
+        let last_batch = order.iter().rposition(|&c| c == "batch").unwrap();
+        assert!(
+            last_interactive < last_batch,
+            "an interactive request outlived the whole batch flood: {order:?}"
+        );
+        // Bit-identical despite priority scheduling.
+        for (x0, spec, orx) in inter {
+            let got = orx.recv().expect("interactive output");
+            let want = vanilla(&x0, &spec);
+            assert_eq!(got.sample, want.sample, "seed {}: class changed numerics", spec.seed);
+            assert_eq!(got.stats.iters, want.stats.iters);
+        }
+        // Per-class lanes saw the traffic and drained fully.
+        let st = eng.stats();
+        let i = st.class(QosClass::Interactive);
+        let b = st.class(QosClass::Batch);
+        assert_eq!(i.submitted, 2);
+        assert_eq!(i.completed, 2);
+        assert_eq!(i.active(), 0);
+        assert_eq!(b.submitted, 6);
+        assert_eq!(b.completed, 6);
+        assert!(i.rows > 0 && b.rows > 0, "both lanes flushed rows");
+        assert!(i.mean_wall_ms > 0.0 && b.mean_wall_ms > 0.0);
+        assert_eq!(st.class(QosClass::Standard).submitted, 0);
+    }
+
+    #[test]
+    fn deadline_requests_degrade_gracefully_on_the_engine() {
+        // An eval-budgeted SRDS request through the full engine path:
+        // the response is an early iterate with honest reporting, and
+        // the per-class deadline_hits counter ticks.
+        let eng = engine(2, BatchPolicy::default());
+        let x0 = prior_sample(64, 77);
+        let spec = SamplerSpec::srds(36)
+            .with_tol(0.0)
+            .with_max_iters(6)
+            .with_deadline_evals(60)
+            .with_seed(77)
+            .with_priority(QosClass::Interactive);
+        let out = eng.run(&x0, &spec);
+        assert!(out.stats.deadline_hit, "a 60-eval budget must fire at tol 0");
+        assert!(!out.stats.converged);
+        assert!(out.sample.iter().all(|v| v.is_finite()));
+        // The truncated sample is the exact early iterate of the full run.
+        let full = vanilla(
+            &x0,
+            &SamplerSpec::srds(36).with_tol(0.0).with_max_iters(6).with_iterates().with_seed(77),
+        );
+        assert_eq!(out.sample, full.iterates[out.stats.iters]);
+        let st = eng.stats();
+        assert_eq!(st.class(QosClass::Interactive).deadline_hits, 1);
+        assert_eq!(st.class(QosClass::Interactive).completed, 1);
     }
 
     #[test]

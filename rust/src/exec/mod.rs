@@ -16,7 +16,12 @@
 //!   any kind), every fine/coarse step becomes a
 //!   [`crate::batching::PendingRow`], and rows are fused into multi-row
 //!   [`crate::solvers::StepRequest`] batches across requests (§3.4's
-//!   batched inference, applied to serving). All request state rides in
+//!   batched inference, applied to serving). Rows drain through
+//!   per-QoS-class lanes under weighted deficit round robin
+//!   ([`crate::coordinator::QosClass`]), deadline-budgeted SRDS
+//!   requests degrade to their best completed Parareal iterate, and
+//!   per-class occupancy/latency lanes ride [`engine::EngineStats`].
+//!   All request state rides in
 //!   pooled [`crate::buf::StateBuf`]s from one engine-wide slab pool — a
 //!   warm engine allocates no state buffers. The serving loop dispatches
 //!   into this.
@@ -30,7 +35,7 @@ pub mod measured;
 pub mod simclock;
 pub mod task;
 
-pub use engine::{Engine, EngineConfig, EngineStats};
+pub use engine::{ClassLane, Engine, EngineConfig, EngineStats};
 pub use measured::{measured_pipelined_srds, NativeFactory, WorkerPool};
 pub use simclock::{schedule_tasks, simulate_paradigms, simulate_sequential, simulate_srds, SimReport, SimTask};
 pub use task::{new_task, Completion, SamplerTask, TaskRow};

@@ -274,6 +274,9 @@ struct SrdsTask {
     fines: HashMap<(usize, usize), FineChain>,
     per_iter: Vec<IterStat>,
     stop_at_iter: Option<usize>,
+    /// The anytime eval budget fired: refinement was truncated to the
+    /// best completed iterate (see [`SrdsTask::check_deadline`]).
+    deadline_hit: bool,
     inflight_rows: usize,
     total_evals: u64,
     meter: RowMeter,
@@ -301,10 +304,48 @@ impl SrdsTask {
             fines: HashMap::new(),
             per_iter: Vec::new(),
             stop_at_iter: None,
+            deadline_hit: false,
             inflight_rows: 0,
             total_evals: 0,
             meter: RowMeter::default(),
             t0: Instant::now(),
+        }
+    }
+
+    /// Anytime refinement (the QoS deadline): once the request has spent
+    /// its eval budget, stop refining and converge on the **newest
+    /// iterate whose residual is already known** — iterations
+    /// `1..=per_iter.len()` are recorded contiguously, so that is
+    /// `per_iter.len()` (or 0, the coarse init, when no refinement has
+    /// completed yet). Every Parareal iterate is a valid approximate
+    /// sample that only improves with `p` (paper §4), so truncation
+    /// degrades quality gracefully rather than failing the request; the
+    /// response stays honest via `converged: false` + the achieved
+    /// residual + `deadline_hit`. Setting `stop_at_iter` both gates any
+    /// further row emission (`past_stop`) and lets the engine purge this
+    /// request's still-queued speculative rows at finalize. The chosen
+    /// iterate's remaining rows (possibly the whole coarse spine, for a
+    /// budget smaller than one sweep) still run: the budget is a target,
+    /// not a hard wall — the request always returns a *valid* iterate.
+    ///
+    /// Runs after convergence bookkeeping, so a budget that fires on the
+    /// same completion that reaches tolerance reports the genuine
+    /// convergence, not a truncation.
+    fn check_deadline(&mut self) {
+        if self.stop_at_iter.is_some() || self.deadline_hit {
+            return;
+        }
+        let Some(budget) = self.spec.deadline_evals else { return };
+        if self.total_evals >= budget {
+            // Only a real truncation is a hit: when every refinement
+            // this run was going to do has already recorded its residual
+            // (the budget expired during the speculative tail), stopping
+            // changes nothing about the returned sample, and the
+            // response must not claim degradation that never happened.
+            if self.per_iter.len() < self.max_iters {
+                self.deadline_hit = true;
+            }
+            self.stop_at_iter = Some(self.per_iter.len());
         }
     }
 
@@ -418,6 +459,9 @@ impl SrdsTask {
                 }
             }
         }
+        // After convergence bookkeeping: genuine convergence on this
+        // very completion wins over a simultaneous budget expiry.
+        self.check_deadline();
     }
 }
 
@@ -492,6 +536,9 @@ impl SamplerTask for SrdsTask {
         } else {
             vec![]
         };
+        // Honest reporting under anytime truncation: a deadline-chosen
+        // iterate keeps its recorded residual in `per_iter`, and the
+        // flag below tells the client *why* `converged` is false.
         let converged = self
             .per_iter
             .iter()
@@ -513,6 +560,7 @@ impl SamplerTask for SrdsTask {
         let stats = RunStats {
             iters: final_iter,
             converged,
+            deadline_hit: self.deadline_hit,
             eff_serial_evals: eff_serial,
             eff_serial_evals_pipelined: eff_pipelined,
             total_evals: self.total_evals,
@@ -705,6 +753,10 @@ impl SamplerTask for ParadigmsTask {
         let stats = RunStats {
             iters: self.sweeps,
             converged: self.lo >= self.n,
+            // ParaDiGMS ignores the anytime budget: its sliding-window
+            // Picard truncation has no serial-equivalence anchor — a
+            // half-converged window is not a valid sample of anything.
+            deadline_hit: false,
             eff_serial_evals: self.sweeps as u64 * self.epc,
             eff_serial_evals_pipelined: self.sweeps as u64 * self.epc,
             total_evals: self.total_evals,
@@ -893,6 +945,10 @@ impl SamplerTask for ParataaTask {
         let stats = RunStats {
             iters: self.iters,
             converged: self.converged,
+            // Like ParaDiGMS, ParaTAA has no Parareal anytime guarantee
+            // to truncate onto (an Anderson-mixed iterate is a solver
+            // accelerant, not a serial-equivalent sample).
+            deadline_hit: false,
             eff_serial_evals: self.iters as u64 * self.epc,
             eff_serial_evals_pipelined: self.iters as u64 * self.epc,
             total_evals: self.total_evals,
@@ -1013,6 +1069,116 @@ mod tests {
         assert_eq!(got.iterates.len(), got.stats.iters + 1, "coarse init + one per refinement");
         assert_eq!(got.iterates, want.iterates, "same iterate trail as vanilla");
         assert_eq!(got.iterates.last().unwrap(), &got.sample);
+    }
+
+    #[test]
+    fn srds_deadline_truncates_to_last_completed_iterate() {
+        // The anytime contract: a deadline-truncated SRDS run returns
+        // exactly the iterate a full run would have produced at the same
+        // refinement depth (the grid values are schedule-independent),
+        // with honest converged/residual/deadline_hit reporting.
+        let be = backend();
+        let x0 = prior_sample(64, 13);
+        let full_spec = SamplerSpec::srds(36)
+            .with_tol(0.0)
+            .with_max_iters(6)
+            .with_iterates()
+            .with_seed(13);
+        let full = crate::coordinator::srds(&be, &x0, &full_spec);
+        assert_eq!(full.iterates.len(), full.stats.iters + 1);
+
+        let spec = SamplerSpec::srds(36)
+            .with_tol(0.0)
+            .with_max_iters(6)
+            .with_deadline_evals(80)
+            .with_seed(13);
+        let got = drive(&be, &x0, &spec);
+        assert!(got.stats.deadline_hit, "an 80-eval budget must fire on a tol=0 n=36 run");
+        assert!(!got.stats.converged, "truncation is never reported as convergence");
+        assert!(got.stats.iters < full.stats.iters, "refinement was actually cut short");
+        // The returned sample IS iterate `iters` of the untruncated run.
+        assert_eq!(
+            got.sample, full.iterates[got.stats.iters],
+            "anytime sample must be the exact early iterate"
+        );
+        // Residual honesty: the last recorded per-iter entry belongs to
+        // the returned iterate and matches the full run's residual.
+        if got.stats.iters > 0 {
+            let last = got.stats.per_iter.last().unwrap();
+            assert_eq!(last.iter, got.stats.iters);
+            let want = &full.stats.per_iter[got.stats.iters - 1];
+            assert_eq!(last.residual, want.residual, "achieved residual reported verbatim");
+        }
+    }
+
+    #[test]
+    fn srds_minimal_deadline_still_returns_the_coarse_init() {
+        // A budget smaller than anything useful: the task still finishes
+        // the coarse init sweep (iterate 0 — the smallest valid Parareal
+        // sample) rather than returning garbage or hanging.
+        let be = backend();
+        let x0 = prior_sample(64, 17);
+        let full = crate::coordinator::srds(
+            &be,
+            &x0,
+            &SamplerSpec::srds(25).with_tol(0.0).with_max_iters(4).with_iterates().with_seed(17),
+        );
+        let spec = SamplerSpec::srds(25)
+            .with_tol(0.0)
+            .with_max_iters(4)
+            .with_deadline_evals(1)
+            .with_seed(17);
+        let got = drive(&be, &x0, &spec);
+        assert!(got.stats.deadline_hit);
+        assert_eq!(got.stats.iters, 0, "nothing beyond the coarse init fits in 1 eval");
+        assert!(!got.stats.converged);
+        assert_eq!(got.sample, full.iterates[0], "iterate 0 is the coarse init");
+    }
+
+    #[test]
+    fn budget_expiry_without_truncation_is_not_a_hit() {
+        // The budget fires on the very last row of a capped run (budget
+        // == the run's exact total evals): iterate max_iters is already
+        // recorded, so nothing was actually cut — the sample matches the
+        // unbudgeted run and deadline_hit must stay false (an honest
+        // dashboard never counts phantom degradation).
+        let be = backend();
+        let x0 = prior_sample(64, 19);
+        let plain = SamplerSpec::srds(36).with_tol(0.0).with_max_iters(2).with_seed(19);
+        let full = drive(&be, &x0, &plain);
+        let got = drive(&be, &x0, &plain.clone().with_deadline_evals(full.stats.total_evals));
+        assert!(!got.stats.deadline_hit, "no refinement was lost — not a hit");
+        assert_eq!(got.sample, full.sample);
+        assert_eq!(got.stats.iters, full.stats.iters);
+        assert_eq!(got.stats.converged, full.stats.converged);
+    }
+
+    #[test]
+    fn no_deadline_runs_are_unchanged_and_other_kinds_ignore_it() {
+        // deadline_evals: None must be byte-for-byte the pre-QoS
+        // behavior, and a generous budget must never fire. Non-SRDS
+        // kinds ignore the budget entirely (no anytime anchor).
+        let be = backend();
+        let x0 = prior_sample(64, 11);
+        let spec = SamplerSpec::srds(25).with_tol(1e-5).with_seed(11);
+        let want = drive(&be, &x0, &spec);
+        let got = drive(&be, &x0, &spec.clone().with_deadline_evals(u64::MAX));
+        assert_eq!(got.sample, want.sample);
+        assert_eq!(got.stats.iters, want.stats.iters);
+        assert!(!got.stats.deadline_hit);
+        assert!(!want.stats.deadline_hit);
+        for kind in ["sequential", "paradigms", "parataa"] {
+            let s = registry().parse(kind).unwrap();
+            let spec = SamplerSpec::for_kind(25, s.kind())
+                .with_tol(1e-5)
+                .with_deadline_evals(1)
+                .with_seed(11);
+            let got = drive(&be, &x0, &spec);
+            let plain = SamplerSpec::for_kind(25, s.kind()).with_tol(1e-5).with_seed(11);
+            let want = drive(&be, &x0, &plain);
+            assert_eq!(got.sample, want.sample, "{kind}: deadline must be a no-op");
+            assert!(!got.stats.deadline_hit, "{kind}: never reports a hit it can't honor");
+        }
     }
 
     #[test]

@@ -15,7 +15,14 @@
 //!   ([`server`]) that submits every request into the engine as an
 //!   engine-native sampler task ([`exec::task`]: each of the four
 //!   registered samplers is a dispatcher-resident state machine — no
-//!   per-request threads exist anywhere on the serving path). All
+//!   per-request threads exist anywhere on the serving path). The
+//!   engine schedules by QoS class
+//!   ([`coordinator::QosClass`]: weighted deficit-round-robin lanes in
+//!   [`batching`] so no tenant starves another, anytime eval budgets
+//!   that truncate SRDS to its best completed Parareal iterate under
+//!   load, and immediate structured `overloaded` shedding at the
+//!   admission cap — per-class lanes observable in
+//!   [`exec::EngineStats`] and on the wire). All
 //!   state on the hot path lives in the zero-copy buffer layer ([`buf`]:
 //!   the pooled refcounted `StateBuf` slab + the reusable `BatchStage`
 //!   staging buffer), and solver steps write in place via the

@@ -10,7 +10,8 @@
 //! srds serve  [--addr 127.0.0.1:7878] [--workers 4] [--model …]
 //!             [--solver …] [--backend native|pjrt]
 //!             [--batch-wait 2] [--buckets 32,16,8,4,2,1]
-//!             [--max-inflight 64]
+//!             [--max-inflight 64] [--class-weights 8,3,1]
+//!             [--default-deadline EVALS]
 //! ```
 //!
 //! `serve` runs every request on the shared multi-tenant engine
@@ -18,8 +19,13 @@
 //! its pool, `--batch-wait` bounds how long (ms) an under-filled
 //! cross-request batch may linger, `--buckets` lists the preferred batch
 //! sizes, descending, and `--max-inflight` caps the in-flight requests
-//! admitted per connection (past it the read loop stops consuming and
-//! TCP back-pressure reaches the client).
+//! admitted per connection (past it, requests are shed immediately with
+//! the structured `overloaded` error line so clients back off).
+//! `--class-weights` sets the weighted-DRR service shares of the
+//! `interactive,standard,batch` QoS lanes, and `--default-deadline`
+//! applies an anytime eval budget to requests that don't carry their own
+//! `"deadline"` field (SRDS then finalizes from its best completed
+//! iterate once the budget is spent).
 //!
 //! `--sampler` accepts any name from `coordinator::api::registry()`;
 //! `srds info` lists them. (Argument parsing is in-tree: the offline
@@ -193,6 +199,32 @@ fn cmd_serve(flags: HashMap<String, String>) -> srds::Result<()> {
         }
         batch.buckets = buckets;
     }
+    // QoS lane weights, in interactive,standard,batch order. Zero
+    // weights are rejected here (the batcher would clamp them to 1
+    // anyway — starvation is not configurable).
+    if let Some(w) = flags.get("class-weights") {
+        let weights: Vec<u64> = w
+            .split(',')
+            .map(|t| t.trim().parse::<u64>())
+            .collect::<Result<_, _>>()?;
+        if weights.len() != 3 || weights.contains(&0) {
+            return Err(anyhow::anyhow!(
+                "--class-weights needs exactly 3 comma-separated weights >= 1 \
+                 (interactive,standard,batch), e.g. 8,3,1"
+            ));
+        }
+        batch.class_weights = [weights[0], weights[1], weights[2]];
+    }
+    let default_deadline: Option<u64> = match flags.get("default-deadline") {
+        Some(v) => {
+            let evals: u64 = v.parse()?;
+            if evals == 0 {
+                return Err(anyhow::anyhow!("--default-deadline must be >= 1 model eval"));
+            }
+            Some(evals)
+        }
+        None => None,
+    };
     let max_inflight: usize = match flags.get("max-inflight") {
         Some(v) => {
             let k: usize = v.parse()?;
@@ -207,7 +239,15 @@ fn cmd_serve(flags: HashMap<String, String>) -> srds::Result<()> {
         Some("pjrt") => Arc::new(PjrtFactory::new(srds::artifacts_dir(), &model, solver)?),
         _ => Arc::new(NativeFactory::new(native_model(&model), solver)),
     };
-    serve(ServeConfig { addr, workers, model_name: model, factory, batch, max_inflight })
+    serve(ServeConfig {
+        addr,
+        workers,
+        model_name: model,
+        factory,
+        batch,
+        max_inflight,
+        default_deadline,
+    })
 }
 
 fn main() {

@@ -6,25 +6,41 @@
 //! ```json
 //! {"id": 1, "sampler": "srds", "n": 25, "class": 2, "guidance": 7.5,
 //!  "seed": 42, "tol": 0.0025, "max_iters": 3, "block": 5,
-//!  "window": 32, "history": 2, "norm": "l1_mean"}
+//!  "window": 32, "history": 2, "norm": "l1_mean",
+//!  "priority": "interactive", "deadline": 120}
 //! ```
 //!
 //! `sampler` must name an entry of [`registry`] — unknown names are
 //! rejected with an `ok: false` error line rather than silently falling
 //! back. The kind-specific knobs (`block` for SRDS, `window` for
 //! ParaDiGMS, `history` for ParaTAA) are optional and ignored by
-//! samplers they don't apply to.
+//! samplers they don't apply to. `priority`
+//! (`interactive`/`standard`/`batch`, default `standard`) selects the
+//! request's QoS lane in the engine's weighted-DRR batcher; `deadline`
+//! is the anytime eval budget (model evals) after which SRDS finalizes
+//! from its best completed iterate (`deadline_hit: true` in the
+//! response) — unset requests inherit
+//! [`ServeConfig::default_deadline`].
 //!
 //! Response line:
 //!
 //! ```json
 //! {"id": 1, "ok": true, "sampler": "srds", "iters": 2, "converged": true,
+//!  "deadline_hit": false, "priority": "interactive",
 //!  "eff_serial_evals": 25, "eff_serial_evals_pipelined": 17,
 //!  "total_evals": 74, "peak_states": 17, "wall_ms": 12.3,
 //!  "batch_occupancy": 3.4, "engine_rows": 74,
 //!  "queue_depth": 12, "active_tasks": 3, "flushed_batches": 210,
+//!  "classes": {"interactive": {"active": 1, "completed": 7, "rows": 310,
+//!              "mean_wall_ms": 4.2, "deadline_hits": 0}, "standard": {},
+//!              "batch": {}},
 //!  "sample": [...]}
 //! ```
+//!
+//! A request arriving while the connection is at its in-flight cap is
+//! shed immediately with the structured admission error
+//! (`{"id": …, "ok": false, "error_kind": "overloaded", …}` — see
+//! [`overloaded_response`]) instead of stalling the read loop.
 //!
 //! `batch_occupancy` / `engine_rows` are per-request fusion stats;
 //! `queue_depth` / `active_tasks` / `flushed_batches` are engine-wide
@@ -48,7 +64,7 @@
 
 use crate::batching::BatchPolicy;
 use crate::coordinator::{
-    prior_sample, registry, Conditioning, ConvNorm, SampleOutput, SamplerSpec,
+    prior_sample, registry, Conditioning, ConvNorm, QosClass, SampleOutput, SamplerSpec,
 };
 use crate::data::make_gmm;
 use crate::exec::{Engine, EngineConfig, EngineStats};
@@ -58,7 +74,7 @@ use crate::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::channel;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 
 /// A parsed sampling request: the sampler name plus every
 /// [`SamplerSpec`] knob the wire protocol exposes.
@@ -79,6 +95,17 @@ pub struct SampleRequest {
     pub window: Option<usize>,
     /// ParaTAA Anderson history depth.
     pub history: Option<usize>,
+    /// QoS priority class (`"priority"` on the wire:
+    /// `interactive`/`standard`/`batch`; default standard). Scheduling
+    /// only — never changes the sample.
+    pub priority: QosClass,
+    /// Anytime eval budget (`"deadline"` on the wire, in model evals):
+    /// SRDS finalizes from its best completed iterate once spent,
+    /// reporting `deadline_hit: true` + `converged: false`. `None`
+    /// (absent) falls back to [`ServeConfig::default_deadline`] on the
+    /// serve loop; an explicit `Some(0)` means *unbudgeted* — the
+    /// client's opt-out from the server default.
+    pub deadline: Option<u64>,
     pub return_sample: bool,
     /// Return the per-refinement final-sample iterates too.
     pub return_iterates: bool,
@@ -91,6 +118,29 @@ impl SampleRequest {
             None => ConvNorm::L1Mean,
             Some(s) => ConvNorm::parse(s)
                 .ok_or_else(|| anyhow::anyhow!("unknown norm {s:?} (l1_mean/l2_mean/linf)"))?,
+        };
+        // Unknown priority names are an error, not a silent downgrade to
+        // standard — a tenant must know its interactive flag didn't take.
+        let priority = match v.get("priority").and_then(|x| x.as_str()) {
+            None => QosClass::Standard,
+            Some(s) => QosClass::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("unknown priority {s:?} (interactive/standard/batch)")
+            })?,
+        };
+        // Budget semantics: absent → inherit the server's default;
+        // explicit 0 → opt OUT of any budget (the escape hatch a
+        // convergence-critical client needs when the operator set
+        // --default-deadline); >= 1 → that many model evals. Negative
+        // is rejected rather than degraded (the f64 → u64 cast would
+        // saturate to a coarse-init-only run no client can have meant).
+        let deadline = match v.get("deadline").and_then(|x| x.as_f64()) {
+            None => None,
+            Some(d) if d >= 0.0 => Some(d as u64),
+            Some(d) => {
+                return Err(anyhow::anyhow!(
+                    "deadline must be >= 0 (0 = explicitly unbudgeted), got {d}"
+                ))
+            }
         };
         Ok(SampleRequest {
             id: num("id", 0.0) as u64,
@@ -109,6 +159,8 @@ impl SampleRequest {
             block: v.get("block").and_then(|x| x.as_usize()),
             window: v.get("window").and_then(|x| x.as_usize()),
             history: v.get("history").and_then(|x| x.as_usize()),
+            priority,
+            deadline,
             return_sample: v.get("sample").and_then(|x| x.as_bool()).unwrap_or(true),
             return_iterates: v.get("iterates").and_then(|x| x.as_bool()).unwrap_or(false),
         })
@@ -132,6 +184,10 @@ impl SampleRequest {
         spec.block = self.block;
         spec.max_iters = self.max_iters;
         spec.keep_iterates = self.return_iterates;
+        spec.priority = self.priority;
+        // An explicit 0 is the opt-out: no budget, even when the serve
+        // loop injected the server default into `deadline`.
+        spec.deadline_evals = self.deadline.filter(|&d| d > 0);
         spec
     }
 }
@@ -141,6 +197,27 @@ fn error_response(id: u64, msg: String) -> Value {
         ("id", Value::Num(id as f64)),
         ("ok", Value::Bool(false)),
         ("error", Value::Str(msg)),
+    ])
+}
+
+/// The structured admission-control error: sent the moment a request
+/// would exceed the connection's in-flight cap, instead of stalling the
+/// read loop. `error_kind: "overloaded"` is the machine-readable field
+/// clients key their backoff on (the human-readable `error` text is not
+/// a contract); `max_inflight` tells them the cap they hit.
+pub fn overloaded_response(id: u64, max_inflight: usize) -> Value {
+    json::obj(vec![
+        ("id", Value::Num(id as f64)),
+        ("ok", Value::Bool(false)),
+        ("error_kind", Value::Str("overloaded".into())),
+        (
+            "error",
+            Value::Str(format!(
+                "overloaded: connection already has {max_inflight} requests in flight; \
+                 back off and retry"
+            )),
+        ),
+        ("max_inflight", Value::Num(max_inflight as f64)),
     ])
 }
 
@@ -195,6 +272,8 @@ fn success_response(
         ("sampler", Value::Str(sampler_name.to_string())),
         ("iters", Value::Num(out.stats.iters as f64)),
         ("converged", Value::Bool(out.stats.converged)),
+        ("deadline_hit", Value::Bool(out.stats.deadline_hit)),
+        ("priority", Value::Str(req.priority.name().into())),
         ("eff_serial_evals", Value::Num(out.stats.eff_serial_evals as f64)),
         (
             "eff_serial_evals_pipelined",
@@ -216,6 +295,29 @@ fn success_response(
         pairs.push(("active_tasks", Value::Num(st.active_tasks as f64)));
         pairs.push(("flushed_batches", Value::Num(st.flushed_batches as f64)));
         pairs.push(("pool_high_water", Value::Num(st.pool_high_water as f64)));
+        // Per-QoS-class lanes (snapshot at completion): the operator's
+        // starvation dashboard, one object per class.
+        pairs.push((
+            "classes",
+            json::obj(
+                QosClass::ALL
+                    .into_iter()
+                    .map(|c| {
+                        let lane = st.class(c);
+                        (
+                            c.name(),
+                            json::obj(vec![
+                                ("active", Value::Num(lane.active() as f64)),
+                                ("completed", Value::Num(lane.completed as f64)),
+                                ("rows", Value::Num(lane.rows as f64)),
+                                ("mean_wall_ms", Value::Num(lane.mean_wall_ms)),
+                                ("deadline_hits", Value::Num(lane.deadline_hits as f64)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ));
     }
     if req.return_sample {
         pairs.push(("sample", json::arr_f32(&out.sample)));
@@ -329,6 +431,20 @@ pub fn submit_line_engine(
         Ok(r) => r,
         Err(e) => return done(PendingResponse::Ready(json::to_string(&e))),
     };
+    submit_request_engine(engine, model_name, req, done);
+}
+
+/// Submit an already-parsed request onto the engine without blocking —
+/// the serve loop calls this after its admission check (so a shed
+/// request never reaches the engine), [`submit_line_engine`] after
+/// parsing. Validation errors invoke `done` inline; otherwise `done`
+/// fires from the engine's completion callback.
+pub fn submit_request_engine(
+    engine: &Engine,
+    model_name: &str,
+    req: SampleRequest,
+    done: impl FnOnce(PendingResponse) + Send + 'static,
+) {
     let spec = match request_spec(model_name, &req) {
         Ok(s) => s,
         Err(e) => return done(PendingResponse::Ready(json::to_string(&e))),
@@ -403,10 +519,17 @@ pub struct ServeConfig {
     pub batch: BatchPolicy,
     /// Admission control: in-flight requests per connection
     /// (`--max-inflight` on the CLI, [`DEFAULT_MAX_INFLIGHT`] by
-    /// default). Past this the connection's read loop stops consuming
-    /// lines, so back-pressure propagates to the client through TCP
-    /// instead of materializing unbounded engine state.
+    /// default). A request arriving past the cap is **shed immediately**
+    /// with the structured [`overloaded_response`] error line
+    /// (`error_kind: "overloaded"`) so the client can back off — the
+    /// read loop never stalls, and responses for in-flight work keep
+    /// streaming while the connection is over cap.
     pub max_inflight: usize,
+    /// Default anytime eval budget applied to requests that don't carry
+    /// their own `"deadline"` field (`--default-deadline` on the CLI).
+    /// `None` → no budget: requests refine to convergence/cap. Clients
+    /// opt out per request with an explicit `"deadline": 0`.
+    pub default_deadline: Option<u64>,
 }
 
 /// Run the blocking accept loop on a fresh listener bound to `cfg.addr`.
@@ -422,13 +545,17 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
 /// One engine serves every connection, and **the only threads anywhere
 /// are the engine's dispatcher + workers plus one reader and one writer
 /// per connection**: the read loop submits each request into the engine
-/// with a completion callback ([`submit_line_engine`]) and immediately
-/// reads the next line, so any number of requests from one connection
-/// are in flight at once (their step rows co-batching) with zero
-/// per-request threads. Responses stream back in completion order per
-/// connection. In-flight requests are capped at
-/// [`ServeConfig::max_inflight`] per connection — past that the read
-/// loop stops consuming, pushing back on the client through TCP.
+/// with a completion callback ([`submit_request_engine`]) and
+/// immediately reads the next line, so any number of requests from one
+/// connection are in flight at once (their step rows co-batching) with
+/// zero per-request threads. Responses stream back in completion order
+/// per connection. In-flight requests are capped at
+/// [`ServeConfig::max_inflight`] per connection — a request past the cap
+/// is shed *immediately* with the structured [`overloaded_response`]
+/// line (`error_kind: "overloaded"`), never parked: the old behavior of
+/// stalling the read loop head-of-line-blocked every later request
+/// (including interactive ones) behind the cap, and gave the client no
+/// signal to back off on.
 pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
     let engine = Arc::new(Engine::new(
         cfg.factory.clone(),
@@ -436,12 +563,14 @@ pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
     ));
     eprintln!(
         "srds-server listening on {} (model={}, engine workers={}, buckets={:?}, \
-         max-inflight/conn={}, samplers={})",
+         class-weights={:?}, max-inflight/conn={}, default-deadline={:?}, samplers={})",
         listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| cfg.addr.clone()),
         cfg.model_name,
         cfg.workers,
         cfg.batch.buckets,
+        cfg.batch.class_weights,
         cfg.max_inflight,
+        cfg.default_deadline,
         registry().list().join("/")
     );
     let max_inflight = cfg.max_inflight.max(1);
@@ -449,8 +578,10 @@ pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
         let stream = stream?;
         let engine = engine.clone();
         let model_name = cfg.model_name.clone();
+        let default_deadline = cfg.default_deadline;
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, engine, model_name, max_inflight) {
+            if let Err(e) = handle_conn(stream, engine, model_name, max_inflight, default_deadline)
+            {
                 eprintln!("connection error: {e:#}");
             }
         });
@@ -463,6 +594,7 @@ fn handle_conn(
     engine: Arc<Engine>,
     model_name: String,
     max_inflight: usize,
+    default_deadline: Option<u64>,
 ) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
@@ -479,17 +611,35 @@ fn handle_conn(
         }
         Ok(())
     });
-    let gate = Arc::new((Mutex::new(0usize), Condvar::new()));
+    let gate = Arc::new(Mutex::new(0usize));
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
+        // Parse before the admission check: a shed response must echo
+        // the request id (and a malformed line is a parse error, not an
+        // admission slot).
+        let mut req = match line_to_request(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ = resp_tx.send(PendingResponse::Ready(json::to_string(&e)));
+                continue;
+            }
+        };
+        if req.deadline.is_none() {
+            req.deadline = default_deadline;
+        }
+        // Non-blocking admission: over the cap, shed with the structured
+        // overloaded error instead of stalling the read loop — the
+        // client keeps receiving completions and decides when to retry.
         {
-            let (lock, cv) = &*gate;
-            let mut inflight = lock.lock().unwrap();
-            while *inflight >= max_inflight {
-                inflight = cv.wait(inflight).unwrap();
+            let mut inflight = gate.lock().unwrap();
+            if *inflight >= max_inflight {
+                drop(inflight);
+                let shed = overloaded_response(req.id, max_inflight);
+                let _ = resp_tx.send(PendingResponse::Ready(json::to_string(&shed)));
+                continue;
             }
             *inflight += 1;
         }
@@ -499,11 +649,9 @@ fn handle_conn(
         // admission slot. No thread exists for this request.
         let resp_tx = resp_tx.clone();
         let gate = gate.clone();
-        submit_line_engine(&engine, &model_name, &line, move |resp| {
+        submit_request_engine(&engine, &model_name, req, move |resp| {
             let _ = resp_tx.send(resp);
-            let (lock, cv) = &*gate;
-            *lock.lock().unwrap() -= 1;
-            cv.notify_one();
+            *gate.lock().unwrap() -= 1;
         });
     }
     // Reader EOF: drop our resp_tx; the writer exits once the in-flight
@@ -646,6 +794,125 @@ mod tests {
             Arc::new(NativeFactory::new(model, Solver::Ddim)),
             EngineConfig { workers: 2, batch: BatchPolicy::default() },
         )
+    }
+
+    #[test]
+    fn priority_and_deadline_reach_the_spec() {
+        let v = json::parse(
+            r#"{"sampler":"srds","n":36,"priority":"interactive","deadline":120}"#,
+        )
+        .unwrap();
+        let req = SampleRequest::from_json(&v).unwrap();
+        assert_eq!(req.priority, QosClass::Interactive);
+        assert_eq!(req.deadline, Some(120));
+        let kind = registry().parse(&req.sampler).unwrap().kind();
+        let spec = req.to_spec(kind, Conditioning::none());
+        assert_eq!(spec.priority, QosClass::Interactive);
+        assert_eq!(spec.deadline_evals, Some(120));
+        // Defaults: standard class, no budget.
+        let v = json::parse(r#"{"sampler":"srds","n":36}"#).unwrap();
+        let req = SampleRequest::from_json(&v).unwrap();
+        assert_eq!(req.priority, QosClass::Standard);
+        assert_eq!(req.deadline, None);
+    }
+
+    #[test]
+    fn unknown_priority_is_rejected_not_downgraded() {
+        let be = backend();
+        let resp =
+            handle_line(be.as_ref(), "gmm_toy2d", r#"{"id":4,"n":16,"priority":"urgent"}"#);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(4.0));
+        assert!(
+            v.get("error").unwrap().as_str().unwrap().contains("unknown priority"),
+            "{resp}"
+        );
+    }
+
+    #[test]
+    fn deadline_zero_opts_out_and_negative_is_rejected() {
+        // Explicit 0 is the client's escape hatch from a server-side
+        // --default-deadline: it must parse as "unbudgeted", never as a
+        // zero-eval budget. Negative would saturate to exactly that
+        // coarse-init-only run, so it's rejected, not degraded.
+        let v = json::parse(r#"{"sampler":"srds","n":16,"deadline":0}"#).unwrap();
+        let req = SampleRequest::from_json(&v).unwrap();
+        assert_eq!(req.deadline, Some(0), "explicit opt-out is preserved, not treated as absent");
+        let kind = registry().parse(&req.sampler).unwrap().kind();
+        assert_eq!(
+            req.to_spec(kind, Conditioning::none()).deadline_evals,
+            None,
+            "0 reaches the sampler as 'no budget'"
+        );
+        let be = backend();
+        let resp = handle_line(be.as_ref(), "gmm_toy2d", r#"{"id":6,"n":16,"deadline":-3}"#);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(6.0), "{resp}");
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("deadline"), "{resp}");
+        // Boundary: 1 is a legal (if brutal) budget.
+        let resp = handle_line(be.as_ref(), "gmm_toy2d", r#"{"id":7,"n":16,"deadline":1}"#);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+    }
+
+    #[test]
+    fn engine_responses_carry_qos_fields() {
+        let eng = engine();
+        let line = r#"{"id":1,"sampler":"srds","n":16,"priority":"interactive","sample":false}"#;
+        let v = json::parse(&handle_line_engine(&eng, "gmm_toy2d", line)).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{v:?}");
+        assert_eq!(v.get("priority").unwrap().as_str(), Some("interactive"));
+        assert_eq!(v.get("deadline_hit").unwrap().as_bool(), Some(false));
+        let classes = v.get("classes").expect("per-class lanes on the wire");
+        for c in QosClass::ALL {
+            let lane = classes.get(c.name()).unwrap_or_else(|| panic!("{} lane", c.name()));
+            assert!(lane.get("completed").is_some());
+            assert!(lane.get("active").is_some());
+            assert!(lane.get("rows").is_some());
+            assert!(lane.get("mean_wall_ms").is_some());
+            assert!(lane.get("deadline_hits").is_some());
+        }
+        let inter = classes.get("interactive").unwrap();
+        assert_eq!(inter.get("completed").unwrap().as_f64(), Some(1.0));
+        assert!(inter.get("rows").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            classes.get("batch").unwrap().get("completed").unwrap().as_f64(),
+            Some(0.0)
+        );
+    }
+
+    #[test]
+    fn deadline_truncation_is_honest_over_the_wire() {
+        // tol 0 forces all iterations; a tiny eval budget must come back
+        // as deadline_hit: true + converged: false, with a valid sample.
+        let eng = engine();
+        let line = r#"{"id":9,"sampler":"srds","n":36,"tol":0.0,"deadline":40,"seed":5}"#;
+        let v = json::parse(&handle_line_engine(&eng, "gmm_toy2d", line)).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{v:?}");
+        assert_eq!(v.get("deadline_hit").unwrap().as_bool(), Some(true), "{v:?}");
+        assert_eq!(v.get("converged").unwrap().as_bool(), Some(false));
+        let sample = v.get("sample").unwrap().as_f32_vec().unwrap();
+        assert!(sample.iter().all(|x| x.is_finite()));
+        let classes = v.get("classes").unwrap();
+        assert_eq!(
+            classes.get("standard").unwrap().get("deadline_hits").unwrap().as_f64(),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn overloaded_response_is_structured() {
+        let v = overloaded_response(42, 2);
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(42.0));
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("error_kind").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(v.get("max_inflight").unwrap().as_f64(), Some(2.0));
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("overloaded"));
+        // Round-trips through the wire serialization.
+        let parsed = json::parse(&json::to_string(&v)).unwrap();
+        assert_eq!(parsed.get("error_kind").unwrap().as_str(), Some("overloaded"));
     }
 
     #[test]

@@ -115,6 +115,8 @@ fn tcp_server_round_trip() {
                 model_name: "gmm_toy2d".into(),
                 factory,
                 batch: srds::batching::BatchPolicy::default(),
+                max_inflight: srds::server::DEFAULT_MAX_INFLIGHT,
+                default_deadline: None,
             },
         );
     });

@@ -6,6 +6,15 @@
 //! the serve loop runs every request (all four registry samplers at
 //! once here) on the engine's dispatcher + worker threads only — there
 //! is no per-request thread for this test to accidentally depend on.
+//!
+//! The server runs with a tight `max_inflight = 2` admission gate while
+//! each client pipelines four requests, so the gate's shed path is
+//! exercised for real: over-cap requests come back *immediately* as
+//! structured `error_kind: "overloaded"` lines (the read loop never
+//! stalls — the pre-QoS behavior of parking the connection gave clients
+//! nothing to back off on), and the clients here do what a production
+//! client would: correlate the shed id, back off, resend. Every request
+//! eventually succeeds and every sample still matches its solo run.
 
 use srds::batching::BatchPolicy;
 use srds::data::make_gmm;
@@ -33,9 +42,10 @@ fn concurrent_tcp_clients_get_solo_equivalent_samples() {
             factory: factory.clone(),
             batch: BatchPolicy::default(),
             // A tight per-connection admission cap: with 4 pipelined
-            // requests per client this also exercises the gate (the read
-            // loop stalls until a completion callback frees a slot).
+            // requests per client the shed path fires and the clients
+            // must retry on the structured overloaded error.
             max_inflight: 2,
+            default_deadline: None,
         };
         std::thread::spawn(move || {
             let _ = serve_on(listener, cfg);
@@ -52,7 +62,7 @@ fn concurrent_tcp_clients_get_solo_equivalent_samples() {
             let mut reader = BufReader::new(stream);
             // Pipeline four requests per connection, cycling samplers so
             // different kinds are in flight at once across clients.
-            let mut lines = Vec::new();
+            let mut lines: HashMap<u64, String> = HashMap::new();
             for j in 0..4u64 {
                 let id = c * 100 + j;
                 let sampler = SAMPLERS[((c + j) % 4) as usize];
@@ -61,22 +71,45 @@ fn concurrent_tcp_clients_get_solo_equivalent_samples() {
                     seed = 1000 + id
                 );
                 writeln!(writer, "{line}").unwrap();
-                lines.push((id, line));
+                lines.insert(id, line);
             }
             writer.flush().unwrap();
-            // Responses stream back in completion order; correlate by id.
+            // Responses stream back in completion order; correlate by
+            // id. Overloaded sheds are retried (with a short backoff) —
+            // the gate guarantees progress, so every id succeeds
+            // eventually.
             let mut got: HashMap<u64, Vec<f32>> = HashMap::new();
+            let mut sheds = 0u32;
             let mut buf = String::new();
             while got.len() < lines.len() && reader.read_line(&mut buf).unwrap() > 0 {
                 let v = srds::json::parse(buf.trim()).unwrap();
-                assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{buf}");
                 let id = v.get("id").unwrap().as_f64().unwrap() as u64;
+                if v.get("ok").unwrap().as_bool() == Some(false) {
+                    // The only acceptable failure is the structured
+                    // admission shed; anything else is a real bug.
+                    assert_eq!(
+                        v.get("error_kind").and_then(|k| k.as_str()),
+                        Some("overloaded"),
+                        "unexpected error line: {buf}"
+                    );
+                    assert_eq!(v.get("max_inflight").unwrap().as_f64(), Some(2.0), "{buf}");
+                    sheds += 1;
+                    assert!(sheds < 1000, "admission gate never admitted id {id}");
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    writeln!(writer, "{}", lines[&id]).unwrap();
+                    writer.flush().unwrap();
+                    buf.clear();
+                    continue;
+                }
                 assert!(
                     v.get("batch_occupancy").unwrap().as_f64().unwrap() >= 1.0,
                     "{buf}"
                 );
                 // The task-table depth gauge rides every engine response.
                 assert!(v.get("active_tasks").unwrap().as_f64().unwrap() >= 0.0, "{buf}");
+                // So do the QoS fields (these requests are all standard).
+                assert_eq!(v.get("priority").unwrap().as_str(), Some("standard"), "{buf}");
+                assert_eq!(v.get("deadline_hit").unwrap().as_bool(), Some(false), "{buf}");
                 let sample = v.get("sample").unwrap().as_f32_vec().unwrap();
                 let fresh = got.insert(id, sample).is_none();
                 assert!(fresh, "duplicate response for id {id}");
