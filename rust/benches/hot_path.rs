@@ -44,7 +44,7 @@ fn step_loop(dim: usize, batch: usize, iters: usize) -> Value {
             for st in states.iter() {
                 stage.push_row(st, s0, s0 + 1e-3, 0, None);
             }
-            let out = stage.step(&be);
+            let out = stage.execute(&be);
             for (r, st) in states.iter_mut().enumerate() {
                 st.as_mut_slice().copy_from_slice(&out[r * dim..(r + 1) * dim]);
             }

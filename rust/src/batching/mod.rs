@@ -53,6 +53,7 @@ pub struct PendingRow {
 /// [`crate::solvers::StepBackend::step_into`] call. All rows must share
 /// one guidance weight and maskedness — the engine's batch key
 /// guarantees exactly that.
+// lint: hot-path
 pub fn stage_rows(rows: &[PendingRow], stage: &mut BatchStage) {
     stage.reset(rows.first().map(|r| r.guidance).unwrap_or(0.0));
     for r in rows {
@@ -162,6 +163,7 @@ impl Batcher {
 
     /// Push a row onto its class lane; returns `false` (back-pressure)
     /// when the batcher is at `max_queue` total rows.
+    // lint: hot-path
     pub fn push(&mut self, row: PendingRow) -> bool {
         if self.pending() >= self.policy.max_queue {
             return false;
@@ -182,6 +184,7 @@ impl Batcher {
     /// FIFO-queue analogue of the old worker pool's priority heap.
     /// Urgency is *within-class* only: a batch-class spine never jumps
     /// interactive rows (class isolation is the DRR invariant).
+    // lint: hot-path
     pub fn push_urgent(&mut self, row: PendingRow) -> bool {
         if self.pending() >= self.policy.max_queue {
             return false;
@@ -282,6 +285,7 @@ impl Batcher {
     /// workers instead of fusing everything onto one: the cap is
     /// `ceil(pending / idle_workers)` there, so fusion only grows once
     /// every worker already has work.
+    // lint: hot-path
     pub fn take_up_to(&mut self, cap: usize) -> Vec<PendingRow> {
         let avail = self.pending().min(cap);
         let take = self
@@ -294,6 +298,7 @@ impl Batcher {
             // No bucket fits under `avail`: drain it whole (it is below
             // the smallest bucket, so downstream pads it up to one).
             .unwrap_or(avail);
+        // lint-allow(hot-path-alloc): the returned batch is the worker handoff — O(batch) row handles, not state copies
         let mut batch: Vec<PendingRow> = Vec::with_capacity(take);
         // Weighted DRR: the cursor *stays on a lane until its deficit is
         // spent* (or the lane empties), and a lane's deficit recharges

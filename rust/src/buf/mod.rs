@@ -24,7 +24,7 @@
 //!   write first, share after.
 //! * [`BatchStage`] — a reusable flat staging buffer for batched
 //!   [`StepRequest`]s: callers push rows (`x`, `s_from`, `s_to`, `seed`,
-//!   per-row mask) into persistent vectors and [`BatchStage::step`]
+//!   per-row mask) into persistent vectors and [`BatchStage::execute`]
 //!   executes the whole batch via [`StepBackend::step_into`] into a
 //!   persistent output buffer. After warm-up a stage never reallocates.
 //!
@@ -68,6 +68,7 @@ struct PoolShared {
 
 impl PoolShared {
     /// Return a slab to its bucket (or free it past the cap).
+    // lint: hot-path
     fn put(&self, data: Box<[f32]>) {
         self.live.fetch_sub(1, Ordering::Relaxed);
         let mut free = self.free.lock().unwrap();
@@ -119,6 +120,7 @@ impl BufPool {
     /// Check out a buffer of exactly `len` floats. Contents are
     /// unspecified (recycled slabs keep their old values) — write before
     /// reading.
+    // lint: hot-path
     pub fn get(&self, len: usize) -> StateBuf {
         let recycled = self.shared.free.lock().unwrap().get_mut(&len).and_then(Vec::pop);
         let data = match recycled {
@@ -128,6 +130,7 @@ impl BufPool {
             }
             None => {
                 self.shared.misses.fetch_add(1, Ordering::Relaxed);
+                // lint-allow(hot-path-alloc): the pool miss path is the one sanctioned allocation site
                 vec![0.0f32; len].into_boxed_slice()
             }
         };
@@ -315,6 +318,7 @@ impl BatchStage {
     /// Stage one row. Rows of one batch must agree on maskedness (the
     /// engine's batch key guarantees it; direct callers pass one
     /// conditioning per run).
+    // lint: hot-path
     pub fn push_row(&mut self, x: &[f32], s_from: f32, s_to: f32, seed: u64, mask: Option<&[f32]>) {
         debug_assert!(
             self.s_from.is_empty() || self.has_mask == mask.is_some(),
@@ -339,7 +343,7 @@ impl BatchStage {
     }
 
     /// The staged flat `(rows, dim)` input states (pre-step values; they
-    /// survive [`BatchStage::step`], which ParaDiGMS's drift rebuild
+    /// survive [`BatchStage::execute`], which ParaDiGMS's drift rebuild
     /// reads).
     pub fn x(&self) -> &[f32] {
         &self.x
@@ -351,8 +355,11 @@ impl BatchStage {
     }
 
     /// Execute the staged batch via [`StepBackend::step_into`] into the
-    /// persistent output buffer and return it.
-    pub fn step(&mut self, backend: &dyn StepBackend) -> &[f32] {
+    /// persistent output buffer and return it. (Named `execute` rather
+    /// than `step` so the srds-lint ban on the allocating
+    /// `StepBackend::step` convenience stays a clean lexical check.)
+    // lint: hot-path
+    pub fn execute(&mut self, backend: &dyn StepBackend) -> &[f32] {
         let rows = self.s_from.len();
         let d = backend.dim();
         sized(&mut self.out, rows * d);
@@ -485,7 +492,7 @@ mod tests {
             stage.push_row(&[1.0 + trial as f32, 2.0], 0.2, 0.3, 0, None);
             stage.push_row(&[3.0, 4.0], 0.4, 0.5, 1, None);
             assert_eq!(stage.rows(), 2);
-            let out = stage.step(&be);
+            let out = stage.execute(&be);
             assert_eq!(out.len(), 4);
             // ZeroModel DDIM: x' = c1·x with c2·0 — rows keep their order.
             let c1 = crate::schedule::sqrt_ab(0.3) / crate::schedule::sqrt_ab(0.2);
@@ -503,7 +510,7 @@ mod tests {
         assert_eq!(stage.rows(), 2);
         // The staged mask is the row-major concatenation.
         let be = NativeBackend::new(StdArc::new(ZeroModel { dim: 1 }), Solver::Ddim);
-        stage.step(&be);
+        stage.execute(&be);
         assert_eq!(stage.out().len(), 2);
     }
 }

@@ -86,7 +86,7 @@ pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> S
         for (j, xj) in x.iter().enumerate().take(hi).skip(lo) {
             stage.push_row(xj, grid.s(j), grid.s(j + 1), spec.seed, spec.cond.mask_slice());
         }
-        stage.step(backend);
+        stage.execute(backend);
         total_evals += rows as u64 * epc;
         sweeps += 1;
 

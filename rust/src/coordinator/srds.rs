@@ -26,6 +26,7 @@ use std::time::Instant;
 /// written into `out`. Single row — the sample mask *is* the row mask,
 /// so there is no tiling on the coarse path at all (it used to re-tile
 /// on every call).
+// lint: hot-path
 fn coarse_step(
     backend: &dyn StepBackend,
     x: &[f32],
@@ -69,6 +70,7 @@ pub(crate) fn corrector(y: &[f32], g_new: &[f32], g_old: &[f32], out: &mut [f32]
 ///
 /// Returns the accounting pair `(serial_fine_steps, total_fine_steps)`;
 /// the per-block results are left in `y`.
+// lint: hot-path
 #[allow(clippy::too_many_arguments)]
 fn fine_solves(
     backend: &dyn StepBackend,
@@ -106,7 +108,7 @@ fn fine_solves(
             break;
         }
         let rows = stage.rows();
-        let out = stage.step(backend);
+        let out = stage.execute(backend);
         let mut r = 0usize;
         for (j, yj) in y.iter_mut().enumerate() {
             if t >= part.block_len(j) {

@@ -340,7 +340,9 @@ impl Engine {
         self.solver
     }
 
+    // lint: request-path
     fn send(&self, msg: Msg) {
+        // lint-allow(panic-policy): a poisoned sender mutex or dead dispatcher is process-fatal, not request-controlled
         self.tx.lock().unwrap().send(msg).expect("engine dispatcher alive");
     }
 
@@ -360,6 +362,7 @@ impl Engine {
     /// This is the serving path's shape — no thread ever blocks waiting
     /// for a request. The callback must be cheap and must not block (it
     /// runs inside the engine's event loop).
+    // lint: request-path
     pub fn submit_with<F>(&self, x0: Vec<f32>, spec: SamplerSpec, done: F)
     where
         F: FnOnce(SampleOutput, EngineStats) + Send + 'static,
@@ -406,6 +409,7 @@ impl Drop for Engine {
     }
 }
 
+// lint: hot-path
 fn worker_loop(backend: &dyn StepBackend, work: &WorkQueue, done_tx: &Sender<Msg>, pool: &BufPool) {
     let d = backend.dim();
     // One persistent staging buffer per worker: batch assembly reuses it
@@ -427,7 +431,7 @@ fn worker_loop(backend: &dyn StepBackend, work: &WorkQueue, done_tx: &Sender<Msg
         };
         let Some(batch) = batch else { break };
         stage_rows(&batch.rows, &mut stage);
-        let out = stage.step(backend);
+        let out = stage.execute(backend);
         // De-batch into pooled per-row buffers: tasks receive refcounted
         // StateBufs they can store and re-share without further copies.
         let outs = batch
@@ -435,6 +439,7 @@ fn worker_loop(backend: &dyn StepBackend, work: &WorkQueue, done_tx: &Sender<Msg
             .iter()
             .enumerate()
             .map(|(i, r)| (r.tag, pool.take(&out[i * d..(i + 1) * d])))
+            // lint-allow(hot-path-alloc): O(batch) channel payload of pooled bufs; pool.take recycles the slabs
             .collect();
         if done_tx.send(Msg::BatchDone { outs }).is_err() {
             break;
@@ -563,12 +568,15 @@ impl Dispatcher {
     }
 
     /// Returns `true` on shutdown.
+    // lint: hot-path
+    // lint: request-path
     fn handle(&mut self, msg: Msg) -> bool {
         match msg {
             Msg::Shutdown => return true,
             Msg::Submit { x0, spec, reply } => {
                 let id = self.next_id;
                 self.next_id += 1;
+                // lint-allow(hot-path-alloc): Arc refcount bump, not a buffer copy
                 let mask = spec.cond.mask.clone();
                 let guidance = spec.cond.guidance;
                 let seed = spec.seed;
@@ -598,6 +606,7 @@ impl Dispatcher {
                 // Group completions per owning task (preserving
                 // first-seen order) so a sweep task absorbs a whole
                 // batch's worth of its rows in one poll.
+                // lint-allow(hot-path-alloc): O(batch) per-task grouping scratch, amortized across a whole batch
                 let mut grouped: Vec<(u64, Vec<Completion>)> = Vec::new();
                 for (tag, out) in outs {
                     // Rows of already-finalized requests have no origin
@@ -609,6 +618,7 @@ impl Dispatcher {
                     let done = Completion { key: origin.key, out, batch_rows };
                     match grouped.iter_mut().find(|(r, _)| *r == origin.req) {
                         Some((_, v)) => v.push(done),
+                        // lint-allow(hot-path-alloc): one short completion vector per distinct task in the batch
                         None => grouped.push((origin.req, vec![done])),
                     }
                 }
@@ -624,13 +634,17 @@ impl Dispatcher {
         false
     }
 
+    // lint: hot-path
+    // lint: request-path
     fn enqueue_rows(&mut self, req: u64, rows: Vec<TaskRow>) {
         if rows.is_empty() {
             return;
         }
+        // lint-allow(panic-policy): invariant — rows only come out of a task that is still in the map
         let entry = self.tasks.get_mut(&req).expect("rows from a live task");
         entry.inflight += rows.len();
         let (mask, guidance, seed, class) =
+            // lint-allow(hot-path-alloc): Arc refcount bump, not a buffer copy
             (entry.mask.clone(), entry.guidance, entry.seed, entry.class);
         for row in rows {
             let tag = self.next_row;
@@ -642,6 +656,7 @@ impl Dispatcher {
                     x: row.x,
                     s_from: row.s_from,
                     s_to: row.s_to,
+                    // lint-allow(hot-path-alloc): Arc refcount bump, not a buffer copy
                     mask: mask.clone(),
                     guidance,
                     seed,
@@ -652,18 +667,21 @@ impl Dispatcher {
         }
     }
 
+    // lint: hot-path
+    // lint: request-path
     fn push_row(&mut self, row: PendingRow, urgent: bool) {
         let key = batch_key(&row);
         let batcher = self
             .batchers
             .entry(key)
-            .or_insert_with(|| Batcher::new(self.policy.clone()));
+            .or_insert_with(|| Batcher::new(self.policy.clone())); // lint-allow(hot-path-alloc): once per new batch key, not per row
         // The dispatcher is the only producer; queue overflow here means
         // admission control above the engine failed, not a row to drop.
         let pushed = if urgent { batcher.push_urgent(row) } else { batcher.push(row) };
         assert!(pushed, "engine batcher overflow (raise BatchPolicy::max_queue)");
     }
 
+    // lint: request-path
     fn maybe_finalize(&mut self, req: u64) {
         let done = self.tasks.get(&req).map(|e| e.task.finished()).unwrap_or(false);
         if !done {
@@ -708,6 +726,8 @@ impl Dispatcher {
     }
 
     /// Work-conserving, spread-first flush. See the module docs.
+    // lint: hot-path
+    // lint: request-path
     fn flush(&mut self) {
         loop {
             let idle = self.workers.saturating_sub(self.in_flight);
@@ -728,6 +748,7 @@ impl Dispatcher {
                 .min_by_key(|(_, b)| b.oldest_since())
                 .map(|(k, _)| *k);
             let Some(key) = key else { return };
+            // lint-allow(panic-policy): the key was just selected from this very map
             let batcher = self.batchers.get_mut(&key).unwrap();
             let cap = batcher.pending().div_ceil(idle);
             let mut rows = batcher.take_up_to(cap);
@@ -756,6 +777,7 @@ impl Dispatcher {
             }
             self.in_flight += 1;
             let (lock, cv) = &*self.work;
+            // lint-allow(panic-policy): a poisoned work queue means a panicked worker — process-fatal, not request-controlled
             lock.lock().unwrap().queue.push_back(ExecBatch { rows });
             cv.notify_one();
         }

@@ -992,15 +992,19 @@ mod tests {
                 .map(|r| {
                     steps += 1;
                     assert!(steps < 2_000_000, "task runaway");
-                    let out = backend.step(&StepRequest {
-                        x: &r.x,
-                        s_from: &[r.s_from],
-                        s_to: &[r.s_to],
-                        mask: spec.cond.mask_slice(),
-                        guidance: spec.cond.guidance,
-                        seeds: &[spec.seed],
-                    });
-                    Completion { key: r.key, out: pool.take(&out), batch_rows: 1 }
+                    let mut out = pool.get(r.x.len());
+                    backend.step_into(
+                        &StepRequest {
+                            x: &r.x,
+                            s_from: &[r.s_from],
+                            s_to: &[r.s_to],
+                            mask: spec.cond.mask_slice(),
+                            guidance: spec.cond.guidance,
+                            seeds: &[spec.seed],
+                        },
+                        out.as_mut_slice(),
+                    );
+                    Completion { key: r.key, out, batch_rows: 1 }
                 })
                 .collect();
             rows = task.poll(done);

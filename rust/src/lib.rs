@@ -39,6 +39,13 @@
 //! See `DESIGN.md` at the repository root for the layer inventory, the
 //! `Sampler` trait / registry design, and the JSON wire protocol; the
 //! benches under `rust/benches/` print the paper-vs-measured tables.
+//!
+//! The contracts above are not just prose: `tools/srds-lint` (a
+//! standalone, dependency-free analyzer run in CI) mechanically checks
+//! the zero-copy hot paths, the lock order, the request-path panic
+//! policy, and wire-schema/DESIGN.md sync. See the "Checked invariants"
+//! section of `DESIGN.md` for the rule list and the in-source marker
+//! and waiver syntax.
 
 pub mod batching;
 pub mod buf;

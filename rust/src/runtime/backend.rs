@@ -118,6 +118,7 @@ impl PjrtBackend {
 
     /// Execute one padded bucket, writing the `rows * dim` real outputs
     /// into `out` (pad rows are discarded).
+    // lint: hot-path
     #[allow(clippy::too_many_arguments)]
     fn run_chunk(
         &self,
@@ -146,6 +147,7 @@ impl PjrtBackend {
         pad(xb, x, d);
         pad(sf, s_from, 1);
         pad(st, s_to, 1);
+        // lint-allow(hot-path-alloc): PJRT literal marshalling materializes device buffers; the host padding scratch above is reused
         let mut lits: Vec<xla::Literal> = vec![lit2(xb, bucket, d)?, lit1(sf), lit1(st)];
         if self.guided {
             match mask {
@@ -185,6 +187,7 @@ impl StepBackend for PjrtBackend {
         self.solver
     }
 
+    // lint: hot-path
     fn step_into(&self, req: &StepRequest, out: &mut [f32]) {
         let rows = req.rows();
         let d = self.dim;

@@ -112,6 +112,7 @@ pub struct SampleRequest {
 }
 
 impl SampleRequest {
+    // lint: request-path
     pub fn from_json(v: &Value) -> Result<Self> {
         let num = |k: &str, default: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(default);
         let norm = match v.get("norm").and_then(|x| x.as_str()) {
@@ -192,6 +193,7 @@ impl SampleRequest {
     }
 }
 
+// lint: request-path
 fn error_response(id: u64, msg: String) -> Value {
     json::obj(vec![
         ("id", Value::Num(id as f64)),
@@ -205,6 +207,7 @@ fn error_response(id: u64, msg: String) -> Value {
 /// read loop. `error_kind: "overloaded"` is the machine-readable field
 /// clients key their backoff on (the human-readable `error` text is not
 /// a contract); `max_inflight` tells them the cap they hit.
+// lint: request-path
 pub fn overloaded_response(id: u64, max_inflight: usize) -> Value {
     json::obj(vec![
         ("id", Value::Num(id as f64)),
@@ -223,6 +226,7 @@ pub fn overloaded_response(id: u64, max_inflight: usize) -> Value {
 
 /// Conditioning for a request: the mask comes from the dataset zoo when
 /// the model is a conditional GMM.
+// lint: request-path
 fn request_cond(model_name: &str, req: &SampleRequest) -> Conditioning {
     match req.class {
         Some(c) if model_name.contains("latent_cond") => {
@@ -235,6 +239,7 @@ fn request_cond(model_name: &str, req: &SampleRequest) -> Conditioning {
 
 /// Resolve the request's sampler kind and build its validated spec, or
 /// the error line to send back.
+// lint: request-path
 fn request_spec(model_name: &str, req: &SampleRequest) -> std::result::Result<SamplerSpec, Value> {
     let reg = registry();
     let Some(sampler) = reg.parse(&req.sampler) else {
@@ -259,6 +264,7 @@ fn request_spec(model_name: &str, req: &SampleRequest) -> std::result::Result<Sa
 /// fields next to the per-request ones in `out.stats` (the snapshot is
 /// taken at completion — for callback-submitted requests the engine's
 /// dispatcher provides it consistently at finalize time).
+// lint: request-path
 fn success_response(
     req: &SampleRequest,
     sampler_name: &str,
@@ -421,6 +427,7 @@ impl PendingResponse {
 /// not block — the serve loop's forwards the still-unserialized
 /// response to the connection's writer thread, which does the JSON
 /// formatting via [`PendingResponse::into_line`].
+// lint: request-path
 pub fn submit_line_engine(
     engine: &Engine,
     model_name: &str,
@@ -439,6 +446,7 @@ pub fn submit_line_engine(
 /// request never reaches the engine), [`submit_line_engine`] after
 /// parsing. Validation errors invoke `done` inline; otherwise `done`
 /// fires from the engine's completion callback.
+// lint: request-path
 pub fn submit_request_engine(
     engine: &Engine,
     model_name: &str,
@@ -464,6 +472,7 @@ pub fn submit_request_engine(
     });
 }
 
+// lint: request-path
 fn line_to_request(line: &str) -> std::result::Result<SampleRequest, Value> {
     match json::parse(line) {
         Ok(v) => match SampleRequest::from_json(&v) {
@@ -589,6 +598,7 @@ pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
     Ok(())
 }
 
+// lint: request-path
 fn handle_conn(
     stream: TcpStream,
     engine: Arc<Engine>,
@@ -634,6 +644,7 @@ fn handle_conn(
         // overloaded error instead of stalling the read loop — the
         // client keeps receiving completions and decides when to retry.
         {
+            // lint-allow(panic-policy): a poisoned admission gate means a panicked reader thread — process-fatal, not request-controlled
             let mut inflight = gate.lock().unwrap();
             if *inflight >= max_inflight {
                 drop(inflight);
@@ -651,6 +662,7 @@ fn handle_conn(
         let gate = gate.clone();
         submit_request_engine(&engine, &model_name, req, move |resp| {
             let _ = resp_tx.send(resp);
+            // lint-allow(panic-policy): poisoned admission gate, see above
             *gate.lock().unwrap() -= 1;
         });
     }

@@ -80,6 +80,7 @@ impl StepBackend for NativeBackend {
         self.solver
     }
 
+    // lint: hot-path
     fn step_into(&self, req: &StepRequest, out: &mut [f32]) {
         let b = req.rows();
         let d = self.model.dim();

@@ -1,0 +1,10 @@
+// Fixture: a waiver suppresses exactly its own rule. The line below
+// violates both hot-path-alloc (.clone) and panic-policy (.unwrap), but
+// only hot-path-alloc is waived — panic-policy must still fire.
+
+// lint: hot-path
+// lint: request-path
+fn both(v: &Option<Vec<f32>>) -> Vec<f32> {
+    // lint-allow(hot-path-alloc): fixture waives only the allocation
+    v.clone().unwrap()
+}

@@ -1,0 +1,20 @@
+// Fixture: allocations inside a `// lint: hot-path` fn must fire
+// hot-path-alloc; the same tokens in an unmarked fn must not.
+
+// lint: hot-path
+fn hot(xs: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    let copy = xs.to_vec();
+    let boxed = Box::new(copy.len());
+    out.push(*boxed as f32);
+    let doubled: Vec<f32> = xs.iter().map(|v| v * 2.0).collect();
+    out.extend(doubled);
+    out
+}
+
+fn cold(xs: &[f32]) -> Vec<f32> {
+    // Unmarked fn: vec! here is legal.
+    let mut out = vec![0.0f32; xs.len()];
+    out.copy_from_slice(xs);
+    out
+}

@@ -1,0 +1,15 @@
+// Fixture: fn `ab` acquires a then b; fn `ba` acquires b then a. The
+// per-file edges are acyclic within each fn but the global graph has the
+// a -> b -> a cycle, which cycle_findings must report exactly once.
+
+fn ab(a: &std::sync::Mutex<u32>, b: &std::sync::Mutex<u32>) {
+    let ga = a.lock().unwrap();
+    let gb = b.lock().unwrap();
+    drop((ga, gb));
+}
+
+fn ba(a: &std::sync::Mutex<u32>, b: &std::sync::Mutex<u32>) {
+    let gb = b.lock().unwrap();
+    let ga = a.lock().unwrap();
+    drop((ga, gb));
+}

@@ -1,0 +1,21 @@
+// Fixture: a solver step while a Mutex guard is live must fire
+// lock-order; the same step after the guard's block has closed must not.
+
+fn held(m: &std::sync::Mutex<u32>, be: &dyn StepBackend, req: &StepRequest, out: &mut [f32]) {
+    let g = m.lock().unwrap();
+    be.step_into(req, out);
+    drop(g);
+}
+
+fn released(m: &std::sync::Mutex<u32>, be: &dyn StepBackend, req: &StepRequest, out: &mut [f32]) {
+    {
+        let g = m.lock().unwrap();
+        drop(g);
+    }
+    be.step_into(req, out);
+}
+
+fn temporary(m: &std::sync::Mutex<u32>, be: &dyn StepBackend, req: &StepRequest, out: &mut [f32]) {
+    *m.lock().unwrap() += 1;
+    be.step_into(req, out);
+}

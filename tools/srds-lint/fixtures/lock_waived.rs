@@ -1,0 +1,16 @@
+// Fixture: a waived held-across-step finding and a waived edge (which is
+// then excluded from the global lock graph).
+
+fn held(m: &std::sync::Mutex<u32>, be: &dyn StepBackend, req: &StepRequest, out: &mut [f32]) {
+    let g = m.lock().unwrap();
+    // lint-allow(lock-order): fixture exercises the waiver path
+    be.step_into(req, out);
+    drop(g);
+}
+
+fn ab(a: &std::sync::Mutex<u32>, b: &std::sync::Mutex<u32>) {
+    let ga = a.lock().unwrap();
+    // lint-allow(lock-order): fixture edge waiver keeps this out of the graph
+    let gb = b.lock().unwrap();
+    drop((ga, gb));
+}

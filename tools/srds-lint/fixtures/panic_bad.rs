@@ -1,0 +1,22 @@
+// Fixture: unwrap/expect/panic! in a `// lint: request-path` fn must fire
+// panic-policy; the same tokens in an unmarked fn must not, and
+// `unwrap_or(..)` never matches.
+
+// lint: request-path
+fn parse(v: &str) -> u32 {
+    let x: u32 = v.parse().unwrap();
+    let y: u32 = v.parse().expect("request field");
+    if x > 10 {
+        panic!("too big");
+    }
+    x + y
+}
+
+// lint: request-path
+fn tolerant(v: &str) -> u32 {
+    v.parse().unwrap_or(0)
+}
+
+fn unmarked(v: &str) -> u32 {
+    v.parse().unwrap()
+}

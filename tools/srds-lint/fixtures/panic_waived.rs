@@ -1,0 +1,8 @@
+// Fixture: waived panic-policy findings do not fail the run.
+
+// lint: request-path
+fn parse(v: &str) -> u32 {
+    // lint-allow(panic-policy): fixture exercises the waiver path
+    let x: u32 = v.parse().unwrap();
+    x
+}

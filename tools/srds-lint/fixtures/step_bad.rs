@@ -1,0 +1,17 @@
+// Fixture: the allocating StepBackend::step convenience is banned in
+// production code but legal inside #[cfg(test)] items.
+
+fn runner(be: &dyn StepBackend, req: &StepRequest) -> Vec<f32> {
+    be.step(req)
+}
+
+fn fine(be: &dyn StepBackend, req: &StepRequest, out: &mut [f32]) {
+    be.step_into(req, out);
+}
+
+#[cfg(test)]
+mod tests {
+    fn exempt(be: &dyn StepBackend, req: &StepRequest) -> Vec<f32> {
+        be.step(req)
+    }
+}

@@ -1,0 +1,23 @@
+// Fixture server: parses two request fields and serializes three
+// response fields, mirroring the shape of rust/src/server/mod.rs.
+
+impl SampleRequest {
+    fn from_json(v: &Value) -> Result<Self> {
+        let num = |k: &str, default: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(default);
+        Ok(SampleRequest {
+            id: num("id", 0.0) as u64,
+            n: v.get("n").and_then(|x| x.as_usize()).unwrap_or(8),
+        })
+    }
+}
+
+fn success_response(r: &SampleRequest, ok: bool) -> Value {
+    json::obj(vec![
+        ("id", Value::Num(r.id as f64)),
+        ("ok", Value::Bool(ok)),
+        (
+            "wall_ms",
+            Value::Num(0.0),
+        ),
+    ])
+}

@@ -1,0 +1,1090 @@
+//! `srds-lint` — in-repo invariant analyzer for the SRDS serving crate.
+//!
+//! The serving spine rests on contracts that `clippy` cannot know and that
+//! external lint frameworks cannot be vendored into a hermetic build:
+//!
+//! * **hot-path-alloc** — regions marked `// lint: hot-path` (the
+//!   `step_into` implementations, `BatchStage::execute`, the dispatcher
+//!   poll/flush loop, the batcher drain) must not allocate.
+//! * **no-step-convenience** — the allocating `StepBackend::step` wrapper
+//!   is banned outside `#[cfg(test)]` code.
+//! * **lock-order** — per-function `Mutex` acquisition sequences must form
+//!   an acyclic graph, and no lock may be held across a solver step.
+//! * **panic-policy** — functions marked `// lint: request-path` (the
+//!   request-controlled parse/dispatch paths) must not `unwrap`/`expect`/
+//!   `panic!`.
+//! * **wire-schema-sync** — the DESIGN.md wire tables (marked by
+//!   `<!-- lint-anchor: ... -->` comments) must match the fields the
+//!   server actually parses and serializes, in both directions.
+//!
+//! Any finding can be waived in place with
+//! `// lint-allow(<rule>): <reason>` on (or directly above) the offending
+//! line; waivers are counted and printed so they stay visible.
+//!
+//! The analysis is a deliberate *lexical* approximation: a byte-level
+//! lexer blanks comments and string/char literals, then token scans run
+//! over function spans. No `syn`, no dependencies — the tool builds
+//! hermetically, like the crate it checks.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+/// The five checked invariants. Each is independently toggleable from the
+/// CLI and independently waivable in source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    HotPathAlloc,
+    NoStepConvenience,
+    LockOrder,
+    PanicPolicy,
+    WireSchemaSync,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 5] = [
+        Rule::HotPathAlloc,
+        Rule::NoStepConvenience,
+        Rule::LockOrder,
+        Rule::PanicPolicy,
+        Rule::WireSchemaSync,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::HotPathAlloc => "hot-path-alloc",
+            Rule::NoStepConvenience => "no-step-convenience",
+            Rule::LockOrder => "lock-order",
+            Rule::PanicPolicy => "panic-policy",
+            Rule::WireSchemaSync => "wire-schema-sync",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rule> {
+        Rule::ALL.into_iter().find(|r| r.name() == s)
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One violation (or waived would-be violation) at a source location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+    /// `Some(reason)` when a `lint-allow` waiver suppressed this finding.
+    pub waived: Option<String>,
+}
+
+/// A directed "held `from`, then acquired `to`" edge for the global lock
+/// graph. Edges survive per-file analysis so cycles across files are seen.
+#[derive(Debug, Clone)]
+pub struct LockEdge {
+    pub from: String,
+    pub to: String,
+    pub file: String,
+    pub line: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+/// Lexed view of one source file: the `code` buffer is byte-for-byte the
+/// input with comments and string/char-literal bytes blanked to spaces
+/// (newlines preserved), so token scans never match inside either.
+pub struct Lexed {
+    pub code: Vec<u8>,
+    /// Raw (unblanked) source, used for marker/waiver comment scans.
+    pub raw: String,
+    /// String literals as (start byte incl. quote, end byte excl., contents).
+    pub strings: Vec<(usize, usize, String)>,
+    /// Byte offset of each line start; index = line number - 1.
+    pub line_starts: Vec<usize>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+impl Lexed {
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, pos: usize) -> usize {
+        match self.line_starts.binary_search(&pos) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+}
+
+/// Blank comments and literals out of `src`. The lexer understands line
+/// comments, nested block comments, plain/raw/byte strings and char
+/// literals (distinguishing lifetimes), which is all the surface the
+/// checked crate uses.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut code = b.to_vec();
+    let mut strings = Vec::new();
+    let mut line_starts = vec![0usize];
+    for (i, &c) in b.iter().enumerate() {
+        if c == b'\n' && i + 1 < n {
+            line_starts.push(i + 1);
+        }
+    }
+
+    fn blank(code: &mut [u8], from: usize, to: usize) {
+        for x in code[from..to].iter_mut() {
+            if *x != b'\n' {
+                *x = b' ';
+            }
+        }
+    }
+
+    /// Scan a plain string body starting at the opening quote; returns one
+    /// past the closing quote.
+    fn scan_string(b: &[u8], open: usize) -> usize {
+        let mut j = open + 1;
+        while j < b.len() {
+            match b[j] {
+                b'\\' => j += 2,
+                b'"' => return j + 1,
+                _ => j += 1,
+            }
+        }
+        b.len()
+    }
+
+    /// Raw string `r##"..."##` starting at `open` (the `r`); returns
+    /// (content_start, end) or None if this is not a raw-string head.
+    fn scan_raw(b: &[u8], open: usize) -> Option<(usize, usize)> {
+        let mut k = open + 1;
+        let mut hashes = 0usize;
+        while k < b.len() && b[k] == b'#' {
+            hashes += 1;
+            k += 1;
+        }
+        if k >= b.len() || b[k] != b'"' {
+            return None;
+        }
+        let content = k + 1;
+        let mut e = content;
+        while e < b.len() {
+            if b[e] == b'"' {
+                let mut h = 0;
+                while h < hashes && e + 1 + h < b.len() && b[e + 1 + h] == b'#' {
+                    h += 1;
+                }
+                if h == hashes {
+                    return Some((content, e + 1 + hashes));
+                }
+            }
+            e += 1;
+        }
+        Some((content, b.len()))
+    }
+
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut code, i, j);
+            i = j;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut code, i, j);
+            i = j;
+        } else if c == b'"' {
+            let end = scan_string(b, i);
+            strings.push((i, end, String::from_utf8_lossy(&b[i + 1..end.saturating_sub(1)]).into_owned()));
+            blank(&mut code, i, end);
+            i = end;
+        } else if (c == b'r' || c == b'b') && (i == 0 || !is_ident(b[i - 1])) {
+            // r"..." / r#"..."# / b"..." / br"..." / b'x'
+            let raw_at = if c == b'r' {
+                Some(i)
+            } else if i + 1 < n && b[i + 1] == b'r' {
+                Some(i + 1)
+            } else {
+                None
+            };
+            if let Some((content, end)) = raw_at.and_then(|p| scan_raw(b, p)) {
+                strings.push((i, end, String::from_utf8_lossy(&b[content..end.saturating_sub(1)]).into_owned()));
+                blank(&mut code, i, end);
+                i = end;
+            } else if c == b'b' && i + 1 < n && b[i + 1] == b'"' {
+                let end = scan_string(b, i + 1);
+                strings.push((i, end, String::from_utf8_lossy(&b[i + 2..end.saturating_sub(1)]).into_owned()));
+                blank(&mut code, i, end);
+                i = end;
+            } else if c == b'b' && i + 1 < n && b[i + 1] == b'\'' {
+                let mut j = i + 2;
+                while j < n && b[j] != b'\'' {
+                    j += if b[j] == b'\\' { 2 } else { 1 };
+                }
+                blank(&mut code, i, (j + 1).min(n));
+                i = (j + 1).min(n);
+            } else {
+                i += 1;
+            }
+        } else if c == b'\'' {
+            // Char literal vs. lifetime: a literal is '\...' or 'x'.
+            if i + 1 < n && b[i + 1] == b'\\' {
+                let mut j = i + 2;
+                while j < n && b[j] != b'\'' {
+                    j += if b[j] == b'\\' { 2 } else { 1 };
+                }
+                blank(&mut code, i, (j + 1).min(n));
+                i = (j + 1).min(n);
+            } else if i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+                blank(&mut code, i, i + 3);
+                i += 3;
+            } else {
+                i += 1; // lifetime
+            }
+        } else {
+            i += 1;
+        }
+    }
+
+    Lexed { code, raw: src.to_string(), strings, line_starts }
+}
+
+/// Byte index one past the `}` matching the `{` at `open` (in blanked code).
+fn match_brace(code: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < code.len() {
+        match code[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    code.len()
+}
+
+/// Find `pat` in `code` at or after `from`; ident-boundary-checked on the
+/// left when the pattern starts with an identifier character.
+fn find_token(code: &[u8], from: usize, pat: &[u8]) -> Option<usize> {
+    let mut i = from;
+    while i + pat.len() <= code.len() {
+        if &code[i..i + pat.len()] == pat {
+            let ok_left = !is_ident(pat[0]) || i == 0 || !is_ident(code[i - 1]);
+            if ok_left {
+                return Some(i);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// `#[cfg(test)]`-gated byte spans (test modules and test fns).
+pub fn test_spans(lx: &Lexed) -> Vec<(usize, usize)> {
+    let code = &lx.code;
+    let pat = b"#[cfg(test)]";
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while let Some(p) = find_token(code, i, pat) {
+        // Skip further attributes / the item header to the body brace.
+        let mut j = p + pat.len();
+        while j < code.len() && code[j] != b'{' && code[j] != b';' {
+            j += 1;
+        }
+        if j < code.len() && code[j] == b'{' {
+            let end = match_brace(code, j);
+            spans.push((p, end));
+            i = end;
+        } else {
+            i = j + 1;
+        }
+    }
+    spans
+}
+
+fn in_spans(spans: &[(usize, usize)], pos: usize) -> bool {
+    spans.iter().any(|&(s, e)| pos >= s && pos < e)
+}
+
+/// One `fn` item with a body.
+pub struct FnSpan {
+    pub name: String,
+    /// Byte offset of the `fn` keyword.
+    pub decl: usize,
+    /// Body span: `{` offset .. one past `}`.
+    pub body: (usize, usize),
+}
+
+/// Extract every `fn name(..) { .. }` span (trait-method declarations
+/// without bodies and `fn(..)` pointer types are skipped).
+pub fn fn_spans(lx: &Lexed) -> Vec<FnSpan> {
+    let code = &lx.code;
+    let n = code.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 2 <= n {
+        let kw = code[i] == b'f'
+            && code[i + 1] == b'n'
+            && (i == 0 || !is_ident(code[i - 1]))
+            && (i + 2 >= n || !is_ident(code[i + 2]));
+        if !kw {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        while j < n && code[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < n && is_ident(code[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            i += 2; // `fn(` pointer type — no name follows
+            continue;
+        }
+        let name = String::from_utf8_lossy(&code[name_start..j]).into_owned();
+        // Body starts at the first `{` outside the generics/args/return
+        // type; a `;` first means a bodiless trait declaration.
+        let mut depth = 0i32;
+        let mut k = j;
+        let mut body_open = None;
+        while k < n {
+            match code[k] {
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b'{' if depth == 0 => {
+                    body_open = Some(k);
+                    break;
+                }
+                b';' if depth == 0 => break,
+                _ => {}
+            }
+            k += 1;
+        }
+        if let Some(open) = body_open {
+            let close = match_brace(code, open);
+            out.push(FnSpan { name, decl: i, body: (open, close) });
+        }
+        i = j;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Markers and waivers
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Marker {
+    HotPath,
+    RequestPath,
+}
+
+/// `// lint: hot-path` / `// lint: request-path` comment lines; each
+/// attaches to the first `fn` declared after it.
+pub fn markers(lx: &Lexed) -> Vec<(usize, Marker)> {
+    let mut out = Vec::new();
+    for (idx, line) in lx.raw.lines().enumerate() {
+        let t = line.trim();
+        let m = if t == "// lint: hot-path" {
+            Some(Marker::HotPath)
+        } else if t == "// lint: request-path" {
+            Some(Marker::RequestPath)
+        } else {
+            None
+        };
+        if let Some(m) = m {
+            out.push((idx + 1, m));
+        }
+    }
+    out
+}
+
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub line: usize,
+    pub rule: Rule,
+    pub reason: String,
+}
+
+/// Parse every `lint-allow(<rule>): <reason>` comment. Malformed rule
+/// names come back as findings so typos don't silently disable checks.
+pub fn waivers(lx: &Lexed, file: &str) -> (Vec<Waiver>, Vec<Finding>) {
+    let mut out = Vec::new();
+    let mut bad = Vec::new();
+    for (idx, line) in lx.raw.lines().enumerate() {
+        let Some(p) = line.find("lint-allow(") else { continue };
+        let rest = &line[p + "lint-allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            bad.push(Finding {
+                rule: Rule::WireSchemaSync,
+                file: file.to_string(),
+                line: idx + 1,
+                msg: "malformed lint-allow: missing `)`".into(),
+                waived: None,
+            });
+            continue;
+        };
+        let rule_name = rest[..close].trim();
+        let reason = rest[close + 1..].trim_start_matches(':').trim().to_string();
+        match Rule::parse(rule_name) {
+            Some(rule) => out.push(Waiver { line: idx + 1, rule, reason }),
+            None => bad.push(Finding {
+                rule: Rule::WireSchemaSync,
+                file: file.to_string(),
+                line: idx + 1,
+                msg: format!("lint-allow names unknown rule `{rule_name}`"),
+                waived: None,
+            }),
+        }
+    }
+    (out, bad)
+}
+
+/// Resolve the waiver covering a finding at `line`, if any: a waiver of
+/// the same rule on the same line, or directly above it (only blank lines,
+/// comments and attributes may intervene).
+fn find_waiver(waivers: &[Waiver], raw_lines: &[&str], line: usize, rule: Rule) -> Option<usize> {
+    if let Some(i) = waivers.iter().position(|w| w.line == line && w.rule == rule) {
+        return Some(i);
+    }
+    let mut l = line.saturating_sub(1);
+    while l >= 1 {
+        if let Some(i) = waivers.iter().position(|w| w.line == l && w.rule == rule) {
+            return Some(i);
+        }
+        let t = raw_lines.get(l - 1).map(|s| s.trim()).unwrap_or("");
+        if t.is_empty() || t.starts_with("//") || t.starts_with("#[") {
+            l -= 1;
+        } else {
+            break;
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Per-file analysis
+// ---------------------------------------------------------------------------
+
+/// Allocation tokens banned inside `// lint: hot-path` regions. Lexical on
+/// purpose: `.cloned()` iterator adapters and `unwrap_or(..)` do not match.
+const ALLOC_TOKENS: &[&str] = &[
+    "vec!",
+    "Vec::new",
+    "Vec::with_capacity",
+    ".to_vec(",
+    ".collect(",
+    ".collect::<",
+    "Box::new",
+    ".clone(",
+    ".to_string(",
+    ".to_owned(",
+    "format!",
+    "String::new",
+    "String::with_capacity",
+];
+
+/// Panic tokens banned inside `// lint: request-path` regions.
+/// `.unwrap()` is matched exactly so `unwrap_or(..)` stays legal.
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+/// Result of analyzing one file. `findings` includes waived entries (with
+/// `waived: Some(..)`); `edges` feed the global lock graph.
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub edges: Vec<LockEdge>,
+    pub unused_waivers: Vec<(usize, Rule, String)>,
+}
+
+pub fn analyze_file(file: &str, src: &str, rules: &[Rule]) -> FileReport {
+    let lx = lex(src);
+    let raw_lines: Vec<&str> = lx.raw.lines().collect();
+    let tests = test_spans(&lx);
+    let fns = fn_spans(&lx);
+    let (wv, mut findings) = waivers(&lx, file);
+    let mut used = vec![false; wv.len()];
+    let mut edges = Vec::new();
+
+    let enabled = |r: Rule| rules.contains(&r);
+
+    // Attach each marker to the first fn declared after it.
+    let mut hot_fns: Vec<usize> = Vec::new();
+    let mut req_fns: Vec<usize> = Vec::new();
+    for &(mline, m) in &markers(&lx) {
+        let target = fns
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| lx.line_of(f.decl) > mline)
+            .min_by_key(|(_, f)| f.decl)
+            .map(|(i, _)| i);
+        match target {
+            Some(i) => match m {
+                Marker::HotPath => hot_fns.push(i),
+                Marker::RequestPath => req_fns.push(i),
+            },
+            None => findings.push(Finding {
+                rule: if m == Marker::HotPath { Rule::HotPathAlloc } else { Rule::PanicPolicy },
+                file: file.to_string(),
+                line: mline,
+                msg: "lint marker is not followed by any fn".into(),
+                waived: None,
+            }),
+        }
+    }
+
+    let mut emit = |rule: Rule, line: usize, msg: String, findings: &mut Vec<Finding>| {
+        let waived = find_waiver(&wv, &raw_lines, line, rule).map(|i| {
+            used[i] = true;
+            wv[i].reason.clone()
+        });
+        findings.push(Finding { rule, file: file.to_string(), line, msg, waived });
+    };
+
+    // --- hot-path-alloc -----------------------------------------------------
+    if enabled(Rule::HotPathAlloc) {
+        for &fi in &hot_fns {
+            let f = &fns[fi];
+            for tok in ALLOC_TOKENS {
+                let mut at = f.body.0;
+                while let Some(p) = find_token(&lx.code, at, tok.as_bytes()) {
+                    if p >= f.body.1 {
+                        break;
+                    }
+                    emit(
+                        Rule::HotPathAlloc,
+                        lx.line_of(p),
+                        format!("allocation in hot-path fn `{}`: `{}`", f.name, tok.trim_end_matches('(')),
+                        &mut findings,
+                    );
+                    at = p + tok.len();
+                }
+            }
+        }
+    }
+
+    // --- no-step-convenience ------------------------------------------------
+    if enabled(Rule::NoStepConvenience) {
+        let mut at = 0usize;
+        while let Some(p) = find_token(&lx.code, at, b".step(") {
+            if !in_spans(&tests, p) {
+                emit(
+                    Rule::NoStepConvenience,
+                    lx.line_of(p),
+                    "allocating `StepBackend::step` call outside tests (use `step_into` with a pooled buffer)".into(),
+                    &mut findings,
+                );
+            }
+            at = p + ".step(".len();
+        }
+    }
+
+    // --- panic-policy -------------------------------------------------------
+    if enabled(Rule::PanicPolicy) {
+        for &fi in &req_fns {
+            let f = &fns[fi];
+            for tok in PANIC_TOKENS {
+                let mut at = f.body.0;
+                while let Some(p) = find_token(&lx.code, at, tok.as_bytes()) {
+                    if p >= f.body.1 {
+                        break;
+                    }
+                    emit(
+                        Rule::PanicPolicy,
+                        lx.line_of(p),
+                        format!(
+                            "`{}` in request-path fn `{}`",
+                            tok.trim_end_matches('('),
+                            f.name
+                        ),
+                        &mut findings,
+                    );
+                    at = p + tok.len();
+                }
+            }
+        }
+    }
+
+    // --- lock-order ---------------------------------------------------------
+    if enabled(Rule::LockOrder) {
+        for f in &fns {
+            if in_spans(&tests, f.decl) {
+                continue;
+            }
+            lock_scan(&lx, f, file, &wv, &raw_lines, &mut used, &mut findings, &mut edges);
+        }
+    }
+
+    let unused_waivers = wv
+        .iter()
+        .zip(&used)
+        .filter(|(_, &u)| !u)
+        .map(|(w, _)| (w.line, w.rule, w.reason.clone()))
+        .collect();
+
+    FileReport { findings, edges, unused_waivers }
+}
+
+/// Scan one fn body for `.lock(` acquisitions; within each guard's
+/// estimated scope, record held→acquired edges and flag solver steps.
+#[allow(clippy::too_many_arguments)]
+fn lock_scan(
+    lx: &Lexed,
+    f: &FnSpan,
+    file: &str,
+    wv: &[Waiver],
+    raw_lines: &[&str],
+    used: &mut [bool],
+    findings: &mut Vec<Finding>,
+    edges: &mut Vec<LockEdge>,
+) {
+    let code = &lx.code;
+    let (body_start, body_end) = f.body;
+    let mut at = body_start;
+    while let Some(p) = find_token(code, at, b".lock(") {
+        if p >= body_end {
+            break;
+        }
+        at = p + ".lock(".len();
+        let name = receiver_name(code, p);
+
+        // Statement start: walk back to the previous `;`/`{`/`}`.
+        let mut s = p;
+        while s > body_start && !matches!(code[s - 1], b';' | b'{' | b'}') {
+            s -= 1;
+        }
+        while s < p && code[s].is_ascii_whitespace() {
+            s += 1;
+        }
+        let let_bound = code[s..].starts_with(b"let") && !is_ident(*code.get(s + 3).unwrap_or(&b' '));
+
+        // Guard scope: a let-bound guard lives to the end of its enclosing
+        // block; a temporary dies at the statement's `;`. Both are scanned
+        // with brace-depth tracking relative to the acquisition point.
+        let scope_end = {
+            let mut depth = 0i32;
+            let mut k = p;
+            let mut end = body_end;
+            while k < body_end {
+                match code[k] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        if depth == 0 {
+                            end = k;
+                            break;
+                        }
+                        depth -= 1;
+                    }
+                    b';' if !let_bound && depth == 0 => {
+                        end = k;
+                        break;
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            end
+        };
+
+        let mut emit = |rule: Rule, line: usize, msg: String, findings: &mut Vec<Finding>| -> bool {
+            if let Some(i) = find_waiver(wv, raw_lines, line, rule) {
+                used[i] = true;
+                findings.push(Finding {
+                    rule,
+                    file: file.to_string(),
+                    line,
+                    msg,
+                    waived: Some(wv[i].reason.clone()),
+                });
+                true
+            } else {
+                findings.push(Finding { rule, file: file.to_string(), line, msg, waived: None });
+                false
+            }
+        };
+
+        // Within the guard's live scope: further acquisitions become graph
+        // edges, solver steps become findings.
+        let mut k = at;
+        while k < scope_end {
+            if let Some(q) = find_token(code, k, b".lock(") {
+                if q < scope_end {
+                    let other = receiver_name(code, q);
+                    let line = lx.line_of(q);
+                    if other == name {
+                        emit(
+                            Rule::LockOrder,
+                            line,
+                            format!("lock `{name}` re-acquired while already held in `{}`", f.name),
+                            findings,
+                        );
+                    } else if find_waiver(wv, raw_lines, line, Rule::LockOrder).is_some() {
+                        // A waived edge is excluded from the global graph
+                        // (recorded as a waived finding for visibility).
+                        emit(
+                            Rule::LockOrder,
+                            line,
+                            format!("lock edge `{name}` -> `{other}` in `{}`", f.name),
+                            findings,
+                        );
+                    } else {
+                        edges.push(LockEdge {
+                            from: name.clone(),
+                            to: other.clone(),
+                            file: file.to_string(),
+                            line,
+                        });
+                    }
+                    k = q + ".lock(".len();
+                    continue;
+                }
+            }
+            break;
+        }
+        for step_tok in [".step_into(", ".execute(", ".step("] {
+            let mut k2 = at;
+            while let Some(q) = find_token(code, k2, step_tok.as_bytes()) {
+                if q >= scope_end {
+                    break;
+                }
+                emit(
+                    Rule::LockOrder,
+                    lx.line_of(q),
+                    format!(
+                        "lock `{name}` held across solver step `{}` in `{}`",
+                        step_tok.trim_end_matches('('),
+                        f.name
+                    ),
+                    findings,
+                );
+                k2 = q + step_tok.len();
+            }
+        }
+    }
+}
+
+/// Last path segment of the dotted receiver ending at the `.` of `.lock(`.
+fn receiver_name(code: &[u8], dot: usize) -> String {
+    let mut k = dot;
+    while k > 0 && (is_ident(code[k - 1]) || code[k - 1] == b'.' || code[k - 1] == b':') {
+        k -= 1;
+    }
+    let path = String::from_utf8_lossy(&code[k..dot]).into_owned();
+    path.rsplit(|c| c == '.' || c == ':')
+        .find(|s| !s.is_empty())
+        .unwrap_or("<unknown>")
+        .to_string()
+}
+
+/// Detect cycles in the global lock graph (edges pre-deduped by name pair).
+pub fn cycle_findings(edges: &[LockEdge]) -> Vec<Finding> {
+    let mut adj: HashMap<&str, Vec<&LockEdge>> = HashMap::new();
+    let mut seen_pairs = HashSet::new();
+    for e in edges {
+        if seen_pairs.insert((e.from.as_str(), e.to.as_str())) {
+            adj.entry(e.from.as_str()).or_default().push(e);
+        }
+    }
+    let mut findings = Vec::new();
+    let mut reported: HashSet<Vec<String>> = HashSet::new();
+    for start in adj.keys().copied().collect::<Vec<_>>() {
+        let mut stack = vec![start];
+        dfs(start, &adj, &mut stack, &mut findings, &mut reported);
+    }
+    findings
+}
+
+fn dfs<'a>(
+    node: &'a str,
+    adj: &HashMap<&'a str, Vec<&'a LockEdge>>,
+    stack: &mut Vec<&'a str>,
+    findings: &mut Vec<Finding>,
+    reported: &mut HashSet<Vec<String>>,
+) {
+    let Some(nexts) = adj.get(node) else { return };
+    for e in nexts {
+        if let Some(pos) = stack.iter().position(|&n| n == e.to.as_str()) {
+            let mut cycle: Vec<String> = stack[pos..].iter().map(|s| s.to_string()).collect();
+            // Canonicalize on the cycle's node set so each cycle is
+            // reported once regardless of which node the DFS entered at.
+            let mut canon = cycle.clone();
+            canon.sort();
+            cycle.push(e.to.clone());
+            if reported.insert(canon) {
+                findings.push(Finding {
+                    rule: Rule::LockOrder,
+                    file: e.file.clone(),
+                    line: e.line,
+                    msg: format!("lock-order cycle: {}", cycle.join(" -> ")),
+                    waived: None,
+                });
+            }
+            continue;
+        }
+        stack.push(e.to.as_str());
+        dfs(e.to.as_str(), adj, stack, findings, reported);
+        stack.pop();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// wire-schema-sync
+// ---------------------------------------------------------------------------
+
+/// Fields of the markdown table(s) following every
+/// `<!-- lint-anchor: <anchor> -->` comment in `design`, with 1-based
+/// line numbers. Multiple anchors with the same name union their tables.
+pub fn anchored_fields(design: &str, anchor: &str) -> (Vec<(String, usize)>, usize) {
+    let tag = format!("<!-- lint-anchor: {anchor} -->");
+    let lines: Vec<&str> = design.lines().collect();
+    let mut fields = Vec::new();
+    let mut anchors = 0usize;
+    let mut i = 0usize;
+    while i < lines.len() {
+        if lines[i].trim() != tag {
+            i += 1;
+            continue;
+        }
+        anchors += 1;
+        i += 1;
+        // Skip blanks to the table head, then consume `|`-rows.
+        while i < lines.len() && lines[i].trim().is_empty() {
+            i += 1;
+        }
+        while i < lines.len() && lines[i].trim_start().starts_with('|') {
+            let cell = lines[i]
+                .trim()
+                .trim_matches('|')
+                .split('|')
+                .next()
+                .unwrap_or("")
+                .trim()
+                .trim_matches('`')
+                .to_string();
+            let header = cell.eq_ignore_ascii_case("field");
+            let separator = !cell.is_empty() && cell.chars().all(|c| c == '-' || c == ':');
+            if !cell.is_empty() && !header && !separator {
+                fields.push((cell, i + 1));
+            }
+            i += 1;
+        }
+    }
+    (fields, anchors)
+}
+
+/// String literals inside the body of the first fn named `fname` whose
+/// immediate non-whitespace left context satisfies `ctx_ok` and (optional)
+/// right context satisfies `after_ok`.
+fn fn_literals(
+    lx: &Lexed,
+    fname: &str,
+    ctx_ok: impl Fn(&[u8]) -> bool,
+    after_ok: impl Fn(&[u8]) -> bool,
+) -> Vec<(String, usize)> {
+    let Some(f) = fn_spans(lx).into_iter().find(|f| f.name == fname) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for (start, end, content) in &lx.strings {
+        if *start < f.body.0 || *start >= f.body.1 {
+            continue;
+        }
+        let mut l = *start;
+        while l > 0 && lx.code[l - 1].is_ascii_whitespace() {
+            l -= 1;
+        }
+        let mut r = *end;
+        while r < lx.code.len() && lx.code[r].is_ascii_whitespace() {
+            r += 1;
+        }
+        if ctx_ok(&lx.code[..l]) && after_ok(&lx.code[r..]) {
+            out.push((content.clone(), lx.line_of(*start)));
+        }
+    }
+    out
+}
+
+/// Cross-check DESIGN.md's anchored wire tables against what the server
+/// code actually parses (`from_json`) and serializes (`success_response`).
+pub fn check_wire_schema(
+    design: &str,
+    design_file: &str,
+    server: &str,
+    server_file: &str,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let lx = lex(server);
+
+    let (req_docs, req_anchors) = anchored_fields(design, "wire-request-fields");
+    let (resp_docs, resp_anchors) = anchored_fields(design, "wire-response-fields");
+    for (anchor, n) in [("wire-request-fields", req_anchors), ("wire-response-fields", resp_anchors)] {
+        if n == 0 {
+            findings.push(Finding {
+                rule: Rule::WireSchemaSync,
+                file: design_file.to_string(),
+                line: 1,
+                msg: format!("DESIGN.md has no `<!-- lint-anchor: {anchor} -->` table"),
+                waived: None,
+            });
+        }
+    }
+
+    // Request keys: string literals passed to `v.get("k")` / `num("k", ..)`
+    // inside `from_json`.
+    let req_code = fn_literals(
+        &lx,
+        "from_json",
+        |pre| pre.ends_with(b"get(") || pre.ends_with(b"num("),
+        |_| true,
+    );
+    // Response keys: the `("key", value)` pair heads in `success_response`.
+    let resp_code = fn_literals(
+        &lx,
+        "success_response",
+        |pre| pre.ends_with(b"("),
+        |post| post.starts_with(b","),
+    );
+
+    let mut cross = |docs: &[(String, usize)], code: &[(String, usize)], what: &str| {
+        let doc_names: HashSet<&str> = docs.iter().map(|(n, _)| n.as_str()).collect();
+        let code_names: HashSet<&str> = code.iter().map(|(n, _)| n.as_str()).collect();
+        for (name, line) in code {
+            if !doc_names.contains(name.as_str()) {
+                findings.push(Finding {
+                    rule: Rule::WireSchemaSync,
+                    file: server_file.to_string(),
+                    line: *line,
+                    msg: format!("{what} field `{name}` is handled by the server but missing from DESIGN.md"),
+                    waived: None,
+                });
+            }
+        }
+        for (name, line) in docs {
+            if !code_names.contains(name.as_str()) {
+                findings.push(Finding {
+                    rule: Rule::WireSchemaSync,
+                    file: design_file.to_string(),
+                    line: *line,
+                    msg: format!("{what} field `{name}` is documented but not handled by the server"),
+                    waived: None,
+                });
+            }
+        }
+    };
+    if req_anchors > 0 {
+        cross(&req_docs, &req_code, "request");
+    }
+    if resp_anchors > 0 {
+        cross(&resp_docs, &resp_code, "response");
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Repo runner
+// ---------------------------------------------------------------------------
+
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub unused_waivers: Vec<(String, usize, Rule, String)>,
+}
+
+impl Report {
+    pub fn violations(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.waived.is_none())
+    }
+
+    pub fn waived(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.waived.is_some())
+    }
+}
+
+fn rust_sources(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            rust_sources(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Run every enabled rule over `<root>/rust/src` (+ `<root>/DESIGN.md` for
+/// wire-schema-sync). Findings come back waiver-resolved and sorted.
+pub fn run(root: &Path, rules: &[Rule]) -> std::io::Result<Report> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    rust_sources(&src_root, &mut files)?;
+
+    let mut findings = Vec::new();
+    let mut edges = Vec::new();
+    let mut unused = Vec::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)?;
+        let label = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .into_owned();
+        let rep = analyze_file(&label, &src, rules);
+        findings.extend(rep.findings);
+        edges.extend(rep.edges);
+        unused.extend(rep.unused_waivers.into_iter().map(|(l, r, why)| (label.clone(), l, r, why)));
+    }
+    if rules.contains(&Rule::LockOrder) {
+        findings.extend(cycle_findings(&edges));
+    }
+    if rules.contains(&Rule::WireSchemaSync) {
+        let design = std::fs::read_to_string(root.join("DESIGN.md"))?;
+        let server = std::fs::read_to_string(src_root.join("server").join("mod.rs"))?;
+        findings.extend(check_wire_schema(&design, "DESIGN.md", &server, "rust/src/server/mod.rs"));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(Report { findings, files_scanned: files.len(), unused_waivers: unused })
+}

@@ -1,0 +1,82 @@
+//! CLI for `srds-lint`. Exit status 1 iff any unwaived violation exists.
+//!
+//! ```text
+//! srds-lint [--root PATH] [--rule NAME]... [--list-rules]
+//! ```
+//!
+//! With no `--rule` flags all five rules run. Waived findings and unused
+//! waivers are printed (but do not fail the run) so suppressions stay
+//! visible in CI logs.
+
+use srds_lint::{run, Rule};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut rules: Vec<Rule> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => return usage("--root needs a path"),
+            },
+            "--rule" => match args.next().as_deref().and_then(Rule::parse) {
+                Some(r) => rules.push(r),
+                None => return usage("--rule needs one of the names from --list-rules"),
+            },
+            "--list-rules" => {
+                for r in Rule::ALL {
+                    println!("{r}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+    if rules.is_empty() {
+        rules = Rule::ALL.to_vec();
+    }
+
+    let report = match run(&root, &rules) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("srds-lint: failed to read sources under {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let mut violations = 0usize;
+    for f in report.violations() {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+        violations += 1;
+    }
+    let waived: Vec<_> = report.waived().collect();
+    if !waived.is_empty() {
+        println!("-- {} waiver(s) in effect:", waived.len());
+        for f in &waived {
+            println!("   {}:{}: [{}] waived: {}", f.file, f.line, f.rule, f.waived.as_deref().unwrap_or(""));
+        }
+    }
+    for (file, line, rule, reason) in &report.unused_waivers {
+        println!("-- warning: unused lint-allow({rule}) at {file}:{line} ({reason})");
+    }
+    println!(
+        "srds-lint: {} file(s) scanned, {} violation(s), {} waiver(s)",
+        report.files_scanned,
+        violations,
+        waived.len()
+    );
+    if violations == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn usage(err: &str) -> ExitCode {
+    eprintln!("srds-lint: {err}");
+    eprintln!("usage: srds-lint [--root PATH] [--rule NAME]... [--list-rules]");
+    ExitCode::FAILURE
+}

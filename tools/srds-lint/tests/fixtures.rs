@@ -1,0 +1,145 @@
+//! Fixture tests: every rule must fire on its known-bad snippet and be
+//! suppressed by exactly its own waiver.
+
+use srds_lint::{analyze_file, check_wire_schema, cycle_findings, FileReport, Rule};
+
+fn load(name: &str) -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/fixtures");
+    std::fs::read_to_string(format!("{path}/{name}")).unwrap_or_else(|e| panic!("fixture {name}: {e}"))
+}
+
+fn analyze(name: &str) -> FileReport {
+    analyze_file(name, &load(name), &Rule::ALL)
+}
+
+fn unwaived(rep: &FileReport) -> Vec<(Rule, usize)> {
+    rep.findings
+        .iter()
+        .filter(|f| f.waived.is_none())
+        .map(|f| (f.rule, f.line))
+        .collect()
+}
+
+#[test]
+fn hot_path_alloc_fires_only_in_marked_fn() {
+    let rep = analyze("hot_alloc_bad.rs");
+    let v = unwaived(&rep);
+    assert_eq!(v.len(), 4, "Vec::new, to_vec, Box::new, collect: {v:?}");
+    assert!(v.iter().all(|(r, _)| *r == Rule::HotPathAlloc));
+    // The vec! in the unmarked `cold` fn (line 18) must not fire.
+    assert!(v.iter().all(|(_, line)| *line < 15), "{v:?}");
+}
+
+#[test]
+fn hot_path_alloc_waivers_suppress() {
+    let rep = analyze("hot_alloc_waived.rs");
+    assert!(unwaived(&rep).is_empty(), "{:?}", unwaived(&rep));
+    assert_eq!(rep.findings.iter().filter(|f| f.waived.is_some()).count(), 3);
+    assert!(rep.unused_waivers.is_empty(), "{:?}", rep.unused_waivers);
+}
+
+#[test]
+fn step_convenience_fires_outside_tests_only() {
+    let rep = analyze("step_bad.rs");
+    let v = unwaived(&rep);
+    assert_eq!(v.len(), 1, "{v:?}");
+    assert_eq!(v[0].0, Rule::NoStepConvenience);
+    // The #[cfg(test)] call sits past line 12 and must be exempt.
+    assert!(v[0].1 < 12, "{v:?}");
+}
+
+#[test]
+fn step_convenience_waiver_suppresses() {
+    let rep = analyze("step_waived.rs");
+    assert!(unwaived(&rep).is_empty(), "{:?}", unwaived(&rep));
+    assert_eq!(rep.findings.len(), 1);
+}
+
+#[test]
+fn lock_cycle_across_fns_is_reported_once() {
+    let rep = analyze("lock_cycle_bad.rs");
+    assert!(unwaived(&rep).is_empty(), "per-fn sequences are clean: {:?}", unwaived(&rep));
+    assert_eq!(rep.edges.len(), 2, "{:?}", rep.edges);
+    let cycles = cycle_findings(&rep.edges);
+    assert_eq!(cycles.len(), 1, "{cycles:?}");
+    assert!(cycles[0].msg.contains("cycle"));
+}
+
+#[test]
+fn lock_held_across_step_fires_and_scopes_release() {
+    let rep = analyze("lock_held_bad.rs");
+    let v = unwaived(&rep);
+    assert_eq!(v.len(), 1, "only `held` should fire: {v:?}");
+    assert_eq!(v[0].0, Rule::LockOrder);
+    assert!(rep.findings[0].msg.contains("held across solver step"));
+}
+
+#[test]
+fn lock_waivers_suppress_and_drop_edges() {
+    let rep = analyze("lock_waived.rs");
+    assert!(unwaived(&rep).is_empty(), "{:?}", unwaived(&rep));
+    assert_eq!(rep.findings.iter().filter(|f| f.waived.is_some()).count(), 2);
+    assert!(rep.edges.is_empty(), "waived edge must leave the graph: {:?}", rep.edges);
+}
+
+#[test]
+fn panic_policy_fires_only_in_marked_fn() {
+    let rep = analyze("panic_bad.rs");
+    let v = unwaived(&rep);
+    assert_eq!(v.len(), 3, "unwrap, expect, panic!: {v:?}");
+    assert!(v.iter().all(|(r, _)| *r == Rule::PanicPolicy));
+    // `tolerant` (unwrap_or) and `unmarked` must both stay clean.
+    assert!(v.iter().all(|(_, line)| *line < 14), "{v:?}");
+}
+
+#[test]
+fn panic_policy_waiver_suppresses() {
+    let rep = analyze("panic_waived.rs");
+    assert!(unwaived(&rep).is_empty(), "{:?}", unwaived(&rep));
+    assert_eq!(rep.findings.len(), 1);
+}
+
+#[test]
+fn waiver_suppresses_exactly_its_rule() {
+    let rep = analyze("cross_rule.rs");
+    let v = unwaived(&rep);
+    assert_eq!(v.len(), 1, "panic-policy must survive the alloc waiver: {v:?}");
+    assert_eq!(v[0].0, Rule::PanicPolicy);
+    let waived: Vec<_> = rep.findings.iter().filter(|f| f.waived.is_some()).collect();
+    assert_eq!(waived.len(), 1);
+    assert_eq!(waived[0].rule, Rule::HotPathAlloc);
+}
+
+#[test]
+fn disabled_rules_do_not_run() {
+    let rep = analyze_file("hot_alloc_bad.rs", &load("hot_alloc_bad.rs"), &[Rule::PanicPolicy]);
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn wire_schema_in_sync_is_clean() {
+    let f = check_wire_schema(&load("wire_good.md"), "wire_good.md", &load("wire_server.rs"), "wire_server.rs");
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn wire_schema_drift_fires_both_directions() {
+    let f = check_wire_schema(&load("wire_bad.md"), "wire_bad.md", &load("wire_server.rs"), "wire_server.rs");
+    assert_eq!(f.len(), 2, "{f:?}");
+    assert!(f.iter().any(|x| x.file == "wire_server.rs" && x.msg.contains("`n`")), "{f:?}");
+    assert!(f.iter().any(|x| x.file == "wire_bad.md" && x.msg.contains("`bogus`")), "{f:?}");
+}
+
+#[test]
+fn wire_schema_missing_anchor_fires() {
+    let f = check_wire_schema("# no anchors here\n", "empty.md", &load("wire_server.rs"), "wire_server.rs");
+    assert_eq!(f.len(), 2, "one per missing anchor: {f:?}");
+    assert!(f.iter().all(|x| x.msg.contains("lint-anchor")));
+}
+
+#[test]
+fn unknown_rule_in_waiver_is_a_finding() {
+    let rep = analyze_file("inline", "// lint-allow(no-such-rule): oops\nfn f() {}\n", &Rule::ALL);
+    assert_eq!(rep.findings.len(), 1);
+    assert!(rep.findings[0].msg.contains("unknown rule"));
+}
