@@ -1,12 +1,20 @@
 #!/usr/bin/env python3
 """Bench-regression gate for CI.
 
-Compares a fresh `cargo bench --bench serving` JSON report against the
-committed baseline (BENCH_serving.json at the repo root) and exits
-non-zero when serving performance regressed beyond tolerance:
+Compares a fresh bench JSON report against a committed baseline and
+exits non-zero on regression beyond tolerance. Two baseline shapes:
 
-* throughput keys (`rps`) must not drop more than 20% below baseline;
-* latency keys (`*_ms`) must not rise more than 20% above baseline.
+* **Serving** (`BENCH_serving.json`, one report object): throughput
+  keys (`rps`) must not drop more than 20% below baseline; latency
+  keys (`*_ms`) must not rise more than 20% above baseline.
+* **Hot path** (`BENCH_hotpath.json`, detected by its top-level
+  `hot_path` list): the `cargo bench --bench hot_path` report is one
+  JSON line per (dim, batch) configuration. Baseline entries are
+  matched by (dim, batch); `steps_per_sec` is a floor with the same
+  20% tolerance, while `allocs_per_step` is gated **exactly** — any
+  value above the baseline's (normally 0) fails with no tolerance,
+  because a single allocation per step is a broken zero-copy
+  invariant, not a perf regression.
 
 Only leaves present in the *baseline* are checked, so the baseline
 doubles as the contract: seed it with conservative floors, tighten it as
@@ -14,10 +22,12 @@ real measurements accumulate. Keys starting with "_" are comments.
 
 Usage:
     python3 ci/bench_gate.py BENCH_serving.json serving_output.json
+    python3 ci/bench_gate.py BENCH_hotpath.json hot_path_output.json
 
-To refresh the baseline after an intentional perf change:
+To refresh a baseline after an intentional perf change:
     (cd rust && cargo bench --bench serving) | tail -n 1 > /tmp/serving.json
-then fold the numbers you want to pin into BENCH_serving.json.
+    (cd rust && cargo bench --bench hot_path) > /tmp/hot_path.json
+then fold the numbers you want to pin into the committed baseline.
 """
 
 import json
@@ -44,6 +54,56 @@ def load_report(path):
     if report is None:
         sys.exit(f"error: no JSON report found in {path}")
     return report
+
+
+def load_report_lines(path):
+    """All parseable JSON-object lines of a multi-line bench report."""
+    objs = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line.startswith("{"):
+                continue
+            try:
+                objs.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return objs
+
+
+def gate_hot_path(baseline, report_path, failures, checked):
+    """Hot-path mode: match baseline entries by (dim, batch); floor-gate
+    steps_per_sec, exact-gate allocs_per_step (the zero-copy invariant
+    gets no tolerance)."""
+    lines = [o for o in load_report_lines(report_path) if o.get("bench") == "hot_path"]
+    for base in baseline["hot_path"]:
+        dim, batch = base["dim"], base["batch"]
+        where = f"hot_path[dim={dim},batch={batch}]"
+        cur = next(
+            (o for o in lines if o.get("dim") == dim and o.get("batch") == batch),
+            None,
+        )
+        if cur is None:
+            failures.append(f"{where}: missing from bench output")
+            continue
+        if "steps_per_sec" in base:
+            floor = base["steps_per_sec"] * (1.0 - TOLERANCE)
+            sps = cur.get("steps_per_sec", 0.0)
+            if sps < floor:
+                failures.append(
+                    f"{where}: {sps:.0f} steps/sec regressed >"
+                    f"{TOLERANCE:.0%} below baseline {base['steps_per_sec']:.0f}")
+            else:
+                checked.append(f"{where}: {sps:.0f} steps/sec (floor {floor:.0f})")
+        if "allocs_per_step" in base:
+            cap = base["allocs_per_step"]
+            allocs = cur.get("allocs_per_step", float("inf"))
+            if allocs > cap:
+                failures.append(
+                    f"{where}: allocs_per_step {allocs} > {cap} — "
+                    "steady-state steps must not allocate (no tolerance)")
+            else:
+                checked.append(f"{where}: allocs_per_step {allocs} (cap {cap})")
 
 
 def walk(baseline, current, path, failures, checked):
@@ -106,9 +166,12 @@ def main():
         sys.exit(__doc__)
     with open(sys.argv[1]) as f:
         baseline = json.load(f)
-    current = load_report(sys.argv[2])
     failures, checked = [], []
-    walk(baseline, current, [], failures, checked)
+    if "hot_path" in baseline:
+        gate_hot_path(baseline, sys.argv[2], failures, checked)
+    else:
+        current = load_report(sys.argv[2])
+        walk(baseline, current, [], failures, checked)
     if not checked and not failures:
         sys.exit("error: baseline pinned no gated metrics (rps / *_ms leaves)")
     print(f"bench gate: {len(checked) + len(failures)} metrics checked")

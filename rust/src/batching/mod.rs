@@ -281,10 +281,10 @@ impl Batcher {
     }
 
     /// [`Self::take_batch`] with an additional caller-imposed cap on the
-    /// batch size. The engine uses this to *spread* rows across idle
-    /// workers instead of fusing everything onto one: the cap is
-    /// `ceil(pending / idle_workers)` there, so fusion only grows once
-    /// every worker already has work.
+    /// batch size. The engine drains whole (`cap = pending`) and then
+    /// *splits* the drained rows into contiguous chunks across its idle
+    /// workers, so fusion only grows once every worker already has
+    /// work (see `exec::engine`'s flush-policy docs).
     // lint: hot-path
     pub fn take_up_to(&mut self, cap: usize) -> Vec<PendingRow> {
         let avail = self.pending().min(cap);

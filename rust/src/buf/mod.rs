@@ -281,11 +281,18 @@ pub(crate) fn sized(v: &mut Vec<f32>, n: usize) {
     }
 }
 
-/// Reusable flat staging buffer for one batched [`StepRequest`]: the
-/// `(b, dim)` states, per-row times/seeds, the tiled mask, and the
-/// batch output all live in persistent vectors that survive `reset()`.
-/// One stage per call site (a worker thread, a sampler run) makes the
-/// steady-state step loop allocation-free.
+/// Reusable structure-of-arrays staging buffer for one batched
+/// [`StepRequest`]: the `(b, dim)` states, the per-row time / seed /
+/// mask lanes, and the batch output each live in their own contiguous
+/// persistent vector that survives `reset()`. The SoA split is what the
+/// lane-tiled kernel layer ([`crate::kernels`]) wants — solvers sweep
+/// `s_from`/`s_to` once to fill per-row coefficient lanes, then stream
+/// `x` row-contiguously — and every lane is exposed read-only
+/// ([`BatchStage::x`], [`BatchStage::s_from`], [`BatchStage::s_to`],
+/// [`BatchStage::seeds`], [`BatchStage::mask`]) so de-batching callers
+/// (the engine's workers, sampler drift rebuilds) index rows without
+/// copies. One stage per call site (a worker thread, a sampler run)
+/// makes the steady-state step loop allocation-free.
 #[derive(Default)]
 pub struct BatchStage {
     x: Vec<f32>,
@@ -352,6 +359,36 @@ impl BatchStage {
     /// The last batch's flat `(rows, dim)` output.
     pub fn out(&self) -> &[f32] {
         &self.out
+    }
+
+    /// Per-row start times (length [`BatchStage::rows`]).
+    pub fn s_from(&self) -> &[f32] {
+        &self.s_from
+    }
+
+    /// Per-row target times (length [`BatchStage::rows`]).
+    pub fn s_to(&self) -> &[f32] {
+        &self.s_to
+    }
+
+    /// Per-row noise seeds (length [`BatchStage::rows`]).
+    pub fn seeds(&self) -> &[u64] {
+        &self.seeds
+    }
+
+    /// The row-major `(rows, k)` conditioning mask, or `None` when the
+    /// staged batch is unconditional.
+    pub fn mask(&self) -> Option<&[f32]> {
+        if self.has_mask {
+            Some(&self.mask)
+        } else {
+            None
+        }
+    }
+
+    /// The batch-wide guidance weight set by [`BatchStage::reset`].
+    pub fn guidance(&self) -> f32 {
+        self.guidance
     }
 
     /// Execute the staged batch via [`StepBackend::step_into`] into the
@@ -512,5 +549,20 @@ mod tests {
         let be = NativeBackend::new(StdArc::new(ZeroModel { dim: 1 }), Solver::Ddim);
         stage.execute(&be);
         assert_eq!(stage.out().len(), 2);
+    }
+
+    #[test]
+    fn stage_exposes_soa_lanes() {
+        let mut stage = BatchStage::new();
+        stage.reset(1.5);
+        assert_eq!(stage.mask(), None);
+        stage.push_row(&[1.0, 2.0], 0.1, 0.2, 7, Some(&[1.0, 0.0]));
+        stage.push_row(&[3.0, 4.0], 0.3, 0.4, 8, Some(&[0.0, 1.0]));
+        assert_eq!(stage.x(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(stage.s_from(), &[0.1, 0.3]);
+        assert_eq!(stage.s_to(), &[0.2, 0.4]);
+        assert_eq!(stage.seeds(), &[7, 8]);
+        assert_eq!(stage.mask(), Some(&[1.0, 0.0, 0.0, 1.0][..]));
+        assert_eq!(stage.guidance(), 1.5);
     }
 }

@@ -26,12 +26,17 @@
 //!
 //! **Flush policy** (vLLM-style, adapted to a CPU/PJRT pool): the
 //! dispatcher is *work-conserving with spread-first sizing* — a row
-//! never waits while enough workers are idle. With `I` idle workers and
-//! `P` pending rows it dispatches batches of `ceil(P / I)` rows
-//! (bucket-quantized by [`Batcher::take_up_to`]), so a lone request's
-//! independent rows still fan out across the pool, while under load —
-//! all workers busy — rows accumulate and flush as large fused batches
-//! the moment a worker frees up. When *fewer rows than idle workers*
+//! never waits while enough workers are idle. With `I` idle workers it
+//! drains the longest-waiting eligible batcher whole (bucket-quantized
+//! by [`Batcher::take_up_to`]) and *splits* the drain into `min(I, rows)`
+//! contiguous row-chunk sub-batches, one per idle worker
+//! ([`EngineStats::split_batches`] counts these fan-outs) — so a lone
+//! request's wide sweep still spreads across the pool instead of
+//! pinning one worker, while under load — all workers busy — rows
+//! accumulate and flush as large fused batches the moment a worker
+//! frees up. Splitting is free of numerical consequence: batch rows
+//! never interact, so a row's output is bit-identical whatever chunk it
+//! lands in (the batch-shape property tests pin this). When *fewer rows than idle workers*
 //! are pending and work is already in flight, the dispatcher may hold
 //! them up to `BatchPolicy::max_wait` hoping co-tenant rows arrive
 //! (`max_wait == 0` disables holding entirely — the measured executor's
@@ -173,6 +178,7 @@ type WorkQueue = (Mutex<WorkState>, Condvar);
 struct Counters {
     flushed_batches: u64,
     flushed_rows: u64,
+    split_batches: u64,
     queue_depth: usize,
     active_tasks: usize,
     per_class: [ClassLane; 3],
@@ -218,6 +224,12 @@ pub struct EngineStats {
     /// `flushed_rows / flushed_batches` — > 1.0 means step fusion is
     /// actually happening.
     pub mean_occupancy: f64,
+    /// Flush cycles whose drained batch fanned out to several idle
+    /// workers as contiguous row-chunk sub-batches (each sub-batch also
+    /// counts in `flushed_batches`). Rows are split-invariant — chunk
+    /// boundaries never change a row's value — so this is purely a
+    /// load-balance/latency lever, observable here.
+    pub split_batches: u64,
     /// Rows currently waiting in the batchers.
     pub queue_depth: usize,
     /// Tasks currently resident in the dispatcher's heterogeneous task
@@ -386,6 +398,7 @@ impl Engine {
             flushed_batches: c.flushed_batches,
             flushed_rows: c.flushed_rows,
             mean_occupancy: c.flushed_rows as f64 / c.flushed_batches.max(1) as f64,
+            split_batches: c.split_batches,
             queue_depth: c.queue_depth,
             active_tasks: c.active_tasks,
             workers: self.workers,
@@ -482,6 +495,7 @@ struct Dispatcher {
     in_flight: usize,
     flushed_batches: u64,
     flushed_rows: u64,
+    split_batches: u64,
     /// Per-class lanes (the public [`EngineStats::per_class`] view),
     /// maintained incrementally: `submitted` at submit, `rows` after the
     /// dead-row filter in [`Dispatcher::flush`] (so it stays consistent
@@ -519,6 +533,7 @@ impl Dispatcher {
             in_flight: 0,
             flushed_batches: 0,
             flushed_rows: 0,
+            split_batches: 0,
             per_class: [ClassLane::default(); 3],
             class_wall_ms_sum: [0.0; 3],
         }
@@ -750,8 +765,7 @@ impl Dispatcher {
             let Some(key) = key else { return };
             // lint-allow(panic-policy): the key was just selected from this very map
             let batcher = self.batchers.get_mut(&key).unwrap();
-            let cap = batcher.pending().div_ceil(idle);
-            let mut rows = batcher.take_up_to(cap);
+            let mut rows = batcher.take_up_to(batcher.pending());
             // Drop rows whose owner finished already (the lazy purge).
             let (origins, tasks) = (&mut self.origins, &self.tasks);
             rows.retain(|r| {
@@ -767,7 +781,6 @@ impl Dispatcher {
             if rows.is_empty() {
                 continue;
             }
-            self.flushed_batches += 1;
             self.flushed_rows += rows.len() as u64;
             // Per-class dispatch counters, taken after the dead-row
             // filter so `classes[].rows` on the wire never counts work
@@ -775,11 +788,29 @@ impl Dispatcher {
             for r in &rows {
                 self.per_class[r.class.index()].rows += 1;
             }
-            self.in_flight += 1;
+            // Data-parallel batch split: batch rows are independent (the
+            // module invariant), so one oversized drain fans out across
+            // every idle worker as contiguous row chunks instead of
+            // pinning the whole batch on one. Chunk boundaries cannot
+            // change any row's value — a worker stages and steps its
+            // chunk exactly as the fused batch would have.
+            let chunks = idle.min(rows.len());
+            let per = rows.len().div_ceil(chunks);
+            if chunks > 1 {
+                self.split_batches += 1;
+            }
             let (lock, cv) = &*self.work;
             // lint-allow(panic-policy): a poisoned work queue means a panicked worker — process-fatal, not request-controlled
-            lock.lock().unwrap().queue.push_back(ExecBatch { rows });
-            cv.notify_one();
+            let mut st = lock.lock().unwrap();
+            while !rows.is_empty() {
+                let rest = rows.split_off(per.min(rows.len()));
+                self.in_flight += 1;
+                self.flushed_batches += 1;
+                st.queue.push_back(ExecBatch { rows });
+                rows = rest;
+            }
+            drop(st);
+            cv.notify_all();
         }
     }
 
@@ -791,6 +822,7 @@ impl Dispatcher {
             flushed_batches: self.flushed_batches,
             flushed_rows: self.flushed_rows,
             mean_occupancy: self.flushed_rows as f64 / self.flushed_batches.max(1) as f64,
+            split_batches: self.split_batches,
             queue_depth: self.batchers.values().map(|b| b.pending()).sum(),
             active_tasks: self.tasks.len(),
             workers: self.workers,
@@ -805,6 +837,7 @@ impl Dispatcher {
         let mut c = self.counters.lock().unwrap();
         c.flushed_batches = self.flushed_batches;
         c.flushed_rows = self.flushed_rows;
+        c.split_batches = self.split_batches;
         c.queue_depth = self.batchers.values().map(|b| b.pending()).sum();
         c.active_tasks = self.tasks.len();
         c.per_class = self.per_class;
@@ -1014,6 +1047,27 @@ mod tests {
             "no completion ever observed a co-resident task: {seen:?}"
         );
         assert_eq!(eng.stats().active_tasks, 0, "table drains to zero");
+    }
+
+    #[test]
+    fn large_sweeps_split_across_idle_workers() {
+        // The data-parallel split: one request's wide sweep must fan
+        // out over several idle workers as row-chunk sub-batches — and
+        // because chunk boundaries never change a row's math, the
+        // output stays bit-identical to the solo vanilla run.
+        let eng = engine(4, BatchPolicy::immediate());
+        let x0 = prior_sample(64, 21);
+        let spec = SamplerSpec::paradigms(48).with_seed(21);
+        let got = eng.run(&x0, &spec);
+        let want = spec.run(&native_backend(), &x0);
+        assert_eq!(got.sample, want.sample, "split batches changed the output");
+        assert_eq!(got.stats.iters, want.stats.iters);
+        let st = eng.stats();
+        assert!(st.split_batches > 0, "a 48-row sweep on 4 idle workers never split");
+        assert!(
+            st.flushed_batches > st.split_batches,
+            "each split fan-out must emit several sub-batches"
+        );
     }
 
     #[test]

@@ -1,0 +1,470 @@
+//! Lane-tiled, allocation-free math kernels for the batched hot path.
+//!
+//! Everything the solvers and native models do per step reduces to a
+//! handful of fused row primitives: scale-adds (`axpby` and friends for
+//! the DDIM/DDPM/Heun/DPM2 updates), a scaled squared distance and a
+//! softmax for the GMM score, and a matmul for the small denoiser. This
+//! module implements them once, in stable Rust, shaped so LLVM's
+//! autovectorizer turns them into SIMD:
+//!
+//! * the body of every elementwise kernel walks paired
+//!   [`LANE`]-wide `chunks_exact` windows — known-size slices, so the
+//!   inner `for j in 0..LANE` loop has no bounds checks and vectorizes
+//!   cleanly — followed by a scalar remainder loop for ragged tails;
+//! * reductions ([`sq_dist_scaled`]) keep [`LANE`] partial accumulators
+//!   and combine them in one fixed pairwise order, so the floating-point
+//!   op sequence for a row never depends on anything but that row;
+//! * the blocked [`matmul_acc`] tiles `MR = 4` rows × `NR = 16` output
+//!   columns with per-row accumulators, and its per-row accumulation
+//!   order is identical between the blocked body and the 1-row tail.
+//!
+//! **Bit-identity contract.** No kernel ever mixes data across rows, and
+//! every per-row reduction order is fixed. Combined with the solver /
+//! model layers calling these kernels one row-slice at a time, a row's
+//! output is bit-identical regardless of batch composition, row order,
+//! or how the engine chunk-splits a batch across workers
+//! (`tests/batch_shape.rs` pins this for all five solvers on both
+//! native models; the engine's fusion tests pin it end to end).
+//!
+//! All entry points are `// lint: hot-path`: `srds-lint` mechanically
+//! enforces that they stay allocation-free. See the "kernel layer"
+//! section of `DESIGN.md` for the staging (SoA) layout these kernels
+//! expect and the engine's batch-splitting heuristic that feeds them.
+
+/// Vector lane width the tiled loops are written for: 8 × f32 covers an
+/// AVX2 register and two NEON registers; narrower targets just unroll.
+pub const LANE: usize = 8;
+
+/// Row-block height of the blocked [`matmul_acc`] (register tiling).
+pub const MR: usize = 4;
+
+/// Output-column tile width of the blocked [`matmul_acc`].
+pub const NR: usize = 16;
+
+/// `out[j] = a * x[j] + c` — affine map of one row (constant offset).
+// lint: hot-path
+pub fn axpc(a: f32, x: &[f32], c: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let mut xc = x.chunks_exact(LANE);
+    let mut oc = out.chunks_exact_mut(LANE);
+    for (xs, os) in (&mut xc).zip(&mut oc) {
+        for j in 0..LANE {
+            os[j] = a * xs[j] + c;
+        }
+    }
+    for (xs, os) in xc.remainder().iter().zip(oc.into_remainder()) {
+        *os = a * xs + c;
+    }
+}
+
+/// `out[j] = a * x[j] + b * out[j]` — fused scale-add into the output
+/// row (the DDIM / Euler / DPM2-full-step update shape).
+// lint: hot-path
+pub fn axpby(a: f32, x: &[f32], b: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let mut xc = x.chunks_exact(LANE);
+    let mut oc = out.chunks_exact_mut(LANE);
+    for (xs, os) in (&mut xc).zip(&mut oc) {
+        for j in 0..LANE {
+            os[j] = a * xs[j] + b * os[j];
+        }
+    }
+    for (xs, os) in xc.remainder().iter().zip(oc.into_remainder()) {
+        *os = a * xs + b * *os;
+    }
+}
+
+/// `out[j] = a * x[j] + b * y[j]` — two-term linear combination written
+/// to a third row (the DPM2 midpoint shape).
+// lint: hot-path
+pub fn lincomb(a: f32, x: &[f32], b: f32, y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(y.len(), out.len());
+    let mut xc = x.chunks_exact(LANE);
+    let mut yc = y.chunks_exact(LANE);
+    let mut oc = out.chunks_exact_mut(LANE);
+    for ((xs, ys), os) in (&mut xc).zip(&mut yc).zip(&mut oc) {
+        for j in 0..LANE {
+            os[j] = a * xs[j] + b * ys[j];
+        }
+    }
+    for ((xs, ys), os) in xc.remainder().iter().zip(yc.remainder()).zip(oc.into_remainder()) {
+        *os = a * xs + b * ys;
+    }
+}
+
+/// `out[j] = a * x[j] + b * out[j] + c * z[j]` — three-term fused update
+/// (the DDPM posterior + noise shape). Evaluation order matches the
+/// scalar expression `a*x + b*out + c*z` left to right.
+// lint: hot-path
+pub fn axpbypcz(a: f32, x: &[f32], b: f32, c: f32, z: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(z.len(), out.len());
+    let mut xc = x.chunks_exact(LANE);
+    let mut zc = z.chunks_exact(LANE);
+    let mut oc = out.chunks_exact_mut(LANE);
+    for ((xs, zs), os) in (&mut xc).zip(&mut zc).zip(&mut oc) {
+        for j in 0..LANE {
+            os[j] = a * xs[j] + b * os[j] + c * zs[j];
+        }
+    }
+    for ((xs, zs), os) in xc.remainder().iter().zip(zc.remainder()).zip(oc.into_remainder()) {
+        *os = a * xs + b * *os + c * zs;
+    }
+}
+
+/// `out[j] = x[j] + h * d[j]` — explicit-Euler predictor step.
+// lint: hot-path
+pub fn add_scaled(x: &[f32], h: f32, d: &[f32], out: &mut [f32]) {
+    lincomb(1.0, x, h, d, out);
+}
+
+/// `out[j] = x[j] + c * (d1[j] + out[j])` — Heun trapezoidal corrector
+/// (`out` holds the second slope on entry, the corrected state on exit).
+// lint: hot-path
+pub fn avg_step(x: &[f32], c: f32, d1: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(d1.len(), out.len());
+    let mut xc = x.chunks_exact(LANE);
+    let mut dc = d1.chunks_exact(LANE);
+    let mut oc = out.chunks_exact_mut(LANE);
+    for ((xs, ds), os) in (&mut xc).zip(&mut dc).zip(&mut oc) {
+        for j in 0..LANE {
+            os[j] = xs[j] + c * (ds[j] + os[j]);
+        }
+    }
+    for ((xs, ds), os) in xc.remainder().iter().zip(dc.remainder()).zip(oc.into_remainder()) {
+        *os = xs + c * (ds + *os);
+    }
+}
+
+/// `out[j] = c * (x[j] - out[j] / sig)` — probability-flow ODE slope
+/// from an in-place eps prediction. The division is kept (rather than a
+/// hoisted reciprocal) to preserve the historical rounding the golden
+/// artifacts were recorded against.
+// lint: hot-path
+pub fn pf_transform(c: f32, sig: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let mut xc = x.chunks_exact(LANE);
+    let mut oc = out.chunks_exact_mut(LANE);
+    for (xs, os) in (&mut xc).zip(&mut oc) {
+        for j in 0..LANE {
+            os[j] = c * (xs[j] - os[j] / sig);
+        }
+    }
+    for (xs, os) in xc.remainder().iter().zip(oc.into_remainder()) {
+        *os = c * (xs - *os / sig);
+    }
+}
+
+/// `out[j] *= c` — in-place row scale.
+// lint: hot-path
+pub fn scale(c: f32, out: &mut [f32]) {
+    for v in out.iter_mut() {
+        *v *= c;
+    }
+}
+
+/// `out[j] += c * (x[j] - sab * m[j])` — accumulate one scaled
+/// component-mean difference (the GMM score inner loop).
+// lint: hot-path
+pub fn acc_scaled_diff(c: f32, sab: f32, x: &[f32], m: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(m.len(), out.len());
+    let mut xc = x.chunks_exact(LANE);
+    let mut mc = m.chunks_exact(LANE);
+    let mut oc = out.chunks_exact_mut(LANE);
+    for ((xs, ms), os) in (&mut xc).zip(&mut mc).zip(&mut oc) {
+        for j in 0..LANE {
+            os[j] += c * (xs[j] - sab * ms[j]);
+        }
+    }
+    for ((xs, ms), os) in xc.remainder().iter().zip(mc.remainder()).zip(oc.into_remainder()) {
+        *os += c * (xs - sab * ms);
+    }
+}
+
+/// `sum_j (x[j] - sab * m[j])^2` with a **fixed, batch-independent
+/// reduction order**: [`LANE`] partial accumulators over the chunked
+/// body, a serial scalar tail, then one pairwise combine. The op
+/// sequence for a row depends only on the row length, which is what
+/// keeps per-row outputs bit-identical across batch shapes.
+// lint: hot-path
+pub fn sq_dist_scaled(x: &[f32], sab: f32, m: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), m.len());
+    let mut acc = [0.0f32; LANE];
+    let mut xc = x.chunks_exact(LANE);
+    let mut mc = m.chunks_exact(LANE);
+    for (xs, ms) in (&mut xc).zip(&mut mc) {
+        for j in 0..LANE {
+            let d = xs[j] - sab * ms[j];
+            acc[j] += d * d;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (xs, ms) in xc.remainder().iter().zip(mc.remainder()) {
+        let d = xs - sab * ms;
+        tail += d * d;
+    }
+    ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7])) + tail
+}
+
+/// In-place softmax numerator: `l[j] = exp(l[j] - max(l))`; returns the
+/// sum of the exponentials (so `l[j] / sum` are the probabilities).
+/// Max and sum are serial left-to-right — same fixed order for a given
+/// length, and `exp` calls dominate anyway for the `k <= 64` mixture
+/// sizes this serves.
+// lint: hot-path
+pub fn softmax(l: &mut [f32]) -> f32 {
+    let mut m = f32::NEG_INFINITY;
+    for &v in l.iter() {
+        if v > m {
+            m = v;
+        }
+    }
+    let mut sum = 0.0f32;
+    for v in l.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    sum
+}
+
+/// `log(sum_j exp(l[j]))`, max-shifted for stability. Destroys `l`
+/// (leaves the softmax numerators behind, like [`softmax`]).
+// lint: hot-path
+pub fn log_sum_exp(l: &mut [f32]) -> f32 {
+    if l.is_empty() {
+        return f32::NEG_INFINITY;
+    }
+    let mut m = f32::NEG_INFINITY;
+    for &v in l.iter() {
+        if v > m {
+            m = v;
+        }
+    }
+    softmax(l).ln() + m
+}
+
+/// Blocked accumulating matmul: `out[r, j] += sum_i x[r, i] * w[i, j]`
+/// for `x: rows × cin` (row-major), `w: cin × cout` (row-major),
+/// `out: rows × cout`.
+///
+/// Register-tiled [`MR`] rows × [`NR`] output columns; `w` is streamed
+/// row by row so the inner loop is a pure fused multiply-add over a
+/// contiguous `w` window. The per-row accumulation order (ascending
+/// `i`, tile-major `j`) is identical between the [`MR`]-row body and
+/// the 1-row tail, so each output row is bit-identical no matter how
+/// many rows are in the batch.
+// lint: hot-path
+pub fn matmul_acc(x: &[f32], rows: usize, cin: usize, w: &[f32], cout: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * cin);
+    debug_assert_eq!(w.len(), cin * cout);
+    debug_assert_eq!(out.len(), rows * cout);
+    let mut r = 0;
+    while r + MR <= rows {
+        let (xs, os) = (&x[r * cin..(r + MR) * cin], &mut out[r * cout..(r + MR) * cout]);
+        matmul_rows::<MR>(xs, cin, w, cout, os);
+        r += MR;
+    }
+    while r < rows {
+        let (xs, os) = (&x[r * cin..(r + 1) * cin], &mut out[r * cout..(r + 1) * cout]);
+        matmul_rows::<1>(xs, cin, w, cout, os);
+        r += 1;
+    }
+}
+
+/// One `R`-row block of [`matmul_acc`]. The accumulator for row slot
+/// `rr` sees exactly the ops `acc[j] += x[rr, i] * w[i, j]` for `i`
+/// ascending within each `j`-tile — independent of `R`, which is the
+/// bit-identity argument for the blocked/tail split above.
+// lint: hot-path
+fn matmul_rows<const R: usize>(x: &[f32], cin: usize, w: &[f32], cout: usize, out: &mut [f32]) {
+    let mut jt = 0;
+    while jt < cout {
+        let tw = NR.min(cout - jt);
+        let mut acc = [[0.0f32; NR]; R];
+        for i in 0..cin {
+            let wr = &w[i * cout + jt..i * cout + jt + tw];
+            for (rr, accr) in acc.iter_mut().enumerate() {
+                let xi = x[rr * cin + i];
+                for j in 0..tw {
+                    accr[j] += xi * wr[j];
+                }
+            }
+        }
+        for (rr, accr) in acc.iter().enumerate() {
+            let or = &mut out[rr * cout + jt..rr * cout + jt + tw];
+            for j in 0..tw {
+                or[j] += accr[j];
+            }
+        }
+        jt += tw;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::SplitMix64;
+
+    /// Ragged lengths around the lane width: all-remainder, exact
+    /// chunks, and chunk + tail shapes.
+    const LENS: &[usize] = &[1, 5, 7, 8, 9, 16, 23, 64];
+
+    fn fill(n: usize, seed: u64) -> Vec<f32> {
+        SplitMix64::new(seed).normals_f32(n)
+    }
+
+    #[test]
+    fn elementwise_kernels_match_scalar_reference() {
+        for &n in LENS {
+            let x = fill(n, 1);
+            let y = fill(n, 2);
+            let base = fill(n, 3);
+
+            let mut out = base.clone();
+            axpc(0.7, &x, -0.3, &mut out);
+            for j in 0..n {
+                assert_eq!(out[j], 0.7 * x[j] - 0.3);
+            }
+
+            let mut out = base.clone();
+            axpby(0.7, &x, 1.3, &mut out);
+            for j in 0..n {
+                assert_eq!(out[j], 0.7 * x[j] + 1.3 * base[j]);
+            }
+
+            let mut out = base.clone();
+            lincomb(0.7, &x, -0.2, &y, &mut out);
+            for j in 0..n {
+                assert_eq!(out[j], 0.7 * x[j] + -0.2 * y[j]);
+            }
+
+            let mut out = base.clone();
+            axpbypcz(0.7, &x, 1.3, 0.11, &y, &mut out);
+            for j in 0..n {
+                assert_eq!(out[j], 0.7 * x[j] + 1.3 * base[j] + 0.11 * y[j]);
+            }
+
+            let mut out = base.clone();
+            add_scaled(&x, 0.25, &y, &mut out);
+            for j in 0..n {
+                assert_eq!(out[j], x[j] + 0.25 * y[j]);
+            }
+
+            let mut out = base.clone();
+            avg_step(&x, 0.5, &y, &mut out);
+            for j in 0..n {
+                assert_eq!(out[j], x[j] + 0.5 * (y[j] + base[j]));
+            }
+
+            let mut out = base.clone();
+            pf_transform(0.4, 0.9, &x, &mut out);
+            for j in 0..n {
+                assert_eq!(out[j], 0.4 * (x[j] - base[j] / 0.9));
+            }
+
+            let mut out = base.clone();
+            acc_scaled_diff(0.6, 0.8, &x, &y, &mut out);
+            for j in 0..n {
+                assert_eq!(out[j], base[j] + 0.6 * (x[j] - 0.8 * y[j]));
+            }
+
+            let mut out = base.clone();
+            scale(1.7, &mut out);
+            for j in 0..n {
+                assert_eq!(out[j], base[j] * 1.7);
+            }
+        }
+    }
+
+    #[test]
+    fn sq_dist_is_length_deterministic_and_close_to_reference() {
+        for &n in LENS {
+            let x = fill(n, 4);
+            let m = fill(n, 5);
+            let got = sq_dist_scaled(&x, 0.9, &m);
+            // Same inputs, same length -> bitwise-identical result.
+            assert_eq!(got, sq_dist_scaled(&x, 0.9, &m));
+            // And numerically the serial sum, within f32 reassociation.
+            let mut want = 0.0f32;
+            for j in 0..n {
+                let d = x[j] - 0.9 * m[j];
+                want += d * d;
+            }
+            let tol = 1e-5 * want.abs().max(1.0);
+            assert!((got - want).abs() < tol, "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn softmax_normalizes_and_is_shift_stable() {
+        let mut l = [1.0f32, 2.0, 3.0, -1.0];
+        let mut shifted = [1001.0f32, 1002.0, 1003.0, 999.0];
+        let s = softmax(&mut l);
+        let ss = softmax(&mut shifted);
+        for j in 0..l.len() {
+            assert!((l[j] / s - shifted[j] / ss).abs() < 1e-6);
+        }
+        let p: f32 = l.iter().map(|e| e / s).sum();
+        assert!((p - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_sum_exp_matches_direct_sum() {
+        let mut l = [0.3f32, -1.2, 2.5, 0.0, 0.9];
+        let want = l.iter().map(|v| (*v as f64).exp()).sum::<f64>().ln() as f32;
+        assert!((log_sum_exp(&mut l) - want).abs() < 1e-5);
+        assert_eq!(log_sum_exp(&mut []), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn matmul_matches_naive_reference() {
+        // Ragged in every dimension: rows over/under MR, cout over/under
+        // NR, cin not a multiple of anything.
+        for &(rows, cin, cout) in &[(1, 3, 2), (4, 7, 16), (5, 13, 17), (9, 24, 33), (2, 64, 15)] {
+            let x = fill(rows * cin, 6);
+            let w = fill(cin * cout, 7);
+            let mut out = fill(rows * cout, 8);
+            let mut want = out.clone();
+            for r in 0..rows {
+                for j in 0..cout {
+                    let mut s = want[r * cout + j] as f64;
+                    for i in 0..cin {
+                        s += (x[r * cin + i] as f64) * (w[i * cout + j] as f64);
+                    }
+                    want[r * cout + j] = s as f32;
+                }
+            }
+            matmul_acc(&x, rows, cin, &w, cout, &mut out);
+            for idx in 0..rows * cout {
+                let tol = 1e-4 * want[idx].abs().max(1.0);
+                assert!(
+                    (out[idx] - want[idx]).abs() < tol,
+                    "({rows},{cin},{cout})[{idx}]: {} vs {}",
+                    out[idx],
+                    want[idx]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_rows_are_bit_identical_across_row_counts() {
+        // Row r of an n-row product must equal the same row computed
+        // solo — the MR-block/tail split may not change any row's bits.
+        let cin = 13;
+        let cout = 33;
+        let rows = 9;
+        let x = fill(rows * cin, 9);
+        let w = fill(cin * cout, 10);
+        let mut full = vec![0.0f32; rows * cout];
+        matmul_acc(&x, rows, cin, &w, cout, &mut full);
+        for r in 0..rows {
+            let mut solo = vec![0.0f32; cout];
+            matmul_acc(&x[r * cin..(r + 1) * cin], 1, cin, &w, cout, &mut solo);
+            assert_eq!(&full[r * cout..(r + 1) * cout], &solo[..], "row {r}");
+        }
+    }
+}

@@ -28,7 +28,13 @@
 //!   staging buffer), and solver steps write in place via the
 //!   [`solvers::StepBackend::step_into`] contract — steady-state steps
 //!   allocate nothing, observable as `pool_hits`/`pool_misses` in
-//!   [`coordinator::RunStats`] and over the wire.
+//!   [`coordinator::RunStats`] and over the wire. The math under those
+//!   steps runs on the lane-tiled kernel layer ([`kernels`]: stable-Rust
+//!   8-lane chunked loops LLVM autovectorizes — fused scale-adds for the
+//!   solver updates, softmax/log-sum-exp + scaled distances for the GMM
+//!   score, a blocked matmul for the denoiser — with a fixed per-row
+//!   reduction order so each row's output is bit-identical regardless
+//!   of batch shape or worker chunk split).
 //! * **L2/L1 (python/, build-time only)** — JAX solver-step graphs calling
 //!   Pallas kernels, AOT-lowered once to HLO-text artifacts that
 //!   [`runtime`] loads and executes via the PJRT C API (`xla` crate).
@@ -53,6 +59,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exec;
 pub mod json;
+pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod model;

@@ -1,9 +1,16 @@
 //! Native `SmallDenoiser` — the seeded residual-MLP eps-net, mirroring
 //! `python/compile/model.py` (weights regenerated from the shared
 //! splitmix64 stream; forward pass matches the fused_mlp Pallas kernel).
+//!
+//! The forward pass runs on the blocked [`crate::kernels::matmul_acc`]
+//! and keeps its activations in per-thread scratch, so steady-state
+//! `eps` calls allocate nothing.
 
 use super::EpsModel;
+use crate::buf::sized;
 use crate::data::rng::{seed_for, SplitMix64};
+use crate::kernels;
+use std::cell::RefCell;
 
 pub const NFREQ: usize = 16;
 pub const HIDDEN: usize = 256;
@@ -22,6 +29,15 @@ struct Block {
     b1: Vec<f32>,
     w2: Vec<f32>, // (FF, HIDDEN)
     b2: Vec<f32>,
+}
+
+thread_local! {
+    /// Per-thread activation scratch `(inp, h, a)`: the model itself is
+    /// shared across engine workers (`EpsModel: Sync`), so reusable
+    /// activations can't live on `self`. Sized lazily to the largest
+    /// batch each thread sees; every element is overwritten before use.
+    static ACT: RefCell<(Vec<f32>, Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new(), Vec::new())) };
 }
 
 /// Residual-MLP eps-net (~0.5M params) with Fourier time features.
@@ -70,72 +86,55 @@ impl SmallDenoiser {
     }
 }
 
-/// `out[r, :] += x[r, :] @ w` for row-major `w (in, out_cols)`.
-fn matmul_acc(x: &[f32], rows: usize, cin: usize, w: &[f32], cout: usize, out: &mut [f32]) {
-    for r in 0..rows {
-        let xr = &x[r * cin..(r + 1) * cin];
-        let or = &mut out[r * cout..(r + 1) * cout];
-        for (i, &xi) in xr.iter().enumerate() {
-            if xi == 0.0 {
-                continue;
-            }
-            let wr = &w[i * cout..(i + 1) * cout];
-            for j in 0..cout {
-                or[j] += xi * wr[j];
-            }
-        }
-    }
-}
-
 impl EpsModel for SmallDenoiser {
     fn dim(&self) -> usize {
         self.dim
     }
 
+    // lint: hot-path
     fn eps(&self, x: &[f32], s: &[f32], _mask: Option<&[f32]>, out: &mut [f32]) {
         let b = s.len();
         let d = self.dim;
         let din = d + 2 * NFREQ;
-        // input = [x, sin(2^j pi s), cos(2^j pi s)]
-        let mut inp = vec![0.0f32; b * din];
-        for r in 0..b {
-            inp[r * din..r * din + d].copy_from_slice(&x[r * d..(r + 1) * d]);
-            for j in 0..NFREQ {
-                let ang = s[r] * (2.0f32).powi(j as i32) * std::f32::consts::PI;
-                inp[r * din + d + j] = ang.sin();
-                inp[r * din + d + NFREQ + j] = ang.cos();
-            }
-        }
-        // h = gelu(inp @ w_in + b_in)
-        let mut h = vec![0.0f32; b * HIDDEN];
-        for r in 0..b {
-            h[r * HIDDEN..(r + 1) * HIDDEN].copy_from_slice(&self.b_in);
-        }
-        matmul_acc(&inp, b, din, &self.w_in, HIDDEN, &mut h);
-        h.iter_mut().for_each(|v| *v = gelu(*v));
-        // residual blocks: h = h + gelu(h@w1+b1)@w2 + b2
-        let mut a = vec![0.0f32; b * FF];
-        for blk in &self.blocks {
-            a.iter_mut().for_each(|v| *v = 0.0);
+        ACT.with(|act| {
+            let (inp, h, a) = &mut *act.borrow_mut();
+            sized(inp, b * din);
+            sized(h, b * HIDDEN);
+            sized(a, b * FF);
+            // input = [x, sin(2^j pi s), cos(2^j pi s)]
             for r in 0..b {
-                a[r * FF..(r + 1) * FF].copy_from_slice(&blk.b1);
-            }
-            matmul_acc(&h, b, HIDDEN, &blk.w1, FF, &mut a);
-            a.iter_mut().for_each(|v| *v = gelu(*v));
-            // h += a @ w2 + b2
-            for r in 0..b {
-                let hr = &mut h[r * HIDDEN..(r + 1) * HIDDEN];
-                for j in 0..HIDDEN {
-                    hr[j] += blk.b2[j];
+                inp[r * din..r * din + d].copy_from_slice(&x[r * d..(r + 1) * d]);
+                for j in 0..NFREQ {
+                    let ang = s[r] * (2.0f32).powi(j as i32) * std::f32::consts::PI;
+                    inp[r * din + d + j] = ang.sin();
+                    inp[r * din + d + NFREQ + j] = ang.cos();
                 }
             }
-            matmul_acc(&a, b, FF, &blk.w2, HIDDEN, &mut h);
-        }
-        // out = h @ w_out + b_out
-        for r in 0..b {
-            out[r * d..(r + 1) * d].copy_from_slice(&self.b_out);
-        }
-        matmul_acc(&h, b, HIDDEN, &self.w_out, d, out);
+            // h = gelu(inp @ w_in + b_in)
+            for r in 0..b {
+                h[r * HIDDEN..(r + 1) * HIDDEN].copy_from_slice(&self.b_in);
+            }
+            kernels::matmul_acc(inp, b, din, &self.w_in, HIDDEN, h);
+            h.iter_mut().for_each(|v| *v = gelu(*v));
+            // residual blocks: h = h + gelu(h@w1+b1)@w2 + b2
+            for blk in &self.blocks {
+                for r in 0..b {
+                    a[r * FF..(r + 1) * FF].copy_from_slice(&blk.b1);
+                }
+                kernels::matmul_acc(h, b, HIDDEN, &blk.w1, FF, a);
+                a.iter_mut().for_each(|v| *v = gelu(*v));
+                // h += a @ w2 + b2
+                for hr in h.chunks_exact_mut(HIDDEN) {
+                    kernels::axpby(1.0, &blk.b2, 1.0, hr);
+                }
+                kernels::matmul_acc(a, b, FF, &blk.w2, HIDDEN, h);
+            }
+            // out = h @ w_out + b_out
+            for r in 0..b {
+                out[r * d..(r + 1) * d].copy_from_slice(&self.b_out);
+            }
+            kernels::matmul_acc(h, b, HIDDEN, &self.w_out, d, out);
+        });
     }
 }
 

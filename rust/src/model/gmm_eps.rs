@@ -1,9 +1,29 @@
 //! Analytic Gaussian-mixture eps-model — mirrors the `gmm_score` Pallas
 //! kernel (`python/compile/kernels/gmm_score.py`) and its jnp oracle.
+//!
+//! The per-row math runs on [`crate::kernels`]: lane-tiled scaled
+//! distances for the logits, the shared softmax, and fused
+//! accumulate-scaled-diff passes for the score. The guided entry point
+//! overrides the two-pass trait default with a single fused pass (see
+//! `eps_guided_row` below).
 
 use super::EpsModel;
 use crate::data::Gmm;
+use crate::kernels;
 use crate::schedule;
+
+/// Largest supported mixture size (stack-allocated logit lanes).
+const MAX_K: usize = 64;
+
+/// Per-row schedule constants `(ᾱ, √ᾱ, σ)` at progress `s`.
+// lint: hot-path
+fn row_schedule(s: f32) -> (f32, f32, f32) {
+    let tau = 1.0 - s;
+    let ab = schedule::log_alpha_bar(tau).exp();
+    let sab = ab.sqrt();
+    let sig = (1.0 - ab).max(0.0).sqrt().max(schedule::SIGMA_FLOOR);
+    (ab, sab, sig)
+}
 
 /// Exact eps-prediction of a diffused GMM (the "pretrained model"
 /// substitute, DESIGN.md §Substitutions).
@@ -30,41 +50,27 @@ impl GmmEps {
         &self.gmm
     }
 
+    // lint: hot-path
     fn eps_row(&self, x: &[f32], s: f32, mask: Option<&[f32]>, out: &mut [f32]) {
         let d = self.gmm.dim();
         let k = self.gmm.k();
-        let tau = 1.0 - s;
-        let ab = schedule::log_alpha_bar(tau).exp();
-        let sab = ab.sqrt();
-        let sig = (1.0 - ab).max(0.0).sqrt().max(schedule::SIGMA_FLOOR);
+        let (ab, sab, sig) = row_schedule(s);
 
         // logits_k = log w_k + log(mask_k + 1e-30) − d/2 log v_k − ‖x−√ᾱμ‖²/(2v_k)
-        let mut logits = [0.0f32; 64];
-        debug_assert!(k <= 64);
-        let mut vk = [0.0f32; 64];
-        let mut max_logit = f32::NEG_INFINITY;
+        debug_assert!(k <= MAX_K);
+        let mut logits = [0.0f32; MAX_K];
+        let mut vk = [0.0f32; MAX_K];
         for c in 0..k {
             let v = ab * self.sig2[c] + (1.0 - ab);
             vk[c] = v;
-            let m = self.gmm.mean_of(c);
-            let mut sq = 0.0f32;
-            for j in 0..d {
-                let diff = x[j] - sab * m[j];
-                sq += diff * diff;
-            }
+            let sq = kernels::sq_dist_scaled(x, sab, self.gmm.mean_of(c));
             let lm = match mask {
                 Some(ms) => (ms[c] + 1e-30).ln(),
                 None => 0.0,
             };
-            let l = self.log_w[c] + lm - 0.5 * d as f32 * v.ln() - 0.5 * sq / v;
-            logits[c] = l;
-            max_logit = max_logit.max(l);
+            logits[c] = self.log_w[c] + lm - 0.5 * d as f32 * v.ln() - 0.5 * sq / v;
         }
-        let mut rsum = 0.0f32;
-        for c in 0..k {
-            logits[c] = (logits[c] - max_logit).exp();
-            rsum += logits[c];
-        }
+        let rsum = kernels::softmax(&mut logits[..k]);
         // out = sig * Σ_k (r_k / v_k) (x − √ᾱ μ_k)
         out.fill(0.0);
         for c in 0..k {
@@ -72,14 +78,49 @@ impl GmmEps {
             if coeff == 0.0 {
                 continue;
             }
-            let m = self.gmm.mean_of(c);
-            for j in 0..d {
-                out[j] += coeff * (x[j] - sab * m[j]);
+            kernels::acc_scaled_diff(coeff, sab, x, self.gmm.mean_of(c), out);
+        }
+        kernels::scale(sig, out);
+    }
+
+    /// Fused classifier-free-guidance row. The unconditional and
+    /// conditional scores share every distance `‖x−√ᾱμ_k‖²` and
+    /// variance `v_k`, and both have the form `Σ_k c_k (x−√ᾱμ_k)` — so
+    /// instead of two full score passes plus a blend buffer (the trait
+    /// default), compute both responsibility sets from one distance pass
+    /// and accumulate once with the blended coefficient
+    /// `((1−w)·r^u_k + w·r^c_k) / v_k`. Bit-exact vs the plain `eps`
+    /// paths at `w ∈ {0, 1}` (`guided_interpolates` pins this).
+    // lint: hot-path
+    fn eps_guided_row(&self, x: &[f32], s: f32, mask: &[f32], w: f32, out: &mut [f32]) {
+        let d = self.gmm.dim();
+        let k = self.gmm.k();
+        let (ab, sab, sig) = row_schedule(s);
+        debug_assert!(k <= MAX_K);
+        let mut lu = [0.0f32; MAX_K];
+        let mut lc = [0.0f32; MAX_K];
+        let mut vk = [0.0f32; MAX_K];
+        for c in 0..k {
+            let v = ab * self.sig2[c] + (1.0 - ab);
+            vk[c] = v;
+            let sq = kernels::sq_dist_scaled(x, sab, self.gmm.mean_of(c));
+            let lw = self.log_w[c];
+            let lm = (mask[c] + 1e-30).ln();
+            // Same op order as eps_row so w ∈ {0, 1} reproduces its bits.
+            lu[c] = lw - 0.5 * d as f32 * v.ln() - 0.5 * sq / v;
+            lc[c] = lw + lm - 0.5 * d as f32 * v.ln() - 0.5 * sq / v;
+        }
+        let usum = kernels::softmax(&mut lu[..k]);
+        let csum = kernels::softmax(&mut lc[..k]);
+        out.fill(0.0);
+        for c in 0..k {
+            let coeff = ((1.0 - w) * (lu[c] / usum) + w * (lc[c] / csum)) / vk[c];
+            if coeff == 0.0 {
+                continue;
             }
+            kernels::acc_scaled_diff(coeff, sab, x, self.gmm.mean_of(c), out);
         }
-        for j in 0..d {
-            out[j] *= sig;
-        }
+        kernels::scale(sig, out);
     }
 }
 
@@ -98,6 +139,15 @@ impl EpsModel for GmmEps {
         for (i, &si) in s.iter().enumerate() {
             let m = mask.map(|ms| &ms[i * k..(i + 1) * k]);
             self.eps_row(&x[i * d..(i + 1) * d], si, m, &mut out[i * d..(i + 1) * d]);
+        }
+    }
+
+    fn eps_guided(&self, x: &[f32], s: &[f32], mask: &[f32], w: f32, out: &mut [f32]) {
+        let d = self.dim();
+        let k = self.k();
+        for (i, &si) in s.iter().enumerate() {
+            let m = &mask[i * k..(i + 1) * k];
+            self.eps_guided_row(&x[i * d..(i + 1) * d], si, m, w, &mut out[i * d..(i + 1) * d]);
         }
     }
 }
@@ -192,5 +242,34 @@ mod tests {
             assert!((e_g[j] - e_u[j]).abs() < 1e-5, "w=0 reduces to unconditional");
         }
         let _ = k;
+    }
+
+    #[test]
+    fn fused_guidance_matches_two_pass_blend() {
+        // The fused single-pass override must agree with the trait
+        // default (two eps calls + blend) to fp tolerance at an
+        // extrapolating guidance weight.
+        let m = model("latent_cond");
+        let d = m.dim();
+        let mut rng = crate::data::rng::SplitMix64::new(13);
+        let b = 3;
+        let x = rng.normals_f32(b * d);
+        let s = [0.15f32, 0.5, 0.85];
+        let mask: Vec<f32> = (0..b as u32).flat_map(|i| m.gmm().class_mask(i % 2)).collect();
+        let w = 7.5;
+        let mut fused = vec![0.0; b * d];
+        m.eps_guided(&x, &s, &mask, w, &mut fused);
+        // Trait-default blend, inlined.
+        let (mut e_u, mut e_c) = (vec![0.0; b * d], vec![0.0; b * d]);
+        m.eps(&x, &s, None, &mut e_u);
+        m.eps(&x, &s, Some(&mask), &mut e_c);
+        for i in 0..b * d {
+            let want = e_u[i] + w * (e_c[i] - e_u[i]);
+            assert!(
+                (fused[i] - want).abs() < 1e-4 * want.abs().max(1.0),
+                "[{i}]: {} vs {want}",
+                fused[i]
+            );
+        }
     }
 }

@@ -2,6 +2,7 @@
 //! smooth, deterministic maps with known structure.
 
 use super::EpsModel;
+use crate::kernels;
 
 /// `ε̂ = a·x + c·s` — an affine model giving a linear ODE whose flows are
 /// contractive/expansive in a controlled way. Proptests on the Parareal
@@ -24,12 +25,15 @@ impl EpsModel for AffineModel {
         self.dim
     }
 
+    // The hot-path benches drive this model, so it runs on the same
+    // lane-tiled kernels as the real ones (bitwise-equal to the scalar
+    // loop: `a*x[j] + c*s` element for element).
+    // lint: hot-path
     fn eps(&self, x: &[f32], s: &[f32], _mask: Option<&[f32]>, out: &mut [f32]) {
         let d = self.dim;
-        for (i, &si) in s.iter().enumerate() {
-            for j in 0..d {
-                out[i * d + j] = self.a * x[i * d + j] + self.c * si;
-            }
+        let rows = x.chunks_exact(d).zip(out.chunks_exact_mut(d));
+        for ((xr, o), &si) in rows.zip(s) {
+            kernels::axpc(self.a, xr, self.c * si, o);
         }
     }
 }

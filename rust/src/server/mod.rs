@@ -31,6 +31,7 @@
 //!  "total_evals": 74, "peak_states": 17, "wall_ms": 12.3,
 //!  "batch_occupancy": 3.4, "engine_rows": 74,
 //!  "queue_depth": 12, "active_tasks": 3, "flushed_batches": 210,
+//!  "split_batches": 4,
 //!  "classes": {"interactive": {"active": 1, "completed": 7, "rows": 310,
 //!              "mean_wall_ms": 4.2, "deadline_hits": 0}, "standard": {},
 //!              "batch": {}},
@@ -43,7 +44,8 @@
 //! [`overloaded_response`]) instead of stalling the read loop.
 //!
 //! `batch_occupancy` / `engine_rows` are per-request fusion stats;
-//! `queue_depth` / `active_tasks` / `flushed_batches` are engine-wide
+//! `queue_depth` / `active_tasks` / `flushed_batches` /
+//! `split_batches` (flush fan-outs across idle workers) are engine-wide
 //! snapshots taken at completion (absent when a request is executed
 //! off-engine, e.g. via [`run_request`] in unit tests). `active_tasks`
 //! is the depth of the engine's heterogeneous task table — how many
@@ -300,6 +302,7 @@ fn success_response(
         pairs.push(("queue_depth", Value::Num(st.queue_depth as f64)));
         pairs.push(("active_tasks", Value::Num(st.active_tasks as f64)));
         pairs.push(("flushed_batches", Value::Num(st.flushed_batches as f64)));
+        pairs.push(("split_batches", Value::Num(st.split_batches as f64)));
         pairs.push(("pool_high_water", Value::Num(st.pool_high_water as f64)));
         // Per-QoS-class lanes (snapshot at completion): the operator's
         // starvation dashboard, one object per class.

@@ -2,32 +2,61 @@
 //! functions in `python/compile/model.py` operation-for-operation (f32),
 //! so native solves agree with the AOT HLO artifacts to fp tolerance
 //! (pinned by `rust/tests/golden.rs`).
+//!
+//! The arithmetic itself runs on the lane-tiled primitives in
+//! [`crate::kernels`]: each solver computes all per-row schedule
+//! coefficients once into small per-row scratch lanes, then applies the
+//! update as a single contiguous kernel pass per row. Rows never
+//! interact, and every kernel's per-row op order is fixed, so each
+//! row's output is bit-identical regardless of batch shape (pinned by
+//! `batched_mixed_rows_equal_solo_rows` below and `tests/batch_shape.rs`).
 
 use super::{ddim_coeffs, ddpm_coeffs, ddpm_noise, Solver, StepBackend, StepRequest};
 use crate::buf::sized;
+use crate::kernels;
 use crate::model::EpsModel;
 use crate::schedule;
 use std::cell::RefCell;
 use std::sync::Arc;
 
-/// Per-backend model-eval scratch, reused across [`StepBackend::step_into`]
-/// calls so the 2-eval solvers (Heun, DPM-2) and DDPM's noise row never
-/// allocate on the hot path. Sized lazily to the largest batch seen.
+/// Per-backend scratch, reused across [`StepBackend::step_into`] calls so
+/// the 2-eval solvers (Heun, DPM-2), DDPM's noise row, and the per-row
+/// coefficient lanes never allocate on the hot path. Sized lazily to the
+/// largest batch seen.
 #[derive(Default)]
 struct Scratch {
+    /// Full (b, d) model-eval rows: first slope / midpoint eps, midpoint
+    /// state / Heun predictor, and DDPM's per-row noise (d only).
     a: Vec<f32>,
     b: Vec<f32>,
     s: Vec<f32>,
+    /// Per-row schedule-coefficient lanes (length b), filled once per
+    /// step and then applied in one lane-tiled kernel pass per row.
+    c1: Vec<f32>,
+    c2: Vec<f32>,
+    c3: Vec<f32>,
+    c4: Vec<f32>,
+}
+
+/// Iterate parallel row slices of an input and an output (b, d) matrix.
+// lint: hot-path
+fn rows2<'a>(
+    x: &'a [f32],
+    out: &'a mut [f32],
+    d: usize,
+) -> impl Iterator<Item = (&'a [f32], &'a mut [f32])> + 'a {
+    x.chunks_exact(d).zip(out.chunks_exact_mut(d))
 }
 
 /// Native backend: batched eps through the model, per-row schedule
-/// coefficients, fused update.
+/// coefficients, fused lane-tiled update.
 ///
 /// Every solver path makes **one batched model call per eval** (two for
-/// the 2-eval solvers) followed by a single pass applying per-row
-/// coefficients — rows never interact. The multi-tenant engine
-/// (`crate::exec::engine`) relies on exactly this: it fuses step rows
-/// from *different requests* into one `StepRequest`, and per-request
+/// the 2-eval solvers) followed by a single kernel pass per row applying
+/// the precomputed coefficients — rows never interact. The multi-tenant
+/// engine (`crate::exec::engine`) relies on exactly this: it fuses step
+/// rows from *different requests* into one `StepRequest` (and splits
+/// large batches into row chunks across workers), and per-request
 /// outputs must be bit-identical to a solo run (pinned below by
 /// `batched_mixed_rows_equal_solo_rows` and by the engine's equivalence
 /// tests).
@@ -57,16 +86,13 @@ impl NativeBackend {
     }
 
     /// Probability-flow slope `dx/ds = 0.5 β(1-s) (x − ε̂/σ(s))` per row.
+    // lint: hot-path
     fn pf_slope(&self, x: &[f32], s: &[f32], req: &StepRequest, out: &mut [f32]) {
         let d = self.model.dim();
         self.eps(x, s, req, out);
-        for (i, &si) in s.iter().enumerate() {
-            let c = 0.5 * schedule::beta(1.0 - si);
-            let sig = schedule::sigma(si);
-            for j in 0..d {
-                let idx = i * d + j;
-                out[idx] = c * (x[idx] - out[idx] / sig);
-            }
+        for (i, (xr, o)) in rows2(x, out, d).enumerate() {
+            let c = 0.5 * schedule::beta(1.0 - s[i]);
+            kernels::pf_transform(c, schedule::sigma(s[i]), xr, o);
         }
     }
 }
@@ -89,87 +115,91 @@ impl StepBackend for NativeBackend {
         match self.solver {
             Solver::Ddim => {
                 self.eps(req.x, req.s_from, req, out);
+                let Scratch { c1, c2, .. } = &mut *sc;
+                sized(c1, b);
+                sized(c2, b);
                 for i in 0..b {
-                    let (c1, c2) = ddim_coeffs(req.s_from[i], req.s_to[i]);
-                    for j in 0..d {
-                        let idx = i * d + j;
-                        out[idx] = c1 * req.x[idx] + c2 * out[idx];
-                    }
+                    (c1[i], c2[i]) = ddim_coeffs(req.s_from[i], req.s_to[i]);
+                }
+                for (i, (x, o)) in rows2(req.x, out, d).enumerate() {
+                    kernels::axpby(c1[i], x, c2[i], o);
                 }
             }
             Solver::Ddpm => {
                 self.eps(req.x, req.s_from, req, out);
-                let xi = &mut sc.a;
+                let Scratch { a: xi, c1, c2, c3, .. } = &mut *sc;
                 sized(xi, d);
+                sized(c1, b);
+                sized(c2, b);
+                sized(c3, b);
                 for i in 0..b {
-                    let (c1, c2, c3) = ddpm_coeffs(req.s_from[i], req.s_to[i]);
+                    (c1[i], c2[i], c3[i]) = ddpm_coeffs(req.s_from[i], req.s_to[i]);
+                }
+                for (i, (x, o)) in rows2(req.x, out, d).enumerate() {
                     ddpm_noise(req.seeds[i], req.s_from[i], d, xi);
-                    for j in 0..d {
-                        let idx = i * d + j;
-                        out[idx] = c1 * req.x[idx] + c2 * out[idx] + c3 * xi[j];
-                    }
+                    kernels::axpbypcz(c1[i], x, c2[i], c3[i], xi, o);
                 }
             }
             Solver::Euler => {
                 self.pf_slope(req.x, req.s_from, req, out);
+                let Scratch { c1, .. } = &mut *sc;
+                sized(c1, b);
                 for i in 0..b {
-                    let h = req.s_to[i] - req.s_from[i];
-                    for j in 0..d {
-                        let idx = i * d + j;
-                        out[idx] = req.x[idx] + h * out[idx];
-                    }
+                    c1[i] = req.s_to[i] - req.s_from[i];
+                }
+                for (i, (x, o)) in rows2(req.x, out, d).enumerate() {
+                    kernels::axpby(1.0, x, c1[i], o);
                 }
             }
             Solver::Heun => {
-                let Scratch { a: d1, b: xe, .. } = &mut *sc;
+                let Scratch { a: d1, b: xe, c1, .. } = &mut *sc;
                 sized(d1, b * d);
                 sized(xe, b * d);
-                self.pf_slope(req.x, req.s_from, req, d1);
+                sized(c1, b);
                 for i in 0..b {
-                    let h = req.s_to[i] - req.s_from[i];
-                    for j in 0..d {
-                        let idx = i * d + j;
-                        xe[idx] = req.x[idx] + h * d1[idx];
-                    }
+                    c1[i] = req.s_to[i] - req.s_from[i];
+                }
+                self.pf_slope(req.x, req.s_from, req, d1);
+                for (i, (x, xe_r)) in rows2(req.x, xe, d).enumerate() {
+                    kernels::add_scaled(x, c1[i], &d1[i * d..(i + 1) * d], xe_r);
                 }
                 self.pf_slope(xe, req.s_to, req, out);
-                for i in 0..b {
-                    let h = req.s_to[i] - req.s_from[i];
-                    for j in 0..d {
-                        let idx = i * d + j;
-                        out[idx] = req.x[idx] + 0.5 * h * (d1[idx] + out[idx]);
-                    }
+                for (i, (x, o)) in rows2(req.x, out, d).enumerate() {
+                    kernels::avg_step(x, 0.5 * c1[i], &d1[i * d..(i + 1) * d], o);
                 }
             }
             Solver::Dpm2 => {
                 // Exponential-integrator midpoint in half-log-SNR space.
-                let Scratch { a: e1, b: u, s: s_mid } = &mut *sc;
+                // All per-row schedule coefficients (lam, h, the midpoint
+                // and full-step x/eps weights) are computed once here; the
+                // second pass used to recompute lam and h per row
+                // (`dpm2_coefficient_hoist_is_bitwise_neutral` pins the
+                // hoist as a pure refactor).
+                let Scratch { a: e1, b: u, s: s_mid, c1, c2, c3, c4 } = &mut *sc;
                 sized(e1, b * d);
                 sized(u, b * d);
                 sized(s_mid, b);
-                self.eps(req.x, req.s_from, req, e1);
-                for i in 0..b {
-                    let lam_f = schedule::lam(req.s_from[i]);
-                    let lam_t = schedule::lam(req.s_to[i]);
-                    let h = lam_t - lam_f;
-                    s_mid[i] = schedule::s_of_lam(lam_f + 0.5 * h);
-                    let c1 = schedule::sqrt_ab(s_mid[i]) / schedule::sqrt_ab(req.s_from[i]);
-                    let c2 = -schedule::sigma(s_mid[i]) * (0.5 * h).exp_m1();
-                    for j in 0..d {
-                        let idx = i * d + j;
-                        u[idx] = c1 * req.x[idx] + c2 * e1[idx];
-                    }
-                }
-                self.eps(u, s_mid, req, out);
+                sized(c1, b);
+                sized(c2, b);
+                sized(c3, b);
+                sized(c4, b);
                 for i in 0..b {
                     let lam_f = schedule::lam(req.s_from[i]);
                     let h = schedule::lam(req.s_to[i]) - lam_f;
-                    let c1 = schedule::sqrt_ab(req.s_to[i]) / schedule::sqrt_ab(req.s_from[i]);
-                    let c2 = -schedule::sigma(req.s_to[i]) * h.exp_m1();
-                    for j in 0..d {
-                        let idx = i * d + j;
-                        out[idx] = c1 * req.x[idx] + c2 * out[idx];
-                    }
+                    s_mid[i] = schedule::s_of_lam(lam_f + 0.5 * h);
+                    let sab_f = schedule::sqrt_ab(req.s_from[i]);
+                    c1[i] = schedule::sqrt_ab(s_mid[i]) / sab_f;
+                    c2[i] = -schedule::sigma(s_mid[i]) * (0.5 * h).exp_m1();
+                    c3[i] = schedule::sqrt_ab(req.s_to[i]) / sab_f;
+                    c4[i] = -schedule::sigma(req.s_to[i]) * h.exp_m1();
+                }
+                self.eps(req.x, req.s_from, req, e1);
+                for (i, (x, u_r)) in rows2(req.x, u, d).enumerate() {
+                    kernels::lincomb(c1[i], x, c2[i], &e1[i * d..(i + 1) * d], u_r);
+                }
+                self.eps(u, s_mid, req, out);
+                for (i, (x, o)) in rows2(req.x, out, d).enumerate() {
+                    kernels::axpby(c3[i], x, c4[i], o);
                 }
             }
         }
@@ -194,7 +224,9 @@ mod tests {
 
     #[test]
     fn ddim_zero_model_closed_form() {
-        // With eps = 0, DDIM is x' = (sab_t/sab_f) x + sig_t - ... c2*0.
+        // With eps = 0 the DDIM update x' = c1·x + c2·ε̂ collapses to
+        // x' = (sab_t/sab_f)·x: the eps coefficient c2 = sig_t − c1·sig_f
+        // multiplies ε̂ = 0, leaving only the signal rescale.
         let be = NativeBackend::new(Arc::new(ZeroModel { dim: 4 }), Solver::Ddim);
         let x = [1.0f32, -2.0, 0.5, 3.0];
         let out = be.step(&req(&x, &[0.2], &[0.6], &[0]));
@@ -313,6 +345,54 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn dpm2_coefficient_hoist_is_bitwise_neutral() {
+        // Pins the coefficient-scratch rework as a pure refactor: the
+        // second DPM2 pass used to recompute schedule::lam / h per row.
+        // Re-derive the step with the historical two-pass formulas
+        // (lam and h recomputed in each pass, scalar loops) and require
+        // bit equality with step_into.
+        let gmm = make_gmm("church");
+        let model: Arc<dyn crate::model::EpsModel> = Arc::new(GmmEps::new(gmm));
+        let d = 64;
+        let b = 4;
+        let mut rng = crate::data::rng::SplitMix64::new(11);
+        let x = rng.normals_f32(b * d);
+        let s_from: Vec<f32> = (0..b).map(|i| 0.07 + 0.21 * i as f32).collect();
+        let s_to: Vec<f32> = s_from.iter().map(|s| s + 0.09).collect();
+        let seeds = vec![0u64; b];
+        let be = NativeBackend::new(model.clone(), Solver::Dpm2);
+        let got = be.step(&req(&x, &s_from, &s_to, &seeds));
+
+        let mut e1 = vec![0.0f32; b * d];
+        model.eps(&x, &s_from, None, &mut e1);
+        let mut u = vec![0.0f32; b * d];
+        let mut s_mid = vec![0.0f32; b];
+        for i in 0..b {
+            let lam_f = schedule::lam(s_from[i]);
+            let lam_t = schedule::lam(s_to[i]);
+            let h = lam_t - lam_f;
+            s_mid[i] = schedule::s_of_lam(lam_f + 0.5 * h);
+            let c1 = schedule::sqrt_ab(s_mid[i]) / schedule::sqrt_ab(s_from[i]);
+            let c2 = -schedule::sigma(s_mid[i]) * (0.5 * h).exp_m1();
+            for j in 0..d {
+                u[i * d + j] = c1 * x[i * d + j] + c2 * e1[i * d + j];
+            }
+        }
+        let mut want = vec![0.0f32; b * d];
+        model.eps(&u, &s_mid, None, &mut want);
+        for i in 0..b {
+            let lam_f = schedule::lam(s_from[i]);
+            let h = schedule::lam(s_to[i]) - lam_f;
+            let c1 = schedule::sqrt_ab(s_to[i]) / schedule::sqrt_ab(s_from[i]);
+            let c2 = -schedule::sigma(s_to[i]) * h.exp_m1();
+            for j in 0..d {
+                want[i * d + j] = c1 * x[i * d + j] + c2 * want[i * d + j];
+            }
+        }
+        assert_eq!(got, want);
     }
 
     // Scratch-reuse bitwise stability across varying batch shapes is

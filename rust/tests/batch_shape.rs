@@ -1,0 +1,196 @@
+//! Batch-shape invariance properties — the contract the kernel layer
+//! (`srds::kernels`) and the engine's data-parallel batch splitting
+//! stand on: **rows never interact**. A row's stepped output must be
+//! bit-identical whatever batch it rides in — batch size 1/3/8/32
+//! (ragged tails included), any contiguous chunk split a dispatcher
+//! might choose — for all five solvers on both model families (the
+//! analytic GMM score and the `SmallDenoiser` MLP), guided and not.
+//!
+//! Everything here is `assert_eq!` on `f32` slices: tolerances would
+//! hide exactly the class of bug (row math depending on batch
+//! composition) these tests exist to catch.
+
+use srds::data::make_gmm;
+use srds::data::rng::SplitMix64;
+use srds::model::{EpsModel, GmmEps, SmallDenoiser};
+use srds::solvers::{NativeBackend, Solver, StepBackend, StepRequest};
+use std::sync::Arc;
+
+/// Deterministic per-row inputs: states, schedule positions, seeds.
+/// Rows deliberately sit at unrelated schedule positions so fused
+/// coefficient staging cannot accidentally share work across rows.
+fn make_rows(d: usize, b: usize, salt: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<u64>) {
+    let mut rng = SplitMix64::new(0xba7c4_5a9e ^ salt);
+    let x = rng.normals_f32(b * d);
+    let mut s_from = Vec::with_capacity(b);
+    let mut s_to = Vec::with_capacity(b);
+    let mut seeds = Vec::with_capacity(b);
+    for i in 0..b {
+        // Spread over (0, 0.9) with irregular spacing and step sizes.
+        let f = 0.03 + 0.87 * ((i * 37 + 11) % 100) as f32 / 100.0;
+        s_from.push(f);
+        s_to.push((f + 0.01 + 0.05 * ((i * 13) % 7) as f32 / 7.0).min(0.98));
+        seeds.push(salt.wrapping_mul(1000) + i as u64);
+    }
+    (x, s_from, s_to, seeds)
+}
+
+fn req<'a>(x: &'a [f32], s_from: &'a [f32], s_to: &'a [f32], seeds: &'a [u64]) -> StepRequest<'a> {
+    StepRequest { x, s_from, s_to, mask: None, guidance: 0.0, seeds }
+}
+
+fn models() -> Vec<(&'static str, Arc<dyn EpsModel>)> {
+    vec![
+        ("gmm_church_d64", Arc::new(GmmEps::new(make_gmm("church"))) as Arc<dyn EpsModel>),
+        ("gmm_toy2d_d2", Arc::new(GmmEps::new(make_gmm("toy2d"))) as Arc<dyn EpsModel>),
+        ("denoiser_d19", Arc::new(SmallDenoiser::new(19)) as Arc<dyn EpsModel>),
+        ("denoiser_d64", Arc::new(SmallDenoiser::new(64)) as Arc<dyn EpsModel>),
+    ]
+}
+
+/// Solo references: each row stepped alone through a fresh request.
+fn solo_rows(
+    be: &NativeBackend,
+    d: usize,
+    x: &[f32],
+    s_from: &[f32],
+    s_to: &[f32],
+    seeds: &[u64],
+) -> Vec<f32> {
+    let b = s_from.len();
+    let mut out = vec![0.0f32; b * d];
+    for i in 0..b {
+        be.step_into(
+            &req(&x[i * d..(i + 1) * d], &s_from[i..=i], &s_to[i..=i], &seeds[i..=i]),
+            &mut out[i * d..(i + 1) * d],
+        );
+    }
+    out
+}
+
+#[test]
+fn row_outputs_are_bit_identical_across_batch_sizes() {
+    for (name, model) in models() {
+        let d = model.dim();
+        for solver in Solver::ALL {
+            let be = NativeBackend::new(model.clone(), solver);
+            // 32 reference rows, stepped solo.
+            let (x, s_from, s_to, seeds) = make_rows(d, 32, solver as u64);
+            let want = solo_rows(&be, d, &x, &s_from, &s_to, &seeds);
+            // The same rows grouped into batches of 1 / 3 / 8 / 32 —
+            // 3 leaves a ragged tail (32 = 10*3 + 2), 8 and 32 are
+            // lane-aligned, 1 is the solo degenerate case.
+            for bs in [1usize, 3, 8, 32] {
+                let mut got = vec![0.0f32; 32 * d];
+                let mut r = 0;
+                while r < 32 {
+                    let e = (r + bs).min(32);
+                    be.step_into(
+                        &req(&x[r * d..e * d], &s_from[r..e], &s_to[r..e], &seeds[r..e]),
+                        &mut got[r * d..e * d],
+                    );
+                    r = e;
+                }
+                assert_eq!(
+                    got,
+                    want,
+                    "{name}/{}: batch size {bs} changed some row's bits",
+                    solver.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn row_outputs_survive_worker_chunk_splits() {
+    // The engine may split one drained batch into contiguous row-chunk
+    // sub-batches across idle workers (uneven chunks included). Every
+    // split of a 32-row batch must reproduce the fused batch bitwise.
+    for (name, model) in models() {
+        let d = model.dim();
+        for solver in Solver::ALL {
+            let be = NativeBackend::new(model.clone(), solver);
+            let (x, s_from, s_to, seeds) = make_rows(d, 32, 77 + solver as u64);
+            let mut fused = vec![0.0f32; 32 * d];
+            be.step_into(&req(&x, &s_from, &s_to, &seeds), &mut fused);
+            // Chunk layouts a 4-worker flush could produce: even 8s,
+            // div_ceil spreading of 30-ish rows, and a lopsided split.
+            let layouts: [&[usize]; 4] = [&[8, 8, 8, 8], &[9, 9, 9, 5], &[20, 12], &[31, 1]];
+            for splits in layouts {
+                let mut got = vec![0.0f32; 32 * d];
+                let mut r = 0;
+                for len in splits.iter().copied() {
+                    let e = r + len;
+                    be.step_into(
+                        &req(&x[r * d..e * d], &s_from[r..e], &s_to[r..e], &seeds[r..e]),
+                        &mut got[r * d..e * d],
+                    );
+                    r = e;
+                }
+                assert_eq!(r, 32, "split layout must cover the batch");
+                assert_eq!(
+                    got,
+                    fused,
+                    "{name}/{}: chunk split {splits:?} changed some row's bits",
+                    solver.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn guided_rows_are_bit_identical_across_batch_sizes() {
+    // Same property through the fused guided path: per-row class masks
+    // and a strong guidance weight, batched vs solo.
+    let gmm = make_gmm("latent_cond");
+    let model: Arc<dyn EpsModel> = Arc::new(GmmEps::new(gmm.clone()));
+    let d = model.dim();
+    let k = model.k();
+    for solver in [Solver::Ddim, Solver::Heun] {
+        let be = NativeBackend::new(model.clone(), solver);
+        let (x, s_from, s_to, seeds) = make_rows(d, 8, 5 + solver as u64);
+        let mask: Vec<f32> = (0..8).flat_map(|i| gmm.class_mask((i % 2) as u32)).collect();
+        assert_eq!(mask.len(), 8 * k);
+        let mut want = vec![0.0f32; 8 * d];
+        for i in 0..8 {
+            be.step_into(
+                &StepRequest {
+                    x: &x[i * d..(i + 1) * d],
+                    s_from: &s_from[i..=i],
+                    s_to: &s_to[i..=i],
+                    mask: Some(&mask[i * k..(i + 1) * k]),
+                    guidance: 7.5,
+                    seeds: &seeds[i..=i],
+                },
+                &mut want[i * d..(i + 1) * d],
+            );
+        }
+        for bs in [3usize, 8] {
+            let mut got = vec![0.0f32; 8 * d];
+            let mut r = 0;
+            while r < 8 {
+                let e = (r + bs).min(8);
+                be.step_into(
+                    &StepRequest {
+                        x: &x[r * d..e * d],
+                        s_from: &s_from[r..e],
+                        s_to: &s_to[r..e],
+                        mask: Some(&mask[r * k..e * k]),
+                        guidance: 7.5,
+                        seeds: &seeds[r..e],
+                    },
+                    &mut got[r * d..e * d],
+                );
+                r = e;
+            }
+            assert_eq!(
+                got,
+                want,
+                "guided {}: batch size {bs} changed some row's bits",
+                solver.name()
+            );
+        }
+    }
+}
