@@ -120,19 +120,29 @@ def walk(baseline, current, path, failures, checked):
             failures.append(f"{'.'.join(path)}: expected a list in bench output")
             return
         for i, base_val in enumerate(baseline):
-            # Match points by their "clients" level when present, else by index.
-            if isinstance(base_val, dict) and "clients" in base_val:
+            # Match entries by their "shards" level when present (sharded
+            # entries also carry a "clients" key, which is the same at
+            # every width and would mis-match), then by "clients", else
+            # by index.
+            level_key = next(
+                (k for k in ("shards", "clients")
+                 if isinstance(base_val, dict) and k in base_val),
+                None,
+            )
+            if level_key is not None:
                 match = next(
                     (c for c in current
-                     if isinstance(c, dict) and c.get("clients") == base_val["clients"]),
+                     if isinstance(c, dict)
+                     and c.get(level_key) == base_val[level_key]),
                     None,
                 )
                 if match is None:
                     failures.append(
-                        f"{'.'.join(path)}[clients={base_val['clients']}]: "
+                        f"{'.'.join(path)}[{level_key}={base_val[level_key]}]: "
                         "missing from bench output")
                     continue
-                walk(base_val, match, path + [f"clients={base_val['clients']}"],
+                walk(base_val, match,
+                     path + [f"{level_key}={base_val[level_key]}"],
                      failures, checked)
             elif i < len(current):
                 walk(base_val, current[i], path + [str(i)], failures, checked)

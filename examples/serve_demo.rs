@@ -47,6 +47,7 @@ fn main() -> srds::Result<()> {
         std::thread::spawn(move || {
             let _ = serve(ServeConfig {
                 addr,
+                shards: srds::exec::default_shards(workers),
                 workers,
                 model_name: model,
                 factory,

@@ -19,12 +19,19 @@
 //! QoS layer is accountable for: interactive p95 staying a small
 //! multiple of its unloaded latency while the flood saturates the pool.
 //!
+//! Fourth section, `sharded`: the same closed-loop fleet pushed through
+//! an `exec::Router` at 1, 2 and 4 shards (steal mesh on, one worker
+//! per shard so total worker count scales with the width). Per width:
+//! rps, p50/p95, aggregated occupancy, and the fleet's steal count —
+//! the scaling number the sharding layer is accountable for, gated by
+//! `ci/bench_gate.py` against `BENCH_serving.json`.
+//!
 //! `cargo bench --bench serving`
 
 use srds::batching::BatchPolicy;
 use srds::coordinator::{prior_sample, registry, QosClass, SamplerSpec};
 use srds::data::make_gmm;
-use srds::exec::{Engine, EngineConfig, NativeFactory};
+use srds::exec::{Engine, EngineConfig, NativeFactory, Router, RouterConfig};
 use srds::json::{self, Value};
 use srds::model::{EpsModel, GmmEps};
 use srds::solvers::Solver;
@@ -39,7 +46,7 @@ const N_STEPS: usize = 25;
 fn fresh_engine(model: &Arc<dyn EpsModel>) -> Arc<Engine> {
     Arc::new(Engine::new(
         Arc::new(NativeFactory::new(model.clone(), Solver::Ddim)),
-        EngineConfig { workers: WORKERS, batch: BatchPolicy::default() },
+        EngineConfig { workers: WORKERS, batch: BatchPolicy::default(), ..EngineConfig::default() },
     ))
 }
 
@@ -237,6 +244,59 @@ fn main() {
         ),
     ]);
 
+    // Sharded fleet: the same closed-loop load through the router at
+    // widths 1, 2 and 4, one worker per shard so capacity grows with
+    // the width. Eight clients keep every width busy; the router places
+    // by load and the steal mesh rebalances queue imbalance, so rps
+    // should scale (sub-linearly — the model is tiny and the batcher
+    // loses cross-request fusion as rows spread out) while outputs stay
+    // bit-identical, which shard_determinism.rs pins separately.
+    let mut sharded = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let router = Arc::new(Router::new(
+            Arc::new(NativeFactory::new(model.clone(), Solver::Ddim)),
+            RouterConfig { shards, workers: 1, batch: BatchPolicy::default(), steal: true },
+        ));
+        const SHARD_CLIENTS: usize = 8;
+        let t0 = Instant::now();
+        let mut threads = Vec::new();
+        for c in 0..SHARD_CLIENTS {
+            let router = router.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut lat_ms = Vec::with_capacity(PER_CLIENT);
+                for j in 0..PER_CLIENT {
+                    let seed = 1300 + (c * PER_CLIENT + j) as u64;
+                    let x0 = prior_sample(router.dim(), seed);
+                    let spec = SamplerSpec::srds(N_STEPS).with_tol(1e-4).with_seed(seed);
+                    let t = Instant::now();
+                    let out = router.run(&x0, &spec);
+                    assert!(out.sample.iter().all(|v| v.is_finite()));
+                    lat_ms.push(t.elapsed().as_secs_f64() * 1000.0);
+                }
+                lat_ms
+            }));
+        }
+        let mut lat_ms: Vec<f64> =
+            threads.into_iter().flat_map(|t| t.join().unwrap()).collect();
+        let wall_s = t0.elapsed().as_secs_f64();
+        lat_ms.sort_by(f64::total_cmp);
+        let st = router.stats();
+        sharded.push(json::obj(vec![
+            ("shards", Value::Num(shards as f64)),
+            ("clients", Value::Num(SHARD_CLIENTS as f64)),
+            ("requests", Value::Num((SHARD_CLIENTS * PER_CLIENT) as f64)),
+            ("wall_s", Value::Num(wall_s)),
+            (
+                "rps",
+                Value::Num((SHARD_CLIENTS * PER_CLIENT) as f64 / wall_s.max(1e-9)),
+            ),
+            ("p50_ms", Value::Num(percentile(&lat_ms, 0.5))),
+            ("p95_ms", Value::Num(percentile(&lat_ms, 0.95))),
+            ("mean_occupancy", Value::Num(st.mean_occupancy)),
+            ("steals", Value::Num(st.steals as f64)),
+        ]));
+    }
+
     let report = json::obj(vec![
         ("bench", Value::Str("serving_throughput".into())),
         ("model", Value::Str("gmm_church".into())),
@@ -246,6 +306,7 @@ fn main() {
         ("points", Value::Arr(points.iter().map(|p| p.to_json()).collect())),
         ("mixed", mixed),
         ("qos", qos),
+        ("sharded", Value::Arr(sharded)),
     ]);
     println!("{}", json::to_string(&report));
 }

@@ -199,6 +199,36 @@ impl Batcher {
         true
     }
 
+    /// Remove up to `max` rows from the **tail** of this batcher for
+    /// cross-shard work stealing (`exec::router`): lowest-priority lanes
+    /// donate first (`batch`, then `standard`, then `interactive`) and a
+    /// lane's *urgent head region is never donated* — the SRDS coarse
+    /// spine is the serial critical path and must stay on the shard
+    /// whose dispatcher is sequencing it. Remaining rows keep their FIFO
+    /// order and urgent markers, so a partial steal never reorders the
+    /// victim's own drain. Row values are position-independent (the
+    /// rows-never-interact contract), so executing a stolen tail on
+    /// another shard's workers is numerically invisible.
+    pub fn steal_tail(&mut self, max: usize) -> Vec<PendingRow> {
+        let mut stolen = Vec::new();
+        for class in QosClass::ALL.into_iter().rev() {
+            if stolen.len() >= max {
+                break;
+            }
+            let lane = &mut self.lanes[class.index()];
+            let donatable = lane.rows.len() - lane.urgent;
+            let take = donatable.min(max - stolen.len());
+            if take == 0 {
+                continue;
+            }
+            stolen.extend(lane.rows.split_off(lane.rows.len() - take));
+            if lane.rows.is_empty() {
+                lane.oldest = None;
+            }
+        }
+        stolen
+    }
+
     /// Remove every queued row failing `keep` (dead-request purge) and
     /// return the removed rows, preserving order among the kept ones.
     pub fn purge<F: FnMut(&PendingRow) -> bool>(&mut self, mut keep: F) -> Vec<PendingRow> {
@@ -600,6 +630,37 @@ mod tests {
         assert_eq!(b.take_batch().len(), 4);
         assert!(b.push_urgent(row(42)));
         assert_eq!(b.take_batch().first().unwrap().tag, 42);
+    }
+
+    #[test]
+    fn steal_tail_takes_low_priority_tail_and_spares_urgent_heads() {
+        let mut b = Batcher::new(BatchPolicy {
+            buckets: vec![8],
+            max_wait: Duration::from_secs(10),
+            max_queue: usize::MAX,
+            class_weights: DEFAULT_CLASS_WEIGHTS,
+        });
+        // Interactive lane: one urgent spine row + one normal row.
+        assert!(b.push_urgent(row_class(1, QosClass::Interactive)));
+        assert!(b.push(row_class(2, QosClass::Interactive)));
+        // Batch lane: one urgent spine row + three normal rows.
+        assert!(b.push_urgent(row_class(10, QosClass::Batch)));
+        for t in 11..14 {
+            assert!(b.push(row_class(t, QosClass::Batch)));
+        }
+        // Steal 4: the batch lane's non-urgent tail donates first (in
+        // FIFO order), then the interactive tail — never an urgent head.
+        let stolen: Vec<u64> = b.steal_tail(4).iter().map(|r| r.tag).collect();
+        assert_eq!(stolen, vec![11, 12, 13, 2]);
+        assert_eq!(b.pending_class(QosClass::Interactive), 1);
+        assert_eq!(b.pending_class(QosClass::Batch), 1);
+        // Only urgent heads remain: even an unbounded steal gets nothing.
+        assert!(b.steal_tail(usize::MAX).is_empty());
+        assert_eq!(b.pending(), 2);
+        // The survivors are exactly the two spine rows, still urgent.
+        let rest: Vec<u64> = b.take_batch().iter().map(|r| r.tag).collect();
+        assert_eq!(rest.len(), 2);
+        assert!(rest.contains(&1) && rest.contains(&10), "urgent spines survived: {rest:?}");
     }
 
     #[test]

@@ -31,7 +31,7 @@ impl WorkerPool {
     /// (PJRT clients are `Rc`-based and cannot cross threads).
     pub fn new(factory: Arc<dyn BackendFactory>, workers: usize) -> Self {
         WorkerPool {
-            engine: Engine::new(factory, EngineConfig { workers, batch: BatchPolicy::immediate() }),
+            engine: Engine::new(factory, EngineConfig { workers, batch: BatchPolicy::immediate(), ..EngineConfig::default() }),
         }
     }
 

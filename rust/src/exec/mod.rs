@@ -25,6 +25,14 @@
 //!   pooled [`crate::buf::StateBuf`]s from one engine-wide slab pool — a
 //!   warm engine allocates no state buffers. The serving loop dispatches
 //!   into this.
+//! * [`router`] — the horizontal-scale front: N independent engine
+//!   shards (each with its own dispatcher, worker set, and `BufPool`)
+//!   behind one load/QoS-aware placement function, with queued batch
+//!   rows *work-stolen* between shards over [`engine::StealMesh`] when
+//!   a shard's lanes run dry. Per-shard [`engine::EngineStats`]
+//!   aggregate into one fleet snapshot (`shards` / `steals` on the
+//!   wire). Placement and stealing move rows, never values: a request's
+//!   output is bit-identical whichever shard runs it.
 //! * [`measured`] — the single-request veneer over the engine (one OS
 //!   thread per simulated device, each owning its own thread-bound PJRT
 //!   or native backend) running the *pipelined* SRDS dataflow of Fig. 4
@@ -32,10 +40,12 @@
 
 pub mod engine;
 pub mod measured;
+pub mod router;
 pub mod simclock;
 pub mod task;
 
-pub use engine::{ClassLane, Engine, EngineConfig, EngineStats};
+pub use engine::{ClassLane, Engine, EngineConfig, EngineStats, LoadGauge, StatsHandle, StealMesh};
+pub use router::{default_shards, Router, RouterConfig};
 pub use measured::{measured_pipelined_srds, NativeFactory, WorkerPool};
 pub use simclock::{schedule_tasks, simulate_paradigms, simulate_sequential, simulate_srds, SimReport, SimTask};
 pub use task::{new_task, Completion, SamplerTask, TaskRow};

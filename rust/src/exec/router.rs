@@ -1,0 +1,477 @@
+//! Sharded engine fleet: N independent [`Engine`]s behind one
+//! load/QoS-aware placement function, with cross-shard work stealing.
+//!
+//! **Why shard at all?** One engine has exactly one dispatcher thread —
+//! a single-core ceiling on event handling no matter how many workers
+//! execute batches. The router splits the machine into *core groups*:
+//! each shard owns its dispatcher, its worker set, and its own
+//! [`BufPool`](crate::buf::BufPool) (so slab recycling stays NUMA/cache
+//! local and shard dispatchers never contend on an allocator lock).
+//! This is the serving-level face of the paper's thesis — throughput
+//! comes from keeping every device busy on *independent* rows — and the
+//! placement interface is deliberately the seam a multi-node router
+//! would plug into later.
+//!
+//! **Placement** ([`Router::submit_with_alive`]) scores every shard by
+//! its published [`LoadGauge`] (queued rows + resident tasks, read
+//! lock-free) with QoS-class-dependent weights: an interactive request
+//! penalizes queue depth hardest (it wants the emptiest lanes *now*),
+//! a batch request mostly balances resident-task count. Ties rotate
+//! round-robin so an idle fleet stripes instead of piling on shard 0.
+//!
+//! **Work stealing** rebalances *after* placement mistakes or skewed
+//! request widths: when a shard's lanes run dry while a sibling is
+//! saturated, its dispatcher lifts the tail of the sibling's deepest
+//! batcher over the [`StealMesh`] and executes those rows on its own
+//! workers, routing results home (thief-initiated, message-passing
+//! only — no shared queue, no cross-shard lock). `steals` counts
+//! migrated rows on the thief's [`EngineStats`].
+//!
+//! **The invariant that makes all of this legal:** batch rows never
+//! interact, and every backend computes rows independently, so *where*
+//! a row executes — which shard, which worker, stolen or home — can
+//! never change its value. A request's output is bit-identical on any
+//! shard of any fleet width, with stealing on or off
+//! (`rust/tests/shard_determinism.rs` pins this).
+
+use crate::batching::BatchPolicy;
+use crate::coordinator::{QosClass, SampleOutput, SamplerSpec};
+use crate::exec::engine::{
+    ClassLane, Engine, EngineConfig, EngineStats, StatsHandle, StealMesh,
+};
+use crate::solvers::{BackendFactory, Solver};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+/// Fleet construction knobs.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Engine shards (each one dispatcher + `workers` worker threads +
+    /// one `BufPool`). 1 gives exactly the single-engine behavior.
+    pub shards: usize,
+    /// Worker threads *per shard*.
+    pub workers: usize,
+    /// Batch assembly policy, applied per shard.
+    pub batch: BatchPolicy,
+    /// Enable cross-shard work stealing (on by default; the
+    /// determinism tests run both ways).
+    pub steal: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            shards: default_shards(4),
+            workers: 4,
+            batch: BatchPolicy::default(),
+            steal: true,
+        }
+    }
+}
+
+/// Default fleet width: one shard per `workers_per_shard`-sized core
+/// group of the machine, at least 1 (a 16-core host with 4-worker
+/// shards gets 4 shards). Callers override with `--shards`.
+pub fn default_shards(workers_per_shard: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (cores / workers_per_shard.max(1)).max(1)
+}
+
+/// What the router captures into completion wrappers: stats handles
+/// only — never the engines, or the last in-flight callback could drop
+/// an engine on its own dispatcher thread (self-join deadlock).
+struct FleetView {
+    handles: Vec<StatsHandle>,
+}
+
+impl FleetView {
+    fn aggregate(&self) -> EngineStats {
+        aggregate(self.handles.iter().map(|h| h.stats()))
+    }
+}
+
+/// Fold per-shard snapshots into one fleet view: counters sum,
+/// occupancy re-derives from the summed rows/batches, per-class
+/// `mean_wall_ms` is completed-weighted, and `workers` becomes the
+/// fleet's total execution width. `shards` is the fleet width (every
+/// member snapshot already carries it; the fold keeps the max so an
+/// empty iterator degrades to 0 rather than lying).
+pub fn aggregate<I: IntoIterator<Item = EngineStats>>(shards: I) -> EngineStats {
+    let mut n = 0usize;
+    let mut acc = EngineStats {
+        flushed_batches: 0,
+        flushed_rows: 0,
+        mean_occupancy: 0.0,
+        split_batches: 0,
+        shards: 0,
+        steals: 0,
+        queue_depth: 0,
+        active_tasks: 0,
+        workers: 0,
+        pool_hits: 0,
+        pool_misses: 0,
+        pool_high_water: 0,
+        per_class: [ClassLane::default(); 3],
+    };
+    let mut wall_sums = [0.0f64; 3];
+    for s in shards {
+        n += 1;
+        acc.flushed_batches += s.flushed_batches;
+        acc.flushed_rows += s.flushed_rows;
+        acc.split_batches += s.split_batches;
+        acc.shards = acc.shards.max(s.shards).max(n);
+        acc.steals += s.steals;
+        acc.queue_depth += s.queue_depth;
+        acc.active_tasks += s.active_tasks;
+        acc.workers += s.workers;
+        acc.pool_hits += s.pool_hits;
+        acc.pool_misses += s.pool_misses;
+        acc.pool_high_water += s.pool_high_water;
+        for ((lane, w), sl) in acc.per_class.iter_mut().zip(wall_sums.iter_mut()).zip(s.per_class.iter()) {
+            lane.submitted += sl.submitted;
+            lane.completed += sl.completed;
+            lane.rows += sl.rows;
+            lane.deadline_hits += sl.deadline_hits;
+            lane.aborted += sl.aborted;
+            *w += sl.mean_wall_ms * sl.completed as f64;
+        }
+    }
+    for (lane, w) in acc.per_class.iter_mut().zip(wall_sums) {
+        if lane.completed > 0 {
+            lane.mean_wall_ms = w / lane.completed as f64;
+        }
+    }
+    acc.mean_occupancy = acc.flushed_rows as f64 / acc.flushed_batches.max(1) as f64;
+    acc
+}
+
+/// The sharded fleet front. See the module docs.
+pub struct Router {
+    engines: Vec<Engine>,
+    mesh: Arc<StealMesh>,
+    view: Arc<FleetView>,
+    /// Tie-break rotation for placement, so an idle fleet stripes.
+    rr: AtomicUsize,
+}
+
+impl Router {
+    /// Build `cfg.shards` engines on one steal mesh. Every shard calls
+    /// `factory.create()` per worker exactly as a standalone engine
+    /// does — the model weights behind the factory are shared, the
+    /// execution state is not.
+    pub fn new(factory: Arc<dyn BackendFactory>, cfg: RouterConfig) -> Router {
+        let shards = cfg.shards.max(1);
+        let mesh = StealMesh::new(shards);
+        let engines: Vec<Engine> = (0..shards)
+            .map(|id| {
+                Engine::new(
+                    factory.clone(),
+                    EngineConfig {
+                        workers: cfg.workers,
+                        batch: cfg.batch.clone(),
+                        shard_id: id,
+                        mesh: Some(mesh.clone()),
+                        steal: cfg.steal,
+                    },
+                )
+            })
+            .collect();
+        let view = Arc::new(FleetView { handles: engines.iter().map(|e| e.stats_handle()).collect() });
+        Router { engines, mesh, view, rr: AtomicUsize::new(0) }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Total worker threads across the fleet.
+    pub fn total_workers(&self) -> usize {
+        self.engines.iter().map(|e| e.workers()).sum()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.engines[0].dim()
+    }
+
+    pub fn solver(&self) -> Solver {
+        self.engines[0].solver()
+    }
+
+    /// The shared steal fabric (observability / tests).
+    pub fn mesh(&self) -> &Arc<StealMesh> {
+        &self.mesh
+    }
+
+    /// Score-based placement: pick the shard whose published load is
+    /// lightest under this class's weights. Queue depth dominates for
+    /// interactive traffic (latency: emptiest lanes now), resident
+    /// tasks dominate for batch traffic (long-horizon balance). Reads
+    /// only lock-free gauges; ties rotate round-robin.
+    // lint: request-path
+    pub fn place(&self, class: QosClass) -> usize {
+        let n = self.engines.len();
+        if n == 1 {
+            return 0;
+        }
+        let (w_rows, w_tasks) = match class {
+            QosClass::Interactive => (4u64, 1u64),
+            QosClass::Standard => (2, 1),
+            QosClass::Batch => (1, 2),
+        };
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_score = u64::MAX;
+        for k in 0..n {
+            let i = (start + k) % n;
+            let (rows, tasks) = self.mesh.load(i);
+            let score = rows.saturating_mul(w_rows).saturating_add(tasks.saturating_mul(w_tasks));
+            if score < best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Place and submit; returns the chosen shard. `done` receives the
+    /// **fleet-aggregated** [`EngineStats`] (what the wire `engine`
+    /// snapshot shows), not the executing shard's local view.
+    // lint: request-path
+    pub fn submit_with_alive<F>(
+        &self,
+        x0: Vec<f32>,
+        spec: SamplerSpec,
+        alive: Arc<AtomicBool>,
+        done: F,
+    ) -> usize
+    where
+        F: FnOnce(SampleOutput, EngineStats) + Send + 'static,
+    {
+        let shard = self.place(spec.priority);
+        self.submit_to_with_alive(shard, x0, spec, alive, done);
+        shard
+    }
+
+    /// [`Router::submit_with_alive`] pinned to one shard — the
+    /// cross-shard determinism tests' entry point (placement must be a
+    /// pure scheduling choice, so pinning must never change an output).
+    // lint: request-path
+    pub fn submit_to_with_alive<F>(
+        &self,
+        shard: usize,
+        x0: Vec<f32>,
+        spec: SamplerSpec,
+        alive: Arc<AtomicBool>,
+        done: F,
+    ) where
+        F: FnOnce(SampleOutput, EngineStats) + Send + 'static,
+    {
+        let view = self.view.clone();
+        self.engines[shard].submit_with_alive(x0, spec, alive, move |out, _local| {
+            done(out, view.aggregate())
+        });
+    }
+
+    /// Blocking pinned submit (tests / CLI): the reply channel yields
+    /// the output when the shard finalizes the task.
+    pub fn submit_to(&self, shard: usize, x0: Vec<f32>, spec: SamplerSpec) -> Receiver<SampleOutput> {
+        self.engines[shard].submit(x0, spec)
+    }
+
+    /// Run one request to completion on the placed shard (blocking).
+    pub fn run(&self, x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
+        let shard = self.place(spec.priority);
+        self.submit_to(shard, x0.to_vec(), spec.clone())
+            .recv()
+            .expect("engine dropped mid-request")
+    }
+
+    /// The fleet-aggregated stats snapshot (the wire view).
+    pub fn stats(&self) -> EngineStats {
+        self.view.aggregate()
+    }
+
+    /// Per-shard snapshots, shard-id order (observability / tests).
+    pub fn shard_stats(&self) -> Vec<EngineStats> {
+        self.engines.iter().map(|e| e.stats()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{prior_sample, SamplerSpec};
+    use crate::data::make_gmm;
+    use crate::exec::NativeFactory;
+    use crate::model::GmmEps;
+    use crate::solvers::{NativeBackend, Solver};
+    use std::sync::mpsc::channel;
+
+    fn factory() -> Arc<dyn BackendFactory> {
+        let model: Arc<dyn crate::model::EpsModel> = Arc::new(GmmEps::new(make_gmm("church")));
+        Arc::new(NativeFactory::new(model, Solver::Ddim))
+    }
+
+    fn native_backend() -> NativeBackend {
+        let model: Arc<dyn crate::model::EpsModel> = Arc::new(GmmEps::new(make_gmm("church")));
+        NativeBackend::new(model, Solver::Ddim)
+    }
+
+    fn router(shards: usize, workers: usize, steal: bool) -> Router {
+        Router::new(
+            factory(),
+            RouterConfig { shards, workers, batch: BatchPolicy::default(), steal },
+        )
+    }
+
+    #[test]
+    fn routed_requests_match_solo_vanilla_runs() {
+        // A mixed-class fleet of requests through a 3-shard router:
+        // wherever placement lands them, outputs are bit-identical to
+        // solo vanilla runs and the fleet aggregate adds up.
+        let r = router(3, 1, true);
+        let classes = [QosClass::Interactive, QosClass::Standard, QosClass::Batch];
+        let reqs: Vec<(Vec<f32>, SamplerSpec)> = (0..9u64)
+            .map(|s| {
+                let spec = SamplerSpec::srds(25 + 9 * (s as usize % 3))
+                    .with_tol(1e-4)
+                    .with_seed(500 + s)
+                    .with_priority(classes[s as usize % 3]);
+                (prior_sample(64, 500 + s), spec)
+            })
+            .collect();
+        let (tx, rx) = channel();
+        let mut shards_used = Vec::new();
+        for (i, (x0, spec)) in reqs.iter().enumerate() {
+            let tx = tx.clone();
+            let alive = Arc::new(AtomicBool::new(true));
+            let shard = r.submit_with_alive(x0.clone(), spec.clone(), alive, move |out, agg| {
+                let _ = tx.send((i, out, agg));
+            });
+            shards_used.push(shard);
+        }
+        drop(tx);
+        let be = native_backend();
+        let mut got = 0;
+        for (i, out, agg) in rx.iter() {
+            let (x0, spec) = &reqs[i];
+            let want = spec.run(&be, x0);
+            assert_eq!(out.sample, want.sample, "req {i}: placement changed numerics");
+            assert_eq!(agg.shards, 3, "callbacks see the fleet aggregate");
+            got += 1;
+        }
+        assert_eq!(got, 9);
+        assert!(shards_used.iter().any(|&s| s != shards_used[0]), "placement never spread");
+        let agg = r.stats();
+        assert_eq!(agg.shards, 3);
+        assert_eq!(agg.active_tasks, 0, "fleet drains");
+        let by_class: u64 = agg.per_class.iter().map(|l| l.completed).sum();
+        assert_eq!(by_class, 9);
+        assert_eq!(
+            agg.flushed_rows,
+            r.shard_stats().iter().map(|s| s.flushed_rows).sum::<u64>(),
+            "aggregate is the per-shard sum"
+        );
+    }
+
+    #[test]
+    fn placement_prefers_the_lighter_shard() {
+        // Saturate shard 0 via pinned submits, then place: the router
+        // must send the newcomer elsewhere while shard 0's gauge is hot.
+        let r = router(2, 1, false);
+        let mut handles = Vec::new();
+        for s in 0..4u64 {
+            let x0 = prior_sample(64, 600 + s);
+            let spec = SamplerSpec::srds(48).with_tol(1e-4).with_seed(600 + s);
+            handles.push((r.submit_to(0, x0.clone(), spec.clone()), x0, spec));
+        }
+        // Wait until shard 0's dispatcher has published a nonzero load
+        // (placement reads the gauges, which update per event).
+        let t0 = std::time::Instant::now();
+        while r.mesh().load(0) == (0, 0) && t0.elapsed().as_secs() < 5 {
+            std::thread::yield_now();
+        }
+        assert_eq!(r.place(QosClass::Interactive), 1, "hot shard 0 must repel placement");
+        let be = native_backend();
+        for (rx, x0, spec) in handles {
+            let out = rx.recv().expect("reply");
+            assert_eq!(out.sample, spec.run(&be, &x0).sample);
+        }
+    }
+
+    #[test]
+    fn aggregate_folds_counters_and_weighted_latency() {
+        let mut a = EngineStats {
+            flushed_batches: 10,
+            flushed_rows: 40,
+            mean_occupancy: 0.0,
+            split_batches: 1,
+            shards: 2,
+            steals: 3,
+            queue_depth: 2,
+            active_tasks: 1,
+            workers: 4,
+            pool_hits: 100,
+            pool_misses: 10,
+            pool_high_water: 50,
+            per_class: [ClassLane::default(); 3],
+        };
+        let mut b = a;
+        b.flushed_batches = 30;
+        b.flushed_rows = 60;
+        a.per_class[0] = ClassLane {
+            submitted: 3,
+            completed: 2,
+            rows: 20,
+            mean_wall_ms: 10.0,
+            deadline_hits: 1,
+            aborted: 1,
+        };
+        b.per_class[0] = ClassLane {
+            submitted: 8,
+            completed: 8,
+            rows: 40,
+            mean_wall_ms: 40.0,
+            deadline_hits: 0,
+            aborted: 0,
+        };
+        let agg = aggregate([a, b]);
+        assert_eq!(agg.flushed_batches, 40);
+        assert_eq!(agg.flushed_rows, 100);
+        assert_eq!(agg.shards, 2);
+        assert_eq!(agg.steals, 6);
+        assert_eq!(agg.workers, 8);
+        assert!((agg.mean_occupancy - 2.5).abs() < 1e-12);
+        let lane = &agg.per_class[0];
+        assert_eq!(lane.submitted, 11);
+        assert_eq!(lane.completed, 10);
+        assert_eq!(lane.aborted, 1);
+        assert_eq!(lane.deadline_hits, 1);
+        // (2×10 + 8×40) / 10 = 34: completed-weighted, not averaged.
+        assert!((lane.mean_wall_ms - 34.0).abs() < 1e-12, "{}", lane.mean_wall_ms);
+        assert_eq!(lane.active(), 0);
+    }
+
+    #[test]
+    fn single_shard_router_is_a_plain_engine() {
+        let r = router(1, 2, true);
+        let x0 = prior_sample(64, 700);
+        let spec = SamplerSpec::srds(25).with_tol(1e-4).with_seed(700);
+        let out = r.run(&x0, &spec);
+        let want = {
+            let model: Arc<dyn crate::model::EpsModel> =
+                Arc::new(GmmEps::new(make_gmm("church")));
+            let eng = Engine::new(
+                Arc::new(NativeFactory::new(model, Solver::Ddim)),
+                EngineConfig { workers: 2, ..EngineConfig::default() },
+            );
+            eng.run(&x0, &spec)
+        };
+        assert_eq!(out.sample, want.sample);
+        let st = r.stats();
+        assert_eq!(st.shards, 1);
+        assert_eq!(st.steals, 0, "a 1-shard mesh has nobody to steal from");
+        assert_eq!(st.workers, 2);
+    }
+}

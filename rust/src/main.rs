@@ -7,20 +7,25 @@
 //!             [--tol 2.5e-3] [--norm l1_mean|l2_mean|linf] [--seed 0]
 //!             [--max-iters K] [--block B] [--window W] [--history H]
 //!             [--class C --guidance W] [--out sample.pgm]
-//! srds serve  [--addr 127.0.0.1:7878] [--workers 4] [--model …]
-//!             [--solver …] [--backend native|pjrt]
+//! srds serve  [--addr 127.0.0.1:7878] [--shards S] [--workers 4]
+//!             [--model …] [--solver …] [--backend native|pjrt]
 //!             [--batch-wait 2] [--buckets 32,16,8,4,2,1]
 //!             [--max-inflight 64] [--class-weights 8,3,1]
 //!             [--default-deadline EVALS]
 //! ```
 //!
-//! `serve` runs every request on the shared multi-tenant engine
-//! (`exec::engine`) as an engine-native sampler task: `--workers` sizes
-//! its pool, `--batch-wait` bounds how long (ms) an under-filled
+//! `serve` runs every request on a sharded multi-tenant engine fleet
+//! (`exec::router` over `exec::engine`) as an engine-native sampler
+//! task: `--shards` sets the fleet width (default: one shard per
+//! `--workers`-sized core group — each shard is a full engine with its
+//! own dispatcher, worker pool, and buffer pool, and idle shards steal
+//! queued rows from saturated siblings), `--workers` sizes each shard's
+//! pool, `--batch-wait` bounds how long (ms) an under-filled
 //! cross-request batch may linger, `--buckets` lists the preferred batch
 //! sizes, descending, and `--max-inflight` caps the in-flight requests
 //! admitted per connection (past it, requests are shed immediately with
-//! the structured `overloaded` error line so clients back off).
+//! the structured `overloaded` error line — `retry_after_ms` included —
+//! so clients back off).
 //! `--class-weights` sets the weighted-DRR service shares of the
 //! `interactive,standard,batch` QoS lanes, and `--default-deadline`
 //! applies an anytime eval budget to requests that don't carry their own
@@ -177,6 +182,18 @@ fn cmd_serve(flags: HashMap<String, String>) -> srds::Result<()> {
     let solver = Solver::parse(flags.get("solver").map(|s| s.as_str()).unwrap_or("ddim"))
         .ok_or_else(|| anyhow::anyhow!("unknown solver"))?;
     let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    // Fleet width: explicit `--shards N`, else one shard per
+    // `workers`-sized core group of this machine.
+    let shards: usize = match flags.get("shards") {
+        Some(v) => {
+            let s: usize = v.parse()?;
+            if s == 0 {
+                return Err(anyhow::anyhow!("--shards must be >= 1, got 0"));
+            }
+            s
+        }
+        None => srds::exec::default_shards(workers),
+    };
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".into());
     // Engine batching knobs: `--batch-wait` is the linger bound in
     // milliseconds (0 = flush eagerly, never hold a row), `--buckets`
@@ -241,6 +258,7 @@ fn cmd_serve(flags: HashMap<String, String>) -> srds::Result<()> {
     };
     serve(ServeConfig {
         addr,
+        shards,
         workers,
         model_name: model,
         factory,

@@ -40,8 +40,13 @@
 //!
 //! A request arriving while the connection is at its in-flight cap is
 //! shed immediately with the structured admission error
-//! (`{"id": …, "ok": false, "error_kind": "overloaded", …}` — see
-//! [`overloaded_response`]) instead of stalling the read loop.
+//! (`{"id": …, "ok": false, "error_kind": "overloaded",
+//! "retry_after_ms": …}` — see [`overloaded_response`]) instead of
+//! stalling the read loop. A `{"kind": "stats"}` line is the
+//! observability probe: it returns the fleet-aggregated engine snapshot
+//! (including `shards` / `steals`) without running any sampler and
+//! without taking an admission slot, so health checks work even on a
+//! saturated connection.
 //!
 //! `batch_occupancy` / `engine_rows` are per-request fusion stats;
 //! `queue_depth` / `active_tasks` / `flushed_batches` /
@@ -52,31 +57,39 @@
 //! requests, of any sampler kind, were still resident when this one
 //! finished.
 //!
-//! Every request is dispatched into the shared multi-tenant
-//! [`crate::exec::engine`] as an engine-native
-//! [`crate::exec::task::SamplerTask`]: SRDS, sequential, ParaDiGMS and
-//! ParaTAA all run as dependency-driven state machines inside the
-//! engine's dispatcher, and each solver step becomes a batch row that
-//! can fuse with co-tenant requests' rows (`batch_occupancy` in the
-//! response reports how much fusion the request actually saw). There
-//! are **no per-request threads**: a connection's read loop submits
-//! requests with a completion callback and the engine's dispatcher +
-//! worker threads do everything else — the serve loop scales with
-//! connections, not with in-flight requests. Python is never involved.
+//! Every request is dispatched into the sharded engine fleet
+//! ([`crate::exec::router`] fronting N [`crate::exec::engine`] shards)
+//! as an engine-native [`crate::exec::task::SamplerTask`]: SRDS,
+//! sequential, ParaDiGMS and ParaTAA all run as dependency-driven
+//! state machines inside a shard's dispatcher, and each solver step
+//! becomes a batch row that can fuse with co-tenant requests' rows
+//! (`batch_occupancy` in the response reports how much fusion the
+//! request actually saw). There are **no per-request threads and no
+//! per-connection threads**: one nonblocking poll loop owns every
+//! socket (accept, partial-line reassembly, write backpressure), the
+//! router places each request onto a shard by load + QoS class, and
+//! shard dispatchers steal queued rows from saturated siblings — the
+//! process runs exactly `1 + shards × (1 + workers)` threads no matter
+//! how many connections or requests are live. A connection that dies
+//! flips its requests' liveness flags, and the owning dispatchers
+//! abort them (queued rows purged, `aborted` counted) instead of
+//! computing results nobody will read. Python is never involved.
 
 use crate::batching::BatchPolicy;
 use crate::coordinator::{
     prior_sample, registry, Conditioning, ConvNorm, QosClass, SampleOutput, SamplerSpec,
 };
 use crate::data::make_gmm;
-use crate::exec::{Engine, EngineConfig, EngineStats};
+use crate::exec::{Engine, EngineStats, Router, RouterConfig};
 use crate::json::{self, Value};
 use crate::solvers::{BackendFactory, StepBackend};
 use crate::Result;
-use std::io::{BufRead, BufReader, Write};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::channel;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 /// A parsed sampling request: the sampler name plus every
 /// [`SamplerSpec`] knob the wire protocol exposes.
@@ -117,6 +130,20 @@ impl SampleRequest {
     // lint: request-path
     pub fn from_json(v: &Value) -> Result<Self> {
         let num = |k: &str, default: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(default);
+        // "kind" selects the request flavor: absent or "sample" is a
+        // sampling request (this parser); "stats" is the engine-snapshot
+        // probe, which the serving entry points intercept *before*
+        // from_json — one reaching here means the caller has no engine
+        // to snapshot.
+        match v.get("kind").and_then(|x| x.as_str()) {
+            None | Some("sample") => {}
+            Some(k) => {
+                return Err(anyhow::anyhow!(
+                    "unsupported kind {k:?} here (\"sample\"; \"stats\" is served by \
+                     engine-backed endpoints)"
+                ))
+            }
+        }
         let norm = match v.get("norm").and_then(|x| x.as_str()) {
             None => ConvNorm::L1Mean,
             Some(s) => ConvNorm::parse(s)
@@ -204,13 +231,22 @@ fn error_response(id: u64, msg: String) -> Value {
     ])
 }
 
+/// Default backoff hint carried by [`overloaded_response`]
+/// (`retry_after_ms`): a couple of typical small-request service times
+/// — long enough that an immediate resend is unlikely to be shed
+/// again, short enough not to idle an interactive client. A hint, not
+/// a contract: clients may retry sooner and risk another shed.
+pub const DEFAULT_RETRY_AFTER_MS: u64 = 25;
+
 /// The structured admission-control error: sent the moment a request
 /// would exceed the connection's in-flight cap, instead of stalling the
 /// read loop. `error_kind: "overloaded"` is the machine-readable field
 /// clients key their backoff on (the human-readable `error` text is not
-/// a contract); `max_inflight` tells them the cap they hit.
+/// a contract); `max_inflight` tells them the cap they hit, and
+/// `retry_after_ms` is the server's backoff hint
+/// ([`DEFAULT_RETRY_AFTER_MS`] from the serve loop).
 // lint: request-path
-pub fn overloaded_response(id: u64, max_inflight: usize) -> Value {
+pub fn overloaded_response(id: u64, max_inflight: usize, retry_after_ms: u64) -> Value {
     json::obj(vec![
         ("id", Value::Num(id as f64)),
         ("ok", Value::Bool(false)),
@@ -223,6 +259,7 @@ pub fn overloaded_response(id: u64, max_inflight: usize) -> Value {
             )),
         ),
         ("max_inflight", Value::Num(max_inflight as f64)),
+        ("retry_after_ms", Value::Num(retry_after_ms as f64)),
     ])
 }
 
@@ -303,9 +340,17 @@ fn success_response(
         pairs.push(("active_tasks", Value::Num(st.active_tasks as f64)));
         pairs.push(("flushed_batches", Value::Num(st.flushed_batches as f64)));
         pairs.push(("split_batches", Value::Num(st.split_batches as f64)));
+        // Fleet shape: shard count and cross-shard row migrations
+        // (stolen rows execute on a sibling's workers — scheduling
+        // only, never a value change).
+        pairs.push(("shards", Value::Num(st.shards as f64)));
+        pairs.push(("steals", Value::Num(st.steals as f64)));
         pairs.push(("pool_high_water", Value::Num(st.pool_high_water as f64)));
         // Per-QoS-class lanes (snapshot at completion): the operator's
-        // starvation dashboard, one object per class.
+        // starvation dashboard, one object per class. (stats_response
+        // duplicates this block: the wire-schema lint reads the literal
+        // keys out of *this* function's body, so they can't move into a
+        // shared helper.)
         pairs.push((
             "classes",
             json::obj(
@@ -318,6 +363,7 @@ fn success_response(
                             json::obj(vec![
                                 ("active", Value::Num(lane.active() as f64)),
                                 ("completed", Value::Num(lane.completed as f64)),
+                                ("aborted", Value::Num(lane.aborted as f64)),
                                 ("rows", Value::Num(lane.rows as f64)),
                                 ("mean_wall_ms", Value::Num(lane.mean_wall_ms)),
                                 ("deadline_hits", Value::Num(lane.deadline_hits as f64)),
@@ -338,6 +384,67 @@ fn success_response(
         ));
     }
     json::obj(pairs)
+}
+
+/// Detect the `{"kind": "stats"}` observability probe and return its
+/// echoed id. Engine-backed entry points intercept this *before*
+/// [`SampleRequest::from_json`]: the probe runs no sampler, takes no
+/// admission slot, and must answer even on a saturated connection.
+// lint: request-path
+fn stats_probe_id(v: &Value) -> Option<u64> {
+    match v.get("kind").and_then(|x| x.as_str()) {
+        Some("stats") => Some(v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64),
+        _ => None,
+    }
+}
+
+/// Serialize the `{"kind": "stats"}` probe response: the
+/// fleet-aggregated engine snapshot with no sampler run attached
+/// (documented in DESIGN.md under its own `wire-stats-fields` table —
+/// the wire-schema lint scans `success_response`, not this fn).
+// lint: request-path
+pub fn stats_response(id: u64, st: &EngineStats) -> Value {
+    json::obj(vec![
+        ("id", Value::Num(id as f64)),
+        ("ok", Value::Bool(true)),
+        ("kind", Value::Str("stats".into())),
+        ("shards", Value::Num(st.shards as f64)),
+        ("steals", Value::Num(st.steals as f64)),
+        ("workers", Value::Num(st.workers as f64)),
+        ("queue_depth", Value::Num(st.queue_depth as f64)),
+        ("active_tasks", Value::Num(st.active_tasks as f64)),
+        ("flushed_batches", Value::Num(st.flushed_batches as f64)),
+        ("flushed_rows", Value::Num(st.flushed_rows as f64)),
+        ("split_batches", Value::Num(st.split_batches as f64)),
+        ("mean_occupancy", Value::Num(st.mean_occupancy)),
+        ("pool_hits", Value::Num(st.pool_hits as f64)),
+        ("pool_misses", Value::Num(st.pool_misses as f64)),
+        ("pool_high_water", Value::Num(st.pool_high_water as f64)),
+        // Same lane shape as success_response's `classes` (that copy is
+        // the lint-scanned one; see the note there).
+        (
+            "classes",
+            json::obj(
+                QosClass::ALL
+                    .into_iter()
+                    .map(|c| {
+                        let lane = st.class(c);
+                        (
+                            c.name(),
+                            json::obj(vec![
+                                ("active", Value::Num(lane.active() as f64)),
+                                ("completed", Value::Num(lane.completed as f64)),
+                                ("aborted", Value::Num(lane.aborted as f64)),
+                                ("rows", Value::Num(lane.rows as f64)),
+                                ("mean_wall_ms", Value::Num(lane.mean_wall_ms)),
+                                ("deadline_hits", Value::Num(lane.deadline_hits as f64)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 /// Execute one request directly on a backend via the sampler registry —
@@ -378,12 +485,88 @@ pub fn run_request_engine(engine: &Engine, model_name: &str, req: &SampleRequest
     success_response(req, spec.kind.name(), &out, wall_ms, Some(&engine.stats()))
 }
 
+/// Execute one request on a sharded fleet and block for the result
+/// (tests, simple callers): the router places it by load + QoS class,
+/// and the response carries the **fleet-aggregated** stats snapshot.
+pub fn run_request_router(router: &Router, model_name: &str, req: &SampleRequest) -> Value {
+    let spec = match request_spec(model_name, req) {
+        Ok(s) => s,
+        Err(e) => return e,
+    };
+    let x0 = prior_sample(router.dim(), req.seed);
+    let t0 = std::time::Instant::now();
+    let out: SampleOutput = router.run(&x0, &spec);
+    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    success_response(req, spec.kind.name(), &out, wall_ms, Some(&router.stats()))
+}
+
+/// Submit an already-parsed request onto the fleet without blocking —
+/// the poll loop's shape. Validation errors invoke `done` inline;
+/// otherwise the router places the request onto a shard and `done`
+/// fires from that shard's completion callback with the
+/// fleet-aggregated stats. `alive` is the dead-connection purge hook:
+/// the poll loop flips it when the client goes away and the owning
+/// dispatcher aborts the task instead of finishing it.
+// lint: request-path
+pub fn submit_request_router(
+    router: &Router,
+    model_name: &str,
+    req: SampleRequest,
+    alive: Arc<AtomicBool>,
+    done: impl FnOnce(PendingResponse) + Send + 'static,
+) {
+    let spec = match request_spec(model_name, &req) {
+        Ok(s) => s,
+        Err(e) => return done(PendingResponse::Ready(json::to_string(&e))),
+    };
+    let x0 = prior_sample(router.dim(), req.seed);
+    let t0 = std::time::Instant::now();
+    let name = spec.kind.name();
+    router.submit_with_alive(x0, spec, alive, move |out, stats| {
+        let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        done(PendingResponse::Finished(Box::new(FinishedResponse {
+            req,
+            name,
+            out,
+            stats,
+            wall_ms,
+        })));
+    });
+}
+
+/// Handle one raw request line on the sharded fleet, blocking for the
+/// response (tests, simple callers — the poll loop uses the
+/// non-blocking [`submit_request_router`]). This is the one blocking
+/// entry point that also answers the `{"kind": "stats"}` probe.
+pub fn handle_line_router(router: &Router, model_name: &str, line: &str) -> String {
+    let v = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            return json::to_string(&json::obj(vec![
+                ("ok", Value::Bool(false)),
+                ("error", Value::Str(format!("{e:#}"))),
+            ]))
+        }
+    };
+    if let Some(id) = stats_probe_id(&v) {
+        return json::to_string(&stats_response(id, &router.stats()));
+    }
+    let resp = match SampleRequest::from_json(&v) {
+        Ok(req) => run_request_router(router, model_name, &req),
+        Err(e) => {
+            let id = v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+            error_response(id, format!("{e:#}"))
+        }
+    };
+    json::to_string(&resp)
+}
+
 /// A response on its way out of [`submit_line_engine`]: either already
 /// serialized (parse/validation errors) or *deferred* — the completed
 /// run plus everything needed to serialize it. The engine invokes the
 /// completion callback on its dispatcher thread, which must stay free
-/// to form batches; deferring lets the receiver (the connection's
-/// writer thread, in the serve loop) pay for the JSON formatting of the
+/// to form batches; deferring lets the receiver (the serve loop's poll
+/// thread) pay for the JSON formatting of the
 /// sample vector instead.
 pub enum PendingResponse {
     /// Serialized eagerly (error lines — cheap, no sample payload).
@@ -522,7 +705,16 @@ pub const DEFAULT_MAX_INFLIGHT: usize = 64;
 /// Server configuration.
 pub struct ServeConfig {
     pub addr: String,
-    /// Engine worker threads (each owns one backend instance).
+    /// Engine shards (`--shards` on the CLI; the default is one shard
+    /// per `workers`-sized core group, see
+    /// [`crate::exec::router::default_shards`]). Each shard is a full
+    /// engine — dispatcher + `workers` worker threads + its own
+    /// `BufPool` — behind the router's load/QoS placement, with
+    /// cross-shard work stealing of queued rows. Placement and stealing
+    /// are pure scheduling: outputs are bit-identical at any width.
+    pub shards: usize,
+    /// Engine worker threads *per shard* (each owns one backend
+    /// instance).
     pub workers: usize,
     pub model_name: String,
     pub factory: Arc<dyn BackendFactory>,
@@ -550,34 +742,280 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
     serve_on(listener, cfg)
 }
 
-/// Run the blocking accept loop on an already-bound listener (tests bind
-/// an ephemeral port first, then hand it over — no drop-and-rebind
-/// race).
+/// Write-backpressure bound: while a connection's pending response
+/// bytes exceed this, the poll loop stops *reading* from it (already
+/// queued responses keep draining) — a client that won't read its
+/// responses can't balloon server memory by pipelining more work.
+const MAX_OUTBUF: usize = 1 << 20;
+
+/// How long the poll loop parks on the completion outbox when no socket
+/// made progress. Engine completions notify the condvar, so a finished
+/// request wakes the loop immediately; the timeout only bounds how
+/// stale a WouldBlock retry can get.
+const POLL_WAIT: Duration = Duration::from_millis(1);
+
+/// Completed work on its way back to connections: shard dispatchers
+/// push `(conn, response)` here from their completion callbacks (cheap
+/// — no serialization), and the poll thread drains it, doing the heavy
+/// JSON formatting off the dispatchers.
+struct Outbox {
+    queue: Mutex<Vec<(u64, PendingResponse)>>,
+    cv: Condvar,
+}
+
+impl Outbox {
+    fn new() -> Outbox {
+        Outbox { queue: Mutex::new(Vec::new()), cv: Condvar::new() }
+    }
+
+    // lint: request-path
+    fn push(&self, conn: u64, resp: PendingResponse) {
+        // lint-allow(panic-policy): a poisoned outbox means a panicked poll thread — process-fatal, not request-controlled
+        self.queue.lock().unwrap().push((conn, resp));
+        self.cv.notify_one();
+    }
+
+    // lint: request-path
+    fn drain(&self) -> Vec<(u64, PendingResponse)> {
+        // lint-allow(panic-policy): poisoned outbox, see push
+        std::mem::take(&mut *self.queue.lock().unwrap())
+    }
+
+    /// Park until either `timeout` passes or a completion lands.
+    // lint: request-path
+    fn wait(&self, timeout: Duration) {
+        // lint-allow(panic-policy): poisoned outbox, see push
+        let q = self.queue.lock().unwrap();
+        if q.is_empty() {
+            // lint-allow(panic-policy): poisoned outbox, see push
+            let _ = self.cv.wait_timeout(q, timeout).unwrap();
+        }
+    }
+}
+
+/// Per-connection state in the poll loop: the nonblocking socket plus
+/// read/write buffers and the liveness flag its in-flight tasks carry.
+struct Conn {
+    stream: TcpStream,
+    peer: String,
+    /// Bytes read but not yet terminated by `\n` (partial-line
+    /// reassembly).
+    inbuf: Vec<u8>,
+    /// Serialized response bytes not yet accepted by the socket.
+    outbuf: Vec<u8>,
+    /// Requests handed to the router for this connection. Poll-thread
+    /// local (only the poll thread submits), so the admission check and
+    /// the drain-then-close decision are race-free by construction —
+    /// no completion-side counter can be read at the wrong moment.
+    submitted: u64,
+    /// Router responses routed into `outbuf` so far. Every submission
+    /// on a live connection produces exactly one outbox entry (inline
+    /// validation errors included), so `submitted - delivered` is the
+    /// connection's true in-flight count.
+    delivered: u64,
+    /// Flipped to `false` when the connection dies; every task
+    /// submitted for it holds a clone, and the owning dispatcher aborts
+    /// flagged tasks on its next sweep.
+    alive: Arc<AtomicBool>,
+    /// The peer half-closed its write side (EOF on read): accept no
+    /// more requests, but keep draining responses for work already in
+    /// flight, then close once everything submitted was delivered.
+    read_closed: bool,
+}
+
+impl Conn {
+    /// Requests submitted to the router and not yet answered.
+    fn pending(&self) -> u64 {
+        self.submitted - self.delivered
+    }
+}
+
+/// Everything [`serve_on`]'s poll loop needs per event, bundled so the
+/// per-connection handlers are methods instead of 8-argument functions.
+struct PollLoop {
+    router: Arc<Router>,
+    model_name: String,
+    default_deadline: Option<u64>,
+    max_inflight: usize,
+    outbox: Arc<Outbox>,
+}
+
+impl PollLoop {
+    /// Flush this connection's pending response bytes. Returns `false`
+    /// when the socket is dead.
+    // lint: request-path
+    fn write_side(&self, conn: &mut Conn, progress: &mut bool) -> bool {
+        let mut wrote = 0;
+        while wrote < conn.outbuf.len() {
+            match conn.stream.write(&conn.outbuf[wrote..]) {
+                Ok(0) => return false,
+                Ok(n) => {
+                    wrote += n;
+                    *progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        conn.outbuf.drain(..wrote);
+        true
+    }
+
+    /// Read whatever the socket has, reassemble complete lines, and
+    /// dispatch each. Returns `false` when the socket is dead.
+    // lint: request-path
+    fn read_side(&self, id: u64, conn: &mut Conn, progress: &mut bool) -> bool {
+        if conn.read_closed || conn.outbuf.len() >= MAX_OUTBUF {
+            // Backpressure: a client that won't drain its responses
+            // doesn't get to queue more work.
+            return true;
+        }
+        let mut chunk = [0u8; 8192];
+        loop {
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    // EOF. A trailing unterminated line still counts
+                    // (matches the old BufRead::lines behavior), then
+                    // the read side is done — responses keep flowing.
+                    conn.read_closed = true;
+                    *progress = true;
+                    if !conn.inbuf.is_empty() {
+                        let tail = std::mem::take(&mut conn.inbuf);
+                        let line = String::from_utf8_lossy(&tail).to_string();
+                        if !line.trim().is_empty() {
+                            self.on_line(id, conn, line.trim());
+                        }
+                    }
+                    return true;
+                }
+                Ok(n) => {
+                    *progress = true;
+                    conn.inbuf.extend_from_slice(&chunk[..n]);
+                    self.drain_lines(id, conn);
+                    if conn.outbuf.len() >= MAX_OUTBUF {
+                        return true;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+    }
+
+    /// Split the connection's read buffer on `\n` and dispatch every
+    /// complete line; the tail stays buffered until its newline arrives.
+    // lint: request-path
+    fn drain_lines(&self, id: u64, conn: &mut Conn) {
+        while let Some(pos) = conn.inbuf.iter().position(|&b| b == b'\n') {
+            let raw: Vec<u8> = conn.inbuf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&raw[..raw.len() - 1]).to_string();
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            self.on_line(id, conn, line);
+        }
+    }
+
+    /// One complete request line: parse errors and the stats probe are
+    /// answered inline by the poll thread (straight into the write
+    /// buffer); sampling requests pass admission and go to the router,
+    /// whose completion callback posts to the outbox.
+    // lint: request-path
+    fn on_line(&self, id: u64, conn: &mut Conn, line: &str) {
+        let v = match json::parse(line) {
+            Ok(v) => v,
+            Err(e) => {
+                // Malformed JSON: no id to echo.
+                let err = json::obj(vec![
+                    ("ok", Value::Bool(false)),
+                    ("error", Value::Str(format!("{e:#}"))),
+                ]);
+                return push_line(&mut conn.outbuf, &json::to_string(&err));
+            }
+        };
+        // The stats probe runs no sampler and takes no admission slot —
+        // it must answer even (especially) on a saturated connection.
+        if let Some(pid) = stats_probe_id(&v) {
+            let resp = stats_response(pid, &self.router.stats());
+            return push_line(&mut conn.outbuf, &json::to_string(&resp));
+        }
+        let mut req = match SampleRequest::from_json(&v) {
+            Ok(r) => r,
+            Err(e) => {
+                // Request-level validation errors still echo the id so
+                // pipelined clients can correlate them.
+                let rid = v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+                return push_line(&mut conn.outbuf, &json::to_string(&error_response(rid, format!("{e:#}"))));
+            }
+        };
+        if req.deadline.is_none() {
+            req.deadline = self.default_deadline;
+        }
+        // Non-blocking admission: over the cap, shed with the
+        // structured overloaded error (now carrying the retry_after_ms
+        // backoff hint) instead of stalling the poll loop. The slot
+        // frees when the response is routed back to this connection.
+        if conn.pending() >= self.max_inflight as u64 {
+            let shed = overloaded_response(req.id, self.max_inflight, DEFAULT_RETRY_AFTER_MS);
+            return push_line(&mut conn.outbuf, &json::to_string(&shed));
+        }
+        conn.submitted += 1;
+        // Submit and move on: the shard's completion callback posts the
+        // still-unserialized response to the outbox; the poll thread
+        // formats it (and releases the admission slot) next wake-up. No
+        // thread exists for this request.
+        let outbox = self.outbox.clone();
+        submit_request_router(&self.router, &self.model_name, req, conn.alive.clone(), move |resp| {
+            outbox.push(id, resp);
+        });
+    }
+}
+
+// lint: request-path
+fn push_line(out: &mut Vec<u8>, line: &str) {
+    out.extend_from_slice(line.as_bytes());
+    out.push(b'\n');
+}
+
+/// Run the serve loop on an already-bound listener (tests bind an
+/// ephemeral port first, then hand it over — no drop-and-rebind race).
 ///
-/// One engine serves every connection, and **the only threads anywhere
-/// are the engine's dispatcher + workers plus one reader and one writer
-/// per connection**: the read loop submits each request into the engine
-/// with a completion callback ([`submit_request_engine`]) and
-/// immediately reads the next line, so any number of requests from one
-/// connection are in flight at once (their step rows co-batching) with
-/// zero per-request threads. Responses stream back in completion order
-/// per connection. In-flight requests are capped at
-/// [`ServeConfig::max_inflight`] per connection — a request past the cap
-/// is shed *immediately* with the structured [`overloaded_response`]
-/// line (`error_kind: "overloaded"`), never parked: the old behavior of
-/// stalling the read loop head-of-line-blocked every later request
-/// (including interactive ones) behind the cap, and gave the client no
-/// signal to back off on.
+/// One sharded engine fleet serves every connection through a **single
+/// nonblocking poll loop** on the calling thread: nonblocking accept,
+/// per-connection read/write buffers with partial-line reassembly,
+/// write backpressure (a connection whose response backlog passes
+/// [`MAX_OUTBUF`] is not read from until it drains), and a
+/// dead-connection purge that flips the liveness flag carried by the
+/// connection's in-flight tasks so shard dispatchers abort them. The
+/// whole process runs `1 + shards × (1 + workers)` threads — connection
+/// count and request count create none (the old design spent a reader
+/// + writer thread pair per connection).
+///
+/// In-flight requests are capped at [`ServeConfig::max_inflight`] per
+/// connection — a request past the cap is shed *immediately* with the
+/// structured [`overloaded_response`] line (`error_kind: "overloaded"`,
+/// `retry_after_ms` hint), never parked. `{"kind": "stats"}` probes are
+/// answered inline from the fleet gauges without touching admission.
 pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
-    let engine = Arc::new(Engine::new(
+    let shards = cfg.shards.max(1);
+    let router = Arc::new(Router::new(
         cfg.factory.clone(),
-        EngineConfig { workers: cfg.workers, batch: cfg.batch.clone() },
+        RouterConfig {
+            shards,
+            workers: cfg.workers,
+            batch: cfg.batch.clone(),
+            steal: true,
+        },
     ));
     eprintln!(
-        "srds-server listening on {} (model={}, engine workers={}, buckets={:?}, \
+        "srds-server listening on {} (model={}, shards={}, workers/shard={}, buckets={:?}, \
          class-weights={:?}, max-inflight/conn={}, default-deadline={:?}, samplers={})",
         listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| cfg.addr.clone()),
         cfg.model_name,
+        shards,
         cfg.workers,
         cfg.batch.buckets,
         cfg.batch.class_weights,
@@ -585,103 +1023,94 @@ pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
         cfg.default_deadline,
         registry().list().join("/")
     );
-    let max_inflight = cfg.max_inflight.max(1);
-    for stream in listener.incoming() {
-        let stream = stream?;
-        let engine = engine.clone();
-        let model_name = cfg.model_name.clone();
-        let default_deadline = cfg.default_deadline;
-        std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, engine, model_name, max_inflight, default_deadline)
-            {
-                eprintln!("connection error: {e:#}");
+    listener.set_nonblocking(true)?;
+    let lp = PollLoop {
+        router,
+        model_name: cfg.model_name.clone(),
+        default_deadline: cfg.default_deadline,
+        max_inflight: cfg.max_inflight.max(1),
+        outbox: Arc::new(Outbox::new()),
+    };
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_id: u64 = 0;
+    let mut dead: Vec<u64> = Vec::new();
+    loop {
+        let mut progress = false;
+        // 1. Accept every waiting connection.
+        loop {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    if let Err(e) = stream.set_nonblocking(true) {
+                        eprintln!("connection setup error: {e}");
+                        continue;
+                    }
+                    conns.insert(
+                        next_id,
+                        Conn {
+                            stream,
+                            peer: peer.to_string(),
+                            inbuf: Vec::new(),
+                            outbuf: Vec::new(),
+                            submitted: 0,
+                            delivered: 0,
+                            alive: Arc::new(AtomicBool::new(true)),
+                            read_closed: false,
+                        },
+                    );
+                    next_id += 1;
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                // A broken listener can't be served around (matches the
+                // old accept loop's `stream?`).
+                Err(e) => return Err(e.into()),
             }
-        });
+        }
+        // 2. Route completed work into its connection's write buffer —
+        // serialization happens here, on the poll thread, never on a
+        // shard dispatcher. A completion for a vanished connection is
+        // dropped (its client is gone; late results have no reader).
+        for (conn_id, resp) in lp.outbox.drain() {
+            if let Some(conn) = conns.get_mut(&conn_id) {
+                conn.delivered += 1;
+                push_line(&mut conn.outbuf, &resp.into_line());
+                progress = true;
+            }
+        }
+        // 3. Per-connection I/O: drain writes first (completed work
+        // must stream out even if the client never sends another
+        // byte), then read + dispatch new request lines.
+        for (&id, conn) in conns.iter_mut() {
+            let open = lp.write_side(conn, &mut progress)
+                && lp.read_side(id, conn, &mut progress)
+                && !(conn.read_closed && conn.outbuf.is_empty() && conn.pending() == 0);
+            if !open {
+                dead.push(id);
+            }
+        }
+        // 4. Purge dead connections: dropping the socket closes it, and
+        // flipping `alive` makes the dispatchers abort any of its
+        // still-queued work instead of computing unread results.
+        for id in dead.drain(..) {
+            if let Some(conn) = conns.remove(&id) {
+                conn.alive.store(false, Ordering::SeqCst);
+                eprintln!("connection {} done", conn.peer);
+            }
+        }
+        // 5. Nothing moved: park until a completion lands or the poll
+        // interval elapses (bounds the WouldBlock retry latency).
+        if !progress {
+            lp.outbox.wait(POLL_WAIT);
+        }
     }
-    Ok(())
-}
-
-// lint: request-path
-fn handle_conn(
-    stream: TcpStream,
-    engine: Arc<Engine>,
-    model_name: String,
-    max_inflight: usize,
-    default_deadline: Option<u64>,
-) -> Result<()> {
-    let peer = stream.peer_addr()?;
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    let (resp_tx, resp_rx) = channel::<PendingResponse>();
-    // Dedicated writer thread: responses stream back the moment a
-    // request finishes, independent of the (possibly idle) read side — a
-    // blocked reader must never delay completed work. Serialization
-    // happens HERE, not in the engine callback: the dispatcher must stay
-    // free to form batches while a response's sample vector is formatted.
-    let writer_handle = std::thread::spawn(move || -> Result<()> {
-        for resp in resp_rx {
-            writeln!(writer, "{}", resp.into_line())?;
-        }
-        Ok(())
-    });
-    let gate = Arc::new(Mutex::new(0usize));
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        // Parse before the admission check: a shed response must echo
-        // the request id (and a malformed line is a parse error, not an
-        // admission slot).
-        let mut req = match line_to_request(&line) {
-            Ok(r) => r,
-            Err(e) => {
-                let _ = resp_tx.send(PendingResponse::Ready(json::to_string(&e)));
-                continue;
-            }
-        };
-        if req.deadline.is_none() {
-            req.deadline = default_deadline;
-        }
-        // Non-blocking admission: over the cap, shed with the structured
-        // overloaded error instead of stalling the read loop — the
-        // client keeps receiving completions and decides when to retry.
-        {
-            // lint-allow(panic-policy): a poisoned admission gate means a panicked reader thread — process-fatal, not request-controlled
-            let mut inflight = gate.lock().unwrap();
-            if *inflight >= max_inflight {
-                drop(inflight);
-                let shed = overloaded_response(req.id, max_inflight);
-                let _ = resp_tx.send(PendingResponse::Ready(json::to_string(&shed)));
-                continue;
-            }
-            *inflight += 1;
-        }
-        // Submit and move on: the completion callback (run by the
-        // engine's dispatcher — error lines invoke it inline here)
-        // forwards the response to the writer and releases the
-        // admission slot. No thread exists for this request.
-        let resp_tx = resp_tx.clone();
-        let gate = gate.clone();
-        submit_request_engine(&engine, &model_name, req, move |resp| {
-            let _ = resp_tx.send(resp);
-            // lint-allow(panic-policy): poisoned admission gate, see above
-            *gate.lock().unwrap() -= 1;
-        });
-    }
-    // Reader EOF: drop our resp_tx; the writer exits once the in-flight
-    // requests' callback clones fire and the channel drains.
-    drop(resp_tx);
-    let _ = writer_handle.join();
-    eprintln!("connection {peer} done");
-    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::ConvNorm;
-    use crate::exec::NativeFactory;
+    use crate::exec::{EngineConfig, NativeFactory};
     use crate::model::GmmEps;
     use crate::solvers::Solver;
 
@@ -807,7 +1236,16 @@ mod tests {
             Arc::new(GmmEps::new(make_gmm("toy2d")));
         Engine::new(
             Arc::new(NativeFactory::new(model, Solver::Ddim)),
-            EngineConfig { workers: 2, batch: BatchPolicy::default() },
+            EngineConfig { workers: 2, ..EngineConfig::default() },
+        )
+    }
+
+    fn router(shards: usize) -> Router {
+        let model: Arc<dyn crate::model::EpsModel> =
+            Arc::new(GmmEps::new(make_gmm("toy2d")));
+        Router::new(
+            Arc::new(NativeFactory::new(model, Solver::Ddim)),
+            RouterConfig { shards, workers: 1, batch: BatchPolicy::default(), steal: true },
         )
     }
 
@@ -885,6 +1323,7 @@ mod tests {
             let lane = classes.get(c.name()).unwrap_or_else(|| panic!("{} lane", c.name()));
             assert!(lane.get("completed").is_some());
             assert!(lane.get("active").is_some());
+            assert!(lane.get("aborted").is_some());
             assert!(lane.get("rows").is_some());
             assert!(lane.get("mean_wall_ms").is_some());
             assert!(lane.get("deadline_hits").is_some());
@@ -919,15 +1358,92 @@ mod tests {
 
     #[test]
     fn overloaded_response_is_structured() {
-        let v = overloaded_response(42, 2);
+        let v = overloaded_response(42, 2, DEFAULT_RETRY_AFTER_MS);
         assert_eq!(v.get("id").unwrap().as_f64(), Some(42.0));
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
         assert_eq!(v.get("error_kind").unwrap().as_str(), Some("overloaded"));
         assert_eq!(v.get("max_inflight").unwrap().as_f64(), Some(2.0));
         assert!(v.get("error").unwrap().as_str().unwrap().contains("overloaded"));
+        // The backoff hint is structured, not prose (ROADMAP's
+        // resilience edge): clients sleep retry_after_ms and resend.
+        assert_eq!(
+            v.get("retry_after_ms").unwrap().as_f64(),
+            Some(DEFAULT_RETRY_AFTER_MS as f64)
+        );
         // Round-trips through the wire serialization.
         let parsed = json::parse(&json::to_string(&v)).unwrap();
         assert_eq!(parsed.get("error_kind").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(
+            parsed.get("retry_after_ms").unwrap().as_f64(),
+            Some(DEFAULT_RETRY_AFTER_MS as f64)
+        );
+        // The hint is caller-controlled (an adaptive serve loop can
+        // scale it with load without a schema change).
+        let v = overloaded_response(1, 4, 250);
+        assert_eq!(v.get("retry_after_ms").unwrap().as_f64(), Some(250.0));
+    }
+
+    #[test]
+    fn stats_probe_answers_without_running_a_sampler() {
+        // `{"kind": "stats"}` is the poll loop's health probe: it
+        // reports the aggregated fleet snapshot (shards, steals, lanes)
+        // and never touches the sampler registry or an admission slot.
+        let r = router(2);
+        // Warm the fleet so the probe has nonzero counters to show.
+        let warm =
+            handle_line_router(&r, "gmm_toy2d", r#"{"id":1,"sampler":"srds","n":16,"sample":false}"#);
+        let wv = json::parse(&warm).unwrap();
+        assert_eq!(wv.get("ok").unwrap().as_bool(), Some(true), "{warm}");
+        let resp = handle_line_router(&r, "gmm_toy2d", r#"{"id":7,"kind":"stats"}"#);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(7.0));
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("stats"));
+        assert_eq!(v.get("shards").unwrap().as_f64(), Some(2.0));
+        assert!(v.get("steals").unwrap().as_f64().is_some(), "{resp}");
+        assert_eq!(v.get("workers").unwrap().as_f64(), Some(2.0), "2 shards × 1 worker");
+        assert!(v.get("flushed_rows").unwrap().as_f64().unwrap() > 0.0, "{resp}");
+        assert_eq!(v.get("active_tasks").unwrap().as_f64(), Some(0.0));
+        // No sampler ran: a stats line carries no sample payload.
+        assert!(v.get("sample").is_none());
+        assert!(v.get("sampler").is_none());
+        let classes = v.get("classes").expect("per-class lanes ride the probe");
+        let std_lane = classes.get("standard").unwrap();
+        assert_eq!(std_lane.get("completed").unwrap().as_f64(), Some(1.0), "{resp}");
+        assert_eq!(std_lane.get("aborted").unwrap().as_f64(), Some(0.0), "{resp}");
+        // An explicit kind "sample" still parses as a normal request...
+        let v = json::parse(r#"{"kind":"sample","n":16}"#).unwrap();
+        assert!(SampleRequest::from_json(&v).is_ok());
+        // ...while an unknown kind is rejected, not silently sampled.
+        let v = json::parse(r#"{"kind":"metrics","n":16}"#).unwrap();
+        assert!(SampleRequest::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn router_path_matches_engine_path_and_reports_fleet_fields() {
+        // The serve loop's actual substrate is the sharded router; the
+        // wire contract must be byte-compatible with the single-engine
+        // path, plus the fleet fields (shards / steals).
+        let eng = engine();
+        let r = router(2);
+        for line in [
+            r#"{"id":1,"sampler":"srds","n":25,"seed":3,"tol":1e-5}"#,
+            r#"{"id":2,"sampler":"sequential","n":25,"seed":3}"#,
+        ] {
+            let engined = json::parse(&handle_line_engine(&eng, "gmm_toy2d", line)).unwrap();
+            let routed = json::parse(&handle_line_router(&r, "gmm_toy2d", line)).unwrap();
+            assert_eq!(routed.get("ok").unwrap().as_bool(), Some(true), "{line}");
+            assert_eq!(
+                routed.get("sample").unwrap().as_f32_vec().unwrap(),
+                engined.get("sample").unwrap().as_f32_vec().unwrap(),
+                "{line}: sharded fleet vs single engine"
+            );
+            assert_eq!(routed.get("shards").unwrap().as_f64(), Some(2.0), "{line}");
+            assert!(routed.get("steals").unwrap().as_f64().is_some(), "{line}");
+            // The single-engine snapshot is a width-1 fleet on the wire.
+            assert_eq!(engined.get("shards").unwrap().as_f64(), Some(1.0), "{line}");
+            assert_eq!(engined.get("steals").unwrap().as_f64(), Some(0.0), "{line}");
+        }
     }
 
     #[test]

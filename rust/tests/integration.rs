@@ -111,6 +111,7 @@ fn tcp_server_round_trip() {
             listener,
             ServeConfig {
                 addr: addr2,
+                shards: 1,
                 workers: 2,
                 model_name: "gmm_toy2d".into(),
                 factory,

@@ -16,7 +16,7 @@ fn engine(workers: usize) -> Engine {
     let model: Arc<dyn EpsModel> = Arc::new(GmmEps::new(make_gmm("church")));
     Engine::new(
         Arc::new(NativeFactory::new(model, Solver::Ddim)),
-        EngineConfig { workers, batch: BatchPolicy::default() },
+        EngineConfig { workers, batch: BatchPolicy::default(), ..EngineConfig::default() },
     )
 }
 

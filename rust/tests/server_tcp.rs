@@ -37,6 +37,10 @@ fn concurrent_tcp_clients_get_solo_equivalent_samples() {
     {
         let cfg = ServeConfig {
             addr: addr.clone(),
+            // Two shards so the poll loop + router + steal mesh serve
+            // this test's mixed fleet — samples must still match the
+            // solo single-tenant runs bit-for-bit.
+            shards: 2,
             workers: 2,
             model_name: "gmm_toy2d".into(),
             factory: factory.clone(),
