@@ -5,8 +5,9 @@ Compares a fresh bench JSON report against a committed baseline and
 exits non-zero on regression beyond tolerance. Two baseline shapes:
 
 * **Serving** (`BENCH_serving.json`, one report object): throughput
-  keys (`rps`) must not drop more than 20% below baseline; latency
-  keys (`*_ms`) must not rise more than 20% above baseline.
+  keys (`rps`) and ratio keys (`*_rate`, e.g. the repeat section's
+  cache `hit_rate`) must not drop more than 20% below baseline;
+  latency keys (`*_ms`) must not rise more than 20% above baseline.
 * **Hot path** (`BENCH_hotpath.json`, detected by its top-level
   `hot_path` list): the `cargo bench --bench hot_path` report is one
   JSON line per (dim, batch) configuration. Baseline entries are
@@ -159,6 +160,17 @@ def walk(baseline, current, path, failures, checked):
                     f"{TOLERANCE:.0%} below baseline {baseline:.2f}")
             else:
                 checked.append(f"{where}: {current:.2f} rps (floor {floor:.2f})")
+        elif key.endswith("_rate"):
+            # Ratio floors (e.g. the repeat section's cache hit_rate):
+            # same 20% relative tolerance as throughput — a cache gone
+            # cold is a structural regression, not noise.
+            floor = baseline * (1.0 - TOLERANCE)
+            if current < floor:
+                failures.append(
+                    f"{where}: rate {current:.3f} regressed >"
+                    f"{TOLERANCE:.0%} below baseline {baseline:.3f}")
+            else:
+                checked.append(f"{where}: {current:.3f} rate (floor {floor:.3f})")
         elif key.endswith("_ms"):
             ceil = baseline * (1.0 + TOLERANCE)
             if current > ceil:

@@ -26,6 +26,15 @@
 //! the scaling number the sharding layer is accountable for, gated by
 //! `ci/bench_gate.py` against `BENCH_serving.json`.
 //!
+//! Fifth section, `repeat`: the hot-spec number for the shared-work
+//! layer — four closed-loop clients all hammering the *same* spec+seed
+//! (the repeated-prompt serving case), once with the coarse-spine
+//! cache + in-flight coalescing on and once fully off. Reports
+//! rps/p50/p95 per variant plus the cache counters and `hit_rate`
+//! (hits over lookups; coalesced duplicates never reach the cache).
+//! The `cache_on` hit rate and rps are gated — the cache going cold or
+//! the dedupe table stopping absorbing is a structural regression.
+//!
 //! `cargo bench --bench serving`
 
 use srds::batching::BatchPolicy;
@@ -255,7 +264,7 @@ fn main() {
     for shards in [1usize, 2, 4] {
         let router = Arc::new(Router::new(
             Arc::new(NativeFactory::new(model.clone(), Solver::Ddim)),
-            RouterConfig { shards, workers: 1, batch: BatchPolicy::default(), steal: true },
+            RouterConfig { shards, workers: 1, ..RouterConfig::default() },
         ));
         const SHARD_CLIENTS: usize = 8;
         let t0 = Instant::now();
@@ -297,6 +306,68 @@ fn main() {
         ]));
     }
 
+    // Hot-spec repeat fleet: every client runs the same spec+seed, so
+    // after the first run the whole load is shared work. A/B the
+    // shared-work layer on vs off on otherwise identical engines; the
+    // outputs are bit-identical either way (cache_identity.rs pins
+    // that) — this section measures what sharing buys.
+    let mut repeat_variants: Vec<(&str, Value)> = Vec::new();
+    for (label, cap, coalesce) in [("cache_on", 64usize, true), ("cache_off", 0usize, false)] {
+        let engine = Arc::new(Engine::new(
+            Arc::new(NativeFactory::new(model.clone(), Solver::Ddim)),
+            EngineConfig {
+                workers: WORKERS,
+                spine_cache_cap: cap,
+                coalesce,
+                ..EngineConfig::default()
+            },
+        ));
+        const REPEAT_CLIENTS: usize = 4;
+        let t0 = Instant::now();
+        let mut threads = Vec::new();
+        for _ in 0..REPEAT_CLIENTS {
+            let engine = engine.clone();
+            threads.push(std::thread::spawn(move || {
+                let x0 = prior_sample(engine.dim(), 77);
+                let spec = SamplerSpec::srds(N_STEPS).with_tol(1e-4).with_seed(77);
+                let mut lat_ms = Vec::with_capacity(PER_CLIENT);
+                for _ in 0..PER_CLIENT {
+                    let t = Instant::now();
+                    let out = engine.run(&x0, &spec);
+                    assert!(out.sample.iter().all(|v| v.is_finite()));
+                    lat_ms.push(t.elapsed().as_secs_f64() * 1000.0);
+                }
+                lat_ms
+            }));
+        }
+        let mut lat_ms: Vec<f64> =
+            threads.into_iter().flat_map(|t| t.join().unwrap()).collect();
+        let wall_s = t0.elapsed().as_secs_f64();
+        lat_ms.sort_by(f64::total_cmp);
+        let st = engine.stats();
+        let lookups = st.cache_hits + st.cache_misses;
+        repeat_variants.push((
+            label,
+            json::obj(vec![
+                ("clients", Value::Num(REPEAT_CLIENTS as f64)),
+                ("requests", Value::Num((REPEAT_CLIENTS * PER_CLIENT) as f64)),
+                ("wall_s", Value::Num(wall_s)),
+                (
+                    "rps",
+                    Value::Num((REPEAT_CLIENTS * PER_CLIENT) as f64 / wall_s.max(1e-9)),
+                ),
+                ("p50_ms", Value::Num(percentile(&lat_ms, 0.5))),
+                ("p95_ms", Value::Num(percentile(&lat_ms, 0.95))),
+                ("cache_hits", Value::Num(st.cache_hits as f64)),
+                ("cache_misses", Value::Num(st.cache_misses as f64)),
+                ("cache_evictions", Value::Num(st.cache_evictions as f64)),
+                ("coalesced", Value::Num(st.coalesced as f64)),
+                ("hit_rate", Value::Num(st.cache_hits as f64 / lookups.max(1) as f64)),
+            ]),
+        ));
+    }
+    let repeat = json::obj(repeat_variants);
+
     let report = json::obj(vec![
         ("bench", Value::Str("serving_throughput".into())),
         ("model", Value::Str("gmm_church".into())),
@@ -307,6 +378,7 @@ fn main() {
         ("mixed", mixed),
         ("qos", qos),
         ("sharded", Value::Arr(sharded)),
+        ("repeat", repeat),
     ]);
     println!("{}", json::to_string(&report));
 }

@@ -245,6 +245,73 @@ impl SamplerSpec {
         }
     }
 
+    /// Canonical identity of this spec's *numerics*: a stable FNV-1a
+    /// hash over every field that can change a sample's value, with
+    /// `None` defaults resolved before hashing so `block: None` and an
+    /// explicit `with_block(⌈√n⌉)` — or `max_iters: None` and its
+    /// per-kind default — collide on purpose. Two specs with equal
+    /// `cache_key()` fed the same initial state produce bit-identical
+    /// samples, which is what lets the engine coalesce concurrent
+    /// duplicates and reuse cached coarse spines.
+    ///
+    /// Scheduling and payload knobs are deliberately **excluded**:
+    /// `priority`, `deadline_evals`, and `keep_iterates` change when and
+    /// how much work runs, never the value of any computed state, so
+    /// they must not fragment the key space. (The engine's in-flight
+    /// coalescer re-adds them to its own key, because requests with
+    /// different deadlines or payload shapes cannot share one task.)
+    pub fn cache_key(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        // Kind discriminant + the kind's own canonicalized parameters.
+        match self.kind {
+            SamplerKind::Sequential => h = fnv1a_u64(h, 0),
+            SamplerKind::Srds => h = fnv1a_u64(h, 1),
+            SamplerKind::Paradigms { .. } => {
+                h = fnv1a_u64(h, 2);
+                h = fnv1a_u64(h, self.window().unwrap_or(self.n).max(1) as u64);
+            }
+            SamplerKind::Parataa { .. } => {
+                h = fnv1a_u64(h, 3);
+                h = fnv1a_u64(h, self.history() as u64);
+            }
+        }
+        h = fnv1a_u64(h, self.n as u64);
+        // Default-filled block size: `partition()` resolves `None` to the
+        // ⌈√n⌉ rule, so explicit-vs-implicit defaults hash identically.
+        h = fnv1a_u64(h, self.partition().block() as u64);
+        h = fnv1a_u64(h, u64::from(self.tol.to_bits()));
+        h = fnv1a_u64(h, self.norm as u64);
+        h = fnv1a_u64(h, self.effective_max_iters() as u64);
+        h = fnv1a_u64(h, u64::from(self.cond.guidance.to_bits()));
+        match self.cond.mask_slice() {
+            None => h = fnv1a_u64(h, 0),
+            Some(mask) => {
+                h = fnv1a_u64(h, 1 + mask.len() as u64);
+                for v in mask {
+                    h = fnv1a_u64(h, u64::from(v.to_bits()));
+                }
+            }
+        }
+        fnv1a_u64(h, self.seed)
+    }
+
+    /// `max_iters` with each kind's own `None` default and clamp applied
+    /// — the value the matching task/sampler actually iterates to, so
+    /// `cache_key()` treats "default" and "explicitly the default" as
+    /// the same spec. Sequential ignores the knob entirely and
+    /// canonicalizes to 0.
+    fn effective_max_iters(&self) -> usize {
+        match self.kind {
+            SamplerKind::Sequential => 0,
+            SamplerKind::Srds => {
+                let m = self.partition().num_blocks();
+                self.max_iters.unwrap_or(m).max(1).min(m)
+            }
+            SamplerKind::Paradigms { .. } => self.max_iters.unwrap_or(8 * self.n).max(1),
+            SamplerKind::Parataa { .. } => self.max_iters.unwrap_or(2 * self.n).max(1),
+        }
+    }
+
     pub fn with_kind(mut self, kind: SamplerKind) -> Self {
         self.kind = kind;
         self
@@ -316,6 +383,34 @@ impl SamplerSpec {
             .expect("every SamplerKind is registered")
             .run(backend, x0, self)
     }
+}
+
+/// FNV-1a 64-bit offset basis / prime — a fixed, dependency-free hash
+/// whose value is stable across runs, platforms and compiler versions
+/// (unlike `std::hash::DefaultHasher`, which is randomly keyed), so
+/// [`SamplerSpec::cache_key`] can key caches that outlive a process.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one word into an FNV-1a state, byte by byte (little-endian).
+fn fnv1a_u64(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Companion to [`SamplerSpec::cache_key`]: the same stable FNV-1a over
+/// a state vector's f32 bit patterns. `(spec.cache_key(), state_hash(x0))`
+/// is the full identity of a deterministic run — the engine's coalescer
+/// and spine cache both key on the pair, and the router's affinity hint
+/// reuses it so repeats land on the shard holding the cached spine.
+pub fn state_hash(xs: &[f32]) -> u64 {
+    let mut h = fnv1a_u64(FNV_OFFSET, xs.len() as u64);
+    for v in xs {
+        h = fnv1a_u64(h, u64::from(v.to_bits()));
+    }
+    h
 }
 
 /// What every sampler returns: the generated sample plus the shared
@@ -513,6 +608,91 @@ mod tests {
         assert_eq!(spec.priority, QosClass::Interactive);
         assert_eq!(spec.deadline_evals, Some(120));
         assert!(spec.validate().is_ok(), "qos knobs never invalidate a spec");
+    }
+
+    #[test]
+    fn cache_key_fills_defaults_before_hashing() {
+        // `None` knobs hash as the value the sampler will actually use,
+        // so "default" and "explicitly the default" are one cache line.
+        assert_eq!(
+            SamplerSpec::srds(25).cache_key(),
+            SamplerSpec::srds(25).with_block(5).cache_key(),
+            "block: None is the ⌈√n⌉ rule"
+        );
+        assert_eq!(
+            SamplerSpec::srds(25).cache_key(),
+            SamplerSpec::srds(25).with_max_iters(5).cache_key(),
+            "max_iters: None is m for SRDS"
+        );
+        assert_eq!(
+            SamplerSpec::paradigms(16).cache_key(),
+            SamplerSpec::paradigms(16).with_window(16).cache_key(),
+            "window: None is the full grid"
+        );
+        assert_eq!(
+            SamplerSpec::paradigms(16).cache_key(),
+            SamplerSpec::paradigms(16).with_max_iters(8 * 16).cache_key(),
+            "max_iters: None is 8n for ParaDiGMS"
+        );
+        assert_eq!(
+            SamplerSpec::parataa(16).cache_key(),
+            SamplerSpec::parataa(16).with_history(DEFAULT_HISTORY).cache_key(),
+        );
+        // SRDS clamps max_iters to the block count, and the key follows
+        // the clamp: asking for more iterations than blocks is the same
+        // run as the default.
+        assert_eq!(
+            SamplerSpec::srds(25).cache_key(),
+            SamplerSpec::srds(25).with_max_iters(99).cache_key(),
+        );
+    }
+
+    #[test]
+    fn cache_key_tracks_every_numerics_field() {
+        // Each mutation below changes the computed sample, so each must
+        // change the key — collect and demand all-distinct.
+        let base = SamplerSpec::srds(25);
+        let keys = vec![
+            base.clone().cache_key(),
+            SamplerSpec::srds(36).cache_key(),
+            base.clone().with_block(4).cache_key(),
+            base.clone().with_tol(1e-5).cache_key(),
+            base.clone().with_norm(ConvNorm::LInf).cache_key(),
+            base.clone().with_max_iters(1).cache_key(),
+            base.clone().with_seed(1).cache_key(),
+            base.clone().with_cond(Conditioning::class(vec![1.0, 0.0], 2.0)).cache_key(),
+            base.clone().with_cond(Conditioning::class(vec![0.0, 1.0], 2.0)).cache_key(),
+            SamplerSpec::sequential(25).cache_key(),
+            SamplerSpec::paradigms(25).cache_key(),
+            SamplerSpec::paradigms(25).with_window(5).cache_key(),
+            SamplerSpec::parataa(25).cache_key(),
+            SamplerSpec::parataa(25).with_history(3).cache_key(),
+        ];
+        let distinct: std::collections::HashSet<u64> = keys.iter().copied().collect();
+        assert_eq!(distinct.len(), keys.len(), "a numerics field failed to reach the key");
+    }
+
+    #[test]
+    fn cache_key_ignores_scheduling_and_payload_knobs() {
+        // Priority, deadline budget and iterate retention steer *when*
+        // and *how much* work runs — never what any state evaluates to —
+        // so they must not fragment the spine cache.
+        let base = SamplerSpec::srds(25).with_seed(3);
+        let key = base.clone().cache_key();
+        assert_eq!(key, base.clone().with_priority(QosClass::Interactive).cache_key());
+        assert_eq!(key, base.clone().with_priority(QosClass::Batch).cache_key());
+        assert_eq!(key, base.clone().with_deadline_evals(10).cache_key());
+        assert_eq!(key, base.clone().with_iterates().cache_key());
+    }
+
+    #[test]
+    fn state_hash_is_order_and_length_sensitive() {
+        assert_eq!(state_hash(&[1.0, 2.0]), state_hash(&[1.0, 2.0]));
+        assert_ne!(state_hash(&[1.0, 2.0]), state_hash(&[2.0, 1.0]));
+        assert_ne!(state_hash(&[1.0]), state_hash(&[1.0, 0.0]));
+        // f32 bit patterns, not values: -0.0 and 0.0 compare equal but
+        // hash apart — the cache demands bit-identity, not equality.
+        assert_ne!(state_hash(&[0.0]), state_hash(&[-0.0]));
     }
 
     #[test]

@@ -29,7 +29,7 @@ pub mod sequential;
 pub mod srds;
 pub mod stats;
 
-pub use api::{registry, QosClass, Registry, SampleOutput, Sampler, SamplerKind, SamplerSpec};
+pub use api::{registry, state_hash, QosClass, Registry, SampleOutput, Sampler, SamplerKind, SamplerSpec};
 pub use convergence::ConvNorm;
 pub use paradigms::paradigms;
 pub use parataa::parataa;

@@ -66,6 +66,26 @@
 //! strangers never changes its value, and class selection reorders rows
 //! without touching them.
 //!
+//! **Shared work:** the same determinism that makes the fused-batch
+//! invariant checkable makes whole runs *reusable*. A canonical
+//! identity —
+//! [`SamplerSpec::cache_key`](crate::coordinator::SamplerSpec::cache_key)
+//! over the numerics fields plus
+//! [`state_hash`](crate::coordinator::state_hash) over `x0` — names a
+//! run's entire output, and the dispatcher shares at two levels:
+//! *in-flight coalescing* (an identical concurrent submission joins the
+//! resident task as one more follower — N duplicates cost one run and
+//! each gets its own bit-identical reply, its own latency accounting,
+//! and its own cancellation flag; the task aborts only when the last
+//! follower's client dies) and the *coarse-spine cache* (at finalize,
+//! refcount shares of an SRDS task's iteration-0 boundary states are
+//! retained in a capacity-bounded QoS-aware LRU; a repeat request
+//! warm-starts at iteration 1, emitting zero coarse-spine rows and
+//! dropping `eff_serial_evals` by the skipped sweep). Both are pure
+//! work-sharing — `rust/tests/cache_identity.rs` pins bit-identity of
+//! shared vs solo output — observable via
+//! `cache_hits`/`cache_misses`/`cache_evictions`/`coalesced`.
+//!
 //! **Zero-copy state:** every state the engine touches is a pooled
 //! refcounted [`StateBuf`] from one engine-wide [`BufPool`] — task grid
 //! cells, queued row states (a queued row *shares* its producer's
@@ -78,8 +98,8 @@
 
 use crate::batching::{stage_rows, BatchPolicy, Batcher, PendingRow};
 use crate::buf::{BatchStage, BufPool, StateBuf};
-use crate::coordinator::{QosClass, SampleOutput, SamplerSpec};
-use crate::exec::task::{new_task, Completion, SamplerTask, TaskRow};
+use crate::coordinator::{state_hash, QosClass, SampleOutput, SamplerKind, SamplerSpec};
+use crate::exec::task::{new_task, new_warm_task, Completion, SamplerTask, TaskRow};
 use crate::solvers::{BackendFactory, Solver, StepBackend};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -124,6 +144,23 @@ pub struct EngineConfig {
     /// saturated siblings when its own lanes run dry. Donating is not
     /// gated — an overloaded shard always answers a `StealRequest`.
     pub steal: bool,
+    /// Coarse-spine cache capacity: how many finished SRDS spines this
+    /// engine retains (refcount shares of the iteration-0 boundary
+    /// states) for warm-starting repeat requests. `0` — the library
+    /// default — disables the cache entirely, keeping a bare engine's
+    /// buffer liveness exactly its working set; the serving layer turns
+    /// it on (`--spine-cache-cap`). Retention is bounded by
+    /// `cap × M` buffers and surfaces in `pool` liveness by design —
+    /// cached spines are *supposed* to stay live.
+    pub spine_cache_cap: usize,
+    /// Coalesce identical concurrent submissions — same
+    /// [`SamplerSpec::cache_key`](crate::coordinator::SamplerSpec::cache_key),
+    /// initial state, QoS class, deadline and payload shape — into one
+    /// resident task with fanned-out bit-identical replies. On by
+    /// default (`--no-coalesce` on the CLI): distinct requests are
+    /// never merged, so the only observable effect is N identical
+    /// requests costing one run.
+    pub coalesce: bool,
 }
 
 impl Default for EngineConfig {
@@ -134,6 +171,8 @@ impl Default for EngineConfig {
             shard_id: 0,
             mesh: None,
             steal: true,
+            spine_cache_cap: 0,
+            coalesce: true,
         }
     }
 }
@@ -333,6 +372,10 @@ struct Counters {
     steals: u64,
     queue_depth: usize,
     active_tasks: usize,
+    cache_hits: u64,
+    cache_misses: u64,
+    cache_evictions: u64,
+    coalesced: u64,
     per_class: [ClassLane; 3],
 }
 
@@ -417,6 +460,24 @@ pub struct EngineStats {
     pub pool_misses: u64,
     /// Peak simultaneously-live state buffers (the leak detector).
     pub pool_high_water: usize,
+    /// SRDS submissions warm-started from a cached coarse spine: the
+    /// repeat request skipped the serial init sweep entirely (its
+    /// `eff_serial_evals` drops by `M × epc`) while staying
+    /// bit-identical to a fresh run. Only counted when the spine cache
+    /// is enabled (`spine_cache_cap > 0`).
+    pub cache_hits: u64,
+    /// SRDS submissions that ran a fresh spine because no cached one
+    /// matched `(cache_key, state_hash)`. `hits / (hits + misses)` is
+    /// the spine-cache hit rate the `repeat` bench section gates.
+    pub cache_misses: u64,
+    /// Cached spines dropped by the QoS-aware LRU to stay within
+    /// `spine_cache_cap` (lowest class first, oldest within a class).
+    pub cache_evictions: u64,
+    /// Submissions absorbed as followers of an identical in-flight
+    /// request instead of becoming their own task: each one still
+    /// counts in `per_class[].submitted`/`completed` and receives its
+    /// own bit-identical reply, but cost zero extra rows.
+    pub coalesced: u64,
     /// Per-QoS-class occupancy/latency lanes, in [`QosClass::ALL`] order
     /// (`[interactive, standard, batch]`); index with
     /// [`QosClass::index`].
@@ -505,10 +566,15 @@ impl Engine {
             steal: cfg.steal,
             gauge: gauge.clone(),
         };
+        let (cache_cap, coalesce) = (cfg.spine_cache_cap, cfg.coalesce);
         let dispatcher = std::thread::Builder::new()
             .name(format!("srds-engine-dispatcher-{}", cfg.shard_id))
             .spawn(move || {
-                Dispatcher::new(rx, d_work, d_counters, workers, policy, epc, d_pool, shard).run();
+                Dispatcher::new(
+                    rx, d_work, d_counters, workers, policy, epc, d_pool, shard, cache_cap,
+                    coalesce,
+                )
+                .run();
             })
             .expect("spawn engine dispatcher");
         Engine {
@@ -631,6 +697,10 @@ impl Engine {
             pool_hits: ps.hits,
             pool_misses: ps.misses,
             pool_high_water: ps.high_water,
+            cache_hits: c.cache_hits,
+            cache_misses: c.cache_misses,
+            cache_evictions: c.cache_evictions,
+            coalesced: c.coalesced,
             per_class: c.per_class,
         }
     }
@@ -667,6 +737,10 @@ impl StatsHandle {
             pool_hits: ps.hits,
             pool_misses: ps.misses,
             pool_high_water: ps.high_water,
+            cache_hits: c.cache_hits,
+            cache_misses: c.cache_misses,
+            cache_evictions: c.cache_evictions,
+            coalesced: c.coalesced,
             per_class: c.per_class,
         }
     }
@@ -749,23 +823,121 @@ fn worker_loop(backend: &dyn StepBackend, work: &WorkQueue, done_tx: &Sender<Msg
     }
 }
 
+/// One requester attached to a resident task. A task is born with one
+/// follower (its submitter); in-flight coalescing appends more — each
+/// an independent request with its own reply sink, submit instant (for
+/// honest per-request latency) and client-liveness flag. The task stays
+/// alive while *any* follower's client is, and every live follower
+/// receives its own bit-identical copy of the output at finalize.
+struct Follower {
+    reply: ReplySink,
+    /// Submit instant (the per-class latency counters).
+    t_submit: Instant,
+    /// Client liveness; `false` means detach on the next sweep (and
+    /// abort the task when the last follower detaches).
+    alive: Option<Arc<AtomicBool>>,
+}
+
+/// The in-flight dedupe identity: everything that must match for two
+/// submissions to legally share one task. The numerics pair
+/// `(cache_key, state_hash)` guarantees bit-identical output; the
+/// scheduling/payload tail (`keep_iterates`, `deadline_evals`,
+/// `priority`) is re-added here — [`SamplerSpec::cache_key`] excludes
+/// it on purpose — because requests that truncate at different budgets,
+/// want different payloads, or ride different QoS lanes cannot share a
+/// run even though their numerics agree.
+type CoalesceKey = (u64, u64, bool, Option<u64>, u8);
+
 /// One resident request: its state machine plus the request-wide row
 /// fields the dispatcher attaches to every row the task emits, and the
 /// count of rows currently queued or executing (for stray-eval
 /// accounting at finalize).
 struct TaskEntry {
     task: Box<dyn SamplerTask>,
-    reply: ReplySink,
+    /// Everyone awaiting this task's output — the submitter plus any
+    /// coalesced duplicates. Never empty while the entry is resident.
+    followers: Vec<Follower>,
     mask: Option<Arc<[f32]>>,
     guidance: f32,
     seed: u64,
-    /// QoS lane every row of this request drains from.
+    /// QoS lane every row of this request drains from (all followers
+    /// share it — the coalesce key includes the class).
     class: QosClass,
-    /// Submit instant (the per-class latency counters).
-    t_submit: Instant,
     inflight: usize,
-    /// Client liveness; `false` means abort on the next sweep.
-    alive: Option<Arc<AtomicBool>>,
+    /// This task's slot in the dispatcher's in-flight dedupe table
+    /// (`None` when coalescing is off), cleared when the task leaves
+    /// the table so a later identical submission starts fresh.
+    coalesce_key: Option<CoalesceKey>,
+    /// The spine-cache key `(cache_key, state_hash)` — `Some` only for
+    /// SRDS requests while the cache is enabled; where the harvested
+    /// spine is filed at finalize.
+    spine_key: Option<(u64, u64)>,
+}
+
+/// Capacity-bounded, QoS-aware LRU of finished coarse spines. Values
+/// are refcount shares of the donor task's iteration-0 grid row —
+/// retaining or handing out a spine never copies a buffer, so the
+/// cache's entire cost is `cap × M` pooled slabs staying checked out.
+/// Eviction is class-then-recency: a Batch tenant's spine never
+/// displaces an Interactive one, and within a class the
+/// least-recently-touched entry goes first.
+struct SpineCache {
+    cap: usize,
+    /// Monotone touch counter backing recency (no clocks on the
+    /// dispatcher thread).
+    tick: u64,
+    map: HashMap<(u64, u64), SpineEntry>,
+}
+
+struct SpineEntry {
+    spine: Vec<StateBuf>,
+    class: QosClass,
+    tick: u64,
+}
+
+impl SpineCache {
+    fn new(cap: usize) -> SpineCache {
+        SpineCache { cap, tick: 0, map: HashMap::new() }
+    }
+
+    /// Look up a spine; a hit refreshes recency and returns refcount
+    /// shares of the stored buffers.
+    // lint: hot-path
+    fn get(&mut self, key: &(u64, u64)) -> Option<Vec<StateBuf>> {
+        self.tick += 1;
+        let tick = self.tick;
+        let e = self.map.get_mut(key)?;
+        e.tick = tick;
+        // lint-allow(hot-path-alloc): Arc refcount bumps of the cached bufs, not buffer copies
+        Some(e.spine.clone())
+    }
+
+    /// Insert (or refresh) a spine; returns the number of entries
+    /// evicted to stay within `cap` (0 or 1).
+    fn insert(&mut self, key: (u64, u64), spine: Vec<StateBuf>, class: QosClass) -> u64 {
+        if self.cap == 0 {
+            return 0;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        let mut evicted = 0;
+        if !self.map.contains_key(&key) && self.map.len() >= self.cap {
+            // QoS-aware LRU victim: highest class index first
+            // (`QosClass::ALL` orders interactive < standard < batch),
+            // oldest tick within a class.
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| (std::cmp::Reverse(e.class.index()), e.tick))
+                .map(|(k, _)| *k);
+            if let Some(k) = victim {
+                self.map.remove(&k);
+                evicted = 1;
+            }
+        }
+        self.map.insert(key, SpineEntry { spine, class, tick });
+        evicted
+    }
 }
 
 /// The sharding face of one dispatcher: its identity in the fleet plus
@@ -812,6 +984,16 @@ struct Dispatcher {
     /// finalize. `class_wall_ms_sum` backs the running `mean_wall_ms`.
     per_class: [ClassLane; 3],
     class_wall_ms_sum: [f64; 3],
+    /// In-flight dedupe table: coalesce identity → resident task id.
+    /// Entries are removed when their task finalizes or aborts, so a
+    /// lookup hit is always a live task to follow.
+    inflight_by_key: HashMap<CoalesceKey, u64>,
+    coalesce: bool,
+    spine_cache: SpineCache,
+    cache_hits: u64,
+    cache_misses: u64,
+    cache_evictions: u64,
+    coalesced: u64,
 }
 
 impl Dispatcher {
@@ -825,6 +1007,8 @@ impl Dispatcher {
         epc: u64,
         pool: BufPool,
         shard: ShardCtx,
+        spine_cache_cap: usize,
+        coalesce: bool,
     ) -> Dispatcher {
         Dispatcher {
             rx,
@@ -848,6 +1032,13 @@ impl Dispatcher {
             steals: 0,
             per_class: [ClassLane::default(); 3],
             class_wall_ms_sum: [0.0; 3],
+            inflight_by_key: HashMap::new(),
+            coalesce,
+            spine_cache: SpineCache::new(spine_cache_cap),
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_evictions: 0,
+            coalesced: 0,
         }
     }
 
@@ -915,32 +1106,36 @@ impl Dispatcher {
         match msg {
             Msg::Shutdown => return true,
             Msg::Submit { x0, spec, alive, reply } => {
-                let id = self.next_id;
-                self.next_id += 1;
-                // lint-allow(hot-path-alloc): Arc refcount bump, not a buffer copy
-                let mask = spec.cond.mask.clone();
-                let guidance = spec.cond.guidance;
-                let seed = spec.seed;
                 let class = spec.priority;
                 self.per_class[class.index()].submitted += 1;
-                let mut task = new_task(&x0, &spec, &self.pool, self.epc);
-                let rows = task.start();
-                self.tasks.insert(
-                    id,
-                    TaskEntry {
-                        task,
-                        reply,
-                        mask,
-                        guidance,
-                        seed,
-                        class,
-                        t_submit: Instant::now(),
-                        inflight: 0,
-                        alive,
-                    },
-                );
-                self.enqueue_rows(id, rows);
-                self.maybe_finalize(id);
+                let follower = Follower { reply, t_submit: Instant::now(), alive };
+                // Shared-work identity, computed once per request (not
+                // per row) and only when a feature that uses it is on.
+                let shared = self.coalesce || self.spine_cache.cap > 0;
+                let keys = shared.then(|| (spec.cache_key(), state_hash(&x0)));
+                // (a) In-flight coalescing: an identical concurrent
+                // submission rides the resident task as one more
+                // follower — zero extra rows, one more bit-identical
+                // reply at finalize.
+                if let (true, Some((sk, xk))) = (self.coalesce, keys) {
+                    let ckey: CoalesceKey =
+                        (sk, xk, spec.keep_iterates, spec.deadline_evals, class.index() as u8);
+                    if let Some(&resident) = self.inflight_by_key.get(&ckey) {
+                        if let Some(entry) = self.tasks.get_mut(&resident) {
+                            entry.followers.push(follower);
+                            self.coalesced += 1;
+                            return false;
+                        }
+                    }
+                    let id = self.admit(x0, spec, follower, Some(ckey), keys);
+                    // Only a still-resident task can absorb followers (an
+                    // instantly-finished one already cleaned its slot).
+                    if self.tasks.contains_key(&id) {
+                        self.inflight_by_key.insert(ckey, id);
+                    }
+                } else {
+                    self.admit(x0, spec, follower, None, keys);
+                }
             }
             Msg::BatchDone { outs } => {
                 self.in_flight -= 1;
@@ -954,6 +1149,69 @@ impl Dispatcher {
             Msg::StolenRows { rows, home } => self.absorb_stolen(rows, home),
         }
         false
+    }
+
+    /// Admit one submission as a new resident task: spine-cache lookup
+    /// (warm-start on a hit), task construction, start, row enqueue.
+    /// Returns the task id — the entry may already be gone if the task
+    /// finished during admission.
+    // lint: hot-path
+    // lint: request-path
+    fn admit(
+        &mut self,
+        x0: Vec<f32>,
+        spec: SamplerSpec,
+        follower: Follower,
+        coalesce_key: Option<CoalesceKey>,
+        keys: Option<(u64, u64)>,
+    ) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        // lint-allow(hot-path-alloc): Arc refcount bump, not a buffer copy
+        let mask = spec.cond.mask.clone();
+        let guidance = spec.cond.guidance;
+        let seed = spec.seed;
+        let class = spec.priority;
+        // (b) Coarse-spine cache: a repeat SRDS request warm-starts from
+        // the retained iteration-0 boundary states and skips the one
+        // serial sweep Parareal cannot parallelize.
+        let spine_key =
+            if self.spine_cache.cap > 0 && matches!(spec.kind, SamplerKind::Srds) {
+                keys
+            } else {
+                None
+            };
+        let warm = spine_key.and_then(|k| {
+            let hit = self.spine_cache.get(&k);
+            match hit.is_some() {
+                true => self.cache_hits += 1,
+                false => self.cache_misses += 1,
+            }
+            hit
+        });
+        let mut task = match warm {
+            Some(spine) => new_warm_task(&x0, &spec, &self.pool, self.epc, spine),
+            None => new_task(&x0, &spec, &self.pool, self.epc),
+        };
+        let rows = task.start();
+        self.tasks.insert(
+            id,
+            TaskEntry {
+                task,
+                // lint-allow(hot-path-alloc): one single-element followers vec per admitted request
+                followers: vec![follower],
+                mask,
+                guidance,
+                seed,
+                class,
+                inflight: 0,
+                coalesce_key,
+                spine_key,
+            },
+        );
+        self.enqueue_rows(id, rows);
+        self.maybe_finalize(id);
+        id
     }
 
     /// De-multiplex a batch's results to their owning tasks and drive
@@ -1045,6 +1303,7 @@ impl Dispatcher {
             return;
         }
         let Some(mut entry) = self.tasks.remove(&req) else { return };
+        self.forget_inflight_key(req, &entry);
         // Eagerly purge this request's still-queued speculative rows —
         // they will never run, and leaving them in place would inflate
         // queue_depth and the spread-cap math until the lazy flush
@@ -1063,23 +1322,56 @@ impl Dispatcher {
         // arrival via the origin map.
         let executing = entry.inflight.saturating_sub(queued) as u64;
         entry.task.charge_stray_rows(executing);
-        let out = entry.task.finalize();
-        // Per-class latency/deadline accounting, folded in before the
-        // publish so the reply's stats snapshot already includes this
-        // request's own completion.
-        let c = entry.class.index();
-        let lane = &mut self.per_class[c];
-        lane.completed += 1;
-        self.class_wall_ms_sum[c] += entry.t_submit.elapsed().as_secs_f64() * 1000.0;
-        lane.mean_wall_ms = self.class_wall_ms_sum[c] / lane.completed as f64;
-        if out.stats.deadline_hit {
-            lane.deadline_hits += 1;
+        // Spine harvest, before finalize consumes the task: refcount
+        // shares of the iteration-0 boundary states go into the cache
+        // (for a warm task these are the cached buffers themselves, so
+        // re-stocking is a pure recency refresh).
+        if let Some(key) = entry.spine_key {
+            if let Some(spine) = entry.task.take_spine() {
+                self.cache_evictions += self.spine_cache.insert(key, spine, entry.class);
+            }
         }
-        // Publish counters before the reply unblocks the caller, so a
+        let out = entry.task.finalize();
+        // Per-class latency/deadline accounting — one completion per
+        // follower, each with its *own* submit instant, so coalesced
+        // requests report honest per-request latency — folded in before
+        // the publish so the reply's stats snapshot already includes
+        // this request's own completion.
+        let c = entry.class.index();
+        for f in &entry.followers {
+            let lane = &mut self.per_class[c];
+            lane.completed += 1;
+            self.class_wall_ms_sum[c] += f.t_submit.elapsed().as_secs_f64() * 1000.0;
+            lane.mean_wall_ms = self.class_wall_ms_sum[c] / lane.completed as f64;
+            if out.stats.deadline_hit {
+                lane.deadline_hits += 1;
+            }
+        }
+        // Publish counters before the replies unblock callers, so a
         // stats() read right after completion is current.
         self.publish();
         let stats = self.snapshot_stats();
-        entry.reply.send(out, stats);
+        // Fan out: every follower gets a bit-identical output (the
+        // sample vector clones; the run happened once).
+        let mut followers = entry.followers;
+        let last = followers.pop();
+        for f in followers {
+            f.reply.send(out.clone(), stats);
+        }
+        if let Some(f) = last {
+            f.reply.send(out, stats);
+        }
+    }
+
+    /// Clear a departing task's slot in the in-flight dedupe table (if
+    /// it still points at this task — a stale slot may already have
+    /// been reclaimed by a later identical submission).
+    fn forget_inflight_key(&mut self, req: u64, entry: &TaskEntry) {
+        if let Some(ckey) = entry.coalesce_key {
+            if self.inflight_by_key.get(&ckey) == Some(&req) {
+                self.inflight_by_key.remove(&ckey);
+            }
+        }
     }
 
     /// Work-conserving, spread-first flush. See the module docs.
@@ -1269,37 +1561,48 @@ impl Dispatcher {
         cv.notify_all();
     }
 
-    /// Abort every resident task whose client liveness flag went false
-    /// (dead-connection purge from the serving layer's poll loop).
+    /// Detach every follower whose client liveness flag went false
+    /// (dead-connection purge from the serving layer's poll loop), and
+    /// abort a task only when its *last* follower detaches. This is the
+    /// coalesced-cancellation contract: one dying duplicate must never
+    /// kill a run other clients are still waiting on — the task keeps
+    /// computing for the survivors, and only the dead request's reply
+    /// is dropped (counted on its class's `aborted` lane).
     fn reap_cancelled(&mut self) {
         if self.tasks.is_empty() {
             return;
         }
-        let dead: Vec<u64> = self
-            .tasks
-            .iter()
-            .filter(|(_, e)| e.alive.as_ref().is_some_and(|a| !a.load(Ordering::Relaxed)))
-            .map(|(id, _)| *id)
-            .collect();
-        for req in dead {
+        let per_class = &mut self.per_class;
+        let mut orphaned: Vec<u64> = Vec::new();
+        for (id, e) in self.tasks.iter_mut() {
+            let before = e.followers.len();
+            e.followers
+                .retain(|f| !f.alive.as_ref().is_some_and(|a| !a.load(Ordering::Relaxed)));
+            per_class[e.class.index()].aborted += (before - e.followers.len()) as u64;
+            if e.followers.is_empty() {
+                orphaned.push(*id);
+            }
+        }
+        for req in orphaned {
             self.abort(req);
         }
     }
 
-    /// Drop one task without finalizing: purge its queued rows, count
-    /// the abort on its class lane, and drop the reply sink unsent —
-    /// the client is gone and nobody is listening. Rows already on
-    /// workers (local or stolen) finish and are discarded on arrival
-    /// via the origin map.
+    /// Drop one task without finalizing: purge its queued rows and
+    /// forget its dedupe slot — every follower is gone and nobody is
+    /// listening (abort accounting already ran per follower in
+    /// [`Dispatcher::reap_cancelled`]). Rows already on workers (local
+    /// or stolen) finish and are discarded on arrival via the origin
+    /// map.
     fn abort(&mut self, req: u64) {
         let Some(entry) = self.tasks.remove(&req) else { return };
+        self.forget_inflight_key(req, &entry);
         let origins = &mut self.origins;
         for b in self.batchers.values_mut() {
             for row in b.purge(|r| !matches!(origins.get(&r.tag), Some(o) if o.req == req)) {
                 origins.remove(&row.tag);
             }
         }
-        self.per_class[entry.class.index()].aborted += 1;
     }
 
     /// The full public stats view, built dispatcher-side (no lock on the
@@ -1319,6 +1622,10 @@ impl Dispatcher {
             pool_hits: ps.hits,
             pool_misses: ps.misses,
             pool_high_water: ps.high_water,
+            cache_hits: self.cache_hits,
+            cache_misses: self.cache_misses,
+            cache_evictions: self.cache_evictions,
+            coalesced: self.coalesced,
             per_class: self.per_class,
         }
     }
@@ -1333,6 +1640,10 @@ impl Dispatcher {
             c.steals = self.steals;
             c.queue_depth = queue_depth;
             c.active_tasks = self.tasks.len();
+            c.cache_hits = self.cache_hits;
+            c.cache_misses = self.cache_misses;
+            c.cache_evictions = self.cache_evictions;
+            c.coalesced = self.coalesced;
             c.per_class = self.per_class;
         }
         // The mesh/router view: updated after every handled event, read
@@ -1369,10 +1680,10 @@ mod tests {
                 factory.clone(),
                 EngineConfig {
                     workers,
-                    batch: BatchPolicy::default(),
                     shard_id: id,
                     mesh: Some(mesh.clone()),
                     steal: true,
+                    ..EngineConfig::default()
                 },
             )
         };
@@ -1880,10 +2191,10 @@ mod tests {
                 factory.clone(),
                 EngineConfig {
                     workers: 1,
-                    batch: BatchPolicy::default(),
                     shard_id: id,
                     mesh: Some(mesh.clone()),
                     steal: false,
+                    ..EngineConfig::default()
                 },
             )
         };

@@ -21,6 +21,11 @@
 //!   ([`crate::coordinator::QosClass`]), deadline-budgeted SRDS
 //!   requests degrade to their best completed Parareal iterate, and
 //!   per-class occupancy/latency lanes ride [`engine::EngineStats`].
+//!   Determinism makes work sharing legal: identical in-flight
+//!   submissions coalesce into one resident task (fanned-out
+//!   bit-identical replies), and a QoS-aware LRU of finished coarse
+//!   spines lets repeat SRDS requests warm-start past the serial
+//!   sweep (`cache_hits`/`coalesced` counters).
 //!   All request state rides in
 //!   pooled [`crate::buf::StateBuf`]s from one engine-wide slab pool — a
 //!   warm engine allocates no state buffers. The serving loop dispatches
@@ -48,4 +53,4 @@ pub use engine::{ClassLane, Engine, EngineConfig, EngineStats, LoadGauge, StatsH
 pub use router::{default_shards, Router, RouterConfig};
 pub use measured::{measured_pipelined_srds, NativeFactory, WorkerPool};
 pub use simclock::{schedule_tasks, simulate_paradigms, simulate_sequential, simulate_srds, SimReport, SimTask};
-pub use task::{new_task, Completion, SamplerTask, TaskRow};
+pub use task::{new_task, new_warm_task, Completion, SamplerTask, TaskRow};

@@ -35,14 +35,15 @@
 //! (`rust/tests/shard_determinism.rs` pins this).
 
 use crate::batching::BatchPolicy;
-use crate::coordinator::{QosClass, SampleOutput, SamplerSpec};
+use crate::coordinator::{state_hash, QosClass, SampleOutput, SamplerKind, SamplerSpec};
 use crate::exec::engine::{
     ClassLane, Engine, EngineConfig, EngineStats, StatsHandle, StealMesh,
 };
 use crate::solvers::{BackendFactory, Solver};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Fleet construction knobs.
 #[derive(Debug, Clone)]
@@ -57,6 +58,13 @@ pub struct RouterConfig {
     /// Enable cross-shard work stealing (on by default; the
     /// determinism tests run both ways).
     pub steal: bool,
+    /// Per-shard coarse-spine cache capacity (entries). 0 — the library
+    /// default — disables the cache; the serving layer turns it on.
+    /// When enabled, placement gains a spec-affinity hint: a repeat
+    /// SRDS request prefers the shard whose cache holds its spine.
+    pub spine_cache_cap: usize,
+    /// Per-shard in-flight request coalescing (on by default).
+    pub coalesce: bool,
 }
 
 impl Default for RouterConfig {
@@ -66,6 +74,8 @@ impl Default for RouterConfig {
             workers: 4,
             batch: BatchPolicy::default(),
             steal: true,
+            spine_cache_cap: 0,
+            coalesce: true,
         }
     }
 }
@@ -112,6 +122,10 @@ pub fn aggregate<I: IntoIterator<Item = EngineStats>>(shards: I) -> EngineStats 
         pool_hits: 0,
         pool_misses: 0,
         pool_high_water: 0,
+        cache_hits: 0,
+        cache_misses: 0,
+        cache_evictions: 0,
+        coalesced: 0,
         per_class: [ClassLane::default(); 3],
     };
     let mut wall_sums = [0.0f64; 3];
@@ -128,6 +142,10 @@ pub fn aggregate<I: IntoIterator<Item = EngineStats>>(shards: I) -> EngineStats 
         acc.pool_hits += s.pool_hits;
         acc.pool_misses += s.pool_misses;
         acc.pool_high_water += s.pool_high_water;
+        acc.cache_hits += s.cache_hits;
+        acc.cache_misses += s.cache_misses;
+        acc.cache_evictions += s.cache_evictions;
+        acc.coalesced += s.coalesced;
         for ((lane, w), sl) in acc.per_class.iter_mut().zip(wall_sums.iter_mut()).zip(s.per_class.iter()) {
             lane.submitted += sl.submitted;
             lane.completed += sl.completed;
@@ -153,6 +171,18 @@ pub struct Router {
     view: Arc<FleetView>,
     /// Tie-break rotation for placement, so an idle fleet stripes.
     rr: AtomicUsize,
+    /// Per-shard spine-cache capacity (0 = caches off, no affinity).
+    spine_cache_cap: usize,
+    /// Spec-affinity placement hints: shared-work identity → the shard
+    /// whose spine cache (probably) holds that spine. Per-shard caches
+    /// make a spine hit shard-local, so repeats must land where the
+    /// first run did or the retained spine is wasted. Advisory only —
+    /// a stale hint just means a cache miss on a fresh shard, never a
+    /// wrong answer. Bounded at fleet cache capacity by wholesale
+    /// clear (entries outliving the LRU they point into are already
+    /// stale). This is the router's only interior lock; it never nests
+    /// inside or around another.
+    affinity: Mutex<HashMap<(u64, u64), usize>>,
 }
 
 impl Router {
@@ -173,12 +203,21 @@ impl Router {
                         shard_id: id,
                         mesh: Some(mesh.clone()),
                         steal: cfg.steal,
+                        spine_cache_cap: cfg.spine_cache_cap,
+                        coalesce: cfg.coalesce,
                     },
                 )
             })
             .collect();
         let view = Arc::new(FleetView { handles: engines.iter().map(|e| e.stats_handle()).collect() });
-        Router { engines, mesh, view, rr: AtomicUsize::new(0) }
+        Router {
+            engines,
+            mesh,
+            view,
+            rr: AtomicUsize::new(0),
+            spine_cache_cap: cfg.spine_cache_cap,
+            affinity: Mutex::new(HashMap::new()),
+        }
     }
 
     pub fn shards(&self) -> usize {
@@ -234,6 +273,36 @@ impl Router {
         best
     }
 
+    /// [`Router::place`] with the spec-affinity hint layered on top: a
+    /// repeat SRDS request prefers the shard that (probably) retained
+    /// its coarse spine — a warm start beats an emptier queue, because
+    /// it deletes the one serial sweep instead of merely waiting less.
+    /// First-seen specs fall through to the load score and record the
+    /// choice. No-op unless the spine cache is enabled.
+    // lint: request-path
+    fn place_affine(&self, x0: &[f32], spec: &SamplerSpec) -> usize {
+        if self.spine_cache_cap == 0
+            || self.engines.len() == 1
+            || !matches!(spec.kind, SamplerKind::Srds)
+        {
+            return self.place(spec.priority);
+        }
+        let key = (spec.cache_key(), state_hash(x0));
+        let Ok(mut hints) = self.affinity.lock() else { return self.place(spec.priority) };
+        if let Some(&shard) = hints.get(&key) {
+            return shard;
+        }
+        let shard = self.place(spec.priority);
+        // Bound the hint table at the fleet's total cache capacity;
+        // beyond that, hints point at entries the per-shard LRUs have
+        // started evicting anyway, so a wholesale reset is honest.
+        if hints.len() >= self.engines.len() * self.spine_cache_cap {
+            hints.clear();
+        }
+        hints.insert(key, shard);
+        shard
+    }
+
     /// Place and submit; returns the chosen shard. `done` receives the
     /// **fleet-aggregated** [`EngineStats`] (what the wire `engine`
     /// snapshot shows), not the executing shard's local view.
@@ -248,7 +317,7 @@ impl Router {
     where
         F: FnOnce(SampleOutput, EngineStats) + Send + 'static,
     {
-        let shard = self.place(spec.priority);
+        let shard = self.place_affine(&x0, &spec);
         self.submit_to_with_alive(shard, x0, spec, alive, done);
         shard
     }
@@ -281,7 +350,7 @@ impl Router {
 
     /// Run one request to completion on the placed shard (blocking).
     pub fn run(&self, x0: &[f32], spec: &SamplerSpec) -> SampleOutput {
-        let shard = self.place(spec.priority);
+        let shard = self.place_affine(x0, spec);
         self.submit_to(shard, x0.to_vec(), spec.clone())
             .recv()
             .expect("engine dropped mid-request")
@@ -321,7 +390,7 @@ mod tests {
     fn router(shards: usize, workers: usize, steal: bool) -> Router {
         Router::new(
             factory(),
-            RouterConfig { shards, workers, batch: BatchPolicy::default(), steal },
+            RouterConfig { shards, workers, steal, ..RouterConfig::default() },
         )
     }
 
@@ -415,6 +484,10 @@ mod tests {
             pool_hits: 100,
             pool_misses: 10,
             pool_high_water: 50,
+            cache_hits: 4,
+            cache_misses: 6,
+            cache_evictions: 1,
+            coalesced: 3,
             per_class: [ClassLane::default(); 3],
         };
         let mut b = a;
@@ -442,6 +515,10 @@ mod tests {
         assert_eq!(agg.shards, 2);
         assert_eq!(agg.steals, 6);
         assert_eq!(agg.workers, 8);
+        assert_eq!(agg.cache_hits, 8);
+        assert_eq!(agg.cache_misses, 12);
+        assert_eq!(agg.cache_evictions, 2);
+        assert_eq!(agg.coalesced, 6);
         assert!((agg.mean_occupancy - 2.5).abs() < 1e-12);
         let lane = &agg.per_class[0];
         assert_eq!(lane.submitted, 11);
@@ -451,6 +528,54 @@ mod tests {
         // (2×10 + 8×40) / 10 = 34: completed-weighted, not averaged.
         assert!((lane.mean_wall_ms - 34.0).abs() < 1e-12, "{}", lane.mean_wall_ms);
         assert_eq!(lane.active(), 0);
+    }
+
+    #[test]
+    fn repeat_requests_prefer_the_shard_holding_their_spine() {
+        // With the spine cache on, a repeat SRDS request must follow
+        // its first run's shard (that cache holds the spine), hit the
+        // cache there, and still answer bit-identically.
+        let r = Router::new(
+            factory(),
+            RouterConfig { shards: 2, workers: 1, spine_cache_cap: 8, ..RouterConfig::default() },
+        );
+        let x0 = prior_sample(64, 800);
+        let spec = SamplerSpec::srds(25).with_tol(1e-4).with_seed(800);
+        let (tx, rx) = channel();
+        let send_to = |tx: std::sync::mpsc::Sender<SampleOutput>| {
+            move |out: SampleOutput, _agg: EngineStats| {
+                let _ = tx.send(out);
+            }
+        };
+        let first = r.submit_with_alive(
+            x0.clone(),
+            spec.clone(),
+            Arc::new(AtomicBool::new(true)),
+            send_to(tx.clone()),
+        );
+        let fresh = rx.recv().expect("fresh reply");
+        let second = r.submit_with_alive(
+            x0.clone(),
+            spec.clone(),
+            Arc::new(AtomicBool::new(true)),
+            send_to(tx),
+        );
+        assert_eq!(second, first, "the repeat must land where the spine lives");
+        let warm = rx.recv().expect("warm reply");
+        assert_eq!(warm.sample, fresh.sample, "warm start changed the answer");
+        assert!(
+            warm.stats.eff_serial_evals < fresh.stats.eff_serial_evals,
+            "the cached spine must shorten the serial path ({} vs {})",
+            warm.stats.eff_serial_evals,
+            fresh.stats.eff_serial_evals
+        );
+        let agg = r.stats();
+        assert_eq!(agg.cache_hits, 1, "exactly the repeat hits");
+        assert_eq!(agg.cache_misses, 1, "exactly the first run misses");
+        // A different spec must not be hijacked by the hint table.
+        let other = SamplerSpec::srds(34).with_tol(1e-4).with_seed(801);
+        let out = r.run(&prior_sample(64, 801), &other);
+        assert_eq!(out.sample, other.run(&native_backend(), &prior_sample(64, 801)).sample);
     }
 
     #[test]

@@ -95,6 +95,18 @@ pub trait SamplerTask: Send {
     /// to this request even though the results will be discarded.
     fn charge_stray_rows(&mut self, _rows: u64) {}
 
+    /// Harvest the reusable serial prefix of a finished task: for SRDS,
+    /// the iteration-0 coarse boundary states `G(x_0), …, G(x_{M-1})` —
+    /// refcount shares of the grid cells, never copies. The engine calls
+    /// this right before [`SamplerTask::finalize`] to stock its
+    /// coarse-spine cache; a later identical request hands the vector to
+    /// [`new_warm_task`] and skips the one serial sweep Parareal cannot
+    /// parallelize. Kinds with no cacheable spine return `None` (the
+    /// default).
+    fn take_spine(&mut self) -> Option<Vec<StateBuf>> {
+        None
+    }
+
     /// Consume the task into its output. Only called after
     /// [`SamplerTask::finished`] returns true.
     fn finalize(self: Box<Self>) -> SampleOutput;
@@ -114,6 +126,34 @@ pub fn new_task(x0: &[f32], spec: &SamplerSpec, pool: &BufPool, epc: u64) -> Box
         SamplerKind::Parataa { .. } => {
             Box::new(ParataaTask::new(x0, spec.clone(), pool.clone(), epc))
         }
+    }
+}
+
+/// [`new_task`], warm-started from a cached coarse spine (the vector a
+/// previous identical run returned from [`SamplerTask::take_spine`]).
+/// The spine's `StateBuf`s are shared by refcount into the new task's
+/// iteration-0 grid row, so the task emits **zero** coarse-spine rows
+/// and opens the full iteration-1 wavefront immediately; its
+/// `eff_serial_evals` drops by the skipped sweep. Bit-identity with a
+/// fresh run holds because the cached states are exactly the values the
+/// fresh spine computes. Falls back to a cold [`new_task`] when the
+/// spine does not fit the spec (wrong kind, wrong block count) — the
+/// caller's cache key should make that unreachable, but a stale entry
+/// must degrade to a correct fresh run, never a wrong warm one.
+pub fn new_warm_task(
+    x0: &[f32],
+    spec: &SamplerSpec,
+    pool: &BufPool,
+    epc: u64,
+    spine: Vec<StateBuf>,
+) -> Box<dyn SamplerTask> {
+    if matches!(spec.kind, SamplerKind::Srds)
+        && spine.len() == spec.partition().num_blocks()
+        && spine.iter().all(|b| b.len() == x0.len())
+    {
+        Box::new(SrdsTask::new(x0, spec.clone(), pool.clone(), epc).with_spine(spine))
+    } else {
+        new_task(x0, spec, pool, epc)
     }
 }
 
@@ -242,7 +282,11 @@ struct FineChain {
     next: usize,
 }
 
-/// Row keys pack the grid cell: `(p, i, is_fine)`.
+/// Row keys pack the grid cell: `(p, i, is_fine)` as
+/// `(p << 33) | (i << 1) | is_fine`. The packing is a stable contract —
+/// `tests/cache_identity.rs` decodes emitted keys to count coarse-spine
+/// rows (`p == 0`, `is_fine == false`) and pin that warm starts emit
+/// none.
 fn srds_key(p: usize, i: usize, fine: bool) -> u64 {
     ((p as u64) << 33) | ((i as u64) << 1) | fine as u64
 }
@@ -271,6 +315,10 @@ struct SrdsTask {
     g: Vec<Vec<Option<StateBuf>>>,
     y: Vec<Vec<Option<StateBuf>>>,
     submitted: Vec<Vec<[bool; 2]>>,
+    /// Iteration-0 grid row was prefilled from a cached spine: `start`
+    /// emits no `p = 0` coarse rows and `finalize` drops the skipped
+    /// sweep from the serial-work accounting.
+    warm: bool,
     fines: HashMap<(usize, usize), FineChain>,
     per_iter: Vec<IterStat>,
     stop_at_iter: Option<usize>,
@@ -301,6 +349,7 @@ impl SrdsTask {
             g: vec![vec![None; m + 1]; max_iters + 1],
             y: vec![vec![None; m + 1]; max_iters + 1],
             submitted: vec![vec![[false; 2]; m + 1]; max_iters + 1],
+            warm: false,
             fines: HashMap::new(),
             per_iter: Vec::new(),
             stop_at_iter: None,
@@ -310,6 +359,22 @@ impl SrdsTask {
             meter: RowMeter::default(),
             t0: Instant::now(),
         }
+    }
+
+    /// Prefill the iteration-0 grid row from a cached coarse spine:
+    /// `g[0][i]` (and therefore `x[0][i]` — the init boundary IS the
+    /// coarse result) for every block, each a refcount share of the
+    /// cached buffer. The cells are marked submitted so no `p = 0`
+    /// coarse row is ever emitted for them. Caller guarantees
+    /// `spine.len() == m` (checked in [`new_warm_task`]).
+    fn with_spine(mut self, spine: Vec<StateBuf>) -> SrdsTask {
+        debug_assert_eq!(spine.len(), self.m);
+        for (j, s) in spine.into_iter().enumerate() {
+            self.submitted[0][j + 1][0] = true;
+            self.g[0][j + 1] = Some(s);
+        }
+        self.warm = true;
+        self
     }
 
     /// Anytime refinement (the QoS deadline): once the request has spent
@@ -477,14 +542,40 @@ impl SamplerTask for SrdsTask {
             self.x[p][0] = Some(x0.clone());
         }
         let mut emits = Vec::new();
-        for p in 0..=self.max_iters {
-            self.submitted[p][1][0] = true;
-            let row = self.emit_coarse(p, 1, x0.clone());
-            emits.push(row);
-            if p >= 1 {
+        if self.warm {
+            // Warm start: iteration 0 is already fully materialized from
+            // the cached spine (`with_spine` filled `g[0][*]`), so the
+            // init boundaries are final *now* — share them into `x[0][*]`
+            // and emit no `p = 0` row at all. What a fresh run unlocks
+            // one spine step at a time opens here all at once: the whole
+            // iteration-1 fine wavefront plus each refinement's head.
+            for i in 1..=self.m {
+                self.x[0][i] = self.g[0][i].clone();
+            }
+            for p in 1..=self.max_iters {
+                self.submitted[p][1][0] = true;
+                let row = self.emit_coarse(p, 1, x0.clone());
+                emits.push(row);
                 self.submitted[p][1][1] = true;
                 let row = self.emit_fine_start(p, 1, x0.clone());
                 emits.push(row);
+            }
+            for i in 2..=self.m {
+                self.submitted[1][i][1] = true;
+                let x = self.x[0][i - 1].clone().expect("warm spine boundary");
+                let row = self.emit_fine_start(1, i, x);
+                emits.push(row);
+            }
+        } else {
+            for p in 0..=self.max_iters {
+                self.submitted[p][1][0] = true;
+                let row = self.emit_coarse(p, 1, x0.clone());
+                emits.push(row);
+                if p >= 1 {
+                    self.submitted[p][1][1] = true;
+                    let row = self.emit_fine_start(p, 1, x0.clone());
+                    emits.push(row);
+                }
             }
         }
         emits
@@ -509,6 +600,15 @@ impl SamplerTask for SrdsTask {
 
     fn charge_stray_rows(&mut self, rows: u64) {
         self.total_evals += rows * self.epc;
+    }
+
+    /// The iteration-0 boundary states, shared by refcount — for a warm
+    /// task these are the very buffers the cache handed in, so
+    /// re-stocking the cache refreshes recency without duplicating a
+    /// single slab. `None` if the spine never completed (a task that
+    /// finished without filling row 0 has nothing reusable).
+    fn take_spine(&mut self) -> Option<Vec<StateBuf>> {
+        (1..=self.m).map(|i| self.g[0][i].clone()).collect()
     }
 
     fn finalize(self: Box<Self>) -> SampleOutput {
@@ -553,9 +653,18 @@ impl SamplerTask for SrdsTask {
         let b_max = (0..self.m).map(|j| self.part.block_len(j)).max().unwrap_or(0) as u64;
         let iters = final_iter as u64;
         let epc = self.epc;
-        let eff_serial = (m + iters * (b_max + m)) * epc;
-        let eff_pipelined =
-            if final_iter == 0 { m * epc } else { (m * iters + b).saturating_sub(iters) * epc };
+        // A warm start consumed a cached spine instead of running the
+        // init sweep, so the leading M drops out of the serial-work
+        // account (and a converged-at-init warm run did no evals at
+        // all). The per-iteration terms are identical: refinement work
+        // does not change, only the serial prefix is skipped.
+        let spine = if self.warm { 0 } else { m };
+        let eff_serial = (spine + iters * (b_max + m)) * epc;
+        let eff_pipelined = if final_iter == 0 {
+            spine * epc
+        } else {
+            (m * iters + b).saturating_sub(iters) * epc
+        };
         let ps = self.pool.stats();
         let stats = RunStats {
             iters: final_iter,
@@ -1252,5 +1361,85 @@ mod tests {
         // SRDS seeds the coarse chain head plus every iteration's first
         // cells: (max_iters + 1) coarse rows + max_iters fine chains.
         assert_eq!(new_task(&x0, &spec, &pool, 1).start().len(), 11);
+    }
+
+    #[test]
+    fn warm_spine_task_matches_fresh_bitwise_and_skips_the_spine() {
+        // The spine-cache contract at its root: a task warm-started from
+        // a previous run's harvested spine executes zero iteration-0
+        // coarse rows, drops the skipped sweep from eff_serial_evals,
+        // and still produces the bit-identical sample.
+        let be = backend();
+        let x0 = prior_sample(64, 21);
+        let spec = SamplerSpec::srds(25).with_tol(1e-4).with_seed(21);
+        let pool = BufPool::new();
+        let epc = be.evals_per_step() as u64;
+
+        // `drive`, plus a count of executed coarse-spine rows (decoding
+        // the stable `srds_key` packing) and a spine harvest at the end.
+        let run = |mut task: Box<dyn SamplerTask>| {
+            let mut rows = task.start();
+            let mut spine_rows = 0u64;
+            while !rows.is_empty() {
+                let done: Vec<Completion> = rows
+                    .drain(..)
+                    .map(|r| {
+                        if (r.key >> 33) == 0 && r.key & 1 == 0 {
+                            spine_rows += 1;
+                        }
+                        let mut out = pool.get(r.x.len());
+                        be.step_into(
+                            &StepRequest {
+                                x: &r.x,
+                                s_from: &[r.s_from],
+                                s_to: &[r.s_to],
+                                mask: spec.cond.mask_slice(),
+                                guidance: spec.cond.guidance,
+                                seeds: &[spec.seed],
+                            },
+                            out.as_mut_slice(),
+                        );
+                        Completion { key: r.key, out, batch_rows: 1 }
+                    })
+                    .collect();
+                rows = task.poll(done);
+            }
+            assert!(task.finished());
+            let spine = task.take_spine();
+            (task.finalize(), spine, spine_rows)
+        };
+
+        let m = spec.partition().num_blocks() as u64;
+        let (fresh, spine, fresh_spine_rows) = run(new_task(&x0, &spec, &pool, epc));
+        assert_eq!(fresh_spine_rows, m, "a fresh run executes the full serial spine");
+        let spine = spine.expect("a finished SRDS task yields its spine");
+        assert_eq!(spine.len(), m as usize);
+
+        let (warm, rewarm, warm_spine_rows) =
+            run(new_warm_task(&x0, &spec, &pool, epc, spine));
+        assert_eq!(warm_spine_rows, 0, "a warm run executes zero spine rows");
+        assert_eq!(warm.sample, fresh.sample, "warm vs fresh bit-identity");
+        assert_eq!(warm.stats.iters, fresh.stats.iters);
+        assert_eq!(warm.stats.converged, fresh.stats.converged);
+        assert_eq!(
+            warm.stats.eff_serial_evals + m * epc,
+            fresh.stats.eff_serial_evals,
+            "warm accounting drops exactly the skipped sweep"
+        );
+        assert!(
+            warm.stats.total_evals < fresh.stats.total_evals,
+            "warm runs do strictly less engine work"
+        );
+        // Warm tasks re-yield the spine, so a cache re-stock is a pure
+        // recency refresh of the same shared buffers.
+        assert!(rewarm.is_some());
+
+        // A mismatched spine (wrong kind / wrong block count) degrades
+        // to a correct cold start, never a wrong warm one.
+        let seq = SamplerSpec::sequential(25).with_seed(21);
+        let (cold, no_spine, _) =
+            run(new_warm_task(&x0, &seq, &pool, epc, vec![pool.take(&x0)]));
+        assert!(no_spine.is_none(), "sequential tasks have no spine");
+        assert_eq!(cold.sample, drive(&be, &x0, &seq).sample);
     }
 }

@@ -22,7 +22,14 @@
 //!   that truncate SRDS to its best completed Parareal iterate under
 //!   load, and immediate structured `overloaded` shedding at the
 //!   admission cap — per-class lanes observable in
-//!   [`exec::EngineStats`] and on the wire). All
+//!   [`exec::EngineStats`] and on the wire). Deterministic runs make
+//!   cross-request *work sharing* legal: identical in-flight
+//!   submissions coalesce into one resident task with fanned-out
+//!   bit-identical replies, and a per-shard coarse-spine cache lets a
+//!   repeat SRDS request warm-start past the serial coarse sweep
+//!   (keyed by [`coordinator::SamplerSpec::cache_key`] +
+//!   [`coordinator::state_hash`]; `cache_hits`/`coalesced` counters on
+//!   the wire; see DESIGN.md "Shared work across requests"). All
 //!   state on the hot path lives in the zero-copy buffer layer ([`buf`]:
 //!   the pooled refcounted `StateBuf` slab + the reusable `BatchStage`
 //!   staging buffer), and solver steps write in place via the

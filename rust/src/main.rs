@@ -12,6 +12,7 @@
 //!             [--batch-wait 2] [--buckets 32,16,8,4,2,1]
 //!             [--max-inflight 64] [--class-weights 8,3,1]
 //!             [--default-deadline EVALS]
+//!             [--spine-cache-cap 64] [--no-coalesce]
 //! ```
 //!
 //! `serve` runs every request on a sharded multi-tenant engine fleet
@@ -31,6 +32,12 @@
 //! applies an anytime eval budget to requests that don't carry their own
 //! `"deadline"` field (SRDS then finalizes from its best completed
 //! iterate once the budget is spent).
+//! `--spine-cache-cap` sizes each shard's coarse-spine cache (entries;
+//! 0 disables): repeat SRDS requests warm-start from the retained
+//! iteration-0 boundary states and skip the serial coarse sweep,
+//! bit-identically. `--no-coalesce` turns off in-flight coalescing of
+//! identical concurrent requests (on by default; coalesced duplicates
+//! share one run and fan out bit-identical responses).
 //!
 //! `--sampler` accepts any name from `coordinator::api::registry()`;
 //! `srds info` lists them. (Argument parsing is in-tree: the offline
@@ -252,6 +259,13 @@ fn cmd_serve(flags: HashMap<String, String>) -> srds::Result<()> {
         }
         None => srds::server::DEFAULT_MAX_INFLIGHT,
     };
+    // Shared-work layer: spine-cache capacity (0 = off) and the
+    // coalescing kill switch (for A/B runs; see benches/serving.rs).
+    let spine_cache_cap: usize = match flags.get("spine-cache-cap") {
+        Some(v) => v.parse()?,
+        None => srds::server::DEFAULT_SPINE_CACHE_CAP,
+    };
+    let coalesce = !flags.contains_key("no-coalesce");
     let factory: Arc<dyn BackendFactory> = match flags.get("backend").map(|s| s.as_str()) {
         Some("pjrt") => Arc::new(PjrtFactory::new(srds::artifacts_dir(), &model, solver)?),
         _ => Arc::new(NativeFactory::new(native_model(&model), solver)),
@@ -265,6 +279,8 @@ fn cmd_serve(flags: HashMap<String, String>) -> srds::Result<()> {
         batch,
         max_inflight,
         default_deadline,
+        spine_cache_cap,
+        coalesce,
     })
 }
 

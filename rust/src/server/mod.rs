@@ -346,6 +346,12 @@ fn success_response(
         pairs.push(("shards", Value::Num(st.shards as f64)));
         pairs.push(("steals", Value::Num(st.steals as f64)));
         pairs.push(("pool_high_water", Value::Num(st.pool_high_water as f64)));
+        // Shared-work layer: coarse-spine cache traffic and in-flight
+        // coalesced duplicates, fleet-aggregated.
+        pairs.push(("cache_hits", Value::Num(st.cache_hits as f64)));
+        pairs.push(("cache_misses", Value::Num(st.cache_misses as f64)));
+        pairs.push(("cache_evictions", Value::Num(st.cache_evictions as f64)));
+        pairs.push(("coalesced", Value::Num(st.coalesced as f64)));
         // Per-QoS-class lanes (snapshot at completion): the operator's
         // starvation dashboard, one object per class. (stats_response
         // duplicates this block: the wire-schema lint reads the literal
@@ -420,6 +426,10 @@ pub fn stats_response(id: u64, st: &EngineStats) -> Value {
         ("pool_hits", Value::Num(st.pool_hits as f64)),
         ("pool_misses", Value::Num(st.pool_misses as f64)),
         ("pool_high_water", Value::Num(st.pool_high_water as f64)),
+        ("cache_hits", Value::Num(st.cache_hits as f64)),
+        ("cache_misses", Value::Num(st.cache_misses as f64)),
+        ("cache_evictions", Value::Num(st.cache_evictions as f64)),
+        ("coalesced", Value::Num(st.coalesced as f64)),
         // Same lane shape as success_response's `classes` (that copy is
         // the lint-scanned one; see the note there).
         (
@@ -702,6 +712,12 @@ pub fn handle_line_engine(engine: &Engine, model_name: &str, line: &str) -> Stri
 /// Default per-connection admission cap (see [`ServeConfig::max_inflight`]).
 pub const DEFAULT_MAX_INFLIGHT: usize = 64;
 
+/// Default per-shard coarse-spine cache capacity for the serving layer
+/// (see [`ServeConfig::spine_cache_cap`]). The library-level
+/// [`crate::exec::EngineConfig`] default is 0 (off); a server opts in
+/// because repeat specs are the serving workload's common case.
+pub const DEFAULT_SPINE_CACHE_CAP: usize = 64;
+
 /// Server configuration.
 pub struct ServeConfig {
     pub addr: String,
@@ -734,6 +750,16 @@ pub struct ServeConfig {
     /// `None` → no budget: requests refine to convergence/cap. Clients
     /// opt out per request with an explicit `"deadline": 0`.
     pub default_deadline: Option<u64>,
+    /// Per-shard coarse-spine cache capacity (`--spine-cache-cap` on
+    /// the CLI, [`DEFAULT_SPINE_CACHE_CAP`] by default, 0 disables): a
+    /// repeat SRDS request warm-starts from the retained iteration-0
+    /// boundary states and skips the serial coarse sweep entirely,
+    /// bit-identically.
+    pub spine_cache_cap: usize,
+    /// In-flight coalescing (`--no-coalesce` turns it off): identical
+    /// concurrent submissions share one resident task and fan out
+    /// bit-identical responses.
+    pub coalesce: bool,
 }
 
 /// Run the blocking accept loop on a fresh listener bound to `cfg.addr`.
@@ -1008,11 +1034,14 @@ pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
             workers: cfg.workers,
             batch: cfg.batch.clone(),
             steal: true,
+            spine_cache_cap: cfg.spine_cache_cap,
+            coalesce: cfg.coalesce,
         },
     ));
     eprintln!(
         "srds-server listening on {} (model={}, shards={}, workers/shard={}, buckets={:?}, \
-         class-weights={:?}, max-inflight/conn={}, default-deadline={:?}, samplers={})",
+         class-weights={:?}, max-inflight/conn={}, default-deadline={:?}, spine-cache-cap={}, \
+         coalesce={}, samplers={})",
         listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| cfg.addr.clone()),
         cfg.model_name,
         shards,
@@ -1021,6 +1050,8 @@ pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
         cfg.batch.class_weights,
         cfg.max_inflight,
         cfg.default_deadline,
+        cfg.spine_cache_cap,
+        cfg.coalesce,
         registry().list().join("/")
     );
     listener.set_nonblocking(true)?;
@@ -1245,7 +1276,12 @@ mod tests {
             Arc::new(GmmEps::new(make_gmm("toy2d")));
         Router::new(
             Arc::new(NativeFactory::new(model, Solver::Ddim)),
-            RouterConfig { shards, workers: 1, batch: BatchPolicy::default(), steal: true },
+            RouterConfig {
+                shards,
+                workers: 1,
+                spine_cache_cap: DEFAULT_SPINE_CACHE_CAP,
+                ..RouterConfig::default()
+            },
         )
     }
 

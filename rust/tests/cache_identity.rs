@@ -1,0 +1,191 @@
+//! Shared-work layer contracts (`exec::engine`'s coarse-spine cache +
+//! in-flight coalescing):
+//!
+//! * **Bit-identity is the hard line.** A cached-spine warm start and a
+//!   coalesced fan-out reply must both equal the fresh solo run on the
+//!   raw f32 sample (`assert_eq!`, no tolerance) — the cache and the
+//!   dedupe table are pure work-sharing, never an approximation.
+//! * **The warm start actually skips work**: a repeat request's
+//!   `eff_serial_evals` drops by the skipped coarse sweep (the zero
+//!   spine-row pin lives next to the task machine, in
+//!   `exec::task`'s `warm_spine_task_matches_fresh_bitwise_and_skips_the_spine`).
+//! * **Cancellation detaches followers, not tasks**: a coalesced
+//!   duplicate whose client dies must not kill the run its siblings
+//!   still await.
+//! * **Retention is bounded**: the cache holds at most `cap` spines
+//!   (QoS-aware LRU), so a parade of distinct specs cannot grow the
+//!   live buffer set — the `pool_soak.rs` invariant extended to a
+//!   cache-enabled engine.
+
+use srds::coordinator::{prior_sample, QosClass, SamplerSpec};
+use srds::data::make_gmm;
+use srds::exec::{Engine, EngineConfig, NativeFactory};
+use srds::model::{EpsModel, GmmEps};
+use srds::solvers::{NativeBackend, Solver};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+fn engine(workers: usize, spine_cache_cap: usize, coalesce: bool) -> Engine {
+    let model: Arc<dyn EpsModel> = Arc::new(GmmEps::new(make_gmm("church")));
+    Engine::new(
+        Arc::new(NativeFactory::new(model, Solver::Ddim)),
+        EngineConfig { workers, spine_cache_cap, coalesce, ..EngineConfig::default() },
+    )
+}
+
+fn vanilla(x0: &[f32], spec: &SamplerSpec) -> Vec<f32> {
+    let model: Arc<dyn EpsModel> = Arc::new(GmmEps::new(make_gmm("church")));
+    spec.run(&NativeBackend::new(model, Solver::Ddim), x0).sample
+}
+
+#[test]
+fn cached_repeat_is_bitwise_identical_and_cheaper() {
+    let eng = engine(2, 8, false);
+    let x0 = prior_sample(64, 1);
+    let spec = SamplerSpec::srds(36).with_tol(1e-4).with_seed(1);
+
+    let fresh = eng.run(&x0, &spec);
+    assert_eq!(fresh.sample, vanilla(&x0, &spec), "fresh run vs solo vanilla");
+
+    let warm = eng.run(&x0, &spec);
+    assert_eq!(warm.sample, fresh.sample, "warm start changed the answer");
+    assert_eq!(warm.stats.iters, fresh.stats.iters, "same refinement trajectory");
+    assert!(
+        warm.stats.eff_serial_evals < fresh.stats.eff_serial_evals,
+        "the cached spine must shorten the serial path ({} vs {})",
+        warm.stats.eff_serial_evals,
+        fresh.stats.eff_serial_evals
+    );
+    assert!(
+        warm.stats.total_evals < fresh.stats.total_evals,
+        "a warm start must not redo the coarse sweep's evals"
+    );
+
+    let st = eng.stats();
+    assert_eq!(st.cache_misses, 1, "only the first run misses");
+    assert_eq!(st.cache_hits, 1, "the repeat hits");
+
+    // A different seed is a different shared-work identity: fresh run,
+    // fresh miss, still exact.
+    let x1 = prior_sample(64, 2);
+    let other = spec.clone().with_seed(2);
+    let out = eng.run(&x1, &other);
+    assert_eq!(out.sample, vanilla(&x1, &other));
+    assert_eq!(eng.stats().cache_misses, 2);
+}
+
+#[test]
+fn coalesced_duplicates_fan_out_one_bitwise_run() {
+    // Four identical concurrent submissions on a coalescing engine
+    // (cache off, to isolate the dedupe table): one resident run, four
+    // bit-identical replies, three coalesced.
+    let eng = engine(1, 0, true);
+    let x0 = prior_sample(64, 3);
+    // tol 0 + a fixed iteration count keeps the task resident across
+    // many worker round trips, so the duplicates provably arrive while
+    // it is in flight.
+    let spec = SamplerSpec::srds(100).with_tol(0.0).with_max_iters(8).with_seed(3);
+    let want = vanilla(&x0, &spec);
+
+    let handles: Vec<_> = (0..4).map(|_| eng.submit(x0.clone(), spec.clone())).collect();
+    for (i, rx) in handles.into_iter().enumerate() {
+        let got = rx.recv().expect("engine reply");
+        assert_eq!(got.sample, want, "follower {i} diverged from the solo run");
+    }
+
+    let st = eng.stats();
+    assert_eq!(st.coalesced, 3, "three duplicates rode the resident task");
+    let lane = st.class(QosClass::Standard);
+    assert_eq!(lane.submitted, 4, "every duplicate counts as a request");
+    assert_eq!(lane.completed, 4, "every duplicate gets its own completion");
+    assert_eq!(lane.active(), 0);
+    assert_eq!(st.active_tasks, 0);
+}
+
+#[test]
+fn coalesced_follower_survives_a_dying_sibling() {
+    // The coalesced-cancellation contract: two requests share one task;
+    // the first client dies mid-run. The survivor must still receive
+    // the full bit-identical output, and only the dead request is
+    // counted aborted.
+    let eng = engine(1, 0, true);
+    let x0 = prior_sample(64, 4);
+    let spec = SamplerSpec::srds(100).with_tol(0.0).with_max_iters(8).with_seed(4);
+
+    let doomed_alive = Arc::new(AtomicBool::new(true));
+    let (doomed_tx, doomed_rx) = channel::<Vec<f32>>();
+    eng.submit_with_alive(x0.clone(), spec.clone(), doomed_alive.clone(), move |out, _| {
+        let _ = doomed_tx.send(out.sample);
+    });
+    let (tx, rx) = channel::<Vec<f32>>();
+    eng.submit_with_alive(x0.clone(), spec.clone(), Arc::new(AtomicBool::new(true)), move |out, _| {
+        let _ = tx.send(out.sample);
+    });
+    // Kill the first client while the shared task runs; the dispatcher
+    // reaps on its next event sweep (the task's own row completions
+    // keep the loop turning — no co-tenant churn needed).
+    doomed_alive.store(false, Ordering::Relaxed);
+
+    let survivor = rx.recv().expect("surviving follower must still be answered");
+    assert_eq!(survivor, vanilla(&x0, &spec), "survivor's output is the solo run's");
+    assert!(doomed_rx.try_recv().is_err(), "a dead client must never get a reply");
+
+    let st = eng.stats();
+    let lane = st.class(QosClass::Standard);
+    assert_eq!(lane.submitted, 2);
+    assert_eq!(lane.aborted, 1, "exactly the dead follower aborts");
+    assert_eq!(lane.completed, 1, "exactly the survivor completes");
+    assert_eq!(lane.active(), 0, "the shared task left the table");
+    assert_eq!(st.active_tasks, 0);
+}
+
+#[test]
+fn eviction_is_lru_and_spares_higher_qos_classes() {
+    // cap = 2: the third distinct spine evicts, and the victim is the
+    // lowest-QoS entry (batch before standard before interactive),
+    // not simply the oldest.
+    let eng = engine(2, 2, false);
+    let sv = |n: usize, seed: u64, class: QosClass| {
+        (prior_sample(64, seed), SamplerSpec::srds(n).with_tol(1e-4).with_seed(seed).with_priority(class))
+    };
+    let (xa, a) = sv(25, 20, QosClass::Interactive);
+    let (xb, b) = sv(34, 21, QosClass::Batch);
+    let (xc, c) = sv(49, 22, QosClass::Standard);
+
+    eng.run(&xa, &a); // miss, insert {A}
+    eng.run(&xb, &b); // miss, insert {A, B} — cache full
+    eng.run(&xc, &c); // miss, insert — victim must be B (batch class)
+    let out = eng.run(&xa, &a); // A survived eviction: hit
+    assert_eq!(out.sample, vanilla(&xa, &a), "warm repeat after eviction churn is exact");
+    eng.run(&xb, &b); // B was the victim: miss, re-insert (evicts C)
+
+    let st = eng.stats();
+    assert_eq!(st.cache_misses, 4, "A, B, C first runs plus B's re-run miss");
+    assert_eq!(st.cache_hits, 1, "only A's repeat hits");
+    assert_eq!(st.cache_evictions, 2, "C's insert evicted B; B's re-insert evicted C");
+}
+
+#[test]
+fn bounded_cache_cannot_leak_buffers_under_spec_churn() {
+    // 60 distinct shared-work identities through a cap-2 cache: with
+    // n=25 (a 5-block spine) unbounded retention would pin ~300 state
+    // buffers; the LRU must keep the steady-state live set down at
+    // straggler-batch scale (same bound family as pool_soak.rs).
+    let eng = engine(2, 2, false);
+    for seed in 0..60u64 {
+        let x0 = prior_sample(64, 2000 + seed);
+        let spec = SamplerSpec::srds(25).with_tol(1e-4).with_seed(2000 + seed);
+        let out = eng.run(&x0, &spec);
+        assert!(out.stats.total_evals > 0);
+    }
+    let st = eng.stats();
+    assert_eq!(st.cache_misses, 60, "every identity is distinct");
+    assert_eq!(st.cache_hits, 0);
+    assert_eq!(st.cache_evictions, 58, "every insert past cap evicts exactly one");
+    let live = eng.pool().stats().live;
+    assert!(
+        live <= 160,
+        "{live} buffers live after churn — the cache must evict spines, not retain them all"
+    );
+}

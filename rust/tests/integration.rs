@@ -118,6 +118,8 @@ fn tcp_server_round_trip() {
                 batch: srds::batching::BatchPolicy::default(),
                 max_inflight: srds::server::DEFAULT_MAX_INFLIGHT,
                 default_deadline: None,
+                spine_cache_cap: srds::server::DEFAULT_SPINE_CACHE_CAP,
+                coalesce: true,
             },
         );
     });

@@ -50,6 +50,8 @@ fn concurrent_tcp_clients_get_solo_equivalent_samples() {
             // must retry on the structured overloaded error.
             max_inflight: 2,
             default_deadline: None,
+            spine_cache_cap: srds::server::DEFAULT_SPINE_CACHE_CAP,
+            coalesce: true,
         };
         std::thread::spawn(move || {
             let _ = serve_on(listener, cfg);

@@ -8,7 +8,6 @@
 //! batch-shape invariant pinned in `batch_shape.rs`: batch composition
 //! there, shard/steal placement here, same contract.
 
-use srds::batching::BatchPolicy;
 use srds::coordinator::{prior_sample, QosClass, SamplerSpec};
 use srds::data::make_gmm;
 use srds::exec::{NativeFactory, Router, RouterConfig};
@@ -22,7 +21,7 @@ fn fleet(shards: usize, steal: bool) -> Router {
         Arc::new(NativeFactory::new(model, Solver::Ddim)),
         // One worker per shard: the narrowest fleet, where any
         // scheduling effect on numerics would be easiest to expose.
-        RouterConfig { shards, workers: 1, batch: BatchPolicy::default(), steal },
+        RouterConfig { shards, workers: 1, steal, ..RouterConfig::default() },
     )
 }
 
