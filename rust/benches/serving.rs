@@ -35,12 +35,23 @@
 //! The `cache_on` hit rate and rps are gated — the cache going cold or
 //! the dedupe table stopping absorbing is a structural regression.
 //!
+//! Sixth section, `streaming`: the serving submission path the wire's
+//! v1 dialect rides, A/B'd with and without a per-iterate progress
+//! sink at eight closed-loop clients. The streamed arm reports
+//! time-to-first-iterate p50/p95 (the anytime latency a `"stream":
+//! true` client actually sees) against time-to-final; both arms' rps
+//! are gated — fanning each completed iterate out as a refcount share
+//! must not cost meaningful throughput.
+//!
 //! `cargo bench --bench serving`
 
 use srds::batching::BatchPolicy;
 use srds::coordinator::{prior_sample, registry, QosClass, SamplerSpec};
 use srds::data::make_gmm;
-use srds::exec::{Engine, EngineConfig, NativeFactory, Router, RouterConfig};
+use srds::exec::{
+    Engine, EngineConfig, IterateEvent, NativeFactory, ProgressSink, Router, RouterConfig,
+    TaskReply,
+};
 use srds::json::{self, Value};
 use srds::model::{EpsModel, GmmEps};
 use srds::solvers::Solver;
@@ -368,6 +379,102 @@ fn main() {
     }
     let repeat = json::obj(repeat_variants);
 
+    // Streaming fleet: eight closed-loop clients through the serving
+    // submission path, once with a per-iterate progress sink (the v1
+    // `"stream": true` request) and once without. Time-to-first-iterate
+    // is measured inside the sink; time-to-final at the done callback.
+    // Fresh engines per arm so occupancy and pools don't bleed across.
+    const STREAM_CLIENTS: usize = 8;
+    let mut streaming_pairs: Vec<(&str, Value)> = vec![
+        ("clients", Value::Num(STREAM_CLIENTS as f64)),
+        ("requests", Value::Num((STREAM_CLIENTS * PER_CLIENT) as f64)),
+    ];
+    for stream in [true, false] {
+        let engine = fresh_engine(&model);
+        let t0 = Instant::now();
+        let mut threads = Vec::new();
+        for c in 0..STREAM_CLIENTS {
+            let engine = engine.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut ttfi_ms = Vec::with_capacity(PER_CLIENT);
+                let mut ttfinal_ms = Vec::with_capacity(PER_CLIENT);
+                let mut iterates = 0u64;
+                for j in 0..PER_CLIENT {
+                    let seed = 1700 + (c * PER_CLIENT + j) as u64;
+                    let x0 = prior_sample(engine.dim(), seed);
+                    let mut spec = SamplerSpec::srds(N_STEPS).with_tol(1e-4).with_seed(seed);
+                    if stream {
+                        spec = spec.with_stream();
+                    }
+                    let t = Instant::now();
+                    // (first-iterate latency, iterate count), written by
+                    // the sink on the dispatcher thread; all progress
+                    // callbacks complete before `done` fires, so the
+                    // post-recv read races nothing.
+                    let first = Arc::new(std::sync::Mutex::new((None::<f64>, 0u64)));
+                    let sink = stream.then(|| {
+                        let first = first.clone();
+                        Box::new(move |_ev: IterateEvent| {
+                            let mut slot = first.lock().unwrap();
+                            slot.0.get_or_insert_with(|| t.elapsed().as_secs_f64() * 1000.0);
+                            slot.1 += 1;
+                        }) as ProgressSink
+                    });
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    engine.submit_serving(x0, spec, None, sink, move |reply, _| {
+                        let _ = tx.send(reply);
+                    });
+                    let reply = rx.recv().expect("engine dispatcher dropped mid-bench");
+                    let wall_ms = t.elapsed().as_secs_f64() * 1000.0;
+                    let TaskReply::Done(out) = reply else {
+                        panic!("unbudgeted request timed out")
+                    };
+                    assert!(out.sample.iter().all(|v| v.is_finite()));
+                    ttfinal_ms.push(wall_ms);
+                    if stream {
+                        let (ttfi, n) = *first.lock().unwrap();
+                        ttfi_ms.push(ttfi.expect("streamed request produced no iterate"));
+                        iterates += n;
+                    }
+                }
+                (ttfi_ms, ttfinal_ms, iterates)
+            }));
+        }
+        let (mut ttfi, mut ttfinal, mut iterates) = (Vec::new(), Vec::new(), 0u64);
+        for th in threads {
+            let (fi, fin, it) = th.join().unwrap();
+            ttfi.extend(fi);
+            ttfinal.extend(fin);
+            iterates += it;
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        ttfi.sort_by(f64::total_cmp);
+        ttfinal.sort_by(f64::total_cmp);
+        let rps = (STREAM_CLIENTS * PER_CLIENT) as f64 / wall_s.max(1e-9);
+        if stream {
+            streaming_pairs.extend([
+                ("stream_rps", Value::Num(rps)),
+                ("stream_wall_s", Value::Num(wall_s)),
+                ("ttfi_p50_ms", Value::Num(percentile(&ttfi, 0.5))),
+                ("ttfi_p95_ms", Value::Num(percentile(&ttfi, 0.95))),
+                ("ttfinal_p50_ms", Value::Num(percentile(&ttfinal, 0.5))),
+                ("ttfinal_p95_ms", Value::Num(percentile(&ttfinal, 0.95))),
+                (
+                    "mean_iterates",
+                    Value::Num(iterates as f64 / (STREAM_CLIENTS * PER_CLIENT) as f64),
+                ),
+            ]);
+        } else {
+            streaming_pairs.extend([
+                ("nonstream_rps", Value::Num(rps)),
+                ("nonstream_wall_s", Value::Num(wall_s)),
+                ("nonstream_p50_ms", Value::Num(percentile(&ttfinal, 0.5))),
+                ("nonstream_p95_ms", Value::Num(percentile(&ttfinal, 0.95))),
+            ]);
+        }
+    }
+    let streaming = json::obj(streaming_pairs);
+
     let report = json::obj(vec![
         ("bench", Value::Str("serving_throughput".into())),
         ("model", Value::Str("gmm_church".into())),
@@ -379,6 +486,7 @@ fn main() {
         ("qos", qos),
         ("sharded", Value::Arr(sharded)),
         ("repeat", repeat),
+        ("streaming", streaming),
     ]);
     println!("{}", json::to_string(&report));
 }

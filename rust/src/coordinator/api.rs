@@ -161,6 +161,20 @@ pub struct SamplerSpec {
     /// the budget: truncating them mid-iteration has no quality
     /// guarantee to fall back on. `None` → run to convergence/cap.
     pub deadline_evals: Option<u64>,
+    /// Per-request wall-clock timeout, enforced by the engine
+    /// dispatcher. At expiry an SRDS run is finalized from its newest
+    /// *completed* Parareal iterate (the same §4 anytime anchor as
+    /// [`SamplerSpec::deadline_evals`], reported honestly via
+    /// `RunStats::timed_out`); kinds without that anchor are failed with
+    /// a timeout error instead. Enforced on serving submissions
+    /// (`submit_serving`); blocking [`crate::exec::Engine::submit`]
+    /// channels are simply dropped on a non-SRDS timeout. `None` → no
+    /// wall-clock limit.
+    pub timeout_ms: Option<u64>,
+    /// Stream each completed iterate to the caller as it lands
+    /// (serving-path `"stream": true`; SRDS only). Changes delivery,
+    /// never numerics.
+    pub stream: bool,
     /// Which sampler this spec targets, with its per-kind parameters.
     pub kind: SamplerKind,
 }
@@ -179,6 +193,8 @@ impl SamplerSpec {
             keep_iterates: false,
             priority: QosClass::Standard,
             deadline_evals: None,
+            timeout_ms: None,
+            stream: false,
             kind,
         }
     }
@@ -255,11 +271,13 @@ impl SamplerSpec {
     /// duplicates and reuse cached coarse spines.
     ///
     /// Scheduling and payload knobs are deliberately **excluded**:
-    /// `priority`, `deadline_evals`, and `keep_iterates` change when and
-    /// how much work runs, never the value of any computed state, so
+    /// `priority`, `deadline_evals`, `timeout_ms`, `stream`, and
+    /// `keep_iterates` change when and how much work runs — or how its
+    /// results are delivered — never the value of any computed state, so
     /// they must not fragment the key space. (The engine's in-flight
-    /// coalescer re-adds them to its own key, because requests with
-    /// different deadlines or payload shapes cannot share one task.)
+    /// coalescer re-adds the scheduling ones to its own key, because
+    /// requests with different deadlines or payload shapes cannot share
+    /// one task; streaming requests opt out of coalescing entirely.)
     pub fn cache_key(&self) -> u64 {
         let mut h = FNV_OFFSET;
         // Kind discriminant + the kind's own canonicalized parameters.
@@ -361,6 +379,18 @@ impl SamplerSpec {
     /// Set the anytime eval budget (see [`SamplerSpec::deadline_evals`]).
     pub fn with_deadline_evals(mut self, evals: u64) -> Self {
         self.deadline_evals = Some(evals);
+        self
+    }
+
+    /// Set the wall-clock timeout (see [`SamplerSpec::timeout_ms`]).
+    pub fn with_timeout_ms(mut self, ms: u64) -> Self {
+        self.timeout_ms = Some(ms);
+        self
+    }
+
+    /// Request per-iterate streaming (see [`SamplerSpec::stream`]).
+    pub fn with_stream(mut self) -> Self {
+        self.stream = true;
         self
     }
 
@@ -674,8 +704,9 @@ mod tests {
 
     #[test]
     fn cache_key_ignores_scheduling_and_payload_knobs() {
-        // Priority, deadline budget and iterate retention steer *when*
-        // and *how much* work runs — never what any state evaluates to —
+        // Priority, deadline budget, wall-clock timeout, streaming and
+        // iterate retention steer *when* and *how much* work runs — or
+        // how results are delivered — never what any state evaluates to,
         // so they must not fragment the spine cache.
         let base = SamplerSpec::srds(25).with_seed(3);
         let key = base.clone().cache_key();
@@ -683,6 +714,8 @@ mod tests {
         assert_eq!(key, base.clone().with_priority(QosClass::Batch).cache_key());
         assert_eq!(key, base.clone().with_deadline_evals(10).cache_key());
         assert_eq!(key, base.clone().with_iterates().cache_key());
+        assert_eq!(key, base.clone().with_timeout_ms(5).cache_key());
+        assert_eq!(key, base.clone().with_stream().cache_key());
     }
 
     #[test]

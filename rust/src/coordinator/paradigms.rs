@@ -128,6 +128,7 @@ pub fn paradigms(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> S
         iters: sweeps,
         converged: lo >= n,
         deadline_hit: false,
+        timed_out: false,
         eff_serial_evals: sweeps as u64 * epc,
         eff_serial_evals_pipelined: sweeps as u64 * epc,
         total_evals,

@@ -251,6 +251,7 @@ pub fn parataa(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sam
         iters,
         converged,
         deadline_hit: false,
+        timed_out: false,
         eff_serial_evals: iters as u64 * epc,
         eff_serial_evals_pipelined: iters as u64 * epc,
         total_evals,

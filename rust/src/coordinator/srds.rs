@@ -241,6 +241,7 @@ pub fn srds(backend: &dyn StepBackend, x0: &[f32], spec: &SamplerSpec) -> Sample
         // trade refinement against; anytime truncation is the engine
         // task's job (`exec::task::SrdsTask`).
         deadline_hit: false,
+        timed_out: false,
         eff_serial_evals: eff_serial,
         eff_serial_evals_pipelined: eff_pipelined,
         total_evals,

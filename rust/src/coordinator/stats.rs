@@ -34,6 +34,14 @@ pub struct RunStats {
     /// [`RunStats::per_iter`] — a deadline-degraded sample is a valid
     /// early iterate (paper §4), never a silently-worse one.
     pub deadline_hit: bool,
+    /// Whether a per-request wall-clock timeout
+    /// ([`crate::coordinator::SamplerSpec::timeout_ms`]) fired: the
+    /// dispatcher finalized the run from its newest completed Parareal
+    /// iterate instead of letting it refine to tolerance. Like
+    /// [`RunStats::deadline_hit`], set only when the timeout actually
+    /// truncated work (`iters < max_iters` at expiry) and always paired
+    /// with an honest `converged: false`.
+    pub timed_out: bool,
     /// Effective serial evals under the *vanilla* schedule: the coarse
     /// init sweep, then per iteration max-block fine steps + the
     /// sequential coarse sweep.

@@ -99,7 +99,7 @@
 use crate::batching::{stage_rows, BatchPolicy, Batcher, PendingRow};
 use crate::buf::{BatchStage, BufPool, StateBuf};
 use crate::coordinator::{state_hash, QosClass, SampleOutput, SamplerKind, SamplerSpec};
-use crate::exec::task::{new_task, new_warm_task, Completion, SamplerTask, TaskRow};
+use crate::exec::task::{new_task, new_warm_task, Completion, IterateEvent, SamplerTask, TaskRow};
 use crate::solvers::{BackendFactory, Solver, StepBackend};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -158,8 +158,9 @@ pub struct EngineConfig {
     /// initial state, QoS class, deadline and payload shape — into one
     /// resident task with fanned-out bit-identical replies. On by
     /// default (`--no-coalesce` on the CLI): distinct requests are
-    /// never merged, so the only observable effect is N identical
-    /// requests costing one run.
+    /// never merged — the dedupe identity includes the wall-clock
+    /// timeout, and streaming requests opt out entirely — so the only
+    /// observable effect is N identical requests costing one run.
     pub coalesce: bool,
 }
 
@@ -288,6 +289,24 @@ struct RowOrigin {
     key: u64,
 }
 
+/// What a serving submission ([`Engine::submit_serving`]) resolves to.
+pub enum TaskReply {
+    /// The run finished. Under a wall-clock timeout an SRDS run may be
+    /// truncated to its newest completed iterate — still a valid
+    /// anytime sample, with `stats.timed_out` reporting the truncation
+    /// honestly.
+    Done(SampleOutput),
+    /// The wall-clock timeout expired on a sampler kind with no anytime
+    /// iterate to finalize from; the run was aborted with no sample.
+    TimedOut,
+}
+
+/// Streaming hook attached to a serving submission: invoked on the
+/// dispatcher thread once per completed Parareal iterate, with a
+/// refcount share of the iterate's sample (never a copy). Must be cheap
+/// and must not block — it runs inside the engine's event loop.
+pub type ProgressSink = Box<dyn FnMut(IterateEvent) + Send>;
+
 /// How a finished task's [`SampleOutput`] leaves the engine.
 enum ReplySink {
     /// Blocking callers ([`Engine::submit`] / [`Engine::run`]).
@@ -296,6 +315,10 @@ enum ReplySink {
     /// dispatcher thread with a consistent [`EngineStats`] snapshot
     /// taken at completion. Must not block.
     Callback(Box<dyn FnOnce(SampleOutput, EngineStats) + Send>),
+    /// Serving callers ([`Engine::submit_serving`]): like `Callback`,
+    /// but the reply distinguishes a finished run from a timed-out one
+    /// that had no anytime iterate to finalize from.
+    Serving(Box<dyn FnOnce(TaskReply, EngineStats) + Send>),
 }
 
 impl ReplySink {
@@ -307,6 +330,19 @@ impl ReplySink {
                 let _ = tx.send(out);
             }
             ReplySink::Callback(f) => f(out, stats),
+            ReplySink::Serving(f) => f(TaskReply::Done(out), stats),
+        }
+    }
+
+    /// Terminal failure: the wall-clock timeout expired and the task
+    /// could not finalize early. Serving callers get an explicit
+    /// [`TaskReply::TimedOut`]; blocking channels are dropped (the
+    /// receiver sees a disconnect instead of hanging forever), and
+    /// fire-and-forget callbacks are simply never invoked.
+    fn fail(self, stats: EngineStats) {
+        match self {
+            ReplySink::Channel(_) | ReplySink::Callback(_) => {}
+            ReplySink::Serving(f) => f(TaskReply::TimedOut, stats),
         }
     }
 }
@@ -319,6 +355,9 @@ enum Msg {
         /// when the client connection dies, aborting the task on the
         /// dispatcher's next sweep. `None` = uncancellable.
         alive: Option<Arc<AtomicBool>>,
+        /// Streaming sink for completed anytime iterates (`None` for
+        /// non-streaming submissions).
+        progress: Option<ProgressSink>,
         reply: ReplySink,
     },
     BatchDone {
@@ -630,7 +669,13 @@ impl Engine {
     /// machine finishes.
     pub fn submit(&self, x0: Vec<f32>, spec: SamplerSpec) -> Receiver<SampleOutput> {
         let (reply, rx) = channel();
-        self.send(Msg::Submit { x0, spec, alive: None, reply: ReplySink::Channel(reply) });
+        self.send(Msg::Submit {
+            x0,
+            spec,
+            alive: None,
+            progress: None,
+            reply: ReplySink::Channel(reply),
+        });
         rx
     }
 
@@ -645,7 +690,13 @@ impl Engine {
     where
         F: FnOnce(SampleOutput, EngineStats) + Send + 'static,
     {
-        self.send(Msg::Submit { x0, spec, alive: None, reply: ReplySink::Callback(Box::new(done)) });
+        self.send(Msg::Submit {
+            x0,
+            spec,
+            alive: None,
+            progress: None,
+            reply: ReplySink::Callback(Box::new(done)),
+        });
     }
 
     /// [`Engine::submit_with`] plus a liveness flag: the serving layer
@@ -668,8 +719,31 @@ impl Engine {
             x0,
             spec,
             alive: Some(alive),
+            progress: None,
             reply: ReplySink::Callback(Box::new(done)),
         });
+    }
+
+    /// The serving layer's full-featured entry point: a completion
+    /// callback that distinguishes a finished run ([`TaskReply::Done`])
+    /// from a timed-out one with nothing to finalize
+    /// ([`TaskReply::TimedOut`]), an optional client-liveness flag (see
+    /// [`Engine::submit_with_alive`]), and an optional streaming sink
+    /// that receives one [`IterateEvent`] per completed anytime iterate
+    /// — SRDS publishes them, other kinds simply never call the sink.
+    /// Both callbacks run on the dispatcher thread and must not block.
+    // lint: request-path
+    pub fn submit_serving<F>(
+        &self,
+        x0: Vec<f32>,
+        spec: SamplerSpec,
+        alive: Option<Arc<AtomicBool>>,
+        progress: Option<ProgressSink>,
+        done: F,
+    ) where
+        F: FnOnce(TaskReply, EngineStats) + Send + 'static,
+    {
+        self.send(Msg::Submit { x0, spec, alive, progress, reply: ReplySink::Serving(Box::new(done)) });
     }
 
     /// Run one request to completion (blocking). Other requests may be
@@ -836,17 +910,22 @@ struct Follower {
     /// Client liveness; `false` means detach on the next sweep (and
     /// abort the task when the last follower detaches).
     alive: Option<Arc<AtomicBool>>,
+    /// Streaming sink: completed anytime iterates fan out here as
+    /// refcount shares (`None` for non-streaming requests).
+    progress: Option<ProgressSink>,
 }
 
 /// The in-flight dedupe identity: everything that must match for two
 /// submissions to legally share one task. The numerics pair
 /// `(cache_key, state_hash)` guarantees bit-identical output; the
 /// scheduling/payload tail (`keep_iterates`, `deadline_evals`,
-/// `priority`) is re-added here — [`SamplerSpec::cache_key`] excludes
-/// it on purpose — because requests that truncate at different budgets,
-/// want different payloads, or ride different QoS lanes cannot share a
-/// run even though their numerics agree.
-type CoalesceKey = (u64, u64, bool, Option<u64>, u8);
+/// `priority`, `timeout_ms`) is re-added here — [`SamplerSpec::cache_key`]
+/// excludes it on purpose — because requests that truncate at different
+/// budgets or wall-clock limits, want different payloads, or ride
+/// different QoS lanes cannot share a run even though their numerics
+/// agree. Streaming requests opt out of coalescing entirely (see
+/// [`Dispatcher::handle`]), so `stream` needs no slot here.
+type CoalesceKey = (u64, u64, bool, Option<u64>, u8, Option<u64>);
 
 /// One resident request: its state machine plus the request-wide row
 /// fields the dispatcher attaches to every row the task emits, and the
@@ -872,6 +951,9 @@ struct TaskEntry {
     /// SRDS requests while the cache is enabled; where the harvested
     /// spine is filed at finalize.
     spine_key: Option<(u64, u64)>,
+    /// Wall-clock expiry armed from `spec.timeout_ms` at admission;
+    /// cleared when it fires so the timeout triggers exactly once.
+    deadline: Option<Instant>,
 }
 
 /// Capacity-bounded, QoS-aware LRU of finished coarse spines. Values
@@ -1060,6 +1142,20 @@ impl Dispatcher {
             } else {
                 None
             };
+            // An armed per-request timeout also bounds the park: the
+            // dispatcher must wake at the nearest deadline even if no
+            // message ever arrives.
+            let nearest_deadline = self
+                .tasks
+                .values()
+                .filter_map(|e| e.deadline)
+                .min()
+                .map(|dl| dl.saturating_duration_since(Instant::now()));
+            let timeout = match (timeout, nearest_deadline) {
+                (Some(t), Some(d)) => Some(t.min(d)),
+                (None, Some(d)) => Some(d),
+                (t, None) => t,
+            };
             let msg = match timeout {
                 Some(t) => match self.rx.recv_timeout(t) {
                     Ok(m) => Some(m),
@@ -1089,6 +1185,9 @@ impl Dispatcher {
             // Abort tasks whose client died before flushing: their
             // queued rows must not reach a worker (or a thief).
             self.reap_cancelled();
+            // Then enforce wall-clock timeouts, so an expired task never
+            // flushes more speculative rows.
+            self.reap_timeouts();
             self.flush();
             self.maybe_steal();
             self.publish();
@@ -1105,10 +1204,10 @@ impl Dispatcher {
     fn handle(&mut self, msg: Msg) -> bool {
         match msg {
             Msg::Shutdown => return true,
-            Msg::Submit { x0, spec, alive, reply } => {
+            Msg::Submit { x0, spec, alive, progress, reply } => {
                 let class = spec.priority;
                 self.per_class[class.index()].submitted += 1;
-                let follower = Follower { reply, t_submit: Instant::now(), alive };
+                let follower = Follower { reply, t_submit: Instant::now(), alive, progress };
                 // Shared-work identity, computed once per request (not
                 // per row) and only when a feature that uses it is on.
                 let shared = self.coalesce || self.spine_cache.cap > 0;
@@ -1116,10 +1215,19 @@ impl Dispatcher {
                 // (a) In-flight coalescing: an identical concurrent
                 // submission rides the resident task as one more
                 // follower — zero extra rows, one more bit-identical
-                // reply at finalize.
-                if let (true, Some((sk, xk))) = (self.coalesce, keys) {
-                    let ckey: CoalesceKey =
-                        (sk, xk, spec.keep_iterates, spec.deadline_evals, class.index() as u8);
+                // reply at finalize. Streaming requests never coalesce
+                // (in either direction): each stream owns its delivery
+                // cadence, and a non-streaming duplicate riding a
+                // streaming task (or vice versa) would entangle them.
+                if let (true, false, Some((sk, xk))) = (self.coalesce, spec.stream, keys) {
+                    let ckey: CoalesceKey = (
+                        sk,
+                        xk,
+                        spec.keep_iterates,
+                        spec.deadline_evals,
+                        class.index() as u8,
+                        spec.timeout_ms,
+                    );
                     if let Some(&resident) = self.inflight_by_key.get(&ckey) {
                         if let Some(entry) = self.tasks.get_mut(&resident) {
                             entry.followers.push(follower);
@@ -1189,6 +1297,10 @@ impl Dispatcher {
             }
             hit
         });
+        // Arm the wall-clock timeout before the task runs a single row,
+        // so `timeout_ms: 0` deterministically expires on the first
+        // reap sweep (finalizing SRDS from its iteration-0 spine).
+        let deadline = spec.timeout_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
         let mut task = match warm {
             Some(spine) => new_warm_task(&x0, &spec, &self.pool, self.epc, spine),
             None => new_task(&x0, &spec, &self.pool, self.epc),
@@ -1207,6 +1319,7 @@ impl Dispatcher {
                 inflight: 0,
                 coalesce_key,
                 spine_key,
+                deadline,
             },
         );
         self.enqueue_rows(id, rows);
@@ -1244,8 +1357,33 @@ impl Dispatcher {
             let Some(entry) = self.tasks.get_mut(&req) else { continue };
             entry.inflight -= completions.len();
             let rows = entry.task.poll(completions);
+            // Streaming fan-out before the next wave of rows goes out:
+            // iterates the poll just completed reach clients while the
+            // refinement keeps running.
+            Self::drain_progress(entry);
             self.enqueue_rows(req, rows);
             self.maybe_finalize(req);
+        }
+    }
+
+    /// Fan the task's newly completed anytime iterates out to every
+    /// follower that asked for a stream. Each event hands the sink a
+    /// refcount share of the iterate's grid cell — no buffer copies on
+    /// the dispatcher thread.
+    // lint: hot-path
+    // lint: request-path
+    fn drain_progress(entry: &mut TaskEntry) {
+        let events = entry.task.take_progress();
+        if events.is_empty() {
+            return;
+        }
+        for f in entry.followers.iter_mut() {
+            if let Some(sink) = f.progress.as_mut() {
+                for ev in &events {
+                    // lint-allow(hot-path-alloc): StateBuf refcount bump, not a buffer copy
+                    sink(ev.clone());
+                }
+            }
         }
     }
 
@@ -1304,6 +1442,9 @@ impl Dispatcher {
         }
         let Some(mut entry) = self.tasks.remove(&req) else { return };
         self.forget_inflight_key(req, &entry);
+        // Flush any still-undelivered iterates first: a stream's Final
+        // frame must never overtake its last Iterate.
+        Self::drain_progress(&mut entry);
         // Eagerly purge this request's still-queued speculative rows —
         // they will never run, and leaving them in place would inflate
         // queue_depth and the spread-cap math until the lazy flush
@@ -1602,6 +1743,58 @@ impl Dispatcher {
             for row in b.purge(|r| !matches!(origins.get(&r.tag), Some(o) if o.req == req)) {
                 origins.remove(&row.tag);
             }
+        }
+    }
+
+    /// Enforce per-request wall-clock timeouts. An expired SRDS task
+    /// finalizes from its newest completed iterate — the anytime
+    /// property makes that a valid (honestly flagged) sample, delivered
+    /// through the normal finalize path. Kinds without an anytime
+    /// anchor refuse [`SamplerTask::force_finish`] and are failed
+    /// instead: rows purged, followers told [`TaskReply::TimedOut`].
+    /// Each deadline fires exactly once (it is cleared here), so a task
+    /// whose truncated finalize needs further polls is not re-reaped.
+    fn reap_timeouts(&mut self) {
+        if self.tasks.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let mut expired: Vec<(u64, bool)> = Vec::new();
+        for (id, e) in self.tasks.iter_mut() {
+            if e.deadline.is_some_and(|dl| now >= dl) {
+                e.deadline = None;
+                expired.push((*id, e.task.force_finish()));
+            }
+        }
+        for (req, finalized) in expired {
+            if finalized {
+                self.maybe_finalize(req);
+            } else {
+                self.fail_task(req);
+            }
+        }
+    }
+
+    /// Drop one timed-out task that could not finalize early: purge its
+    /// queued rows, forget its dedupe slot, count every follower on its
+    /// class's `aborted` lane, and tell each reply sink the request
+    /// timed out (serving callers get [`TaskReply::TimedOut`]; blocking
+    /// channels disconnect). Rows already on workers finish and are
+    /// discarded on arrival via the origin map.
+    fn fail_task(&mut self, req: u64) {
+        let Some(mut entry) = self.tasks.remove(&req) else { return };
+        self.forget_inflight_key(req, &entry);
+        let origins = &mut self.origins;
+        for b in self.batchers.values_mut() {
+            for row in b.purge(|r| !matches!(origins.get(&r.tag), Some(o) if o.req == req)) {
+                origins.remove(&row.tag);
+            }
+        }
+        self.per_class[entry.class.index()].aborted += entry.followers.len() as u64;
+        self.publish();
+        let stats = self.snapshot_stats();
+        for f in entry.followers.drain(..) {
+            f.reply.fail(stats);
         }
     }
 
@@ -2132,6 +2325,150 @@ mod tests {
         assert_eq!(aborted, 1, "mid-flight cancel never reaped");
         assert!(dead_rx.try_recv().is_err());
         assert_eq!(eng.stats().active_tasks, 0);
+    }
+
+    #[test]
+    fn streaming_requests_deliver_every_iterate_then_the_final() {
+        // The anytime stream through the full engine path: one
+        // IterateEvent per completed Parareal iterate, every event's
+        // sample bit-identical to the vanilla run's recorded iterate,
+        // all events delivered before the final reply, and the final
+        // sample untouched by streaming.
+        let eng = engine(2, BatchPolicy::default());
+        let x0 = prior_sample(64, 23);
+        let spec = SamplerSpec::srds(25).with_tol(0.0).with_max_iters(4).with_seed(23);
+        let (ev_tx, ev_rx) = channel::<IterateEvent>();
+        let (done_tx, done_rx) = channel();
+        eng.submit_serving(
+            x0.clone(),
+            spec.clone().with_stream(),
+            None,
+            Some(Box::new(move |ev| {
+                let _ = ev_tx.send(ev);
+            })),
+            move |reply, _| {
+                let _ = done_tx.send(reply);
+            },
+        );
+        let TaskReply::Done(out) = done_rx.recv().expect("serving reply") else {
+            panic!("streamed run must finish, not time out");
+        };
+        // The final reply is sent after the last drain, so every event
+        // is already in the channel here.
+        let events: Vec<IterateEvent> = ev_rx.try_iter().collect();
+        let full = vanilla(&x0, &spec.clone().with_iterates());
+        assert_eq!(events.len(), out.stats.iters, "one event per completed iterate");
+        for (k, ev) in events.iter().enumerate() {
+            assert_eq!(ev.iter, k + 1, "events arrive in iterate order");
+            assert_eq!(ev.sample.to_vec(), full.iterates[k + 1], "iterate {} sample", ev.iter);
+            assert!(ev.residual.is_finite());
+        }
+        assert_eq!(out.sample, full.sample, "streaming must not change the final sample");
+        assert_eq!(
+            events.last().expect("at least one iterate").sample.to_vec(),
+            out.sample,
+            "the last streamed iterate IS the final sample"
+        );
+    }
+
+    #[test]
+    fn wall_clock_timeout_finalizes_srds_from_the_newest_iterate() {
+        // timeout_ms: 0 expires on the dispatcher's first reap sweep,
+        // before any parallel row has completed — the reply must be the
+        // iteration-0 coarse spine endpoint with honest flags, counted
+        // as a completion (not an abort).
+        let eng = engine(2, BatchPolicy::default());
+        let x0 = prior_sample(64, 31);
+        let spec = SamplerSpec::srds(25).with_tol(0.0).with_max_iters(4).with_seed(31);
+        let (done_tx, done_rx) = channel();
+        eng.submit_serving(x0.clone(), spec.clone().with_timeout_ms(0), None, None, move |r, s| {
+            let _ = done_tx.send((r, s));
+        });
+        let (reply, stats) = done_rx.recv().expect("serving reply");
+        let TaskReply::Done(out) = reply else {
+            panic!("SRDS must finalize from its newest iterate, not fail");
+        };
+        assert!(out.stats.timed_out, "truncation must be reported");
+        assert!(!out.stats.converged, "a truncated run never claims convergence");
+        assert_eq!(out.stats.iters, 0, "no parallel iterate completed before expiry");
+        let full = vanilla(&x0, &spec.with_iterates());
+        assert_eq!(out.sample, full.iterates[0], "the newest iterate is the coarse spine");
+        let lane = stats.class(QosClass::Standard);
+        assert_eq!(lane.completed, 1, "a timed-out SRDS run still completes");
+        assert_eq!(lane.aborted, 0);
+    }
+
+    #[test]
+    fn wall_clock_timeout_fails_kinds_without_anytime_samples() {
+        // A sequential run has no intermediate iterate to fall back on:
+        // the timeout aborts it with an explicit TimedOut reply, the
+        // aborted lane ticks, and the engine keeps serving co-tenants.
+        let eng = engine(2, BatchPolicy::default());
+        let (done_tx, done_rx) = channel();
+        eng.submit_serving(
+            prior_sample(64, 41),
+            SamplerSpec::sequential(64).with_seed(41).with_timeout_ms(0),
+            None,
+            None,
+            move |r, s| {
+                let _ = done_tx.send((r, s));
+            },
+        );
+        let (reply, stats) = done_rx.recv().expect("serving reply");
+        assert!(matches!(reply, TaskReply::TimedOut), "sequential cannot finalize early");
+        let lane = stats.class(QosClass::Standard);
+        assert_eq!(lane.aborted, 1);
+        assert_eq!(lane.completed, 0);
+        // The engine is still healthy: a live request completes.
+        let x0 = prior_sample(64, 42);
+        let spec = SamplerSpec::srds(25).with_tol(1e-4).with_seed(42);
+        let got = eng.run(&x0, &spec);
+        assert_eq!(got.sample, vanilla(&x0, &spec).sample);
+        assert_eq!(eng.stats().active_tasks, 0, "the failed task left the table");
+    }
+
+    #[test]
+    fn streaming_requests_are_never_coalesced() {
+        // Two bit-identical streaming submissions: each must own its
+        // task and its full event stream (coalescing a stream would
+        // entangle delivery cadences), so `coalesced` stays zero and
+        // both sinks see every iterate.
+        let eng = engine(1, BatchPolicy::default());
+        let x0 = prior_sample(64, 53);
+        let spec =
+            SamplerSpec::srds(25).with_tol(0.0).with_max_iters(3).with_seed(53).with_stream();
+        let mut dones = Vec::new();
+        let mut streams = Vec::new();
+        for _ in 0..2 {
+            let (ev_tx, ev_rx) = channel::<IterateEvent>();
+            let (done_tx, done_rx) = channel();
+            eng.submit_serving(
+                x0.clone(),
+                spec.clone(),
+                None,
+                Some(Box::new(move |ev| {
+                    let _ = ev_tx.send(ev);
+                })),
+                move |reply, _| {
+                    let _ = done_tx.send(reply);
+                },
+            );
+            dones.push(done_rx);
+            streams.push(ev_rx);
+        }
+        let mut finals = Vec::new();
+        for done_rx in dones {
+            let TaskReply::Done(out) = done_rx.recv().expect("serving reply") else {
+                panic!("streamed run must finish");
+            };
+            finals.push(out);
+        }
+        assert_eq!(finals[0].sample, finals[1].sample, "identical requests, identical output");
+        for (out, ev_rx) in finals.iter().zip(streams) {
+            let events: Vec<IterateEvent> = ev_rx.try_iter().collect();
+            assert_eq!(events.len(), out.stats.iters, "each stream gets its own full fan-out");
+        }
+        assert_eq!(eng.stats().coalesced, 0, "streams must never share a task");
     }
 
     #[test]

@@ -21,6 +21,13 @@
 //!   ([`crate::coordinator::QosClass`]), deadline-budgeted SRDS
 //!   requests degrade to their best completed Parareal iterate, and
 //!   per-class occupancy/latency lanes ride [`engine::EngineStats`].
+//!   Serving submissions ([`engine::Engine::submit_serving`]) can
+//!   stream: each completed anytime iterate fans out through an
+//!   [`engine::ProgressSink`] as a refcount share (the wire's
+//!   `iterate` frames), and a per-request wall-clock timeout
+//!   finalizes SRDS from its newest iterate — or resolves
+//!   [`engine::TaskReply::TimedOut`] for kinds with no anytime
+//!   anchor.
 //!   Determinism makes work sharing legal: identical in-flight
 //!   submissions coalesce into one resident task (fanned-out
 //!   bit-identical replies), and a QoS-aware LRU of finished coarse
@@ -49,8 +56,11 @@ pub mod router;
 pub mod simclock;
 pub mod task;
 
-pub use engine::{ClassLane, Engine, EngineConfig, EngineStats, LoadGauge, StatsHandle, StealMesh};
+pub use engine::{
+    ClassLane, Engine, EngineConfig, EngineStats, LoadGauge, ProgressSink, StatsHandle, StealMesh,
+    TaskReply,
+};
 pub use router::{default_shards, Router, RouterConfig};
 pub use measured::{measured_pipelined_srds, NativeFactory, WorkerPool};
 pub use simclock::{schedule_tasks, simulate_paradigms, simulate_sequential, simulate_srds, SimReport, SimTask};
-pub use task::{new_task, new_warm_task, Completion, SamplerTask, TaskRow};
+pub use task::{new_task, new_warm_task, Completion, IterateEvent, SamplerTask, TaskRow};

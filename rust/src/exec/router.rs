@@ -37,7 +37,7 @@
 use crate::batching::BatchPolicy;
 use crate::coordinator::{state_hash, QosClass, SampleOutput, SamplerKind, SamplerSpec};
 use crate::exec::engine::{
-    ClassLane, Engine, EngineConfig, EngineStats, StatsHandle, StealMesh,
+    ClassLane, Engine, EngineConfig, EngineStats, ProgressSink, StatsHandle, StealMesh, TaskReply,
 };
 use crate::solvers::{BackendFactory, Solver};
 use std::collections::HashMap;
@@ -342,6 +342,34 @@ impl Router {
         });
     }
 
+    /// The serving layer's streaming/timeout-aware submit: places like
+    /// [`Router::submit_with_alive`], forwards the optional
+    /// [`ProgressSink`] (one call per completed anytime iterate, on the
+    /// executing shard's dispatcher thread), and resolves with a
+    /// [`TaskReply`] so a wall-clock timeout on a kind with no anytime
+    /// iterate surfaces as [`TaskReply::TimedOut`] instead of silence.
+    /// `done` receives the fleet-aggregated [`EngineStats`]; returns
+    /// the chosen shard.
+    // lint: request-path
+    pub fn submit_serving<F>(
+        &self,
+        x0: Vec<f32>,
+        spec: SamplerSpec,
+        alive: Option<Arc<AtomicBool>>,
+        progress: Option<ProgressSink>,
+        done: F,
+    ) -> usize
+    where
+        F: FnOnce(TaskReply, EngineStats) + Send + 'static,
+    {
+        let shard = self.place_affine(&x0, &spec);
+        let view = self.view.clone();
+        self.engines[shard].submit_serving(x0, spec, alive, progress, move |reply, _local| {
+            done(reply, view.aggregate())
+        });
+        shard
+    }
+
     /// Blocking pinned submit (tests / CLI): the reply channel yields
     /// the output when the shard finalizes the task.
     pub fn submit_to(&self, shard: usize, x0: Vec<f32>, spec: SamplerSpec) -> Receiver<SampleOutput> {
@@ -576,6 +604,48 @@ mod tests {
         let other = SamplerSpec::srds(34).with_tol(1e-4).with_seed(801);
         let out = r.run(&prior_sample(64, 801), &other);
         assert_eq!(out.sample, other.run(&native_backend(), &prior_sample(64, 801)).sample);
+    }
+
+    #[test]
+    fn serving_submits_stream_and_time_out_through_placement() {
+        // submit_serving through a 2-shard fleet: a streamed SRDS run
+        // fans out its iterates and finishes bit-identically to the
+        // vanilla run, and a timed-out sequential run resolves with an
+        // explicit TimedOut against the fleet-aggregated stats.
+        let r = router(2, 1, true);
+        let x0 = prior_sample(64, 900);
+        let spec = SamplerSpec::srds(25).with_tol(0.0).with_max_iters(3).with_seed(900);
+        let (ev_tx, ev_rx) = channel();
+        let (tx, rx) = channel();
+        r.submit_serving(
+            x0.clone(),
+            spec.clone().with_stream(),
+            None,
+            Some(Box::new(move |ev| {
+                let _ = ev_tx.send(ev);
+            })),
+            move |reply, agg| {
+                let _ = tx.send((reply, agg));
+            },
+        );
+        let (reply, agg) = rx.recv().expect("serving reply");
+        let TaskReply::Done(out) = reply else { panic!("streamed run must finish") };
+        assert_eq!(out.sample, spec.run(&native_backend(), &x0).sample);
+        assert_eq!(ev_rx.try_iter().count(), out.stats.iters, "one event per iterate");
+        assert_eq!(agg.shards, 2, "callback sees the fleet aggregate");
+        let (tx, rx) = channel();
+        r.submit_serving(
+            prior_sample(64, 901),
+            SamplerSpec::sequential(64).with_seed(901).with_timeout_ms(0),
+            None,
+            None,
+            move |reply, agg| {
+                let _ = tx.send((reply, agg));
+            },
+        );
+        let (reply, agg) = rx.recv().expect("serving reply");
+        assert!(matches!(reply, TaskReply::TimedOut));
+        assert_eq!(agg.per_class.iter().map(|l| l.aborted).sum::<u64>(), 1);
     }
 
     #[test]

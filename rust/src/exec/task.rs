@@ -72,6 +72,23 @@ pub struct Completion {
     pub batch_rows: usize,
 }
 
+/// One completed refinement iterate, published while the task is still
+/// running — the paper's §4 anytime property on the wire: every Parareal
+/// iterate is a valid approximate sample, so a streaming client can use
+/// `sample` the moment it lands. `sample` is a refcount share of the
+/// task's grid cell (grid cells are written once, then read-only), never
+/// a copy; serializing or dropping it on another thread is safe and
+/// recycles into the engine pool as usual.
+#[derive(Clone)]
+pub struct IterateEvent {
+    /// Refinement iteration this sample belongs to (1-based, Alg. 1 `p`).
+    pub iter: usize,
+    /// Convergence-norm distance to the previous iterate.
+    pub residual: f32,
+    /// The iterate's final state `x^p(s = 1)`.
+    pub sample: StateBuf,
+}
+
 /// A sampling request as a dependency-driven state machine. The engine's
 /// dispatcher drives the lifecycle: [`SamplerTask::start`] once, then
 /// [`SamplerTask::poll`] with each batch of completed rows until
@@ -94,6 +111,26 @@ pub trait SamplerTask: Send {
     /// only for speculative samplers); their model evals are attributed
     /// to this request even though the results will be discarded.
     fn charge_stray_rows(&mut self, _rows: u64) {}
+
+    /// Drain iterate-completion events recorded since the last drain.
+    /// The dispatcher calls this after every [`SamplerTask::poll`] and
+    /// fans the events out to streaming followers. Only kinds with the
+    /// anytime anchor publish anything; the default is no progress.
+    fn take_progress(&mut self) -> Vec<IterateEvent> {
+        Vec::new()
+    }
+
+    /// Wall-clock timeout (`SamplerSpec::timeout_ms`) fired: if this
+    /// task can finalize early from already-completed work — SRDS
+    /// truncating to its newest completed iterate, exactly like the
+    /// `deadline_evals` path — it arranges that and returns `true`; the
+    /// dispatcher then lets the chosen iterate's in-flight rows land and
+    /// finalizes normally. `false` (the default) means the kind has no
+    /// valid early answer and the dispatcher must fail the request
+    /// instead.
+    fn force_finish(&mut self) -> bool {
+        false
+    }
 
     /// Harvest the reusable serial prefix of a finished task: for SRDS,
     /// the iteration-0 coarse boundary states `G(x_0), …, G(x_{M-1})` —
@@ -325,6 +362,12 @@ struct SrdsTask {
     /// The anytime eval budget fired: refinement was truncated to the
     /// best completed iterate (see [`SrdsTask::check_deadline`]).
     deadline_hit: bool,
+    /// The wall-clock timeout fired and actually truncated refinement
+    /// (see [`SamplerTask::force_finish`]).
+    timed_out: bool,
+    /// Iterate completions recorded since the last `take_progress` drain
+    /// — only populated when `spec.stream` asks for them.
+    progress: Vec<IterateEvent>,
     inflight_rows: usize,
     total_evals: u64,
     meter: RowMeter,
@@ -354,6 +397,8 @@ impl SrdsTask {
             per_iter: Vec::new(),
             stop_at_iter: None,
             deadline_hit: false,
+            timed_out: false,
+            progress: Vec::new(),
             inflight_rows: 0,
             total_evals: 0,
             meter: RowMeter::default(),
@@ -517,6 +562,11 @@ impl SrdsTask {
                         break;
                     };
                     let residual = self.spec.norm.dist(curf, prevf);
+                    // Streaming: publish the iterate as a refcount share
+                    // of the grid cell — the anytime sample, zero copies.
+                    if self.spec.stream {
+                        self.progress.push(IterateEvent { iter: pp, residual, sample: curf.clone() });
+                    }
                     self.per_iter.push(IterStat { iter: pp, residual, evals: 0 });
                     if residual < self.spec.tol || pp >= self.m {
                         self.stop_at_iter = Some(pp);
@@ -602,6 +652,27 @@ impl SamplerTask for SrdsTask {
         self.total_evals += rows * self.epc;
     }
 
+    fn take_progress(&mut self) -> Vec<IterateEvent> {
+        std::mem::take(&mut self.progress)
+    }
+
+    /// Wall-clock analogue of [`SrdsTask::check_deadline`]: converge on
+    /// the newest iterate whose residual is already recorded (possibly
+    /// the coarse init). Same honesty rule — `timed_out` is only set
+    /// when the timeout actually truncated refinement; expiring during
+    /// the speculative tail, or after convergence already fired, reports
+    /// nothing. Always returns `true`: SRDS can finalize from any
+    /// completed iterate.
+    fn force_finish(&mut self) -> bool {
+        if self.stop_at_iter.is_none() {
+            if self.per_iter.len() < self.max_iters {
+                self.timed_out = true;
+            }
+            self.stop_at_iter = Some(self.per_iter.len());
+        }
+        true
+    }
+
     /// The iteration-0 boundary states, shared by refcount — for a warm
     /// task these are the very buffers the cache handed in, so
     /// re-stocking the cache refreshes recency without duplicating a
@@ -670,6 +741,7 @@ impl SamplerTask for SrdsTask {
             iters: final_iter,
             converged,
             deadline_hit: self.deadline_hit,
+            timed_out: self.timed_out,
             eff_serial_evals: eff_serial,
             eff_serial_evals_pipelined: eff_pipelined,
             total_evals: self.total_evals,
@@ -865,7 +937,10 @@ impl SamplerTask for ParadigmsTask {
             // ParaDiGMS ignores the anytime budget: its sliding-window
             // Picard truncation has no serial-equivalence anchor — a
             // half-converged window is not a valid sample of anything.
+            // (Same for the wall-clock timeout: the dispatcher fails the
+            // request instead of truncating, see `force_finish`.)
             deadline_hit: false,
+            timed_out: false,
             eff_serial_evals: self.sweeps as u64 * self.epc,
             eff_serial_evals_pipelined: self.sweeps as u64 * self.epc,
             total_evals: self.total_evals,
@@ -1058,6 +1133,7 @@ impl SamplerTask for ParataaTask {
             // to truncate onto (an Anderson-mixed iterate is a solver
             // accelerant, not a serial-equivalent sample).
             deadline_hit: false,
+            timed_out: false,
             eff_serial_evals: self.iters as u64 * self.epc,
             eff_serial_evals_pipelined: self.iters as u64 * self.epc,
             total_evals: self.total_evals,
@@ -1441,5 +1517,192 @@ mod tests {
             run(new_warm_task(&x0, &seq, &pool, epc, vec![pool.take(&x0)]));
         assert!(no_spine.is_none(), "sequential tasks have no spine");
         assert_eq!(cold.sample, drive(&be, &x0, &seq).sample);
+    }
+
+    /// `drive`, draining [`SamplerTask::take_progress`] after every poll
+    /// round — the dispatcher's streaming loop, synchronously.
+    fn drive_streaming(
+        backend: &dyn StepBackend,
+        x0: &[f32],
+        spec: &SamplerSpec,
+    ) -> (SampleOutput, Vec<IterateEvent>) {
+        let pool = BufPool::new();
+        let mut task = new_task(x0, spec, &pool, backend.evals_per_step() as u64);
+        let mut rows = task.start();
+        let mut events = task.take_progress();
+        while !rows.is_empty() {
+            let done: Vec<Completion> = rows
+                .drain(..)
+                .map(|r| {
+                    let mut out = pool.get(r.x.len());
+                    backend.step_into(
+                        &StepRequest {
+                            x: &r.x,
+                            s_from: &[r.s_from],
+                            s_to: &[r.s_to],
+                            mask: spec.cond.mask_slice(),
+                            guidance: spec.cond.guidance,
+                            seeds: &[spec.seed],
+                        },
+                        out.as_mut_slice(),
+                    );
+                    Completion { key: r.key, out, batch_rows: 1 }
+                })
+                .collect();
+            rows = task.poll(done);
+            events.extend(task.take_progress());
+        }
+        assert!(task.finished());
+        (task.finalize(), events)
+    }
+
+    #[test]
+    fn streaming_task_publishes_every_completed_iterate() {
+        // The anytime property as a stream: a τ = 0 run records exactly
+        // max_iters iterate events, in order, and each event's sample is
+        // bit-identical to the corresponding entry of the keep_iterates
+        // trail (events share the same grid cells by refcount).
+        let be = backend();
+        let x0 = prior_sample(64, 23);
+        let full = crate::coordinator::srds(
+            &be,
+            &x0,
+            &SamplerSpec::srds(25).with_tol(0.0).with_max_iters(4).with_iterates().with_seed(23),
+        );
+        let spec = SamplerSpec::srds(25).with_tol(0.0).with_max_iters(4).with_stream().with_seed(23);
+        let (out, events) = drive_streaming(&be, &x0, &spec);
+        assert_eq!(events.len(), out.stats.iters, "one event per refinement");
+        for (k, ev) in events.iter().enumerate() {
+            assert_eq!(ev.iter, k + 1, "events arrive in iteration order");
+            assert!(ev.residual.is_finite());
+            assert_eq!(ev.residual, out.stats.per_iter[k].residual);
+            // iterates[0] is the coarse init; iterate p sits at index p.
+            assert_eq!(ev.sample.to_vec(), full.iterates[k + 1]);
+        }
+        assert_eq!(
+            events.last().unwrap().sample.to_vec(),
+            out.sample,
+            "the final iterate event IS the final sample"
+        );
+        // Streaming never changes numerics.
+        let plain = drive(&be, &x0, &SamplerSpec::srds(25).with_tol(0.0).with_max_iters(4).with_seed(23));
+        assert_eq!(out.sample, plain.sample);
+        assert_eq!(out.stats.iters, plain.stats.iters);
+    }
+
+    #[test]
+    fn non_streaming_tasks_record_no_progress() {
+        let be = backend();
+        let x0 = prior_sample(64, 29);
+        let (_, events) =
+            drive_streaming(&be, &x0, &SamplerSpec::srds(25).with_tol(0.0).with_max_iters(3).with_seed(29));
+        assert!(events.is_empty(), "progress is opt-in via spec.stream");
+        for kind in ["sequential", "paradigms", "parataa"] {
+            let s = registry().parse(kind).unwrap();
+            let spec = SamplerSpec::for_kind(16, s.kind()).with_tol(1e-4).with_stream().with_seed(29);
+            let (_, events) = drive_streaming(&be, &x0, &spec);
+            assert!(events.is_empty(), "{kind}: no anytime anchor, no progress events");
+        }
+    }
+
+    #[test]
+    fn force_finish_truncates_to_newest_iterate_honestly() {
+        // Timeout before any refinement completed: the task converges on
+        // the coarse init (iterate 0), reports timed_out + !converged,
+        // and the sample is exactly the untruncated run's iterate 0.
+        let be = backend();
+        let x0 = prior_sample(64, 31);
+        let full = crate::coordinator::srds(
+            &be,
+            &x0,
+            &SamplerSpec::srds(25).with_tol(0.0).with_max_iters(4).with_iterates().with_seed(31),
+        );
+        let spec = SamplerSpec::srds(25).with_tol(0.0).with_max_iters(4).with_seed(31);
+        let pool = BufPool::new();
+        let mut task = new_task(&x0, &spec, &pool, be.evals_per_step() as u64);
+        let mut rows = task.start();
+        assert!(task.force_finish(), "SRDS always has an anytime answer");
+        // The chosen iterate's remaining rows still run (a target, not a
+        // hard wall): drive until the task can finalize.
+        while !rows.is_empty() && !task.finished() {
+            let done: Vec<Completion> = rows
+                .drain(..)
+                .map(|r| {
+                    let mut out = pool.get(r.x.len());
+                    be.step_into(
+                        &StepRequest {
+                            x: &r.x,
+                            s_from: &[r.s_from],
+                            s_to: &[r.s_to],
+                            mask: None,
+                            guidance: 0.0,
+                            seeds: &[spec.seed],
+                        },
+                        out.as_mut_slice(),
+                    );
+                    Completion { key: r.key, out, batch_rows: 1 }
+                })
+                .collect();
+            rows = task.poll(done);
+        }
+        assert!(task.finished());
+        let out = task.finalize();
+        assert!(out.stats.timed_out, "refinement was actually cut short");
+        assert!(!out.stats.converged);
+        assert_eq!(out.stats.iters, 0);
+        assert_eq!(out.sample, full.iterates[0], "iterate 0 is the coarse init");
+    }
+
+    #[test]
+    fn force_finish_after_convergence_is_not_a_timeout() {
+        // Expiry after the convergence test already fired truncates
+        // nothing — the honest path reports a plain converged run.
+        let be = backend();
+        let x0 = prior_sample(64, 37);
+        let spec = SamplerSpec::srds(25).with_tol(1e-4).with_seed(37);
+        let plain = drive(&be, &x0, &spec);
+        let pool = BufPool::new();
+        let mut task = new_task(&x0, &spec, &pool, be.evals_per_step() as u64);
+        let mut rows = task.start();
+        while !rows.is_empty() {
+            let done: Vec<Completion> = rows
+                .drain(..)
+                .map(|r| {
+                    let mut out = pool.get(r.x.len());
+                    be.step_into(
+                        &StepRequest {
+                            x: &r.x,
+                            s_from: &[r.s_from],
+                            s_to: &[r.s_to],
+                            mask: None,
+                            guidance: 0.0,
+                            seeds: &[spec.seed],
+                        },
+                        out.as_mut_slice(),
+                    );
+                    Completion { key: r.key, out, batch_rows: 1 }
+                })
+                .collect();
+            rows = task.poll(done);
+        }
+        assert!(task.finished());
+        assert!(task.force_finish());
+        let out = task.finalize();
+        assert!(!out.stats.timed_out, "no work was lost — not a timeout");
+        assert_eq!(out.sample, plain.sample);
+        assert_eq!(out.stats.converged, plain.stats.converged);
+    }
+
+    #[test]
+    fn kinds_without_the_anytime_anchor_refuse_force_finish() {
+        let x0 = prior_sample(64, 41);
+        let pool = BufPool::new();
+        for kind in ["sequential", "paradigms", "parataa"] {
+            let s = registry().parse(kind).unwrap();
+            let spec = SamplerSpec::for_kind(16, s.kind()).with_seed(41);
+            let mut task = new_task(&x0, &spec, &pool, 1);
+            let _ = task.start();
+            assert!(!task.force_finish(), "{kind}: no valid early answer to truncate onto");
+        }
     }
 }

@@ -1,0 +1,392 @@
+//! Lazy field-scanning request reader.
+//!
+//! [`LazyObj::parse`] makes exactly one allocation-free structural pass
+//! over a request line: it validates the whole line as strictly as
+//! [`super::parse`] does (same whitespace set, same escape and surrogate
+//! rules, numbers checked through `f64::from_str`), but builds no tree —
+//! it only records the byte spans of the top-level fields. Field access
+//! ([`LazyObj::get`] / [`LazyObj::num`]) then runs the full parser over
+//! just the requested value span, so a request kind pays tree-building
+//! cost only for the handful of fields it actually reads. On serving
+//! request lines, where most fields of most requests are never touched
+//! (`kind:"stats"` probes read one field of a line that may carry a
+//! whole conditioning block), partial extraction is an order of
+//! magnitude cheaper than the tree parse.
+//!
+//! Two invariants keep this honest, both pinned by `tests/wire_fuzz.rs`:
+//!
+//! * **Acceptance parity** — `LazyObj::parse(s)` succeeds if and only if
+//!   `super::parse(s)` succeeds *and* yields a top-level object (the
+//!   wire protocol requires object request lines). The skip-scanner
+//!   mirrors every validation the tree parser performs, including
+//!   `f64`-parsing each number span and checking `\u` escapes,
+//!   surrogate pairing, and codepoint validity.
+//! * **Extraction parity** — for every accepted line and every key,
+//!   `lazy.get(key)` equals the tree parse's `obj[key]`; duplicate keys
+//!   resolve to the last occurrence, matching `BTreeMap::insert`.
+
+use super::Value;
+use crate::Result;
+
+/// One top-level field: byte spans of its key (including quotes) and
+/// value (trimmed of surrounding whitespace) within the source line.
+#[derive(Clone, Copy)]
+struct Field {
+    key_start: usize,
+    key_end: usize,
+    val_start: usize,
+    val_end: usize,
+}
+
+/// A validated top-level JSON object over a borrowed request line.
+pub struct LazyObj<'a> {
+    src: &'a str,
+    fields: Vec<Field>,
+}
+
+impl<'a> LazyObj<'a> {
+    /// Validate `text` as a single top-level JSON object (with the exact
+    /// strictness of [`super::parse`], including the trailing-garbage
+    /// check) and index its top-level fields without building values.
+    pub fn parse(text: &'a str) -> Result<LazyObj<'a>> {
+        let mut s = Scan { b: text.as_bytes(), i: 0 };
+        s.ws();
+        anyhow::ensure!(s.peek() == Some(b'{'), "request must be a JSON object");
+        s.i += 1;
+        let mut fields = Vec::new();
+        s.ws();
+        if s.peek() == Some(b'}') {
+            s.i += 1;
+        } else {
+            loop {
+                s.ws();
+                let key_start = s.i;
+                s.skip_string()?;
+                let key_end = s.i;
+                s.ws();
+                s.eat(b':')?;
+                s.ws();
+                let val_start = s.i;
+                s.skip_value()?;
+                fields.push(Field { key_start, key_end, val_start, val_end: s.i });
+                s.ws();
+                match s.peek() {
+                    Some(b',') => s.i += 1,
+                    Some(b'}') => {
+                        s.i += 1;
+                        break;
+                    }
+                    _ => anyhow::bail!("expected ',' or '}}' in object"),
+                }
+            }
+        }
+        s.ws();
+        anyhow::ensure!(s.i == s.b.len(), "trailing garbage");
+        Ok(LazyObj { src: text, fields })
+    }
+
+    /// The last field whose (unescaped) key equals `key` — last, because
+    /// the tree parser's `BTreeMap::insert` makes later duplicates win.
+    fn find(&self, key: &str) -> Option<Field> {
+        self.fields.iter().rev().find(|f| self.key_matches(f, key)).copied()
+    }
+
+    fn key_matches(&self, f: &Field, key: &str) -> bool {
+        let raw = &self.src[f.key_start + 1..f.key_end - 1];
+        if !raw.contains('\\') {
+            return raw == key;
+        }
+        // Escaped key: fall back to the tree parser on the key span.
+        matches!(super::parse(&self.src[f.key_start..f.key_end]), Ok(Value::Str(s)) if s == key)
+    }
+
+    /// Whether a top-level field named `key` is present.
+    pub fn has(&self, key: &str) -> bool {
+        self.find(key).is_some()
+    }
+
+    /// Parse and return the value of `key`, if present. Only this span
+    /// is tree-parsed; the rest of the line stays untouched.
+    pub fn get(&self, key: &str) -> Option<Value> {
+        let f = self.find(key)?;
+        // The span was already validated by the structural scan, so this
+        // cannot fail; going through the tree parser pins extraction
+        // semantics to `super::parse` by construction.
+        super::parse(&self.src[f.val_start..f.val_end]).ok()
+    }
+
+    /// Numeric field accessor (`None` if absent or not a number).
+    pub fn num(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.as_f64())
+    }
+
+    /// The unescaped top-level key names, in source order (duplicates
+    /// included). Used by the strict-mode unknown-key check.
+    pub fn keys(&self) -> impl Iterator<Item = String> + '_ {
+        self.fields.iter().map(|f| {
+            let raw = &self.src[f.key_start + 1..f.key_end - 1];
+            if !raw.contains('\\') {
+                return raw.to_string();
+            }
+            match super::parse(&self.src[f.key_start..f.key_end]) {
+                Ok(Value::Str(s)) => s,
+                _ => raw.to_string(), // unreachable: span validated
+            }
+        })
+    }
+}
+
+/// Structural skip-scanner. Each `skip_*` consumes exactly the bytes the
+/// corresponding [`super::Parser`] method would, and fails on exactly
+/// the inputs it would fail on.
+struct Scan<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Scan<'_> {
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        anyhow::ensure!(self.peek() == Some(c), "expected {:?}", c as char);
+        self.i += 1;
+        Ok(())
+    }
+
+    fn skip_value(&mut self) -> Result<()> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.skip_object(),
+            Some(b'[') => self.skip_array(),
+            Some(b'"') => self.skip_string(),
+            Some(b't') => self.lit("true"),
+            Some(b'f') => self.lit("false"),
+            Some(b'n') => self.lit("null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.skip_number(),
+            other => anyhow::bail!("unexpected token {:?}", other.map(|c| c as char)),
+        }
+    }
+
+    fn lit(&mut self, s: &str) -> Result<()> {
+        anyhow::ensure!(self.b[self.i..].starts_with(s.as_bytes()), "bad literal");
+        self.i += s.len();
+        Ok(())
+    }
+
+    fn skip_object(&mut self) -> Result<()> {
+        self.eat(b'{')?;
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.skip_string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.skip_value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => anyhow::bail!("expected ',' or '}}' in object"),
+            }
+        }
+    }
+
+    fn skip_array(&mut self) -> Result<()> {
+        self.eat(b'[')?;
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => anyhow::bail!("expected ',' or ']' in array"),
+            }
+        }
+    }
+
+    /// Mirror of `Parser::string` without building the `String`: same
+    /// escape set, same `\u` handling (hex, surrogate pairing, codepoint
+    /// validity), same tolerance for raw control bytes. Multi-byte UTF-8
+    /// advances by the lead byte's length — the source is `&str`, so the
+    /// tree parser's `from_utf8` re-check can never fail here.
+    fn skip_string(&mut self) -> Result<()> {
+        self.eat(b'"')?;
+        loop {
+            let c = self.peek().ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(()),
+                b'\\' => {
+                    let e = self.peek().ok_or_else(|| anyhow::anyhow!("bad escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' => {}
+                        b'u' => {
+                            let code = self.hex4()?;
+                            let ch = if (0xD800..0xDC00).contains(&code) {
+                                anyhow::ensure!(
+                                    self.b.get(self.i) == Some(&b'\\')
+                                        && self.b.get(self.i + 1) == Some(&b'u'),
+                                    "lone high surrogate"
+                                );
+                                self.i += 2;
+                                let low = self.hex4()?;
+                                anyhow::ensure!((0xDC00..0xE000).contains(&low), "bad low surrogate");
+                                char::from_u32(0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00))
+                            } else {
+                                char::from_u32(code)
+                            };
+                            anyhow::ensure!(ch.is_some(), "bad codepoint");
+                        }
+                        _ => anyhow::bail!("bad escape"),
+                    }
+                }
+                _ => self.i = self.i - 1 + super::utf8_len(c),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        anyhow::ensure!(self.i + 4 <= self.b.len(), "bad \\u escape");
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+        let code = u32::from_str_radix(hex, 16)?;
+        self.i += 4;
+        Ok(code)
+    }
+
+    /// Mirror of `Parser::number`: greedy consume over the number
+    /// alphabet, then validate the whole span through `f64::from_str`.
+    fn skip_number(&mut self) -> Result<()> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .map(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        s.parse::<f64>()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+
+    #[test]
+    fn extracts_only_requested_fields() {
+        let line = r#"{"id": 7, "sampler": "srds", "n": 25, "tol": 2.5e-3, "stream": true}"#;
+        let o = LazyObj::parse(line).unwrap();
+        assert_eq!(o.num("id"), Some(7.0));
+        assert_eq!(o.num("tol"), Some(2.5e-3));
+        assert_eq!(o.get("sampler").unwrap().as_str().unwrap(), "srds");
+        assert_eq!(o.get("stream").unwrap().as_bool(), Some(true));
+        assert!(o.get("missing").is_none());
+        assert!(o.has("n") && !o.has("kind"));
+    }
+
+    #[test]
+    fn nested_values_are_single_spans() {
+        let line = r#"{"cond": {"class": 3, "w": [1, 2.5]}, "id": 1}"#;
+        let o = LazyObj::parse(line).unwrap();
+        let cond = o.get("cond").unwrap();
+        assert_eq!(cond.get("class").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(cond.get("w").unwrap().as_f32_vec().unwrap(), vec![1.0, 2.5]);
+        assert_eq!(o.num("id"), Some(1.0));
+    }
+
+    #[test]
+    fn duplicate_keys_resolve_to_the_last_occurrence() {
+        let line = r#"{"n": 1, "n": 2}"#;
+        let o = LazyObj::parse(line).unwrap();
+        assert_eq!(o.num("n"), Some(2.0));
+        // Same answer as the tree parser.
+        assert_eq!(parse(line).unwrap().get("n").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn escaped_keys_unescape_before_matching() {
+        let line = "{\"a\\u0062c\": 5}";
+        let o = LazyObj::parse(line).unwrap();
+        assert_eq!(o.num("abc"), Some(5.0));
+        assert_eq!(o.keys().collect::<Vec<_>>(), vec!["abc".to_string()]);
+    }
+
+    #[test]
+    fn keys_come_back_in_source_order() {
+        let o = LazyObj::parse(r#"{"z": 1, "a": 2, "m": 3}"#).unwrap();
+        assert_eq!(o.keys().collect::<Vec<_>>(), vec!["z", "a", "m"]);
+    }
+
+    #[test]
+    fn rejects_what_the_tree_parser_rejects() {
+        for bad in [
+            "",
+            "{",
+            r#"{"a": }"#,
+            r#"{"a": 1,}"#,
+            r#"{"a" 1}"#,
+            r#"{"a": 1} extra"#,
+            r#"{"a": 01e}"#,
+            r#"{"a": "\q"}"#,
+            r#"{"a": "\uD800x"}"#,
+            r#"{"a": "unterminated"#,
+            r#"{"a": [1, 2}"#,
+        ] {
+            assert!(LazyObj::parse(bad).is_err(), "accepted {bad:?}");
+            assert!(parse(bad).is_err(), "tree parser accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_valid_non_object_lines() {
+        for doc in ["42", r#""str""#, "[1, 2]", "null", "true"] {
+            assert!(parse(doc).is_ok());
+            assert!(LazyObj::parse(doc).is_err(), "accepted non-object {doc:?}");
+        }
+    }
+
+    #[test]
+    fn empty_object_parses_with_no_fields() {
+        let o = LazyObj::parse("  { }  ").unwrap();
+        assert_eq!(o.keys().count(), 0);
+        assert!(!o.has("anything"));
+    }
+
+    #[test]
+    fn unicode_and_surrogates_match_tree_semantics() {
+        let line = r#"{"s": "é 𝄞 é"}"#;
+        let o = LazyObj::parse(line).unwrap();
+        let tree = parse(line).unwrap();
+        assert_eq!(o.get("s").unwrap().as_str(), tree.get("s").unwrap().as_str());
+    }
+}

@@ -1,10 +1,18 @@
-//! Minimal JSON substrate (parser + writer).
+//! Minimal JSON substrate (parser + writer + lazy request reader).
 //!
 //! The build environment is offline with no `serde` in the vendored crate
 //! set, so the artifact manifest, golden vectors, and the serving
 //! protocol use this in-tree implementation: a strict recursive-descent
 //! parser over the JSON grammar plus a compact writer. Only what the repo
 //! needs — no datetime/arbitrary-precision extensions.
+//!
+//! The serving hot path does not build the tree at all: [`lazy::LazyObj`]
+//! is a field-scanning reader that validates a request line structurally
+//! in one pass and re-parses only the value spans a request kind actually
+//! asks for. Its acceptance set is pinned to [`parse`]'s (restricted to
+//! top-level objects) by the `wire_fuzz` suite.
+
+pub mod lazy;
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -205,16 +213,22 @@ impl<'a> Parser<'a> {
                             let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
                             let code = u32::from_str_radix(hex, 16)?;
                             self.i += 4;
-                            // Surrogate pairs: join with the low half.
+                            // Surrogate pairs: join with the low half. The
+                            // low half must itself be a low surrogate —
+                            // anything else is an error line, never an
+                            // arithmetic underflow (this parser faces the
+                            // wire, so malformed escapes must not panic).
                             let ch = if (0xD800..0xDC00).contains(&code) {
                                 anyhow::ensure!(
                                     self.b.get(self.i) == Some(&b'\\') && self.b.get(self.i + 1) == Some(&b'u'),
                                     "lone high surrogate"
                                 );
                                 self.i += 2;
+                                anyhow::ensure!(self.i + 4 <= self.b.len(), "bad \\u escape");
                                 let hex2 = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
                                 let low = u32::from_str_radix(hex2, 16)?;
                                 self.i += 4;
+                                anyhow::ensure!((0xDC00..0xE000).contains(&low), "bad low surrogate");
                                 char::from_u32(0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00))
                             } else {
                                 char::from_u32(code)
@@ -252,7 +266,7 @@ impl<'a> Parser<'a> {
     }
 }
 
-fn utf8_len(first: u8) -> usize {
+pub(crate) fn utf8_len(first: u8) -> usize {
     match first {
         0x00..=0x7F => 1,
         0xC0..=0xDF => 2,

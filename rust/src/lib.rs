@@ -16,6 +16,13 @@
 //!   engine-native sampler task ([`exec::task`]: each of the four
 //!   registered samplers is a dispatcher-resident state machine — no
 //!   per-request threads exist anywhere on the serving path). The
+//!   serving loop speaks the versioned wire protocol (DESIGN.md "Wire
+//!   protocol v1"): the legacy single-frame dialect byte-for-byte at
+//!   `v: 0`, and at `v: 1` typed frames — including `"stream": true`
+//!   requests that publish every completed Parareal iterate as an
+//!   `iterate` frame (the paper's anytime property on the wire) and
+//!   per-request `timeout_ms` wall-clock budgets that finalize SRDS
+//!   from its newest iterate. The
 //!   engine schedules by QoS class
 //!   ([`coordinator::QosClass`]: weighted deficit-round-robin lanes in
 //!   [`batching`] so no tenant starves another, anytime eval budgets
@@ -50,8 +57,10 @@
 //! binary is self-contained.
 //!
 //! See `DESIGN.md` at the repository root for the layer inventory, the
-//! `Sampler` trait / registry design, and the JSON wire protocol; the
-//! benches under `rust/benches/` print the paper-vs-measured tables.
+//! `Sampler` trait / registry design, and the "Wire protocol v1"
+//! section (request/frame schemas, version negotiation, the streaming
+//! lifecycle); the benches under `rust/benches/` print the
+//! paper-vs-measured tables.
 //!
 //! The contracts above are not just prose: `tools/srds-lint` (a
 //! standalone, dependency-free analyzer run in CI) mechanically checks

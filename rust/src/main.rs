@@ -39,6 +39,14 @@
 //! identical concurrent requests (on by default; coalesced duplicates
 //! share one run and fan out bit-identical responses).
 //!
+//! The serving loop speaks wire protocol v1 (DESIGN.md "Wire protocol
+//! v1"): requests carrying `"v": 1` get typed response frames, may set
+//! `"stream": true` (SRDS only) to receive every completed anytime
+//! iterate as an `iterate` frame before the final, and may set
+//! `"timeout_ms"` for a per-request wall-clock budget enforced in the
+//! engine dispatcher. Requests without `"v"` keep the exact legacy
+//! single-frame responses — no client migration required.
+//!
 //! `--sampler` accepts any name from `coordinator::api::registry()`;
 //! `srds info` lists them. (Argument parsing is in-tree: the offline
 //! vendored crate set has no clap.)
@@ -110,6 +118,7 @@ fn cmd_info() -> srds::Result<()> {
     }
     println!("native datasets: church bedroom imagenet64 cifar latent_cond toy2d");
     println!("samplers: {}", registry().list().join(" "));
+    println!("wire protocol: v0 (legacy single-frame), v1 (framed; streaming + timeout_ms)");
     Ok(())
 }
 

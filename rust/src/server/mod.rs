@@ -1,14 +1,29 @@
 //! JSON-line sampling server — the L3 request path.
 //!
-//! Protocol (one JSON object per line, over TCP; see DESIGN.md for the
-//! full field table):
+//! Protocol (one JSON object per line, over TCP; see DESIGN.md's
+//! "Wire protocol v1" section for the full frame grammar and field
+//! tables):
 //!
 //! ```json
-//! {"id": 1, "sampler": "srds", "n": 25, "class": 2, "guidance": 7.5,
-//!  "seed": 42, "tol": 0.0025, "max_iters": 3, "block": 5,
-//!  "window": 32, "history": 2, "norm": "l1_mean",
-//!  "priority": "interactive", "deadline": 120}
+//! {"v": 1, "id": 1, "sampler": "srds", "n": 25, "class": 2,
+//!  "guidance": 7.5, "seed": 42, "tol": 0.0025, "max_iters": 3,
+//!  "block": 5, "window": 32, "history": 2, "norm": "l1_mean",
+//!  "priority": "interactive", "deadline": 120, "timeout_ms": 250,
+//!  "stream": true}
 //! ```
+//!
+//! `"v"` is the protocol version. Absent (or `0`) selects the legacy
+//! single-frame dialect: exactly one response object per request, with
+//! the historical key set — existing clients never see a new envelope.
+//! `"v": 1` selects the framed dialect: every response line carries
+//! `{"v": 1, "frame": "ack"|"iterate"|"final"|"error"|"stats", ...}`,
+//! unknown top-level request keys become strict errors
+//! (`kind: "unknown_field"`), and `"stream": true` is allowed.
+//! Request lines are scanned by the lazy field reader
+//! ([`crate::json::lazy::LazyObj`]) — field spans are located without
+//! building a tree, and only the handful of scalar knobs the server
+//! reads are ever materialized; acceptance is bit-compatible with the
+//! full parser.
 //!
 //! `sampler` must name an entry of [`registry`] — unknown names are
 //! rejected with an `ok: false` error line rather than silently falling
@@ -20,7 +35,28 @@
 //! is the anytime eval budget (model evals) after which SRDS finalizes
 //! from its best completed iterate (`deadline_hit: true` in the
 //! response) — unset requests inherit
-//! [`ServeConfig::default_deadline`].
+//! [`ServeConfig::default_deadline`]. `timeout_ms` is the wall-clock
+//! twin, enforced by the owning shard dispatcher: when it expires, an
+//! SRDS request finalizes from its newest completed iterate
+//! (`timed_out: true` in the response, honestly reported next to
+//! `converged: false`), and a sampler with no anytime iterate to fall
+//! back on gets a `kind: "timeout"` error frame instead.
+//!
+//! `"stream": true` (v1, SRDS only) turns the anytime property into
+//! wire traffic. The lifecycle is `ack`, then one `iterate` frame per
+//! completed Parareal refinement — each a *valid sample*, published
+//! zero-copy from the engine as a refcounted state-buffer share — then
+//! exactly one terminal `final` (or `error`) frame:
+//!
+//! ```json
+//! {"v": 1, "frame": "ack", "id": 1, "ok": true, "sampler": "srds", "stream": true}
+//! {"v": 1, "frame": "iterate", "id": 1, "ok": true, "iter": 1, "residual": 0.31, "sample": [...]}
+//! {"v": 1, "frame": "final", "id": 1, "ok": true, "iters": 2, ...}
+//! ```
+//!
+//! A client that disconnects mid-stream aborts the request inside the
+//! engine (liveness flag → dispatcher reap), exactly like the
+//! non-streaming path.
 //!
 //! Response line:
 //!
@@ -76,12 +112,16 @@
 //! computing results nobody will read. Python is never involved.
 
 use crate::batching::BatchPolicy;
+use crate::buf::StateBuf;
 use crate::coordinator::{
-    prior_sample, registry, Conditioning, ConvNorm, QosClass, SampleOutput, SamplerSpec,
+    prior_sample, registry, Conditioning, ConvNorm, QosClass, SampleOutput, SamplerKind,
+    SamplerSpec,
 };
 use crate::data::make_gmm;
-use crate::exec::{Engine, EngineStats, Router, RouterConfig};
-use crate::json::{self, Value};
+use crate::exec::{
+    Engine, EngineStats, IterateEvent, ProgressSink, Router, RouterConfig, TaskReply,
+};
+use crate::json::{self, lazy::LazyObj, Value};
 use crate::solvers::{BackendFactory, StepBackend};
 use crate::Result;
 use std::collections::HashMap;
@@ -95,6 +135,10 @@ use std::time::Duration;
 /// [`SamplerSpec`] knob the wire protocol exposes.
 #[derive(Debug, Clone)]
 pub struct SampleRequest {
+    /// Protocol version (`"v"` on the wire): 0/absent = legacy
+    /// single-frame dialect, 1 = framed dialect (envelope on every
+    /// response, strict unknown-key rejection, streaming allowed).
+    pub v: u64,
     pub id: u64,
     pub sampler: String,
     pub n: usize,
@@ -121,40 +165,110 @@ pub struct SampleRequest {
     /// serve loop; an explicit `Some(0)` means *unbudgeted* — the
     /// client's opt-out from the server default.
     pub deadline: Option<u64>,
+    /// Wall-clock budget (`"timeout_ms"` on the wire), enforced by the
+    /// owning shard dispatcher. On expiry SRDS finalizes from its
+    /// newest completed iterate (`timed_out: true` on the response);
+    /// kinds with no anytime iterate fail with a `timeout` error
+    /// frame. `Some(0)` is legal and expires before the first model
+    /// eval — the probe for "what does the coarse init look like".
+    pub timeout_ms: Option<u64>,
+    /// `"stream": true` (v1 + SRDS only): publish every completed
+    /// refinement as an `iterate` frame before the terminal `final`.
+    pub stream: bool,
     pub return_sample: bool,
     /// Return the per-refinement final-sample iterates too.
     pub return_iterates: bool,
 }
 
+/// Every top-level key the request parser understands. Under `"v"` >= 1
+/// the parser is strict: a key outside this set is rejected with a
+/// `kind: "unknown_field"` error instead of being silently ignored —
+/// a misspelled `"timeout_ms"` must not become an unbudgeted request.
+/// (v0 keeps the historical tolerant behavior.)
+const KNOWN_KEYS: [&str; 20] = [
+    "v",
+    "id",
+    "kind",
+    "sampler",
+    "n",
+    "class",
+    "guidance",
+    "seed",
+    "tol",
+    "norm",
+    "max_iters",
+    "block",
+    "window",
+    "history",
+    "priority",
+    "deadline",
+    "timeout_ms",
+    "stream",
+    "sample",
+    "iterates",
+];
+
 impl SampleRequest {
+    /// Parse a request off the lazy field reader: the line was
+    /// structurally scanned once, and only the scalar knobs listed here
+    /// are ever materialized into [`Value`]s — the dominant cost of the
+    /// old tree parser (allocating every field of every request, used
+    /// or not) is gone. Acceptance is bit-compatible with
+    /// [`crate::json::parse`] on object lines.
     // lint: request-path
-    pub fn from_json(v: &Value) -> Result<Self> {
-        let num = |k: &str, default: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(default);
+    pub fn from_json(o: &LazyObj) -> std::result::Result<Self, WireError> {
+        let num = |k: &str, default: f64| o.num(k).unwrap_or(default);
+        let id = num("id", 0.0) as u64;
+        // Version gate first: every later error can then be blamed on a
+        // version the server actually speaks.
+        let v = match o.num("v") {
+            None => 0,
+            Some(x) if x == 0.0 => 0,
+            Some(x) if x == 1.0 => 1,
+            Some(x) => {
+                return Err(WireError::invalid(
+                    id,
+                    format!("unsupported protocol version {x} (supported: 0, 1)"),
+                ))
+            }
+        };
+        // Strict mode rides the version opt-in: a v1 client asked for
+        // the checked dialect, so a key outside the schema is an error,
+        // not a silent no-op. v0 keeps the historical tolerance.
+        if v >= 1 {
+            if let Some(k) = o.keys().find(|k| !KNOWN_KEYS.contains(&k.as_str())) {
+                return Err(WireError::unknown_field(id, &k));
+            }
+        }
         // "kind" selects the request flavor: absent or "sample" is a
         // sampling request (this parser); "stats" is the engine-snapshot
         // probe, which the serving entry points intercept *before*
         // from_json — one reaching here means the caller has no engine
         // to snapshot.
-        match v.get("kind").and_then(|x| x.as_str()) {
+        match o.get("kind").and_then(|x| x.as_str().map(str::to_string)).as_deref() {
             None | Some("sample") => {}
             Some(k) => {
-                return Err(anyhow::anyhow!(
-                    "unsupported kind {k:?} here (\"sample\"; \"stats\" is served by \
-                     engine-backed endpoints)"
+                return Err(WireError::invalid(
+                    id,
+                    format!(
+                        "unsupported kind {k:?} here (\"sample\"; \"stats\" is served by \
+                         engine-backed endpoints)"
+                    ),
                 ))
             }
         }
-        let norm = match v.get("norm").and_then(|x| x.as_str()) {
+        let norm = match o.get("norm").and_then(|x| x.as_str().map(str::to_string)) {
             None => ConvNorm::L1Mean,
-            Some(s) => ConvNorm::parse(s)
-                .ok_or_else(|| anyhow::anyhow!("unknown norm {s:?} (l1_mean/l2_mean/linf)"))?,
+            Some(s) => ConvNorm::parse(&s).ok_or_else(|| {
+                WireError::invalid(id, format!("unknown norm {s:?} (l1_mean/l2_mean/linf)"))
+            })?,
         };
         // Unknown priority names are an error, not a silent downgrade to
         // standard — a tenant must know its interactive flag didn't take.
-        let priority = match v.get("priority").and_then(|x| x.as_str()) {
+        let priority = match o.get("priority").and_then(|x| x.as_str().map(str::to_string)) {
             None => QosClass::Standard,
-            Some(s) => QosClass::parse(s).ok_or_else(|| {
-                anyhow::anyhow!("unknown priority {s:?} (interactive/standard/batch)")
+            Some(s) => QosClass::parse(&s).ok_or_else(|| {
+                WireError::invalid(id, format!("unknown priority {s:?} (interactive/standard/batch)"))
             })?,
         };
         // Budget semantics: absent → inherit the server's default;
@@ -163,36 +277,60 @@ impl SampleRequest {
         // --default-deadline); >= 1 → that many model evals. Negative
         // is rejected rather than degraded (the f64 → u64 cast would
         // saturate to a coarse-init-only run no client can have meant).
-        let deadline = match v.get("deadline").and_then(|x| x.as_f64()) {
+        let deadline = match o.num("deadline") {
             None => None,
             Some(d) if d >= 0.0 => Some(d as u64),
             Some(d) => {
-                return Err(anyhow::anyhow!(
-                    "deadline must be >= 0 (0 = explicitly unbudgeted), got {d}"
+                return Err(WireError::invalid(
+                    id,
+                    format!("deadline must be >= 0 (0 = explicitly unbudgeted), got {d}"),
                 ))
             }
         };
+        // Unlike deadline, 0 is not an opt-out here: a zero wall-clock
+        // budget expires before the first model eval, which is exactly
+        // what it says. Negative is rejected for the same
+        // cast-saturation reason as deadline.
+        let timeout_ms = match o.num("timeout_ms") {
+            None => None,
+            Some(t) if t >= 0.0 => Some(t as u64),
+            Some(t) => {
+                return Err(WireError::invalid(
+                    id,
+                    format!("timeout_ms must be >= 0 (0 = expires immediately), got {t}"),
+                ))
+            }
+        };
+        let stream = o.get("stream").and_then(|x| x.as_bool()).unwrap_or(false);
+        if stream && v == 0 {
+            return Err(WireError::invalid(
+                id,
+                "\"stream\": true requires the framed dialect (\"v\": 1)".to_string(),
+            ));
+        }
         Ok(SampleRequest {
-            id: num("id", 0.0) as u64,
-            sampler: v
+            v,
+            id,
+            sampler: o
                 .get("sampler")
-                .and_then(|x| x.as_str())
-                .unwrap_or("srds")
-                .to_string(),
+                .and_then(|x| x.as_str().map(str::to_string))
+                .unwrap_or_else(|| "srds".to_string()),
             n: num("n", 25.0) as usize,
-            class: v.get("class").and_then(|x| x.as_f64()).map(|c| c as u32),
+            class: o.num("class").map(|c| c as u32),
             guidance: num("guidance", 0.0) as f32,
             seed: num("seed", 0.0) as u64,
             tol: num("tol", 2.5e-3) as f32,
             norm,
-            max_iters: v.get("max_iters").and_then(|x| x.as_usize()),
-            block: v.get("block").and_then(|x| x.as_usize()),
-            window: v.get("window").and_then(|x| x.as_usize()),
-            history: v.get("history").and_then(|x| x.as_usize()),
+            max_iters: o.get("max_iters").and_then(|x| x.as_usize()),
+            block: o.get("block").and_then(|x| x.as_usize()),
+            window: o.get("window").and_then(|x| x.as_usize()),
+            history: o.get("history").and_then(|x| x.as_usize()),
             priority,
             deadline,
-            return_sample: v.get("sample").and_then(|x| x.as_bool()).unwrap_or(true),
-            return_iterates: v.get("iterates").and_then(|x| x.as_bool()).unwrap_or(false),
+            timeout_ms,
+            stream,
+            return_sample: o.get("sample").and_then(|x| x.as_bool()).unwrap_or(true),
+            return_iterates: o.get("iterates").and_then(|x| x.as_bool()).unwrap_or(false),
         })
     }
 
@@ -218,49 +356,226 @@ impl SampleRequest {
         // An explicit 0 is the opt-out: no budget, even when the serve
         // loop injected the server default into `deadline`.
         spec.deadline_evals = self.deadline.filter(|&d| d > 0);
+        // Wall-clock twin (0 is NOT an opt-out here — it expires
+        // immediately) and the streaming flag; both enforced by the
+        // engine dispatcher, neither changes a converged sample.
+        spec.timeout_ms = self.timeout_ms;
+        spec.stream = self.stream;
         spec
     }
 }
 
-// lint: request-path
-fn error_response(id: u64, msg: String) -> Value {
-    json::obj(vec![
-        ("id", Value::Num(id as f64)),
-        ("ok", Value::Bool(false)),
-        ("error", Value::Str(msg)),
-    ])
+/// Machine-readable classification of every way the server can refuse
+/// or abandon a request. One enum — there is no reject path that
+/// bypasses it, so a new failure mode is a new variant here plus a row
+/// in DESIGN.md's `wire-error-kinds` table, never an ad-hoc object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrKind {
+    /// The line is not valid JSON, or not a JSON object.
+    Parse,
+    /// Well-formed but unserviceable: unknown sampler, bad norm, bad
+    /// priority, out-of-range knob, unsupported protocol version…
+    Invalid,
+    /// Strict mode (`"v"` >= 1): a top-level key outside the request
+    /// schema.
+    UnknownField,
+    /// Admission control: the connection is at its in-flight cap.
+    Overloaded,
+    /// `timeout_ms` expired on a sampler with no anytime iterate to
+    /// finalize from (SRDS never takes this path — it degrades to its
+    /// newest iterate and reports `timed_out: true` on a success
+    /// frame).
+    Timeout,
 }
 
-/// Default backoff hint carried by [`overloaded_response`]
+/// The wire name of each error kind (the `kind` field of v1 `error`
+/// frames, `error_kind` at v0). The match arms below are the source of
+/// truth for DESIGN.md's `wire-error-kinds` table — srds-lint reads the
+/// literals out of this function's body.
+// lint: request-path
+fn kind_name(k: ErrKind) -> &'static str {
+    match k {
+        ErrKind::Parse => "parse",
+        ErrKind::Invalid => "invalid",
+        ErrKind::UnknownField => "unknown_field",
+        ErrKind::Overloaded => "overloaded",
+        ErrKind::Timeout => "timeout",
+    }
+}
+
+/// A typed refusal on its way to the wire: every reject path in the
+/// module builds one of these and serializes it through
+/// [`error_frame`] — the shape of an error line is decided in exactly
+/// one place.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    /// Echoed request id; `None` only when the line was malformed
+    /// beyond extracting one.
+    pub id: Option<u64>,
+    pub kind: ErrKind,
+    /// Human-readable diagnosis. Not a contract — clients key on
+    /// `kind`.
+    pub detail: String,
+    /// Backoff hint, carried by sheds ([`ErrKind::Overloaded`]).
+    pub retry_after_ms: Option<u64>,
+    /// The in-flight cap the request hit, carried by sheds.
+    pub max_inflight: Option<usize>,
+}
+
+impl WireError {
+    /// Malformed line: no id to echo.
+    pub fn parse(detail: String) -> WireError {
+        WireError { id: None, kind: ErrKind::Parse, detail, retry_after_ms: None, max_inflight: None }
+    }
+
+    pub fn invalid(id: u64, detail: String) -> WireError {
+        WireError { id: Some(id), kind: ErrKind::Invalid, detail, retry_after_ms: None, max_inflight: None }
+    }
+
+    pub fn unknown_field(id: u64, key: &str) -> WireError {
+        WireError {
+            id: Some(id),
+            kind: ErrKind::UnknownField,
+            detail: format!("unknown request field {key:?} (strict mode: \"v\" >= 1)"),
+            retry_after_ms: None,
+            max_inflight: None,
+        }
+    }
+
+    pub fn overloaded(id: u64, max_inflight: usize, retry_after_ms: u64) -> WireError {
+        WireError {
+            id: Some(id),
+            kind: ErrKind::Overloaded,
+            detail: format!(
+                "overloaded: connection already has {max_inflight} requests in flight; \
+                 back off and retry"
+            ),
+            retry_after_ms: Some(retry_after_ms),
+            max_inflight: Some(max_inflight),
+        }
+    }
+
+    pub fn timeout(id: u64, timeout_ms: Option<u64>) -> WireError {
+        WireError {
+            id: Some(id),
+            kind: ErrKind::Timeout,
+            detail: format!(
+                "timed out after {} ms with no anytime iterate to finalize from \
+                 (only srds degrades to a partial sample)",
+                timeout_ms.unwrap_or(0)
+            ),
+            retry_after_ms: None,
+            max_inflight: None,
+        }
+    }
+}
+
+/// Default backoff hint carried by overloaded error frames
 /// (`retry_after_ms`): a couple of typical small-request service times
 /// — long enough that an immediate resend is unlikely to be shed
 /// again, short enough not to idle an interactive client. A hint, not
 /// a contract: clients may retry sooner and risk another shed.
 pub const DEFAULT_RETRY_AFTER_MS: u64 = 25;
 
-/// The structured admission-control error: sent the moment a request
-/// would exceed the connection's in-flight cap, instead of stalling the
-/// read loop. `error_kind: "overloaded"` is the machine-readable field
-/// clients key their backoff on (the human-readable `error` text is not
-/// a contract); `max_inflight` tells them the cap they hit, and
-/// `retry_after_ms` is the server's backoff hint
-/// ([`DEFAULT_RETRY_AFTER_MS`] from the serve loop).
+/// The v1 frame envelope: every framed response line leads with the
+/// protocol version and its frame discriminator.
+// lint: request-path
+fn frame_head(v: u64, frame: &str) -> Vec<(&'static str, Value)> {
+    vec![
+        ("v", Value::Num(v as f64)),
+        ("frame", Value::Str(frame.to_string())),
+    ]
+}
+
+/// Stamp the v1 envelope onto a response body. v0 callers never reach
+/// this — the legacy dialect has no envelope.
+// lint: request-path
+fn with_envelope(body: Value, v: u64, frame: &str) -> Value {
+    match body {
+        Value::Obj(mut m) => {
+            for (k, val) in frame_head(v, frame) {
+                m.insert(k.to_string(), val);
+            }
+            Value::Obj(m)
+        }
+        other => other,
+    }
+}
+
+/// The streaming handshake (v1 only): the request was admitted, its
+/// sampler resolved, and `iterate` frames will follow.
+// lint: request-path
+fn ack_frame(id: u64, sampler: &str) -> Value {
+    let body = json::obj(vec![
+        ("id", Value::Num(id as f64)),
+        ("ok", Value::Bool(true)),
+        ("sampler", Value::Str(sampler.to_string())),
+        ("stream", Value::Bool(true)),
+    ]);
+    with_envelope(body, 1, "ack")
+}
+
+/// One streamed anytime iterate (v1 only): refinement index, its
+/// convergence residual, and — unless the request opted out with
+/// `"sample": false` — the full sample this iterate would return if it
+/// were the last.
+// lint: request-path
+fn iterate_frame(id: u64, iter: usize, residual: f32, sample: Option<&[f32]>) -> Value {
+    let mut pairs = vec![
+        ("id", Value::Num(id as f64)),
+        ("ok", Value::Bool(true)),
+        ("iter", Value::Num(iter as f64)),
+        ("residual", Value::Num(residual as f64)),
+    ];
+    if let Some(s) = sample {
+        pairs.push(("sample", json::arr_f32(s)));
+    }
+    with_envelope(json::obj(pairs), 1, "iterate")
+}
+
+/// THE error serializer: every refusal in the module goes through here,
+/// shaped by the request's protocol version. v0 reproduces the legacy
+/// key sets byte-for-byte (`{ok, error}` for parse errors,
+/// `{id, ok, error}` for validation, the structured
+/// `{id, ok, error_kind, error, max_inflight, retry_after_ms}` shed);
+/// v1 wraps the typed form — `kind` plus the optional backoff fields —
+/// in the frame envelope.
+// lint: request-path
+pub fn error_frame(e: &WireError, v: u64) -> Value {
+    let mut pairs: Vec<(&'static str, Value)> = Vec::new();
+    if let Some(id) = e.id {
+        pairs.push(("id", Value::Num(id as f64)));
+    }
+    pairs.push(("ok", Value::Bool(false)));
+    pairs.push(("error", Value::Str(e.detail.clone())));
+    if v == 0 {
+        // Legacy dialect: parse/validation errors carry no kind field
+        // (the historical shape); structured kinds ride `error_kind`.
+        if !matches!(e.kind, ErrKind::Parse | ErrKind::Invalid) {
+            pairs.push(("error_kind", Value::Str(kind_name(e.kind).into())));
+        }
+    } else {
+        pairs.push(("kind", Value::Str(kind_name(e.kind).into())));
+    }
+    if let Some(m) = e.max_inflight {
+        pairs.push(("max_inflight", Value::Num(m as f64)));
+    }
+    if let Some(ms) = e.retry_after_ms {
+        pairs.push(("retry_after_ms", Value::Num(ms as f64)));
+    }
+    let body = json::obj(pairs);
+    if v == 0 {
+        body
+    } else {
+        with_envelope(body, v, "error")
+    }
+}
+
+/// Back-compat veneer over [`error_frame`] for the legacy (v0) shed
+/// line — the admission-control error clients key their backoff on.
 // lint: request-path
 pub fn overloaded_response(id: u64, max_inflight: usize, retry_after_ms: u64) -> Value {
-    json::obj(vec![
-        ("id", Value::Num(id as f64)),
-        ("ok", Value::Bool(false)),
-        ("error_kind", Value::Str("overloaded".into())),
-        (
-            "error",
-            Value::Str(format!(
-                "overloaded: connection already has {max_inflight} requests in flight; \
-                 back off and retry"
-            )),
-        ),
-        ("max_inflight", Value::Num(max_inflight as f64)),
-        ("retry_after_ms", Value::Num(retry_after_ms as f64)),
-    ])
+    error_frame(&WireError::overloaded(id, max_inflight, retry_after_ms), 0)
 }
 
 /// Conditioning for a request: the mask comes from the dataset zoo when
@@ -277,12 +592,12 @@ fn request_cond(model_name: &str, req: &SampleRequest) -> Conditioning {
 }
 
 /// Resolve the request's sampler kind and build its validated spec, or
-/// the error line to send back.
+/// the typed error to send back.
 // lint: request-path
-fn request_spec(model_name: &str, req: &SampleRequest) -> std::result::Result<SamplerSpec, Value> {
+fn request_spec(model_name: &str, req: &SampleRequest) -> std::result::Result<SamplerSpec, WireError> {
     let reg = registry();
     let Some(sampler) = reg.parse(&req.sampler) else {
-        return Err(error_response(
+        return Err(WireError::invalid(
             req.id,
             format!(
                 "unknown sampler {:?}; available: {}",
@@ -291,10 +606,25 @@ fn request_spec(model_name: &str, req: &SampleRequest) -> std::result::Result<Sa
             ),
         ));
     };
+    // Streaming needs the anytime property: only the SRDS task
+    // publishes a valid sample per completed refinement. The baselines'
+    // iterates are whole-sweep refinements with no per-iterate
+    // completion hook, so `"stream"` on them is an error, not a silent
+    // single-frame downgrade.
+    if req.stream && !matches!(sampler.kind(), SamplerKind::Srds) {
+        return Err(WireError::invalid(
+            req.id,
+            format!(
+                "\"stream\": true requires an anytime sampler (srds); {:?} has no \
+                 per-iterate samples to stream",
+                req.sampler
+            ),
+        ));
+    }
     let spec = req.to_spec(sampler.kind(), request_cond(model_name, req));
     // A range error must be an error line, not a worker-thread panic.
     if let Err(msg) = spec.validate() {
-        return Err(error_response(req.id, msg));
+        return Err(WireError::invalid(req.id, msg));
     }
     Ok(spec)
 }
@@ -318,6 +648,9 @@ fn success_response(
         ("iters", Value::Num(out.stats.iters as f64)),
         ("converged", Value::Bool(out.stats.converged)),
         ("deadline_hit", Value::Bool(out.stats.deadline_hit)),
+        // Wall-clock twin of deadline_hit: the dispatcher's timeout
+        // fired and SRDS finalized from its newest completed iterate.
+        ("timed_out", Value::Bool(out.stats.timed_out)),
         ("priority", Value::Str(req.priority.name().into())),
         ("eff_serial_evals", Value::Num(out.stats.eff_serial_evals as f64)),
         (
@@ -395,12 +728,40 @@ fn success_response(
 /// Detect the `{"kind": "stats"}` observability probe and return its
 /// echoed id. Engine-backed entry points intercept this *before*
 /// [`SampleRequest::from_json`]: the probe runs no sampler, takes no
-/// admission slot, and must answer even on a saturated connection.
+/// admission slot (it is explicitly exempt from the `max_inflight`
+/// check — health checks must answer on a saturated connection), and
+/// is answered synchronously on the serving thread through the typed
+/// frame path ([`versioned_stats`]).
 // lint: request-path
-fn stats_probe_id(v: &Value) -> Option<u64> {
-    match v.get("kind").and_then(|x| x.as_str()) {
-        Some("stats") => Some(v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64),
+fn stats_probe_id(o: &LazyObj) -> Option<u64> {
+    match o.get("kind").and_then(|x| x.as_str().map(str::to_string)).as_deref() {
+        Some("stats") => Some(o.num("id").unwrap_or(0.0) as u64),
         _ => None,
+    }
+}
+
+/// Lenient version extraction for response *shaping* on paths where
+/// [`SampleRequest::from_json`] (the authoritative validator) either
+/// wasn't reached or already failed: anything other than an explicit
+/// `"v": 1` shapes as legacy — a client speaking an unknown version
+/// can't be assumed to understand v1 frames.
+// lint: request-path
+fn shaping_version(o: &LazyObj) -> u64 {
+    match o.num("v") {
+        Some(x) if x == 1.0 => 1,
+        _ => 0,
+    }
+}
+
+/// The stats probe response in the dialect the probe asked for:
+/// the legacy bare object at v0, a framed `stats` line at v1.
+// lint: request-path
+fn versioned_stats(id: u64, v: u64, st: &EngineStats) -> Value {
+    let body = stats_response(id, st);
+    if v >= 1 {
+        with_envelope(body, v, "stats")
+    } else {
+        body
     }
 }
 
@@ -457,17 +818,56 @@ pub fn stats_response(id: u64, st: &EngineStats) -> Value {
     ])
 }
 
+/// The error every blocking, single-response entry point returns for a
+/// `"stream": true` request: those paths have nowhere to put iterate
+/// frames, and a silent downgrade to one final frame would violate the
+/// ack/iterate/final lifecycle the client asked for.
+fn stream_unsupported(id: u64) -> WireError {
+    WireError::invalid(
+        id,
+        "\"stream\": true requires the serving loop (persistent connection); \
+         this endpoint is single-response"
+            .to_string(),
+    )
+}
+
+/// Shape a blocking engine/router reply in the request's dialect:
+/// bare legacy object at v0, a framed `final` (or `error`) at v1.
+fn blocking_reply(
+    req: &SampleRequest,
+    name: &'static str,
+    reply: TaskReply,
+    stats: &EngineStats,
+    wall_ms: f64,
+) -> Value {
+    match reply {
+        TaskReply::Done(out) => {
+            let resp = success_response(req, name, &out, wall_ms, Some(stats));
+            if req.v >= 1 {
+                with_envelope(resp, req.v, "final")
+            } else {
+                resp
+            }
+        }
+        TaskReply::TimedOut => error_frame(&WireError::timeout(req.id, req.timeout_ms), req.v),
+    }
+}
+
 /// Execute one request directly on a backend via the sampler registry —
 /// the single-tenant path (unit tests, library callers without an
-/// engine).
+/// engine). No dispatcher exists here, so `timeout_ms` is not enforced
+/// (the run completes) and `stream` is rejected.
 pub fn run_request(
     backend: &dyn StepBackend,
     model_name: &str,
     req: &SampleRequest,
 ) -> Value {
+    if req.stream {
+        return error_frame(&stream_unsupported(req.id), req.v);
+    }
     let spec = match request_spec(model_name, req) {
         Ok(s) => s,
-        Err(e) => return e,
+        Err(e) => return error_frame(&e, req.v),
     };
     let x0 = prior_sample(backend.dim(), req.seed);
     let t0 = std::time::Instant::now();
@@ -475,7 +875,12 @@ pub fn run_request(
     // request_spec resolved from the request's sampler name.
     let out: SampleOutput = spec.run(backend, &x0);
     let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
-    success_response(req, spec.kind.name(), &out, wall_ms, None)
+    let resp = success_response(req, spec.kind.name(), &out, wall_ms, None);
+    if req.v >= 1 {
+        with_envelope(resp, req.v, "final")
+    } else {
+        resp
+    }
 }
 
 /// Execute one request on the shared multi-tenant engine and block for
@@ -483,31 +888,79 @@ pub fn run_request(
 /// sequential, ParaDiGMS, ParaTAA — runs as an engine-resident
 /// [`crate::exec::task::SamplerTask`], cross-request batched; only this
 /// caller's thread waits, nothing inside the engine blocks per request.
+/// Submitted through the serving path so `timeout_ms` is honored: a
+/// timed-out SRDS run comes back as a success with `timed_out: true`,
+/// a timed-out baseline as a `timeout` error frame.
 pub fn run_request_engine(engine: &Engine, model_name: &str, req: &SampleRequest) -> Value {
+    if req.stream {
+        return error_frame(&stream_unsupported(req.id), req.v);
+    }
     let spec = match request_spec(model_name, req) {
         Ok(s) => s,
-        Err(e) => return e,
+        Err(e) => return error_frame(&e, req.v),
     };
     let x0 = prior_sample(engine.dim(), req.seed);
     let t0 = std::time::Instant::now();
-    let out: SampleOutput = engine.run(&x0, &spec);
+    let name = spec.kind.name();
+    let (tx, rx) = std::sync::mpsc::channel();
+    engine.submit_serving(x0, spec, None, None, move |reply, stats| {
+        let _ = tx.send((reply, stats));
+    });
+    let (reply, stats) = rx.recv().expect("engine dispatcher dropped mid-request");
     let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
-    success_response(req, spec.kind.name(), &out, wall_ms, Some(&engine.stats()))
+    blocking_reply(req, name, reply, &stats, wall_ms)
 }
 
 /// Execute one request on a sharded fleet and block for the result
 /// (tests, simple callers): the router places it by load + QoS class,
 /// and the response carries the **fleet-aggregated** stats snapshot.
+/// Same timeout semantics as [`run_request_engine`].
 pub fn run_request_router(router: &Router, model_name: &str, req: &SampleRequest) -> Value {
+    if req.stream {
+        return error_frame(&stream_unsupported(req.id), req.v);
+    }
     let spec = match request_spec(model_name, req) {
         Ok(s) => s,
-        Err(e) => return e,
+        Err(e) => return error_frame(&e, req.v),
     };
     let x0 = prior_sample(router.dim(), req.seed);
     let t0 = std::time::Instant::now();
-    let out: SampleOutput = router.run(&x0, &spec);
+    let name = spec.kind.name();
+    let (tx, rx) = std::sync::mpsc::channel();
+    router.submit_serving(x0, spec, None, None, move |reply, stats| {
+        let _ = tx.send((reply, stats));
+    });
+    let (reply, stats) = rx.recv().expect("router dispatcher dropped mid-request");
     let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
-    success_response(req, spec.kind.name(), &out, wall_ms, Some(&router.stats()))
+    blocking_reply(req, name, reply, &stats, wall_ms)
+}
+
+/// Package a terminal [`TaskReply`] as the [`PendingResponse`] for the
+/// outbox: a deferred `Finished` payload on success (serialization on
+/// the poll thread, never the dispatcher), an eagerly serialized
+/// `timeout` error frame when the dispatcher gave up on a
+/// no-anytime-iterate sampler.
+// lint: request-path
+fn pending_from_reply(
+    req: SampleRequest,
+    name: &'static str,
+    reply: TaskReply,
+    stats: EngineStats,
+    wall_ms: f64,
+) -> PendingResponse {
+    match reply {
+        TaskReply::Done(out) => PendingResponse::Finished(Box::new(FinishedResponse {
+            req,
+            name,
+            out,
+            stats,
+            wall_ms,
+        })),
+        TaskReply::TimedOut => PendingResponse::Ready(json::to_string(&error_frame(
+            &WireError::timeout(req.id, req.timeout_ms),
+            req.v,
+        ))),
+    }
 }
 
 /// Submit an already-parsed request onto the fleet without blocking —
@@ -517,6 +970,55 @@ pub fn run_request_router(router: &Router, model_name: &str, req: &SampleRequest
 /// fleet-aggregated stats. `alive` is the dead-connection purge hook:
 /// the poll loop flips it when the client goes away and the owning
 /// dispatcher aborts the task instead of finishing it.
+///
+/// `progress` is the streaming tap: for a `"stream": true` request it
+/// receives one [`PendingResponse::Progress`] per completed SRDS
+/// iterate, called from the shard dispatcher with a refcounted share
+/// of the iterate's state buffer — no copy is made until the poll
+/// thread serializes the frame. `None` on a streaming request is a
+/// caller bug and comes back as a validation error.
+// lint: request-path
+pub fn submit_request_serving(
+    router: &Router,
+    model_name: &str,
+    req: SampleRequest,
+    alive: Arc<AtomicBool>,
+    progress: Option<Box<dyn FnMut(PendingResponse) + Send>>,
+    done: impl FnOnce(PendingResponse) + Send + 'static,
+) {
+    let spec = match request_spec(model_name, &req) {
+        Ok(s) => s,
+        Err(e) => return done(PendingResponse::Ready(json::to_string(&error_frame(&e, req.v)))),
+    };
+    if req.stream && progress.is_none() {
+        let e = stream_unsupported(req.id);
+        return done(PendingResponse::Ready(json::to_string(&error_frame(&e, req.v))));
+    }
+    let x0 = prior_sample(router.dim(), req.seed);
+    let t0 = std::time::Instant::now();
+    let name = spec.kind.name();
+    let rid = req.id;
+    let want_sample = req.return_sample;
+    let sink: Option<ProgressSink> = progress.map(|mut push| {
+        Box::new(move |ev: IterateEvent| {
+            push(PendingResponse::Progress(Box::new(ProgressUpdate {
+                id: rid,
+                iter: ev.iter,
+                residual: ev.residual,
+                // The refcount share rides to the poll thread; the
+                // float formatting happens there, in into_line.
+                sample: if want_sample { Some(ev.sample) } else { None },
+            })));
+        }) as ProgressSink
+    });
+    router.submit_serving(x0, spec, Some(alive), sink, move |reply, stats| {
+        let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        done(pending_from_reply(req, name, reply, stats, wall_ms));
+    });
+}
+
+/// [`submit_request_serving`] without a streaming tap — the historical
+/// non-streaming submission shape, kept for callers that never stream.
 // lint: request-path
 pub fn submit_request_router(
     router: &Router,
@@ -525,23 +1027,7 @@ pub fn submit_request_router(
     alive: Arc<AtomicBool>,
     done: impl FnOnce(PendingResponse) + Send + 'static,
 ) {
-    let spec = match request_spec(model_name, &req) {
-        Ok(s) => s,
-        Err(e) => return done(PendingResponse::Ready(json::to_string(&e))),
-    };
-    let x0 = prior_sample(router.dim(), req.seed);
-    let t0 = std::time::Instant::now();
-    let name = spec.kind.name();
-    router.submit_with_alive(x0, spec, alive, move |out, stats| {
-        let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
-        done(PendingResponse::Finished(Box::new(FinishedResponse {
-            req,
-            name,
-            out,
-            stats,
-            wall_ms,
-        })));
-    });
+    submit_request_serving(router, model_name, req, alive, None, done);
 }
 
 /// Handle one raw request line on the sharded fleet, blocking for the
@@ -549,24 +1035,16 @@ pub fn submit_request_router(
 /// non-blocking [`submit_request_router`]). This is the one blocking
 /// entry point that also answers the `{"kind": "stats"}` probe.
 pub fn handle_line_router(router: &Router, model_name: &str, line: &str) -> String {
-    let v = match json::parse(line) {
-        Ok(v) => v,
-        Err(e) => {
-            return json::to_string(&json::obj(vec![
-                ("ok", Value::Bool(false)),
-                ("error", Value::Str(format!("{e:#}"))),
-            ]))
-        }
+    let o = match LazyObj::parse(line) {
+        Ok(o) => o,
+        Err(e) => return json::to_string(&error_frame(&WireError::parse(format!("{e:#}")), 0)),
     };
-    if let Some(id) = stats_probe_id(&v) {
-        return json::to_string(&stats_response(id, &router.stats()));
+    if let Some(id) = stats_probe_id(&o) {
+        return json::to_string(&versioned_stats(id, shaping_version(&o), &router.stats()));
     }
-    let resp = match SampleRequest::from_json(&v) {
+    let resp = match SampleRequest::from_json(&o) {
         Ok(req) => run_request_router(router, model_name, &req),
-        Err(e) => {
-            let id = v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
-            error_response(id, format!("{e:#}"))
-        }
+        Err(e) => error_frame(&e, shaping_version(&o)),
     };
     json::to_string(&resp)
 }
@@ -584,6 +1062,12 @@ pub enum PendingResponse {
     /// A completed run (boxed: the payload carries the whole sample);
     /// serialization deferred to [`PendingResponse::into_line`].
     Finished(Box<FinishedResponse>),
+    /// One streamed anytime iterate (v1 `iterate` frame). The sample
+    /// rides as a refcounted [`StateBuf`] share straight out of the
+    /// SRDS grid — never copied; float formatting is deferred to
+    /// [`PendingResponse::into_line`] like any completion. Not a
+    /// terminal frame: it does not release the admission slot.
+    Progress(Box<ProgressUpdate>),
 }
 
 /// The deferred payload of [`PendingResponse::Finished`].
@@ -595,20 +1079,43 @@ pub struct FinishedResponse {
     wall_ms: f64,
 }
 
+/// The deferred payload of [`PendingResponse::Progress`]: everything
+/// an `iterate` frame needs.
+pub struct ProgressUpdate {
+    id: u64,
+    iter: usize,
+    residual: f32,
+    /// `None` when the request opted out with `"sample": false`
+    /// (residual-only progress ticker).
+    sample: Option<StateBuf>,
+}
+
 impl PendingResponse {
+    /// Whether this response closes out its request. Terminal frames
+    /// release the connection's admission slot; `iterate` frames are
+    /// interior to a stream and do not.
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, PendingResponse::Progress(_))
+    }
+
     /// Serialize to the wire line. For engine completions this is the
     /// heavy part (formatting `d` floats, plus iterates when requested)
     /// — call it off the dispatcher thread.
     pub fn into_line(self) -> String {
         match self {
             PendingResponse::Ready(s) => s,
-            PendingResponse::Finished(f) => json::to_string(&success_response(
-                &f.req,
-                f.name,
-                &f.out,
-                f.wall_ms,
-                Some(&f.stats),
-            )),
+            PendingResponse::Finished(f) => {
+                let resp = success_response(&f.req, f.name, &f.out, f.wall_ms, Some(&f.stats));
+                let resp = if f.req.v >= 1 {
+                    with_envelope(resp, f.req.v, "final")
+                } else {
+                    resp
+                };
+                json::to_string(&resp)
+            }
+            PendingResponse::Progress(p) => {
+                json::to_string(&iterate_frame(p.id, p.iter, p.residual, p.sample.as_deref()))
+            }
         }
     }
 }
@@ -632,7 +1139,7 @@ pub fn submit_line_engine(
 ) {
     let req = match line_to_request(line) {
         Ok(r) => r,
-        Err(e) => return done(PendingResponse::Ready(json::to_string(&e))),
+        Err((e, v)) => return done(PendingResponse::Ready(json::to_string(&error_frame(&e, v)))),
     };
     submit_request_engine(engine, model_name, req, done);
 }
@@ -641,7 +1148,9 @@ pub fn submit_line_engine(
 /// the serve loop calls this after its admission check (so a shed
 /// request never reaches the engine), [`submit_line_engine`] after
 /// parsing. Validation errors invoke `done` inline; otherwise `done`
-/// fires from the engine's completion callback.
+/// fires from the engine's completion callback. Single-response:
+/// `timeout_ms` is honored, `stream` is rejected (the streaming tap
+/// lives on the router path, [`submit_request_serving`]).
 // lint: request-path
 pub fn submit_request_engine(
     engine: &Engine,
@@ -649,42 +1158,37 @@ pub fn submit_request_engine(
     req: SampleRequest,
     done: impl FnOnce(PendingResponse) + Send + 'static,
 ) {
+    if req.stream {
+        let e = stream_unsupported(req.id);
+        return done(PendingResponse::Ready(json::to_string(&error_frame(&e, req.v))));
+    }
     let spec = match request_spec(model_name, &req) {
         Ok(s) => s,
-        Err(e) => return done(PendingResponse::Ready(json::to_string(&e))),
+        Err(e) => return done(PendingResponse::Ready(json::to_string(&error_frame(&e, req.v)))),
     };
     let x0 = prior_sample(engine.dim(), req.seed);
     let t0 = std::time::Instant::now();
     let name = spec.kind.name();
-    engine.submit_with(x0, spec, move |out, stats| {
+    engine.submit_serving(x0, spec, None, None, move |reply, stats| {
         let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
-        done(PendingResponse::Finished(Box::new(FinishedResponse {
-            req,
-            name,
-            out,
-            stats,
-            wall_ms,
-        })));
+        done(pending_from_reply(req, name, reply, stats, wall_ms));
     });
 }
 
 // lint: request-path
-fn line_to_request(line: &str) -> std::result::Result<SampleRequest, Value> {
-    match json::parse(line) {
-        Ok(v) => match SampleRequest::from_json(&v) {
-            Ok(req) => Ok(req),
-            // Request-level validation errors still echo the id so
-            // pipelined clients can correlate them.
-            Err(e) => {
-                let id = v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
-                Err(error_response(id, format!("{e:#}")))
-            }
-        },
-        // Malformed JSON: no id to echo.
-        Err(e) => Err(json::obj(vec![
-            ("ok", Value::Bool(false)),
-            ("error", Value::Str(format!("{e:#}"))),
-        ])),
+fn line_to_request(line: &str) -> std::result::Result<SampleRequest, (WireError, u64)> {
+    match LazyObj::parse(line) {
+        // Request-level validation errors still echo the id (inside the
+        // WireError) so pipelined clients can correlate them; the
+        // shaping version rides along so the error frame speaks the
+        // dialect the client asked for.
+        Ok(o) => SampleRequest::from_json(&o).map_err(|e| {
+            let v = shaping_version(&o);
+            (e, v)
+        }),
+        // Malformed JSON (or a non-object line): no id to echo, and no
+        // version to trust — shape as legacy.
+        Err(e) => Err((WireError::parse(format!("{e:#}")), 0)),
     }
 }
 
@@ -693,7 +1197,7 @@ fn line_to_request(line: &str) -> std::result::Result<SampleRequest, Value> {
 pub fn handle_line(backend: &dyn StepBackend, model_name: &str, line: &str) -> String {
     let resp = match line_to_request(line) {
         Ok(req) => run_request(backend, model_name, &req),
-        Err(e) => e,
+        Err((e, v)) => error_frame(&e, v),
     };
     json::to_string(&resp)
 }
@@ -704,7 +1208,7 @@ pub fn handle_line(backend: &dyn StepBackend, model_name: &str, line: &str) -> S
 pub fn handle_line_engine(engine: &Engine, model_name: &str, line: &str) -> String {
     let resp = match line_to_request(line) {
         Ok(req) => run_request_engine(engine, model_name, &req),
-        Err(e) => e,
+        Err((e, v)) => error_frame(&e, v),
     };
     json::to_string(&resp)
 }
@@ -834,9 +1338,11 @@ struct Conn {
     /// the drain-then-close decision are race-free by construction —
     /// no completion-side counter can be read at the wrong moment.
     submitted: u64,
-    /// Router responses routed into `outbuf` so far. Every submission
-    /// on a live connection produces exactly one outbox entry (inline
-    /// validation errors included), so `submitted - delivered` is the
+    /// Terminal router responses routed into `outbuf` so far. Every
+    /// submission on a live connection produces exactly one *terminal*
+    /// outbox entry (inline validation errors included); streamed
+    /// `iterate` frames ride the outbox too but are interior to their
+    /// request and don't count — so `submitted - delivered` is the
     /// connection's true in-flight count.
     delivered: u64,
     /// Flipped to `false` when the connection dies; every task
@@ -948,55 +1454,87 @@ impl PollLoop {
     /// One complete request line: parse errors and the stats probe are
     /// answered inline by the poll thread (straight into the write
     /// buffer); sampling requests pass admission and go to the router,
-    /// whose completion callback posts to the outbox.
+    /// whose completion callback posts to the outbox. Streaming
+    /// requests additionally get their `ack` frame pushed synchronously
+    /// here — outbox entries are only drained on later poll
+    /// iterations, so the ack always precedes the first `iterate`.
     // lint: request-path
     fn on_line(&self, id: u64, conn: &mut Conn, line: &str) {
-        let v = match json::parse(line) {
-            Ok(v) => v,
+        let o = match LazyObj::parse(line) {
+            Ok(o) => o,
             Err(e) => {
-                // Malformed JSON: no id to echo.
-                let err = json::obj(vec![
-                    ("ok", Value::Bool(false)),
-                    ("error", Value::Str(format!("{e:#}"))),
-                ]);
+                // Malformed JSON (or a non-object line): no id to echo.
+                let err = error_frame(&WireError::parse(format!("{e:#}")), 0);
                 return push_line(&mut conn.outbuf, &json::to_string(&err));
             }
         };
         // The stats probe runs no sampler and takes no admission slot —
         // it must answer even (especially) on a saturated connection.
-        if let Some(pid) = stats_probe_id(&v) {
-            let resp = stats_response(pid, &self.router.stats());
+        if let Some(pid) = stats_probe_id(&o) {
+            let resp = versioned_stats(pid, shaping_version(&o), &self.router.stats());
             return push_line(&mut conn.outbuf, &json::to_string(&resp));
         }
-        let mut req = match SampleRequest::from_json(&v) {
+        let mut req = match SampleRequest::from_json(&o) {
             Ok(r) => r,
             Err(e) => {
-                // Request-level validation errors still echo the id so
-                // pipelined clients can correlate them.
-                let rid = v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
-                return push_line(&mut conn.outbuf, &json::to_string(&error_response(rid, format!("{e:#}"))));
+                // Request-level validation errors still echo the id
+                // (inside the WireError) so pipelined clients can
+                // correlate them.
+                let err = error_frame(&e, shaping_version(&o));
+                return push_line(&mut conn.outbuf, &json::to_string(&err));
             }
         };
         if req.deadline.is_none() {
             req.deadline = self.default_deadline;
         }
         // Non-blocking admission: over the cap, shed with the
-        // structured overloaded error (now carrying the retry_after_ms
+        // structured overloaded error (carrying the retry_after_ms
         // backoff hint) instead of stalling the poll loop. The slot
-        // frees when the response is routed back to this connection.
+        // frees when the *terminal* response is routed back to this
+        // connection — a stream occupies exactly one slot for its whole
+        // ack/iterate*/final lifetime.
         if conn.pending() >= self.max_inflight as u64 {
-            let shed = overloaded_response(req.id, self.max_inflight, DEFAULT_RETRY_AFTER_MS);
+            let shed = error_frame(
+                &WireError::overloaded(req.id, self.max_inflight, DEFAULT_RETRY_AFTER_MS),
+                req.v,
+            );
             return push_line(&mut conn.outbuf, &json::to_string(&shed));
         }
+        let progress: Option<Box<dyn FnMut(PendingResponse) + Send>> = if req.stream {
+            // Validate *before* acking: an invalid streaming request
+            // gets one error frame and no ack — the lifecycle is
+            // strictly ack, iterate*, then final or error.
+            match request_spec(&self.model_name, &req) {
+                Err(e) => {
+                    let err = error_frame(&e, req.v);
+                    return push_line(&mut conn.outbuf, &json::to_string(&err));
+                }
+                Ok(spec) => {
+                    let ack = ack_frame(req.id, spec.kind.name());
+                    push_line(&mut conn.outbuf, &json::to_string(&ack));
+                }
+            }
+            let outbox = self.outbox.clone();
+            Some(Box::new(move |resp| outbox.push(id, resp)))
+        } else {
+            None
+        };
         conn.submitted += 1;
         // Submit and move on: the shard's completion callback posts the
         // still-unserialized response to the outbox; the poll thread
         // formats it (and releases the admission slot) next wake-up. No
-        // thread exists for this request.
+        // thread exists for this request — streamed or not.
         let outbox = self.outbox.clone();
-        submit_request_router(&self.router, &self.model_name, req, conn.alive.clone(), move |resp| {
-            outbox.push(id, resp);
-        });
+        submit_request_serving(
+            &self.router,
+            &self.model_name,
+            req,
+            conn.alive.clone(),
+            progress,
+            move |resp| {
+                outbox.push(id, resp);
+            },
+        );
     }
 }
 
@@ -1104,7 +1642,12 @@ pub fn serve_on(listener: TcpListener, cfg: ServeConfig) -> Result<()> {
         // dropped (its client is gone; late results have no reader).
         for (conn_id, resp) in lp.outbox.drain() {
             if let Some(conn) = conns.get_mut(&conn_id) {
-                conn.delivered += 1;
+                // Streamed iterate frames ride the outbox but are
+                // interior to their request: only the terminal
+                // final/error frame releases the admission slot.
+                if resp.is_terminal() {
+                    conn.delivered += 1;
+                }
                 push_line(&mut conn.outbuf, &resp.into_line());
                 progress = true;
             }
@@ -1245,12 +1788,12 @@ mod tests {
 
     #[test]
     fn request_knobs_reach_the_spec() {
-        let v = json::parse(
+        let o = LazyObj::parse(
             r#"{"sampler":"paradigms","n":64,"window":16,"history":5,"block":4,
                 "norm":"linf","max_iters":7,"tol":0.5,"iterates":true}"#,
         )
         .unwrap();
-        let req = SampleRequest::from_json(&v).unwrap();
+        let req = SampleRequest::from_json(&o).unwrap();
         let kind = registry().parse(&req.sampler).unwrap().kind();
         let spec = req.to_spec(kind, Conditioning::none());
         assert_eq!(spec.window(), Some(16), "window reaches ParaDiGMS");
@@ -1287,22 +1830,25 @@ mod tests {
 
     #[test]
     fn priority_and_deadline_reach_the_spec() {
-        let v = json::parse(
+        let o = LazyObj::parse(
             r#"{"sampler":"srds","n":36,"priority":"interactive","deadline":120}"#,
         )
         .unwrap();
-        let req = SampleRequest::from_json(&v).unwrap();
+        let req = SampleRequest::from_json(&o).unwrap();
         assert_eq!(req.priority, QosClass::Interactive);
         assert_eq!(req.deadline, Some(120));
         let kind = registry().parse(&req.sampler).unwrap().kind();
         let spec = req.to_spec(kind, Conditioning::none());
         assert_eq!(spec.priority, QosClass::Interactive);
         assert_eq!(spec.deadline_evals, Some(120));
-        // Defaults: standard class, no budget.
-        let v = json::parse(r#"{"sampler":"srds","n":36}"#).unwrap();
-        let req = SampleRequest::from_json(&v).unwrap();
+        // Defaults: standard class, no budget, v0, no stream/timeout.
+        let o = LazyObj::parse(r#"{"sampler":"srds","n":36}"#).unwrap();
+        let req = SampleRequest::from_json(&o).unwrap();
         assert_eq!(req.priority, QosClass::Standard);
         assert_eq!(req.deadline, None);
+        assert_eq!(req.v, 0);
+        assert_eq!(req.timeout_ms, None);
+        assert!(!req.stream);
     }
 
     #[test]
@@ -1325,8 +1871,8 @@ mod tests {
         // --default-deadline: it must parse as "unbudgeted", never as a
         // zero-eval budget. Negative would saturate to exactly that
         // coarse-init-only run, so it's rejected, not degraded.
-        let v = json::parse(r#"{"sampler":"srds","n":16,"deadline":0}"#).unwrap();
-        let req = SampleRequest::from_json(&v).unwrap();
+        let o = LazyObj::parse(r#"{"sampler":"srds","n":16,"deadline":0}"#).unwrap();
+        let req = SampleRequest::from_json(&o).unwrap();
         assert_eq!(req.deadline, Some(0), "explicit opt-out is preserved, not treated as absent");
         let kind = registry().parse(&req.sampler).unwrap().kind();
         assert_eq!(
@@ -1448,11 +1994,11 @@ mod tests {
         assert_eq!(std_lane.get("completed").unwrap().as_f64(), Some(1.0), "{resp}");
         assert_eq!(std_lane.get("aborted").unwrap().as_f64(), Some(0.0), "{resp}");
         // An explicit kind "sample" still parses as a normal request...
-        let v = json::parse(r#"{"kind":"sample","n":16}"#).unwrap();
-        assert!(SampleRequest::from_json(&v).is_ok());
+        let o = LazyObj::parse(r#"{"kind":"sample","n":16}"#).unwrap();
+        assert!(SampleRequest::from_json(&o).is_ok());
         // ...while an unknown kind is rejected, not silently sampled.
-        let v = json::parse(r#"{"kind":"metrics","n":16}"#).unwrap();
-        assert!(SampleRequest::from_json(&v).is_err());
+        let o = LazyObj::parse(r#"{"kind":"metrics","n":16}"#).unwrap();
+        assert!(SampleRequest::from_json(&o).is_err());
     }
 
     #[test]
@@ -1642,6 +2188,216 @@ mod tests {
             let out = mk(sampler);
             let d = ConvNorm::L1Mean.dist(&out, &seq);
             assert!(d < 1e-2, "{sampler} vs sequential: {d}");
+        }
+    }
+
+    #[test]
+    fn error_frames_keep_legacy_shapes_at_v0_and_gain_the_envelope_at_v1() {
+        // v0 parse error: the historical bare {ok, error} — no id, no
+        // kind, no envelope.
+        let v = error_frame(&WireError::parse("nope".into()), 0);
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert!(v.get("error").is_some());
+        assert!(v.get("id").is_none());
+        assert!(v.get("kind").is_none() && v.get("error_kind").is_none());
+        assert!(v.get("v").is_none() && v.get("frame").is_none());
+        // v0 validation error: {id, ok, error}.
+        let v = error_frame(&WireError::invalid(7, "bad".into()), 0);
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(7.0));
+        assert!(v.get("error_kind").is_none(), "legacy validation errors carry no kind");
+        // v0 structured kinds ride error_kind (timeout is new but
+        // follows the overloaded precedent).
+        let v = error_frame(&WireError::timeout(3, Some(250)), 0);
+        assert_eq!(v.get("error_kind").unwrap().as_str(), Some("timeout"));
+        assert!(v.get("frame").is_none());
+        // v1: every error is a framed, typed line.
+        let v = error_frame(&WireError::timeout(3, Some(250)), 1);
+        assert_eq!(v.get("v").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("frame").unwrap().as_str(), Some("error"));
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("timeout"));
+        let v = error_frame(&WireError::overloaded(9, 4, 25), 1);
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(v.get("max_inflight").unwrap().as_f64(), Some(4.0));
+        assert_eq!(v.get("retry_after_ms").unwrap().as_f64(), Some(25.0));
+    }
+
+    #[test]
+    fn ack_and_iterate_frames_carry_the_envelope() {
+        let a = ack_frame(5, "srds");
+        assert_eq!(a.get("v").unwrap().as_f64(), Some(1.0));
+        assert_eq!(a.get("frame").unwrap().as_str(), Some("ack"));
+        assert_eq!(a.get("id").unwrap().as_f64(), Some(5.0));
+        assert_eq!(a.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(a.get("sampler").unwrap().as_str(), Some("srds"));
+        assert_eq!(a.get("stream").unwrap().as_bool(), Some(true));
+        let it = iterate_frame(5, 2, 0.125, Some(&[1.0, 2.0]));
+        assert_eq!(it.get("frame").unwrap().as_str(), Some("iterate"));
+        assert_eq!(it.get("iter").unwrap().as_f64(), Some(2.0));
+        assert_eq!(it.get("residual").unwrap().as_f64(), Some(0.125));
+        assert_eq!(it.get("sample").unwrap().as_f32_vec().unwrap(), vec![1.0, 2.0]);
+        // "sample": false requests get residual-only progress ticks.
+        assert!(iterate_frame(5, 2, 0.125, None).get("sample").is_none());
+    }
+
+    #[test]
+    fn protocol_version_gates_the_dialect() {
+        // v1 requests get the framed final; v0 responses carry no
+        // envelope keys at all (legacy byte-compatibility).
+        let eng = engine();
+        let legacy = json::parse(&handle_line_engine(
+            &eng,
+            "gmm_toy2d",
+            r#"{"id":1,"sampler":"srds","n":16,"seed":3,"sample":false}"#,
+        ))
+        .unwrap();
+        assert_eq!(legacy.get("ok").unwrap().as_bool(), Some(true), "{legacy:?}");
+        assert!(legacy.get("v").is_none() && legacy.get("frame").is_none(), "{legacy:?}");
+        // timed_out is the one new key legacy responses gain; it reads
+        // false on an unbudgeted run.
+        assert_eq!(legacy.get("timed_out").unwrap().as_bool(), Some(false));
+        let framed = json::parse(&handle_line_engine(
+            &eng,
+            "gmm_toy2d",
+            r#"{"v":1,"id":1,"sampler":"srds","n":16,"seed":3,"sample":false}"#,
+        ))
+        .unwrap();
+        assert_eq!(framed.get("v").unwrap().as_f64(), Some(1.0), "{framed:?}");
+        assert_eq!(framed.get("frame").unwrap().as_str(), Some("final"));
+        assert_eq!(framed.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            framed.get("iters").unwrap().as_f64(),
+            legacy.get("iters").unwrap().as_f64(),
+            "the envelope is additive: same body either way"
+        );
+        // An unknown version is rejected up front, shaped as legacy
+        // (that client can't be assumed to parse v1 frames).
+        let bad = json::parse(&handle_line_engine(
+            &eng,
+            "gmm_toy2d",
+            r#"{"v":2,"id":8,"sampler":"srds","n":16}"#,
+        ))
+        .unwrap();
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false), "{bad:?}");
+        assert_eq!(bad.get("id").unwrap().as_f64(), Some(8.0));
+        assert!(
+            bad.get("error").unwrap().as_str().unwrap().contains("protocol version"),
+            "{bad:?}"
+        );
+    }
+
+    #[test]
+    fn strict_mode_rejects_unknown_keys_only_behind_v1() {
+        // v0: historical tolerance — a junk key is ignored.
+        let o = LazyObj::parse(r#"{"id":1,"n":16,"timeout_millis":50}"#).unwrap();
+        assert!(SampleRequest::from_json(&o).is_ok(), "v0 stays tolerant");
+        // v1: the same typo is a typed unknown_field error.
+        let o = LazyObj::parse(r#"{"v":1,"id":1,"n":16,"timeout_millis":50}"#).unwrap();
+        let err = SampleRequest::from_json(&o).unwrap_err();
+        assert_eq!(err.kind, ErrKind::UnknownField);
+        assert_eq!(err.id, Some(1));
+        assert!(err.detail.contains("timeout_millis"), "{}", err.detail);
+        let wire = error_frame(&err, 1);
+        assert_eq!(wire.get("kind").unwrap().as_str(), Some("unknown_field"));
+        assert_eq!(wire.get("frame").unwrap().as_str(), Some("error"));
+        // Every documented key passes strict mode.
+        let o = LazyObj::parse(
+            r#"{"v":1,"id":1,"kind":"sample","sampler":"srds","n":16,"class":0,
+                "guidance":1.5,"seed":3,"tol":0.01,"norm":"l1_mean","max_iters":3,
+                "block":4,"window":8,"history":2,"priority":"standard","deadline":100,
+                "timeout_ms":500,"stream":false,"sample":true,"iterates":false}"#,
+        )
+        .unwrap();
+        assert!(SampleRequest::from_json(&o).is_ok(), "the full schema is known to strict mode");
+    }
+
+    #[test]
+    fn stream_requires_v1_and_an_anytime_sampler_and_a_serving_loop() {
+        // v0 + stream: rejected at parse time.
+        let o = LazyObj::parse(r#"{"id":1,"n":16,"stream":true}"#).unwrap();
+        let err = SampleRequest::from_json(&o).unwrap_err();
+        assert!(err.detail.contains("\"v\": 1"), "{}", err.detail);
+        // v1 + stream on a non-anytime sampler: typed validation error
+        // from spec resolution (the serving loop's pre-ack check).
+        let o = LazyObj::parse(r#"{"v":1,"id":2,"sampler":"sequential","n":16,"stream":true}"#)
+            .unwrap();
+        let req = SampleRequest::from_json(&o).unwrap();
+        let err = request_spec("gmm_toy2d", &req).unwrap_err();
+        assert_eq!(err.kind, ErrKind::Invalid);
+        assert!(err.detail.contains("anytime"), "{}", err.detail);
+        // v1 + stream + srds on a single-response endpoint: rejected —
+        // blocking paths have nowhere to put iterate frames.
+        let eng = engine();
+        let v = json::parse(&handle_line_engine(
+            &eng,
+            "gmm_toy2d",
+            r#"{"v":1,"id":3,"sampler":"srds","n":16,"stream":true}"#,
+        ))
+        .unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{v:?}");
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("serving loop"), "{v:?}");
+    }
+
+    #[test]
+    fn wall_clock_timeout_is_honest_over_the_wire() {
+        // timeout_ms: 0 expires on the dispatcher's first sweep, before
+        // any model eval. SRDS degrades to its newest (here: zeroth)
+        // iterate and *succeeds* with timed_out: true — the anytime
+        // property on the wire.
+        let eng = engine();
+        let line = r#"{"id":11,"sampler":"srds","n":16,"seed":4,"tol":0.0,"timeout_ms":0}"#;
+        let v = json::parse(&handle_line_engine(&eng, "gmm_toy2d", line)).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{v:?}");
+        assert_eq!(v.get("timed_out").unwrap().as_bool(), Some(true), "{v:?}");
+        assert_eq!(v.get("converged").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("iters").unwrap().as_f64(), Some(0.0), "no refinement completed");
+        let sample = v.get("sample").unwrap().as_f32_vec().unwrap();
+        assert!(sample.iter().all(|x| x.is_finite()));
+        // A sampler with no anytime iterate can't degrade: typed
+        // timeout error (error_kind at v0, kind inside a frame at v1).
+        let line = r#"{"id":12,"sampler":"sequential","n":16,"seed":4,"timeout_ms":0}"#;
+        let v = json::parse(&handle_line_engine(&eng, "gmm_toy2d", line)).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{v:?}");
+        assert_eq!(v.get("error_kind").unwrap().as_str(), Some("timeout"), "{v:?}");
+        let line = r#"{"v":1,"id":13,"sampler":"sequential","n":16,"seed":4,"timeout_ms":0}"#;
+        let v = json::parse(&handle_line_engine(&eng, "gmm_toy2d", line)).unwrap();
+        assert_eq!(v.get("frame").unwrap().as_str(), Some("error"), "{v:?}");
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("timeout"), "{v:?}");
+        // Negative is rejected at parse time, like deadline.
+        let line = r#"{"id":14,"n":16,"timeout_ms":-5}"#;
+        let v = json::parse(&handle_line_engine(&eng, "gmm_toy2d", line)).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{v:?}");
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("timeout_ms"), "{v:?}");
+    }
+
+    #[test]
+    fn stats_probe_speaks_both_dialects() {
+        let r = router(2);
+        let legacy = json::parse(&handle_line_router(&r, "gmm_toy2d", r#"{"id":1,"kind":"stats"}"#))
+            .unwrap();
+        assert!(legacy.get("frame").is_none(), "{legacy:?}");
+        assert_eq!(legacy.get("kind").unwrap().as_str(), Some("stats"));
+        let framed = json::parse(&handle_line_router(
+            &r,
+            "gmm_toy2d",
+            r#"{"v":1,"id":2,"kind":"stats"}"#,
+        ))
+        .unwrap();
+        assert_eq!(framed.get("v").unwrap().as_f64(), Some(1.0), "{framed:?}");
+        assert_eq!(framed.get("frame").unwrap().as_str(), Some("stats"));
+        assert_eq!(framed.get("shards").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn non_object_lines_are_parse_errors_not_defaulted_requests() {
+        // The lazy reader only accepts object lines; a bare scalar or
+        // array must come back as a parse error, never run a sampler
+        // with all-default knobs.
+        let be = backend();
+        for bad in ["5", "[1,2]", "\"srds\"", "true", "null"] {
+            let resp = handle_line(be.as_ref(), "gmm_toy2d", bad);
+            let v = json::parse(&resp).unwrap();
+            assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{bad} -> {resp}");
+            assert!(v.get("sampler").is_none(), "{bad} must not run: {resp}");
         }
     }
 }

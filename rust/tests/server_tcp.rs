@@ -107,6 +107,16 @@ fn concurrent_tcp_clients_get_solo_equivalent_samples() {
                     buf.clear();
                     continue;
                 }
+                // Legacy-dialect pin: these requests carry no "v", so
+                // the redesigned wire layer must answer in the
+                // historical single-frame shape — no envelope keys.
+                assert!(
+                    v.get("v").is_none() && v.get("frame").is_none(),
+                    "v0 response grew envelope keys: {buf}"
+                );
+                // The wall-clock timeout field rides every response
+                // (false here: these requests are unbudgeted).
+                assert_eq!(v.get("timed_out").unwrap().as_bool(), Some(false), "{buf}");
                 assert!(
                     v.get("batch_occupancy").unwrap().as_f64().unwrap() >= 1.0,
                     "{buf}"

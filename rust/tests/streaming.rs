@@ -1,0 +1,311 @@
+//! Wire-protocol v1 streaming tests over real TCP: the anytime
+//! property as traffic. A `"stream": true` request must produce the
+//! strict frame lifecycle — one `ack`, one `iterate` per completed
+//! Parareal refinement (each a valid sample), then exactly one
+//! terminal `final` — with the final sample bit-identical to the same
+//! request served without streaming. A client that vanishes mid-stream
+//! must get its request aborted inside the engine (rows purged,
+//! per-class `aborted` counted), observed here through the stats
+//! probe. The probe itself is pinned to its admission exemption: it
+//! answers while a connection sits at `max_inflight`, where a sampling
+//! request is shed.
+//!
+//! The disconnect/saturation tests run against a deliberately slowed
+//! model (a sleep per batched eval) so "mid-stream" is a wide, not a
+//! racy, window.
+
+use srds::batching::BatchPolicy;
+use srds::data::make_gmm;
+use srds::exec::NativeFactory;
+use srds::json::Value;
+use srds::model::{EpsModel, GmmEps};
+use srds::server::{serve_on, ServeConfig, DEFAULT_SPINE_CACHE_CAP};
+use srds::solvers::Solver;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// GmmEps with a fixed sleep per batched eval call: turns the toy
+/// model's microsecond iterates into tens of milliseconds, so tests
+/// can act "mid-stream" without racing the sampler.
+struct SlowEps {
+    inner: GmmEps,
+    delay: Duration,
+}
+
+impl EpsModel for SlowEps {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eps(&self, x: &[f32], s: &[f32], mask: Option<&[f32]>, out: &mut [f32]) {
+        std::thread::sleep(self.delay);
+        self.inner.eps(x, s, mask, out);
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+}
+
+fn spawn_server(model: Arc<dyn EpsModel>, max_inflight: usize) -> String {
+    let factory = Arc::new(NativeFactory::new(model, Solver::Ddim));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = ServeConfig {
+        addr: addr.clone(),
+        shards: 2,
+        workers: 2,
+        model_name: "gmm_toy2d".into(),
+        factory,
+        batch: BatchPolicy::default(),
+        max_inflight,
+        default_deadline: None,
+        spine_cache_cap: DEFAULT_SPINE_CACHE_CAP,
+        coalesce: true,
+    };
+    std::thread::spawn(move || {
+        let _ = serve_on(listener, cfg);
+    });
+    addr
+}
+
+fn connect(addr: &str) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let writer = stream.try_clone().unwrap();
+    (writer, BufReader::new(stream))
+}
+
+fn read_frame(reader: &mut BufReader<TcpStream>) -> Value {
+    let mut buf = String::new();
+    assert!(reader.read_line(&mut buf).unwrap() > 0, "connection closed mid-protocol");
+    srds::json::parse(buf.trim()).unwrap_or_else(|e| panic!("bad frame {buf:?}: {e:?}"))
+}
+
+fn frame_name(v: &Value) -> String {
+    v.get("frame")
+        .and_then(|f| f.as_str())
+        .unwrap_or_else(|| panic!("frameless line: {v:?}"))
+        .to_string()
+}
+
+#[test]
+fn stream_lifecycle_delivers_every_iterate_then_a_bit_identical_final() {
+    let model: Arc<dyn EpsModel> = Arc::new(GmmEps::new(make_gmm("toy2d")));
+    let addr = spawn_server(model, 64);
+    let (mut writer, mut reader) = connect(&addr);
+    // tol 0 + max_iters 4 forces exactly four refinements, so the
+    // expected frame count is pinned, not timing-dependent.
+    writeln!(
+        writer,
+        r#"{{"v":1,"id":7,"sampler":"srds","n":25,"seed":23,"tol":0.0,"max_iters":4,"stream":true}}"#
+    )
+    .unwrap();
+    writer.flush().unwrap();
+
+    // 1. The ack comes first, before any iterate.
+    let ack = read_frame(&mut reader);
+    assert_eq!(frame_name(&ack), "ack", "{ack:?}");
+    assert_eq!(ack.get("v").unwrap().as_f64(), Some(1.0));
+    assert_eq!(ack.get("id").unwrap().as_f64(), Some(7.0));
+    assert_eq!(ack.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(ack.get("sampler").unwrap().as_str(), Some("srds"));
+    assert_eq!(ack.get("stream").unwrap().as_bool(), Some(true));
+
+    // 2. Iterate frames in refinement order, then exactly one final.
+    let mut iterates: Vec<(u64, Vec<f32>)> = Vec::new();
+    let fin = loop {
+        let v = read_frame(&mut reader);
+        match frame_name(&v).as_str() {
+            "iterate" => {
+                assert_eq!(v.get("id").unwrap().as_f64(), Some(7.0), "{v:?}");
+                assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+                let it = v.get("iter").unwrap().as_f64().unwrap() as u64;
+                let res = v.get("residual").unwrap().as_f64().unwrap();
+                assert!(res.is_finite(), "{v:?}");
+                iterates.push((it, v.get("sample").unwrap().as_f32_vec().unwrap()));
+            }
+            "final" => break v,
+            other => panic!("unexpected {other:?} frame mid-stream: {v:?}"),
+        }
+    };
+    assert_eq!(fin.get("id").unwrap().as_f64(), Some(7.0));
+    assert_eq!(fin.get("ok").unwrap().as_bool(), Some(true), "{fin:?}");
+    let iters = fin.get("iters").unwrap().as_f64().unwrap() as usize;
+    assert_eq!(iters, 4, "tol 0 + max_iters 4 runs all four refinements");
+    assert_eq!(iterates.len(), iters, "one iterate frame per refinement, none dropped");
+    for (k, (it, _)) in iterates.iter().enumerate() {
+        assert_eq!(*it, k as u64 + 1, "iterate frames arrive in refinement order");
+    }
+    assert_eq!(fin.get("converged").unwrap().as_bool(), Some(false), "tol 0 can't converge");
+    assert_eq!(fin.get("timed_out").unwrap().as_bool(), Some(false));
+    let final_sample = fin.get("sample").unwrap().as_f32_vec().unwrap();
+    assert_eq!(
+        final_sample,
+        iterates.last().unwrap().1,
+        "the last iterate IS the final sample (anytime property)"
+    );
+
+    // 3. Bit-identity: the same request without streaming — and in the
+    // legacy dialect — returns the same sample through the same fleet.
+    writeln!(
+        writer,
+        r#"{{"v":1,"id":8,"sampler":"srds","n":25,"seed":23,"tol":0.0,"max_iters":4}}"#
+    )
+    .unwrap();
+    writer.flush().unwrap();
+    let single = read_frame(&mut reader);
+    assert_eq!(frame_name(&single), "final");
+    assert_eq!(
+        single.get("sample").unwrap().as_f32_vec().unwrap(),
+        final_sample,
+        "stream vs non-stream must be bit-identical"
+    );
+    writeln!(writer, r#"{{"id":9,"sampler":"srds","n":25,"seed":23,"tol":0.0,"max_iters":4}}"#)
+        .unwrap();
+    writer.flush().unwrap();
+    let legacy = read_frame(&mut reader);
+    assert!(legacy.get("frame").is_none(), "v0 responses carry no envelope: {legacy:?}");
+    assert_eq!(
+        legacy.get("sample").unwrap().as_f32_vec().unwrap(),
+        final_sample,
+        "legacy dialect vs stream must be bit-identical"
+    );
+}
+
+#[test]
+fn stream_with_zero_timeout_finalizes_from_the_coarse_init() {
+    // timeout_ms: 0 expires on the dispatcher's first sweep: the
+    // stream is acked, completes zero refinements, and the terminal
+    // frame is an honest timed-out final built from the coarse spine.
+    let model: Arc<dyn EpsModel> = Arc::new(GmmEps::new(make_gmm("toy2d")));
+    let addr = spawn_server(model, 64);
+    let (mut writer, mut reader) = connect(&addr);
+    writeln!(
+        writer,
+        r#"{{"v":1,"id":3,"sampler":"srds","n":25,"seed":31,"tol":0.0,"max_iters":4,"stream":true,"timeout_ms":0}}"#
+    )
+    .unwrap();
+    writer.flush().unwrap();
+    let ack = read_frame(&mut reader);
+    assert_eq!(frame_name(&ack), "ack", "{ack:?}");
+    let fin = read_frame(&mut reader);
+    assert_eq!(frame_name(&fin), "final", "no iterate can complete before a 0ms deadline");
+    assert_eq!(fin.get("ok").unwrap().as_bool(), Some(true), "{fin:?}");
+    assert_eq!(fin.get("timed_out").unwrap().as_bool(), Some(true), "{fin:?}");
+    assert_eq!(fin.get("converged").unwrap().as_bool(), Some(false));
+    assert_eq!(fin.get("iters").unwrap().as_f64(), Some(0.0));
+    let sample = fin.get("sample").unwrap().as_f32_vec().unwrap();
+    assert!(sample.iter().all(|x| x.is_finite()), "{fin:?}");
+}
+
+#[test]
+fn stats_probe_answers_at_max_inflight_while_sampling_is_shed() {
+    // One admission slot, held by a deliberately slow stream. The
+    // probe must answer (its typed exemption), while a second sampling
+    // request is shed with the structured overloaded frame.
+    let model: Arc<dyn EpsModel> = Arc::new(SlowEps {
+        inner: GmmEps::new(make_gmm("toy2d")),
+        delay: Duration::from_millis(2),
+    });
+    let addr = spawn_server(model, 1);
+    let (mut writer, mut reader) = connect(&addr);
+    writeln!(
+        writer,
+        r#"{{"v":1,"id":1,"sampler":"srds","n":16,"seed":5,"tol":0.0,"max_iters":8,"stream":true}}"#
+    )
+    .unwrap();
+    // While that stream occupies the only slot: a sampling request
+    // (shed) and a stats probe (answered).
+    writeln!(writer, r#"{{"v":1,"id":2,"sampler":"srds","n":16,"seed":6}}"#).unwrap();
+    writeln!(writer, r#"{{"v":1,"id":3,"kind":"stats"}}"#).unwrap();
+    writer.flush().unwrap();
+
+    let (mut saw_shed, mut saw_stats, mut saw_final) = (false, false, false);
+    while !(saw_shed && saw_stats) {
+        let v = read_frame(&mut reader);
+        match frame_name(&v).as_str() {
+            "error" => {
+                assert_eq!(v.get("id").unwrap().as_f64(), Some(2.0), "{v:?}");
+                assert_eq!(v.get("kind").unwrap().as_str(), Some("overloaded"), "{v:?}");
+                assert_eq!(v.get("max_inflight").unwrap().as_f64(), Some(1.0));
+                assert!(v.get("retry_after_ms").unwrap().as_f64().unwrap() > 0.0);
+                saw_shed = true;
+            }
+            "stats" => {
+                assert_eq!(v.get("id").unwrap().as_f64(), Some(3.0), "{v:?}");
+                assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+                assert_eq!(v.get("shards").unwrap().as_f64(), Some(2.0));
+                saw_stats = true;
+            }
+            // The stream keeps streaming around the probe traffic.
+            "ack" | "iterate" => {}
+            "final" => saw_final = true,
+            other => panic!("unexpected {other:?}: {v:?}"),
+        }
+    }
+    assert!(
+        !saw_final,
+        "probe and shed must answer while the stream still holds the slot"
+    );
+}
+
+#[test]
+fn mid_stream_disconnect_aborts_the_request_in_the_engine() {
+    let model: Arc<dyn EpsModel> = Arc::new(SlowEps {
+        inner: GmmEps::new(make_gmm("toy2d")),
+        delay: Duration::from_millis(2),
+    });
+    let addr = spawn_server(model, 64);
+    {
+        let (mut writer, mut reader) = connect(&addr);
+        // Several distinct slow streams (distinct seeds — no
+        // coalescing), so work is certainly resident at disconnect.
+        for (i, seed) in [(1u64, 100u64), (2, 101), (3, 102)] {
+            writeln!(
+                writer,
+                r#"{{"v":1,"id":{i},"sampler":"srds","n":16,"seed":{seed},"tol":0.0,"max_iters":10,"stream":true}}"#
+            )
+            .unwrap();
+        }
+        writer.flush().unwrap();
+        // Wait until the streams are demonstrably live: three acks and
+        // at least one iterate have crossed the wire.
+        let (mut acks, mut iterates) = (0u32, 0u32);
+        while acks < 3 || iterates < 1 {
+            let v = read_frame(&mut reader);
+            match frame_name(&v).as_str() {
+                "ack" => acks += 1,
+                "iterate" => iterates += 1,
+                "final" => panic!("slow stream finished before the disconnect: {v:?}"),
+                other => panic!("unexpected {other:?}: {v:?}"),
+            }
+        }
+        // Drop both halves: the poll loop's next write to this
+        // connection fails, flips the liveness flag, and the owning
+        // dispatchers abort the still-running tasks.
+    }
+    // Observe the abort from a fresh connection via the stats probe.
+    let (mut writer, mut reader) = connect(&addr);
+    let t0 = Instant::now();
+    loop {
+        writeln!(writer, r#"{{"kind":"stats","id":9}}"#).unwrap();
+        writer.flush().unwrap();
+        let v = read_frame(&mut reader);
+        let lane = v.get("classes").unwrap().get("standard").unwrap();
+        let aborted = lane.get("aborted").unwrap().as_f64().unwrap();
+        let active = v.get("active_tasks").unwrap().as_f64().unwrap();
+        if aborted >= 1.0 && active == 0.0 {
+            // Rows were purged with the tasks: the queue drains to
+            // empty rather than grinding through orphaned work.
+            assert_eq!(v.get("queue_depth").unwrap().as_f64(), Some(0.0), "{v:?}");
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "disconnect never aborted the streams: {v:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}

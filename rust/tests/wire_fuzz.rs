@@ -1,0 +1,222 @@
+//! Malformed-frame fuzz corpus for the lazy request reader.
+//!
+//! The wire layer parses every inbound line with
+//! [`srds::json::lazy::LazyObj`], a single structural pass that indexes
+//! field spans without building a tree. Its contract (see the module
+//! doc) is exact parity with the tree parser, and this test is the
+//! enforcement: for a hand-written corpus of hostile lines plus
+//! deterministic mutations of realistic request lines,
+//!
+//! * **acceptance parity** — the lazy reader accepts a line iff
+//!   [`srds::json::parse`] accepts it AND the document is a top-level
+//!   object (the wire protocol's framing unit);
+//! * **extraction parity** — on every accepted line, `get`/`num`/`has`/
+//!   `keys` agree with the tree parse key-for-key, including last-wins
+//!   duplicate resolution;
+//! * **no panics** — neither parser may panic on any input, however
+//!   mangled (truncated surrogates and lone `\u` fragments included:
+//!   those were once wire-reachable parser panics).
+//!
+//! The mutation engine is a seeded xorshift — every run exercises the
+//! identical mutant set, so a failure here reproduces byte-for-byte.
+
+use srds::json::{lazy::LazyObj, Value};
+use std::collections::BTreeSet;
+
+/// The single oracle: whatever `line` is, the two parsers must agree.
+fn check(line: &str) {
+    let tree = srds::json::parse(line);
+    let lazy = LazyObj::parse(line);
+    let tree_obj = match &tree {
+        Ok(Value::Obj(m)) => Some(m),
+        _ => None,
+    };
+    match (&lazy, &tree_obj) {
+        (Ok(_), None) => panic!(
+            "lazy reader accepted a line the tree parser refuses (or a non-object): {line:?}"
+        ),
+        (Err(e), Some(_)) => {
+            panic!("lazy reader rejected a valid object line: {line:?} ({e:?})")
+        }
+        _ => {}
+    }
+    let (Ok(lazy), Some(map)) = (lazy, tree_obj) else { return };
+    for (k, want) in map.iter() {
+        assert!(lazy.has(k), "has({k:?}) false on {line:?}");
+        assert_eq!(
+            lazy.get(k).as_ref(),
+            Some(want),
+            "extraction mismatch for key {k:?} in {line:?}"
+        );
+        assert_eq!(lazy.num(k), want.as_f64(), "num({k:?}) mismatch in {line:?}");
+    }
+    // keys() may repeat duplicates (source order); as a set it must be
+    // exactly the tree's key set.
+    let got: BTreeSet<String> = lazy.keys().collect();
+    let want: BTreeSet<String> = map.keys().cloned().collect();
+    assert_eq!(got, want, "key set mismatch in {line:?}");
+    assert!(!lazy.has("\u{1f980}-definitely-absent"));
+    assert!(lazy.get("\u{1f980}-definitely-absent").is_none());
+}
+
+/// Realistic request lines — the seeds the mutation engine mangles.
+const SEEDS: [&str; 8] = [
+    r#"{"id":7,"sampler":"srds","n":25,"seed":23,"tol":1e-5,"max_iters":6}"#,
+    r#"{"v":1,"id":1,"sampler":"srds","n":25,"stream":true,"timeout_ms":250}"#,
+    r#"{"id":2,"kind":"stats"}"#,
+    r#"{"v":1,"id":3,"sampler":"paradigms","window":6,"class":2,"guidance":1.5,"norm":"linf"}"#,
+    r#"{"id":4,"sampler":"parataa","history":3,"priority":"interactive","deadline":120}"#,
+    r#"{"id":5,"sampler":"sequential","n":50,"seed":-17,"sample":false,"iterates":true}"#,
+    r#"{ "id" : 6 , "block" : 5 , "tol" : 2.5e-3 }"#,
+    r#"{"\u0069d":8,"s":"\ud834\udd1e \n \" \\ é","empty":{},"arr":[1,[2,{"x":null}],true]}"#,
+];
+
+#[test]
+fn corpus_of_hostile_lines_never_panics_and_parsers_agree() {
+    // Hand-written hostiles: every class of damage the wire can carry.
+    // Structural truncation, stray separators, bad literals, number
+    // garbage, escape/surrogate damage, non-object documents, trailing
+    // garbage, duplicate and escaped-duplicate keys.
+    let corpus: [&str; 58] = [
+        "",
+        " ",
+        "\t\r\n",
+        "{",
+        "}",
+        "{}",
+        "{ }",
+        "{{}}",
+        "{}{}",
+        "{} ",
+        " {}",
+        "null",
+        "true",
+        "false",
+        "42",
+        "-0.5e3",
+        r#""just a string""#,
+        "[1, 2, 3]",
+        r#"[{"id": 1}]"#,
+        r#"{"id"}"#,
+        r#"{"id":}"#,
+        r#"{"id":1,}"#,
+        r#"{,"id":1}"#,
+        r#"{"id" 1}"#,
+        r#"{"id"::1}"#,
+        r#"{id: 1}"#,
+        r#"{'id': 1}"#,
+        r#"{"id": 1"#,
+        r#"{"id": 1} trailing"#,
+        r#"{"id": 1}{"id": 2}"#,
+        r#"{"a": [1, 2}"#,
+        r#"{"a": [1, 2]]}"#,
+        r#"{"a": {"b": 1}"#,
+        r#"{"a": tru}"#,
+        r#"{"a": nul}"#,
+        r#"{"a": truex}"#,
+        r#"{"a": -}"#,
+        r#"{"a": 1e}"#,
+        r#"{"a": 1e+}"#,
+        r#"{"a": 1.2.3}"#,
+        r#"{"a": 1e309}"#,
+        r#"{"a": -1e-309}"#,
+        r#"{"a": 01}"#,
+        r#"{"a": +1}"#,
+        r#"{"a": .5}"#,
+        r#"{"a": "unterminated"#,
+        "{\"a\": \"bad escape \\q\"}",
+        "{\"a\": \"trunc \\",
+        "{\"a\": \"trunc \\u12\"}",
+        "{\"a\": \"\\uD800 lone high\"}",
+        "{\"a\": \"\\uDC00 lone low\"}",
+        "{\"a\": \"\\uD834\\uD834 high high\"}",
+        "{\"a\": \"\\uD834\\udd1e ok pair\"}",
+        "{\"a\": \"\\uFFFF\"}",
+        "{\"a\": \"raw \u{7f} control\"}",
+        r#"{"n": 1, "n": 2, "n": 3}"#,
+        "{\"a\": 1, \"\\u0061\": 2}",
+        r#"{"": 1}"#,
+    ];
+    for line in corpus {
+        check(line);
+    }
+    for line in SEEDS {
+        check(line);
+    }
+}
+
+/// Deterministic xorshift64 — seeded, so every CI run fuzzes the exact
+/// same mutant set and any failure reproduces from the printed line.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n.max(1) as u64) as usize
+    }
+}
+
+#[test]
+fn mutated_request_lines_never_split_the_parsers() {
+    // Bytes with structural meaning: mutations drawn from this set hit
+    // parser decision points far more often than uniform noise.
+    const SPICE: &[u8] = b"{}[]\",:\\u-+.eE0123456789 \tnt";
+    let mut rng = Rng(0x5eed_cafe_f00d_0001);
+    let mut mutants = 0u32;
+    for seed in SEEDS {
+        for _ in 0..400 {
+            let mut bytes = seed.as_bytes().to_vec();
+            for _ in 0..1 + rng.below(3) {
+                if bytes.is_empty() {
+                    break;
+                }
+                match rng.below(5) {
+                    // Overwrite one byte with a structural one.
+                    0 => {
+                        let i = rng.below(bytes.len());
+                        bytes[i] = SPICE[rng.below(SPICE.len())];
+                    }
+                    // Delete one byte.
+                    1 => {
+                        bytes.remove(rng.below(bytes.len()));
+                    }
+                    // Insert a structural byte.
+                    2 => {
+                        let i = rng.below(bytes.len() + 1);
+                        bytes.insert(i, SPICE[rng.below(SPICE.len())]);
+                    }
+                    // Truncate (the torn-frame case: a client dying
+                    // mid-write is the most common real-world mangle).
+                    3 => {
+                        bytes.truncate(rng.below(bytes.len() + 1));
+                    }
+                    // Duplicate a random span in place (repeated keys,
+                    // doubled separators, cloned values).
+                    4 => {
+                        let a = rng.below(bytes.len());
+                        let b = (a + 1 + rng.below(8)).min(bytes.len());
+                        let span = bytes[a..b].to_vec();
+                        let i = rng.below(bytes.len() + 1);
+                        bytes.splice(i..i, span);
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            // Both parsers take &str; non-UTF-8 mutants can't reach
+            // them over the line-based wire (read_line hands out
+            // String), so skip those rather than test a dead path.
+            let Ok(line) = String::from_utf8(bytes) else { continue };
+            mutants += 1;
+            check(&line);
+        }
+    }
+    assert!(mutants > 2000, "mutation engine degenerated: only {mutants} valid mutants");
+}

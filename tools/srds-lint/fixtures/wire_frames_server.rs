@@ -1,0 +1,24 @@
+// Fixture server for the framed-dialect wire pairs: an error
+// serializer, the frame envelope, and the error-kind match registry.
+// Deliberately has no `from_json`/`success_response` — those pairs
+// must stay inactive when their fns don't exist.
+
+fn error_frame(e: &WireError, v: u64) -> Value {
+    let mut pairs = vec![
+        ("ok", Value::Bool(false)),
+        ("error", Value::Str(e.detail.clone())),
+    ];
+    pairs.push(("kind", Value::Str(kind_name(e.kind).into())));
+    json::obj(pairs)
+}
+
+fn frame_head(v: u64, frame: &str) -> Vec<(&'static str, Value)> {
+    vec![("v", Value::Num(v as f64)), ("frame", Value::Str(frame.to_string()))]
+}
+
+fn kind_name(k: ErrKind) -> &'static str {
+    match k {
+        ErrKind::Parse => "parse",
+        ErrKind::Overloaded => "overloaded",
+    }
+}

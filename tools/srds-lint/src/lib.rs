@@ -15,7 +15,11 @@
 //!   `panic!`.
 //! * **wire-schema-sync** — the DESIGN.md wire tables (marked by
 //!   `<!-- lint-anchor: ... -->` comments) must match the fields the
-//!   server actually parses and serializes, in both directions.
+//!   server actually parses and serializes, in both directions. Since
+//!   the v1 framed dialect this is a table of fn↔anchor pairs: the
+//!   request reader, every frame serializer (`success_response`,
+//!   `error_frame`, `stats_response`, the envelope and the streaming
+//!   `ack`/`iterate` frames), and the `kind_name` error-kind registry.
 //!
 //! Any finding can be waived in place with
 //! `// lint-allow(<rule>): <reason>` on (or directly above) the offending
@@ -945,8 +949,37 @@ fn fn_literals(
     out
 }
 
+/// How a wire fn's field literals are recognized lexically.
+#[derive(Clone, Copy)]
+enum WireLits {
+    /// `o.get("k")` / `o.num("k")` / `num("k", default)` accessor keys —
+    /// the request-reader shape.
+    RequestKeys,
+    /// `("key", value)` serializer pair heads — every frame-building fn.
+    PairHeads,
+    /// `Variant => "name"` match-arm values — the error-kind registry.
+    ArmValues,
+}
+
+/// The fn↔anchor contract table. A pair is *active* when the fn exists
+/// in the server source (so fixture/partial servers only activate the
+/// pairs they implement); an active pair requires its DESIGN.md anchor,
+/// and an anchored table is cross-checked even if its fn has since been
+/// deleted — stale docs fire as "documented but not handled".
+const WIRE_PAIRS: [(&str, &str, &str, WireLits); 8] = [
+    ("from_json", "wire-request-fields", "request", WireLits::RequestKeys),
+    ("success_response", "wire-response-fields", "response", WireLits::PairHeads),
+    ("error_frame", "wire-error-fields", "error frame", WireLits::PairHeads),
+    ("stats_response", "wire-stats-fields", "stats", WireLits::PairHeads),
+    ("frame_head", "wire-frame-envelope", "frame envelope", WireLits::PairHeads),
+    ("ack_frame", "wire-ack-fields", "ack frame", WireLits::PairHeads),
+    ("iterate_frame", "wire-iterate-fields", "iterate frame", WireLits::PairHeads),
+    ("kind_name", "wire-error-kinds", "error kind", WireLits::ArmValues),
+];
+
 /// Cross-check DESIGN.md's anchored wire tables against what the server
-/// code actually parses (`from_json`) and serializes (`success_response`).
+/// code actually parses and serializes: the request reader, each frame
+/// serializer, and the error-kind name registry (see [`WIRE_PAIRS`]).
 pub fn check_wire_schema(
     design: &str,
     design_file: &str,
@@ -955,11 +988,12 @@ pub fn check_wire_schema(
 ) -> Vec<Finding> {
     let mut findings = Vec::new();
     let lx = lex(server);
+    let fn_names: HashSet<String> = fn_spans(&lx).into_iter().map(|f| f.name).collect();
 
-    let (req_docs, req_anchors) = anchored_fields(design, "wire-request-fields");
-    let (resp_docs, resp_anchors) = anchored_fields(design, "wire-response-fields");
-    for (anchor, n) in [("wire-request-fields", req_anchors), ("wire-response-fields", resp_anchors)] {
-        if n == 0 {
+    for (fname, anchor, what, mode) in WIRE_PAIRS {
+        let (docs, anchors) = anchored_fields(design, anchor);
+        let active = fn_names.contains(fname);
+        if active && anchors == 0 {
             findings.push(Finding {
                 rule: Rule::WireSchemaSync,
                 file: design_file.to_string(),
@@ -968,39 +1002,40 @@ pub fn check_wire_schema(
                 waived: None,
             });
         }
-    }
-
-    // Request keys: string literals passed to `v.get("k")` / `num("k", ..)`
-    // inside `from_json`.
-    let req_code = fn_literals(
-        &lx,
-        "from_json",
-        |pre| pre.ends_with(b"get(") || pre.ends_with(b"num("),
-        |_| true,
-    );
-    // Response keys: the `("key", value)` pair heads in `success_response`.
-    let resp_code = fn_literals(
-        &lx,
-        "success_response",
-        |pre| pre.ends_with(b"("),
-        |post| post.starts_with(b","),
-    );
-
-    let mut cross = |docs: &[(String, usize)], code: &[(String, usize)], what: &str| {
+        if anchors == 0 {
+            continue;
+        }
+        let code = match mode {
+            WireLits::RequestKeys => fn_literals(
+                &lx,
+                fname,
+                |pre| pre.ends_with(b"get(") || pre.ends_with(b"num("),
+                |_| true,
+            ),
+            WireLits::PairHeads => fn_literals(
+                &lx,
+                fname,
+                |pre| pre.ends_with(b"("),
+                |post| post.starts_with(b","),
+            ),
+            WireLits::ArmValues => fn_literals(&lx, fname, |pre| pre.ends_with(b"=>"), |_| true),
+        };
         let doc_names: HashSet<&str> = docs.iter().map(|(n, _)| n.as_str()).collect();
         let code_names: HashSet<&str> = code.iter().map(|(n, _)| n.as_str()).collect();
-        for (name, line) in code {
+        for (name, line) in &code {
             if !doc_names.contains(name.as_str()) {
                 findings.push(Finding {
                     rule: Rule::WireSchemaSync,
                     file: server_file.to_string(),
                     line: *line,
-                    msg: format!("{what} field `{name}` is handled by the server but missing from DESIGN.md"),
+                    msg: format!(
+                        "{what} field `{name}` is handled by the server but missing from DESIGN.md"
+                    ),
                     waived: None,
                 });
             }
         }
-        for (name, line) in docs {
+        for (name, line) in &docs {
             if !code_names.contains(name.as_str()) {
                 findings.push(Finding {
                     rule: Rule::WireSchemaSync,
@@ -1011,12 +1046,6 @@ pub fn check_wire_schema(
                 });
             }
         }
-    };
-    if req_anchors > 0 {
-        cross(&req_docs, &req_code, "request");
-    }
-    if resp_anchors > 0 {
-        cross(&resp_docs, &resp_code, "response");
     }
     findings
 }

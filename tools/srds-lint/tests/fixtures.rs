@@ -132,9 +132,40 @@ fn wire_schema_drift_fires_both_directions() {
 
 #[test]
 fn wire_schema_missing_anchor_fires() {
+    // The fixture server implements only from_json + success_response,
+    // so exactly those two pairs are active and demand their anchors;
+    // the framed-dialect pairs stay silent with their fns absent.
     let f = check_wire_schema("# no anchors here\n", "empty.md", &load("wire_server.rs"), "wire_server.rs");
-    assert_eq!(f.len(), 2, "one per missing anchor: {f:?}");
+    assert_eq!(f.len(), 2, "one per missing anchor of an active pair: {f:?}");
     assert!(f.iter().all(|x| x.msg.contains("lint-anchor")));
+}
+
+#[test]
+fn wire_frame_pairs_activate_only_when_their_fns_exist() {
+    // Error serializer (pair heads), envelope (pair heads) and the
+    // error-kind registry (match-arm values) in sync — and no findings
+    // for the request/response pairs, whose fns this fixture lacks.
+    let f = check_wire_schema(
+        &load("wire_frames_good.md"),
+        "wire_frames_good.md",
+        &load("wire_frames_server.rs"),
+        "wire_frames_server.rs",
+    );
+    assert!(f.is_empty(), "{f:?}");
+    // Dropping a kind row fires the match-arm direction (code → docs).
+    let doc = load("wire_frames_good.md").replace("| `overloaded` | admission cap |\n", "");
+    let f = check_wire_schema(&doc, "doc.md", &load("wire_frames_server.rs"), "s.rs");
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(
+        f[0].msg.contains("error kind") && f[0].msg.contains("`overloaded`"),
+        "{f:?}"
+    );
+    // A documented kind the registry never returns fires the other way.
+    let doc = load("wire_frames_good.md")
+        .replace("| `parse` | malformed line |", "| `parse` | malformed line |\n| `ghost` | nothing |");
+    let f = check_wire_schema(&doc, "doc.md", &load("wire_frames_server.rs"), "s.rs");
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(f[0].msg.contains("`ghost`") && f[0].msg.contains("documented"), "{f:?}");
 }
 
 #[test]
